@@ -1,0 +1,91 @@
+//! Model switching under vLLM-style Sleep Mode (§5.2.2), with a router
+//! waking models on demand.
+//!
+//! ```text
+//! cargo run --release --example model_switching -- --mode mma
+//! cargo run --release --example model_switching -- --mode native
+//! ```
+//!
+//! Two models share gpu0; requests alternate between them, so every
+//! switch pays a fall-asleep (D2H) + wake-up (H2D) weight move. MMA cuts
+//! both phases by recruiting the seven idle peer GPUs as relays.
+
+use mma::mma::{MmaConfig, SimWorld};
+use mma::models::{qwen3_32b, qwen_7b_chat};
+use mma::serving::router::Policy;
+use mma::serving::{ModelRegistry, Router};
+use mma::topology::{h20x8, GpuId, NumaId};
+use mma::util::cli::Args;
+use mma::util::fmt;
+
+fn run(mode: &str) -> (f64, f64) {
+    let cfg = if mode == "native" {
+        MmaConfig::native()
+    } else {
+        MmaConfig::default()
+    };
+    let mut world = SimWorld::new(h20x8(), cfg);
+    let mut reg = ModelRegistry::new(NumaId(0));
+    let a = reg.register(qwen_7b_chat(), vec![GpuId(0)]);
+    let b = reg.register(qwen3_32b(), vec![GpuId(0)]);
+    // Only one fits on the GPU at a time: B starts asleep.
+    let sleep_b = reg.sleep(&mut world, b);
+    println!(
+        "  [{mode}] initial: {} asleep (took {})",
+        reg.instance(b).spec.name,
+        fmt::secs(sleep_b.total().as_secs_f64())
+    );
+
+    let mut router = Router::new(Policy::RoundRobin, 2);
+    let mut total_switch = 0.0;
+    let mut switches = 0u32;
+    // Alternate requests A, B, A, B: every one triggers a switch.
+    for turn in 0..4 {
+        let want = if turn % 2 == 0 { b } else { a };
+        // Sleep the other model first (single-GPU residency).
+        let other = if want == a { b } else { a };
+        if reg.instance(other).state == mma::serving::ModelState::Active {
+            let s = reg.sleep(&mut world, other);
+            total_switch += s.total().as_secs_f64();
+        }
+        let (inst, wake) = router.route(&mut world, &mut reg, &[want]);
+        if let Some(wcost) = wake {
+            total_switch += wcost.as_secs_f64();
+            switches += 1;
+            println!(
+                "  [{mode}] request {turn} -> {} woken in {}",
+                reg.instance(inst).spec.name,
+                fmt::secs(wcost.as_secs_f64())
+            );
+        }
+        router.done(inst);
+    }
+    (total_switch, switches as f64)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let only = args.get("mode").map(str::to_string);
+    println!("model switching (sleep/wake) on simulated 8xH20:\n");
+    let mut results = Vec::new();
+    for mode in ["native", "mma"] {
+        if let Some(m) = &only {
+            if m != mode {
+                continue;
+            }
+        }
+        let (total, n) = run(mode);
+        println!(
+            "  [{mode}] {} switches, total switch latency {}\n",
+            n,
+            fmt::secs(total)
+        );
+        results.push((mode, total));
+    }
+    if results.len() == 2 {
+        println!(
+            "switch-latency speedup (native/MMA): {:.2}x (paper: 1.12-2.48x)",
+            results[0].1 / results[1].1
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Microbenchmark: host<->GPU bandwidth, MMA vs native CUDA copies.
+//!
+//! Reproduces the paper's §5.1.1 measurement methodology on the simulated
+//! 8xH20 server: pinned buffers, timed transfers, effective bandwidth =
+//! size / completion time. Sweeps message size for a given relay count:
+//!
+//! ```text
+//! cargo run --release --example multipath_microbench -- --relays 7
+//! ```
+
+use mma::mma::{MmaConfig, SimWorld, TransferDesc};
+use mma::topology::{h20x8, Direction, GpuId, NumaId};
+use mma::util::{cli::Args, table::Table};
+
+fn measure(dir: Direction, bytes: u64, cfg: MmaConfig) -> f64 {
+    let mut w = SimWorld::new(h20x8(), cfg);
+    let s = w.stream(GpuId(0));
+    let t = w.memcpy_async(s, TransferDesc::new(dir, GpuId(0), NumaId(0), bytes));
+    w.run_until_transfer(t);
+    w.rec(t).bandwidth().unwrap_or(0.0)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let relays: usize = args.or("relays", 7);
+    let topo = h20x8();
+    let relay_set: Vec<GpuId> = topo
+        .relay_order(GpuId(0), &[])
+        .into_iter()
+        .take(relays)
+        .collect();
+
+    let sizes: &[u64] = &[
+        1 << 10,
+        64 << 10,
+        1 << 20,
+        5 << 20,
+        10 << 20,
+        50 << 20,
+        100 << 20,
+        512 << 20,
+        1 << 30,
+        4u64 << 30,
+        8u64 << 30,
+    ];
+
+    for dir in [Direction::H2D, Direction::D2H] {
+        let mut t = Table::new(["size", "native GB/s", "MMA GB/s", "speedup"]);
+        for &b in sizes {
+            let native = measure(dir, b, MmaConfig::native());
+            let mma_cfg = MmaConfig {
+                relay_gpus: Some(relay_set.clone()),
+                ..MmaConfig::default()
+            };
+            let m = measure(dir, b, mma_cfg);
+            t.row([
+                mma::util::fmt::bytes(b),
+                format!("{:.1}", native / 1e9),
+                format!("{:.1}", m / 1e9),
+                format!("{:.2}x", m / native),
+            ]);
+        }
+        println!(
+            "\n=== {} bandwidth vs transfer size ({} relays) ===",
+            dir.label(),
+            relays
+        );
+        t.print();
+    }
+}

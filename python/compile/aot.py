@@ -1,0 +1,107 @@
+"""AOT export: lower the L2 model (prefill + decode) to HLO *text*.
+
+HLO text — NOT ``lowered.compile()`` output or ``.serialize()`` protos —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Writes ``tiny_prefill.hlo.txt``, ``tiny_decode.hlo.txt`` and
+``tiny_meta.json`` (shape metadata for the Rust runtime).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import TINY, decode, init_weights, prefill
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text.
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big literals as ``constant({...})``, which silently zeroes the baked
+    model weights on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata attributes (source_end_line etc.) are rejected by
+    # xla_extension 0.5.1's parser; strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_all(cfg=TINY, seed: int = 0):
+    """Lower prefill and decode with weights baked in. Returns dict name->text."""
+    w = init_weights(cfg, seed)
+
+    def prefill_fn(tokens):
+        return prefill(tokens, weights=w, cfg=cfg)
+
+    def decode_fn(token, k_cache, v_cache, pos):
+        return decode(token, k_cache, v_cache, pos, weights=w, cfg=cfg)
+
+    tok_spec = jax.ShapeDtypeStruct((1, cfg.prefill_len), jnp.int32)
+    cache_spec = jax.ShapeDtypeStruct(
+        (cfg.layers, 1, cfg.max_len, cfg.heads, cfg.head_dim), jnp.float32
+    )
+    one = jax.ShapeDtypeStruct((1,), jnp.int32)
+
+    return {
+        "tiny_prefill": to_hlo_text(jax.jit(prefill_fn).lower(tok_spec)),
+        "tiny_decode": to_hlo_text(
+            jax.jit(decode_fn).lower(one, cache_spec, cache_spec, one)
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias")
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out:  # legacy Makefile interface: put files beside --out
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    arts = lower_all()
+    for name, text in arts.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+    meta = {
+        "config": {
+            "vocab": TINY.vocab,
+            "hidden": TINY.hidden,
+            "layers": TINY.layers,
+            "heads": TINY.heads,
+            "head_dim": TINY.head_dim,
+            "intermediate": TINY.intermediate,
+            "prefill_len": TINY.prefill_len,
+            "max_len": TINY.max_len,
+        },
+        "artifacts": sorted(arts.keys()),
+    }
+    with open(os.path.join(outdir, "tiny_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote metadata to {outdir}/tiny_meta.json")
+
+
+if __name__ == "__main__":
+    main()

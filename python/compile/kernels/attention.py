@@ -1,0 +1,199 @@
+"""L1: Pallas fused attention kernels (the serving compute hot-spot).
+
+Two kernels, both flash-attention style with online softmax and the KV
+axis blocked through ``BlockSpec`` (the TPU analogue of the paper's GPU
+tiling: HBM->VMEM staging expressed as a block schedule instead of
+threadblocks; MXU-shaped matmuls instead of WMMA; VMEM accumulators
+carried across sequential grid steps instead of shared memory):
+
+* :func:`mha_prefill` — causal self-attention over a full prompt.
+* :func:`mha_decode`  — one query row against a padded KV cache with a
+  validity mask (decode step).
+
+``interpret=True`` everywhere: the CPU PJRT runtime cannot execute Mosaic
+custom-calls, and correctness is what the build-time pytest gate checks
+(see ``python/tests/test_kernel.py`` against ``ref.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default KV-axis block (rows staged into VMEM per grid step).
+DEFAULT_BLOCK_K = 32
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, block_k: int):
+    """One (q-block, kv-block) step of causal flash attention.
+
+    Grid: (num_kv_blocks,). The q block is resident across all steps; the
+    online-softmax state (m: running max, l: running denominator) and the
+    weighted accumulator o are carried in output refs, which interpret/TPU
+    grids visit sequentially.
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]  # [T, D]
+    k = k_ref[...]  # [block_k, D]
+    v = v_ref[...]  # [block_k, D]
+
+    # MXU-shaped matmul in fp32 accumulation.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [T, block_k]
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))
+
+    # Causal mask: query row i attends to kv col (j*block_k + jj) <= i.
+    t = q.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, block_k), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, block_k), 1) + j * block_k
+    s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [T, 1]
+    l_prev = l_ref[...]  # [T, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rescale previous accumulator, fold in this block.
+    p = jnp.exp(s - m_new)  # [T, block_k]
+    alpha = jnp.exp(m_prev - m_new)  # [T, 1]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+
+def mha_prefill(q, k, v, *, block_k: int = DEFAULT_BLOCK_K):
+    """Causal attention for one head: q,k,v ``[T, D]`` -> ``[T, D]``.
+
+    ``T`` must be a multiple of ``block_k`` (the model pads prompts to the
+    artifact's fixed prefill length).
+    """
+    t, d = q.shape
+    s = k.shape[0]
+    assert s % block_k == 0, f"kv length {s} % block_k {block_k} != 0"
+    grid = (s // block_k,)
+    o, m, l = pl.pallas_call(
+        functools.partial(_prefill_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d), lambda j: (0, 0)),  # q resident
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),  # kv streamed
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t, d), lambda j: (0, 0)),
+            pl.BlockSpec((t, 1), lambda j: (0, 0)),
+            pl.BlockSpec((t, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return (o / l).astype(q.dtype)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref):
+    """One kv-block step of single-row attention with a validity mask."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]  # [1, D]
+    k = k_ref[...]  # [block_k, D]
+    v = v_ref[...]
+    mask = mask_ref[...]  # [1, block_k] 1.0 = valid
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [1, block_k]
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.where(mask > 0.5, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+
+def mha_decode(q, k, v, mask, *, block_k: int = DEFAULT_BLOCK_K):
+    """Decode attention for one head.
+
+    q ``[1, D]``; k,v ``[S, D]`` (padded cache); mask ``[S]`` with 1.0 on
+    valid positions. Returns ``[1, D]``.
+    """
+    _, d = q.shape
+    s = k.shape[0]
+    assert s % block_k == 0, f"kv length {s} % block_k {block_k} != 0"
+    grid = (s // block_k,)
+    mask2 = mask.reshape(1, s).astype(jnp.float32)
+    o, m, l = pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((1, block_k), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask2)
+    return (o / l).astype(q.dtype)
+
+
+def mha_prefill_batched(q, k, v, *, block_k: int = DEFAULT_BLOCK_K):
+    """Causal attention over ``[B, T, H, D]`` via vmap over batch x heads."""
+    per_head = functools.partial(mha_prefill, block_k=block_k)
+    # [B, H, T, D]
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = jax.vmap(jax.vmap(per_head))(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def mha_decode_batched(q, k, v, mask, *, block_k: int = DEFAULT_BLOCK_K):
+    """Decode attention over ``[B, H, D]`` vs caches ``[B, S, H, D]``."""
+    per_head = functools.partial(mha_decode, block_k=block_k)
+
+    def one_batch(qb, kb, vb, maskb):
+        # qb [H, D], kb [S, H, D]
+        qh = qb[:, None, :]  # [H, 1, D]
+        kh = jnp.swapaxes(kb, 0, 1)  # [H, S, D]
+        vh = jnp.swapaxes(vb, 0, 1)
+        out = jax.vmap(lambda a, b, c: per_head(a, b, c, maskb))(qh, kh, vh)
+        return out[:, 0, :]  # [H, D]
+
+    return jax.vmap(one_batch)(q, k, v, mask)

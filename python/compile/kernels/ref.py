@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas attention kernels.
+
+Straight softmax attention with explicit masks — no blocking, no online
+softmax. The pytest gate asserts the Pallas kernels match these within
+float32 tolerance before anything is AOT-exported.
+"""
+
+import jax.numpy as jnp
+
+
+def attn_prefill_ref(q, k, v):
+    """Causal attention, one head: q,k,v ``[T, D]`` -> ``[T, D]``."""
+    t = q.shape[0]
+    s = jnp.einsum("td,sd->ts", q, k) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    causal = jnp.tril(jnp.ones((t, k.shape[0]), dtype=bool), k=0)
+    s = jnp.where(causal, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return (p @ v).astype(q.dtype)
+
+
+def attn_decode_ref(q, k, v, mask):
+    """Masked single-row attention: q ``[1, D]``, k/v ``[S, D]``, mask ``[S]``."""
+    s = jnp.einsum("td,sd->ts", q, k) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.where(mask[None, :] > 0.5, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return (p @ v).astype(q.dtype)
+
+
+def attn_prefill_batched_ref(q, k, v):
+    """Causal attention over ``[B, T, H, D]``."""
+    s = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    t, sl = q.shape[1], k.shape[1]
+    causal = jnp.tril(jnp.ones((t, sl), dtype=bool), k=0)
+    s = jnp.where(causal[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bshd->bthd", p, v).astype(q.dtype)

@@ -1,0 +1,135 @@
+"""L2: the tiny decoder-only transformer served by the Rust runtime.
+
+Architecture must match ``rust/src/models/mod.rs::tiny_serve()``: 4 layers,
+hidden 256, 4 heads x head_dim 64, FFN 1024, vocab 1024. Weights are
+generated from a fixed seed and closed over as constants, so the lowered
+HLO is fully self-contained — the Rust side feeds tokens, gets logits and
+KV caches back, and Python never runs at serving time.
+
+Two entry points, both calling the L1 Pallas kernels:
+
+* :func:`prefill` — tokens ``[1, PREFILL_LEN]`` -> (logits, k_cache, v_cache)
+* :func:`decode`  — (token ``[1]``, k_cache, v_cache, pos ``[1]``) ->
+  (logits, k_cache, v_cache)
+
+Caches are ``[LAYERS, 1, MAX_LEN, HEADS, HEAD_DIM]`` padded to MAX_LEN.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import mha_decode_batched, mha_prefill_batched
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    vocab: int = 1024
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 4
+    head_dim: int = 64
+    intermediate: int = 1024
+    prefill_len: int = 32
+    max_len: int = 128
+
+
+TINY = TinyConfig()
+
+
+def init_weights(cfg: TinyConfig = TINY, seed: int = 0):
+    """Deterministic weight pytree (baked into the HLO as constants)."""
+    key = jax.random.PRNGKey(seed)
+    n_keys = 2 + cfg.layers * 7
+    keys = iter(jax.random.split(key, n_keys))
+
+    def mat(k, shape):
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(
+            jnp.float32(shape[0])
+        )
+
+    w = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, cfg.hidden), jnp.float32)
+        * 0.02,
+        "layers": [],
+    }
+    qd = cfg.heads * cfg.head_dim
+    for _ in range(cfg.layers):
+        w["layers"].append(
+            {
+                "wq": mat(next(keys), (cfg.hidden, qd)),
+                "wk": mat(next(keys), (cfg.hidden, qd)),
+                "wv": mat(next(keys), (cfg.hidden, qd)),
+                "wo": mat(next(keys), (qd, cfg.hidden)),
+                "wg": mat(next(keys), (cfg.hidden, cfg.intermediate)),
+                "wu": mat(next(keys), (cfg.hidden, cfg.intermediate)),
+                "wd": mat(next(keys), (cfg.intermediate, cfg.hidden)),
+            }
+        )
+    w["norm_final"] = jnp.ones((cfg.hidden,), jnp.float32)
+    return w
+
+
+def rmsnorm(x):
+    """RMS layer norm (no learned scale except the final one)."""
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _mlp(layer, x):
+    return (jax.nn.silu(x @ layer["wg"]) * (x @ layer["wu"])) @ layer["wd"]
+
+
+def prefill(tokens, weights=None, cfg: TinyConfig = TINY):
+    """Full-prompt forward. tokens ``[1, prefill_len]`` int32.
+
+    Returns (logits ``[1, T, vocab]``, k_cache, v_cache) with caches padded
+    to ``cfg.max_len``.
+    """
+    w = weights if weights is not None else init_weights(cfg)
+    b, t = tokens.shape
+    x = w["embed"][tokens]  # [B, T, H]
+    ks, vs = [], []
+    for layer in w["layers"]:
+        h = rmsnorm(x)
+        q = (h @ layer["wq"]).reshape(b, t, cfg.heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(b, t, cfg.heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(b, t, cfg.heads, cfg.head_dim)
+        # L1 Pallas kernel: causal flash attention.
+        att = mha_prefill_batched(q, k, v)
+        x = x + att.reshape(b, t, -1) @ layer["wo"]
+        x = x + _mlp(layer, rmsnorm(x))
+        pad = cfg.max_len - t
+        ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+    logits = rmsnorm(x * w["norm_final"]) @ w["embed"].T
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode(token, k_cache, v_cache, pos, weights=None, cfg: TinyConfig = TINY):
+    """One decode step.
+
+    token ``[1]`` int32; caches ``[L, 1, max_len, H, D]``; pos ``[1]`` int32
+    (number of tokens already in the cache). Returns (logits ``[1, vocab]``,
+    k_cache, v_cache) with the new token written at ``pos``.
+    """
+    w = weights if weights is not None else init_weights(cfg)
+    p = pos[0]
+    x = w["embed"][token][:, None, :]  # [1, 1, H]
+    mask = (jnp.arange(cfg.max_len) <= p).astype(jnp.float32)[None, :]  # [1, S]
+    new_k, new_v = [], []
+    for li, layer in enumerate(w["layers"]):
+        h = rmsnorm(x)
+        q = (h @ layer["wq"]).reshape(1, cfg.heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(1, 1, cfg.heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(1, 1, cfg.heads, cfg.head_dim)
+        kc = jax.lax.dynamic_update_slice(k_cache[li], k, (0, p, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[li], v, (0, p, 0, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        # L1 Pallas kernel: masked decode attention over the padded cache.
+        att = mha_decode_batched(q, kc, vc, mask)  # [1, H, D]
+        x = x + att.reshape(1, 1, -1) @ layer["wo"]
+        x = x + _mlp(layer, rmsnorm(x))
+    logits = (rmsnorm(x * w["norm_final"]) @ w["embed"].T)[:, 0, :]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

@@ -1,0 +1,34 @@
+"""AOT export gate: HLO text is parseable-by-old-XLA and self-contained."""
+
+import pytest
+
+from compile.aot import lower_all
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return lower_all()
+
+
+def test_exports_both_entry_points(artifacts):
+    assert set(artifacts) == {"tiny_prefill", "tiny_decode"}
+
+
+def test_no_elided_constants(artifacts):
+    # The default printer writes `constant({...})`, silently zeroing the
+    # baked weights on the Rust side. Guard against regressions.
+    for name, text in artifacts.items():
+        assert "{...}" not in text, f"{name} has elided constants"
+
+
+def test_no_new_metadata_attributes(artifacts):
+    # xla_extension 0.5.1's parser rejects source_end_line etc.
+    for name, text in artifacts.items():
+        assert "source_end_line" not in text, f"{name} has new metadata"
+
+
+def test_weights_are_baked(artifacts):
+    # ~4.5M f32 parameters make the text tens of MB; a tiny file means the
+    # constants went missing.
+    assert len(artifacts["tiny_prefill"]) > 10_000_000
+    assert len(artifacts["tiny_decode"]) > 10_000_000

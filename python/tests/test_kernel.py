@@ -1,0 +1,136 @@
+"""L1 correctness gate: Pallas attention kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (block-aligned lengths, head dims, seeds) and
+asserts allclose in float32. These run before any artifact is exported
+(`make test` and the artifacts rule both depend on them passing).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    DEFAULT_BLOCK_K,
+    mha_decode,
+    mha_decode_batched,
+    mha_prefill,
+    mha_prefill_batched,
+)
+from compile.kernels.ref import (
+    attn_decode_ref,
+    attn_prefill_batched_ref,
+    attn_prefill_ref,
+)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def qkv(seed, t, s, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return rand(k1, (t, d)), rand(k2, (s, d)), rand(k3, (s, d))
+
+
+class TestPrefillKernel:
+    def test_matches_ref_basic(self):
+        q, k, v = qkv(0, 32, 32, 64)
+        np.testing.assert_allclose(mha_prefill(q, k, v), attn_prefill_ref(q, k, v), **TOL)
+
+    def test_multi_block_kv(self):
+        q, k, v = qkv(1, 64, 64, 64)
+        np.testing.assert_allclose(mha_prefill(q, k, v), attn_prefill_ref(q, k, v), **TOL)
+
+    def test_first_row_attends_only_itself(self):
+        q, k, v = qkv(2, 32, 32, 64)
+        out = mha_prefill(q, k, v)
+        np.testing.assert_allclose(out[0], v[0], **TOL)
+
+    def test_rejects_misaligned_kv(self):
+        q, k, v = qkv(3, 32, 33, 64)
+        with pytest.raises(AssertionError):
+            mha_prefill(q, k, v)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        d=st.sampled_from([32, 64, 128]),
+        block_k=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, blocks, d, block_k, seed):
+        t = blocks * block_k
+        q, k, v = qkv(seed, t, t, d)
+        out = mha_prefill(q, k, v, block_k=block_k)
+        np.testing.assert_allclose(out, attn_prefill_ref(q, k, v), **TOL)
+
+
+class TestDecodeKernel:
+    def test_matches_ref_basic(self):
+        q, k, v = qkv(0, 1, 128, 64)
+        mask = (jnp.arange(128) < 40).astype(jnp.float32)
+        np.testing.assert_allclose(
+            mha_decode(q, k, v, mask), attn_decode_ref(q, k, v, mask), **TOL
+        )
+
+    def test_single_valid_position_returns_that_value(self):
+        q, k, v = qkv(1, 1, 64, 32)
+        mask = jnp.zeros(64).at[7].set(1.0)
+        out = mha_decode(q, k, v, mask)
+        np.testing.assert_allclose(out[0], v[7], **TOL)
+
+    def test_mask_excludes_padding(self):
+        q, k, v = qkv(2, 1, 128, 64)
+        mask = (jnp.arange(128) < 50).astype(jnp.float32)
+        base = mha_decode(q, k, v, mask)
+        # Corrupting masked-out rows must not change the result.
+        v2 = v.at[50:].set(1e6)
+        k2 = k.at[50:].set(-1e6)
+        out = mha_decode(q, k2, v2, mask)
+        np.testing.assert_allclose(out, base, **TOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        d=st.sampled_from([32, 64]),
+        valid_frac=st.floats(0.05, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_mask_sweep(self, blocks, d, valid_frac, seed):
+        s = blocks * DEFAULT_BLOCK_K
+        q, k, v = qkv(seed, 1, s, d)
+        valid = max(1, int(s * valid_frac))
+        mask = (jnp.arange(s) < valid).astype(jnp.float32)
+        out = mha_decode(q, k, v, mask)
+        np.testing.assert_allclose(out, attn_decode_ref(q, k, v, mask), **TOL)
+
+
+class TestBatchedWrappers:
+    def test_prefill_batched_matches_ref(self):
+        key = jax.random.PRNGKey(9)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, t, h, d = 2, 32, 4, 64
+        q = rand(k1, (b, t, h, d))
+        k = rand(k2, (b, t, h, d))
+        v = rand(k3, (b, t, h, d))
+        np.testing.assert_allclose(
+            mha_prefill_batched(q, k, v), attn_prefill_batched_ref(q, k, v), **TOL
+        )
+
+    def test_decode_batched_matches_per_head(self):
+        key = jax.random.PRNGKey(11)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s, h, d = 1, 64, 4, 32
+        q = rand(k1, (b, h, d))
+        kc = rand(k2, (b, s, h, d))
+        vc = rand(k3, (b, s, h, d))
+        mask = (jnp.arange(s) < 20).astype(jnp.float32)[None, :]
+        out = mha_decode_batched(q, kc, vc, mask)
+        assert out.shape == (b, h, d)
+        for hh in range(h):
+            ref = attn_decode_ref(q[0, hh : hh + 1], kc[0, :, hh], vc[0, :, hh], mask[0])
+            np.testing.assert_allclose(out[0, hh], ref[0], **TOL)

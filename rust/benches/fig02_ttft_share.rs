@@ -1,0 +1,16 @@
+//! Fig 2: proportion of prefix-cache fetching time in TTFT.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig2_ttft_share;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 2: proportion of prefix-cache fetching time in TTFT ===");
+    let t = fig2_ttft_share(fast);
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 3: proportion of transfer time in swap-in/out latency.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig3_swap_share;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 3: proportion of transfer time in swap-in/out latency ===");
+    let t = fig3_swap_share();
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 7: H2D/D2H bandwidth vs transfer size, MMA vs native.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig7_bw_vs_size;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 7: H2D/D2H bandwidth vs transfer size, MMA vs native ===");
+    let t = fig7_bw_vs_size(fast);
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 8: bandwidth vs number of relay paths.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig8_bw_vs_paths;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 8: bandwidth vs number of relay paths ===");
+    let t = fig8_bw_vs_paths(fast);
+    t.print();
+}

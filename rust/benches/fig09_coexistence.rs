@@ -1,0 +1,16 @@
+//! Fig 9: bandwidth under congestion (MMA+native, MMA+MMA).
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig9_coexistence;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 9: bandwidth under congestion (MMA+native, MMA+MMA) ===");
+    let t = fig9_coexistence();
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 11: CPU cores consumed by MMA vs relay GPUs.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig11_cpu_overhead;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 11: CPU cores consumed by MMA vs relay GPUs ===");
+    let t = fig11_cpu_overhead();
+    t.print();
+}

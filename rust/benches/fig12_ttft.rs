@@ -1,0 +1,16 @@
+//! Fig 12: TTFT baseline vs MMA across models and contexts.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig12_ttft;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 12: TTFT baseline vs MMA across models and contexts ===");
+    let t = fig12_ttft(fast);
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 13: fall-asleep / wake-up latency baseline vs MMA.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig13_switching;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 13: fall-asleep / wake-up latency baseline vs MMA ===");
+    let t = fig13_switching();
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 14: MMA bandwidth vs relay count under TP configs.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig14_tp_sweep;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 14: MMA bandwidth vs relay count under TP configs ===");
+    let t = fig14_tp_sweep();
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 15: chunk size / outstanding-queue-depth sensitivity.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig15_sensitivity;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 15: chunk size / outstanding-queue-depth sensitivity ===");
+    let t = fig15_sensitivity(fast);
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig 16: optimal fallback threshold (MMA vs native break-even).
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::fig16_fallback;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Fig 16: optimal fallback threshold (MMA vs native break-even) ===");
+    let t = fig16_fallback();
+    t.print();
+}

@@ -1,0 +1,69 @@
+//! Hot-path micro-benchmarks (§Perf, EXPERIMENTS.md): the simulator and
+//! engine inner loops that bound how fast the figure harnesses run, plus
+//! end-to-end transfer simulations per paper table.
+//!
+//! Criterion is unavailable offline; this uses `mma::util::bench`.
+
+use mma::fabric::{max_min_rates, Fabric};
+use mma::mma::{MmaConfig, SimWorld, TransferDesc};
+use mma::sim::Time;
+use mma::topology::{h20x8, Direction, GpuId, LinkId, NumaId};
+use mma::util::bench::{black_box, Bencher};
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_millis(150), Duration::from_millis(700));
+    println!("== hot paths ==");
+
+    // Max-min fair allocation at fleet scale (the fabric's inner loop).
+    let topo = h20x8();
+    let paths_owned: Vec<Vec<LinkId>> = (0..32)
+        .map(|i| {
+            let g = GpuId((i % 8) as u8);
+            if i % 2 == 0 {
+                topo.h2d_direct(NumaId(0), g)
+            } else {
+                topo.h2d_relay_stage2(g, GpuId(0))
+            }
+        })
+        .collect();
+    let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_bps).collect();
+    b.bench("maxmin_rates_32flows", || {
+        let paths: Vec<&[LinkId]> = paths_owned.iter().map(|p| p.as_slice()).collect();
+        black_box(max_min_rates(&caps, &paths));
+    });
+
+    // Fabric start/poll cycle.
+    b.bench("fabric_flow_cycle", || {
+        let mut f = Fabric::new(&topo);
+        let path = topo.h2d_direct(NumaId(0), GpuId(0));
+        for i in 0..16 {
+            f.start_flow(Time::ZERO, &path, 5_000_000, Time::ZERO, i);
+        }
+        black_box(mma::fabric::run_to_completion(&mut f, Time::ZERO));
+    });
+
+    // Full MMA transfer simulation, 1 GB (what every figure cell costs).
+    b.bench("simworld_mma_1gb_h2d", || {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        let s = w.stream(GpuId(0));
+        let t = w.memcpy_async(s, TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 1 << 30));
+        black_box(w.run_until_transfer(t));
+    });
+
+    // Native transfer simulation (baseline cell cost).
+    b.bench("simworld_native_1gb_h2d", || {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::native());
+        let s = w.stream(GpuId(0));
+        let t = w.memcpy_async(s, TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 1 << 30));
+        black_box(w.run_until_transfer(t));
+    });
+
+    // 8 GB sweep point — the most expensive single figure cell.
+    b.bench("simworld_mma_8gb_h2d", || {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        let s = w.stream(GpuId(0));
+        let t = w.memcpy_async(s, TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30));
+        black_box(w.run_until_transfer(t));
+    });
+}

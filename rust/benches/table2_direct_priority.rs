@@ -1,0 +1,16 @@
+//! Table 2: influence of direct priority on P2P bandwidth.
+//!
+//! Regenerates the paper's rows on the simulated 8xH20 testbed.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+
+use mma::figures::table2_direct_priority;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let _ = fast;
+    println!("=== Table 2: influence of direct priority on P2P bandwidth ===");
+    let t = table2_direct_priority();
+    t.print();
+}

@@ -1,0 +1,79 @@
+//! Baselines the paper compares against.
+//!
+//! * **Native**: plain `cudaMemcpyAsync` statically bound to the target
+//!   GPU's PCIe link (the paper's main baseline, §5.1).
+//! * **Static splitting** (Fig 10): a fixed byte ratio across a fixed path
+//!   set, chosen in advance — the strawman MMA's pull-based scheduling is
+//!   measured against.
+//!
+//! Both are expressed as [`MmaConfig`] modes so every harness runs the
+//! identical submission path and measurement code.
+
+use crate::mma::{Mode, MmaConfig};
+use crate::topology::GpuId;
+
+/// Native single-path configuration.
+pub fn native() -> MmaConfig {
+    MmaConfig::native()
+}
+
+/// Static split across the direct path and `relays`, with the given
+/// weights. `weights[0]` belongs to the direct path; `weights[1..]` map to
+/// `relays` in order. Panics on length mismatch.
+pub fn static_split(target: GpuId, relays: &[GpuId], weights: &[f64]) -> MmaConfig {
+    assert_eq!(
+        weights.len(),
+        relays.len() + 1,
+        "need one weight for the direct path plus one per relay"
+    );
+    let mut ratios = vec![(target, weights[0])];
+    for (r, w) in relays.iter().zip(&weights[1..]) {
+        assert_ne!(*r, target, "relay cannot be the target");
+        ratios.push((*r, *w));
+    }
+    MmaConfig {
+        mode: Mode::Static(ratios),
+        // Static splitting has no adaptive machinery.
+        contention_backoff: false,
+        direct_priority: false,
+        ..Default::default()
+    }
+}
+
+/// Convenience: equal 1:1 split over direct + one relay (Fig 10's "1:1").
+pub fn split_1_1(target: GpuId, relay: GpuId) -> MmaConfig {
+    static_split(target, &[relay], &[1.0, 1.0])
+}
+
+/// 1:2 split (Fig 10's tuned-for-congestion setting: one third on the
+/// congested direct path, two thirds on the relay).
+pub fn split_1_2(target: GpuId, relay: GpuId) -> MmaConfig {
+    static_split(target, &[relay], &[1.0, 2.0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_split_builds_ratios() {
+        let cfg = static_split(GpuId(0), &[GpuId(1), GpuId(2)], &[1.0, 2.0, 3.0]);
+        let Mode::Static(r) = &cfg.mode else { panic!() };
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0], (GpuId(0), 1.0));
+        assert_eq!(r[2], (GpuId(2), 3.0));
+        assert!(!cfg.contention_backoff);
+    }
+
+    #[test]
+    #[should_panic(expected = "one weight")]
+    fn weight_mismatch_panics() {
+        static_split(GpuId(0), &[GpuId(1)], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "relay cannot be the target")]
+    fn relay_equals_target_panics() {
+        static_split(GpuId(0), &[GpuId(0)], &[1.0, 1.0]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Configuration system: a TOML-subset parser (`toml` crate is unavailable
+//! offline) plus the typed run configuration assembled from file + env
+//! overrides. The paper exposes all runtime parameters as environment
+//! variables (§4: relay GPU list, chunk size, bandwidth threshold,
+//! flow-control mode); we accept the same spellings.
+
+mod toml_lite;
+
+pub use toml_lite::{parse as parse_toml, TomlValue};
+
+use crate::mma::MmaConfig;
+use crate::topology::{GpuId, Preset, Topology};
+use std::collections::BTreeMap;
+
+/// Serving-layer knobs.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Tokens per KV block (vLLM-style paging).
+    pub kv_block_tokens: u32,
+    /// GPU KV capacity in blocks (per GPU).
+    pub gpu_kv_blocks: u32,
+    /// Host KV tier capacity in blocks.
+    pub host_kv_blocks: u32,
+    /// Max tokens scheduled per engine step (continuous batching budget).
+    pub max_batch_tokens: u32,
+    /// Max concurrent sequences in a batch.
+    pub max_batch_seqs: u32,
+    /// Prefill/decode disaggregation enabled.
+    pub pd_disaggregation: bool,
+    /// Tensor parallel degree of the serving group.
+    pub tp: u32,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            kv_block_tokens: 16,
+            gpu_kv_blocks: 8192,
+            host_kv_blocks: 65536,
+            max_batch_tokens: 8192,
+            max_batch_seqs: 64,
+            pd_disaggregation: true,
+            tp: 1,
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Which server preset to simulate.
+    pub preset: Preset,
+    /// MMA engine tunables.
+    pub mma: MmaConfig,
+    /// Serving knobs.
+    pub serving: ServingConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            preset: Preset::H20x8,
+            mma: MmaConfig::default(),
+            serving: ServingConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build the topology for the configured preset.
+    pub fn topology(&self) -> Topology {
+        self.preset.build()
+    }
+
+    /// Parse from TOML-subset text. Unknown keys are rejected (typo guard).
+    pub fn from_toml(text: &str) -> Result<RunConfig, String> {
+        let doc = parse_toml(text)?;
+        let mut cfg = RunConfig::default();
+        for (section, table) in &doc {
+            match section.as_str() {
+                "" | "run" => apply_run(&mut cfg, table)?,
+                "mma" => apply_mma(&mut cfg.mma, table)?,
+                "serving" => apply_serving(&mut cfg.serving, table)?,
+                other => return Err(format!("unknown section [{other}]")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply the paper's environment-variable overrides
+    /// (`MMA_CHUNK_SIZE`, `MMA_RELAY_GPUS`, `MMA_THRESHOLD`,
+    /// `MMA_FLOW_CONTROL`, `MMA_DISABLE`).
+    pub fn apply_env(&mut self) {
+        let get = |k: &str| std::env::var(k).ok();
+        if let Some(v) = get("MMA_CHUNK_SIZE") {
+            if let Some(b) = crate::util::fmt::parse_bytes_or_int(&v) {
+                self.mma.chunk_bytes = b;
+            }
+        }
+        if let Some(v) = get("MMA_THRESHOLD") {
+            if let Some(b) = crate::util::fmt::parse_bytes_or_int(&v) {
+                self.mma.fallback_threshold = b;
+            }
+        }
+        if let Some(v) = get("MMA_RELAY_GPUS") {
+            let ids: Vec<GpuId> = v
+                .split(',')
+                .filter_map(|s| s.trim().parse::<u8>().ok())
+                .map(GpuId)
+                .collect();
+            self.mma.relay_gpus = Some(ids);
+        }
+        if let Some(v) = get("MMA_FLOW_CONTROL") {
+            self.mma.centralized_dispatch = v.eq_ignore_ascii_case("centralized");
+        }
+        if get("MMA_DISABLE").is_some() {
+            self.mma.mode = crate::mma::Mode::Native;
+        }
+    }
+}
+
+fn bad<T>(key: &str, want: &str) -> Result<T, String> {
+    Err(format!("key {key:?}: expected {want}"))
+}
+
+fn apply_run(cfg: &mut RunConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("preset", TomlValue::Str(s)) => {
+                cfg.preset =
+                    Preset::parse(s).ok_or_else(|| format!("unknown preset {s:?}"))?;
+            }
+            ("preset", _) => return bad(k, "string"),
+            _ => return Err(format!("unknown key {k:?} in [run]")),
+        }
+    }
+    Ok(())
+}
+
+fn apply_mma(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("chunk_bytes", TomlValue::Int(i)) => m.chunk_bytes = *i as u64,
+            ("outstanding_depth", TomlValue::Int(i)) => m.outstanding_depth = *i as usize,
+            ("fallback_threshold", TomlValue::Int(i)) => m.fallback_threshold = *i as u64,
+            ("direct_priority", TomlValue::Bool(b)) => m.direct_priority = *b,
+            ("contention_backoff", TomlValue::Bool(b)) => m.contention_backoff = *b,
+            ("numa_local_only", TomlValue::Bool(b)) => m.numa_local_only = *b,
+            ("dual_pipeline", TomlValue::Bool(b)) => m.dual_pipeline = *b,
+            ("centralized_dispatch", TomlValue::Bool(b)) => m.centralized_dispatch = *b,
+            ("activation_ns", TomlValue::Int(i)) => m.activation_ns = *i as u64,
+            ("contention_beta", TomlValue::Float(f)) => m.contention_beta = *f,
+            ("contention_beta", TomlValue::Int(i)) => m.contention_beta = *i as f64,
+            ("mode", TomlValue::Str(s)) => {
+                m.mode = match s.as_str() {
+                    "mma" => crate::mma::Mode::Mma,
+                    "native" => crate::mma::Mode::Native,
+                    other => return Err(format!("unknown mma mode {other:?}")),
+                }
+            }
+            ("relay_gpus", TomlValue::IntArray(xs)) => {
+                m.relay_gpus = Some(xs.iter().map(|&i| GpuId(i as u8)).collect());
+            }
+            _ => return Err(format!("unknown or mistyped key {k:?} in [mma]")),
+        }
+    }
+    Ok(())
+}
+
+fn apply_serving(s: &mut ServingConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("kv_block_tokens", TomlValue::Int(i)) => s.kv_block_tokens = *i as u32,
+            ("gpu_kv_blocks", TomlValue::Int(i)) => s.gpu_kv_blocks = *i as u32,
+            ("host_kv_blocks", TomlValue::Int(i)) => s.host_kv_blocks = *i as u32,
+            ("max_batch_tokens", TomlValue::Int(i)) => s.max_batch_tokens = *i as u32,
+            ("max_batch_seqs", TomlValue::Int(i)) => s.max_batch_seqs = *i as u32,
+            ("pd_disaggregation", TomlValue::Bool(b)) => s.pd_disaggregation = *b,
+            ("tp", TomlValue::Int(i)) => s.tp = *i as u32,
+            _ => return Err(format!("unknown or mistyped key {k:?} in [serving]")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            # paper testbed
+            [run]
+            preset = "h20x8"
+
+            [mma]
+            chunk_bytes = 5000000
+            outstanding_depth = 2
+            direct_priority = true
+            relay_gpus = [1, 2, 3]
+            contention_beta = 2.5
+
+            [serving]
+            kv_block_tokens = 16
+            tp = 4
+            pd_disaggregation = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.preset, Preset::H20x8);
+        assert_eq!(cfg.mma.chunk_bytes, 5_000_000);
+        assert_eq!(
+            cfg.mma.relay_gpus,
+            Some(vec![GpuId(1), GpuId(2), GpuId(3)])
+        );
+        assert_eq!(cfg.serving.tp, 4);
+        assert!(!cfg.serving.pd_disaggregation);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(RunConfig::from_toml("[mma]\nchunk_size = 5").is_err());
+        assert!(RunConfig::from_toml("[nope]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn env_overrides() {
+        // Serialized via distinct var names to avoid test interference.
+        std::env::set_var("MMA_CHUNK_SIZE", "2MB");
+        std::env::set_var("MMA_RELAY_GPUS", "1,3,5");
+        std::env::set_var("MMA_FLOW_CONTROL", "centralized");
+        let mut cfg = RunConfig::default();
+        cfg.apply_env();
+        assert_eq!(cfg.mma.chunk_bytes, 2_000_000);
+        assert_eq!(
+            cfg.mma.relay_gpus,
+            Some(vec![GpuId(1), GpuId(3), GpuId(5)])
+        );
+        assert!(cfg.mma.centralized_dispatch);
+        std::env::remove_var("MMA_CHUNK_SIZE");
+        std::env::remove_var("MMA_RELAY_GPUS");
+        std::env::remove_var("MMA_FLOW_CONTROL");
+    }
+
+    #[test]
+    fn default_roundtrip_topology() {
+        let cfg = RunConfig::default();
+        let t = cfg.topology();
+        assert_eq!(t.gpu_count(), 8);
+    }
+}

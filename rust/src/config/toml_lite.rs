@@ -1,0 +1,149 @@
+//! Minimal TOML-subset parser: sections, `key = value` with string / int /
+//! float / bool / homogeneous int-array values, `#` comments. Enough for
+//! run configuration files; intentionally strict about everything else.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer (i64; sizes use plain integers).
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// `[1, 2, 3]`.
+    IntArray(Vec<i64>),
+}
+
+/// Parse a document into `section → (key → value)`. Keys before any
+/// section header land in section `""`.
+pub fn parse(text: &str) -> Result<BTreeMap<String, BTreeMap<String, TomlValue>>, String> {
+    let mut doc: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim().to_string();
+        let value = parse_value(v.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let table = doc.entry(section.clone()).or_default();
+        if table.insert(key.clone(), value).is_some() {
+            return Err(format!("line {}: duplicate key {key:?}", lineno + 1));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // No # inside strings in our subset's comments handling: scan outside quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut xs = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            xs.push(
+                part.parse::<i64>()
+                    .map_err(|_| format!("bad array int {part:?}"))?,
+            );
+        }
+        return Ok(TomlValue::IntArray(xs));
+    }
+    // Underscore separators allowed in ints (5_000_000).
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_types() {
+        let d = parse(
+            r#"
+            top = 1
+            [a]
+            s = "hi"  # trailing comment
+            i = 5_000_000
+            f = 2.5
+            b = true
+            arr = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(d[""]["top"], TomlValue::Int(1));
+        assert_eq!(d["a"]["s"], TomlValue::Str("hi".into()));
+        assert_eq!(d["a"]["i"], TomlValue::Int(5_000_000));
+        assert_eq!(d["a"]["f"], TomlValue::Float(2.5));
+        assert_eq!(d["a"]["b"], TomlValue::Bool(true));
+        assert_eq!(d["a"]["arr"], TomlValue::IntArray(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let d = parse("k = \"a#b\"").unwrap();
+        assert_eq!(d[""]["k"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("[x\n").unwrap_err().contains("line 1"));
+        assert!(parse("k v").unwrap_err().contains("key = value"));
+        assert!(parse("k = @").is_err());
+        assert!(parse("k = 1\nk = 2").unwrap_err().contains("duplicate"));
+        assert!(parse("k = [1, x]").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+}

@@ -1,0 +1,506 @@
+//! Flow-level interconnect bandwidth simulator.
+//!
+//! Each in-flight DMA operation is a *flow* across a path of directional
+//! links (see [`crate::topology`]). Concurrent flows share every link
+//! **max-min fairly** — the fluid-model analogue of PCIe's credit-based
+//! flow control and the NVSwitch's per-port arbitration, which the paper
+//! leans on ("PCIe's internal flow control arbitrates bandwidth between
+//! co-running traffic sources", §5.1.2).
+//!
+//! A flow has a fixed latency phase (DMA setup: the flow consumes no
+//! bandwidth) followed by a transfer phase at the fair-share rate. The
+//! fabric is advanced lazily: callers `poll(now)` to collect completions
+//! and `next_event_time()` to know when the state next changes.
+
+mod maxmin;
+
+pub use maxmin::max_min_rates;
+
+use crate::sim::Time;
+use crate::topology::{LinkId, Topology};
+use std::collections::HashMap;
+
+/// Handle to an in-flight flow.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct FlowId(pub u32);
+
+/// Opaque tag the caller attaches to a flow to route its completion.
+pub type FlowTag = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// DMA setup: becomes active at the stored time.
+    Pending { active_at: Time },
+    /// Transferring at `rate` since `since`.
+    Active,
+    /// Finished (slot free after harvest).
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct Flow {
+    path: Vec<LinkId>,
+    remaining: f64, // bytes
+    total: u64,     // original payload size
+    rate: f64,      // bytes/sec, valid while Active
+    phase: Phase,
+    tag: FlowTag,
+    started: Time,
+    live: bool,
+}
+
+/// Cumulative per-flow accounting returned on completion.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowDone {
+    /// The completed flow.
+    pub id: FlowId,
+    /// Caller's tag.
+    pub tag: FlowTag,
+    /// Total payload bytes the flow carried.
+    pub bytes: u64,
+    /// When the flow was started (including setup latency).
+    pub started: Time,
+    /// When it finished.
+    pub finished: Time,
+}
+
+/// The fabric simulator.
+pub struct Fabric {
+    capacity: Vec<f64>,
+    flows: Vec<Flow>,
+    free: Vec<u32>,
+    /// Active flow ids per link (dense, rebuilt incrementally).
+    link_flows: Vec<Vec<u32>>,
+    last_advance: Time,
+    active_count: usize,
+    /// Monotone counter of rate recomputations (perf introspection).
+    pub recomputes: u64,
+    /// Total bytes completed per tag-class is left to callers; the fabric
+    /// tracks aggregate delivered bytes for utilization reports.
+    pub delivered_bytes: f64,
+}
+
+impl Fabric {
+    /// Build over a topology's links.
+    pub fn new(topo: &Topology) -> Fabric {
+        Fabric {
+            capacity: topo.links.iter().map(|l| l.capacity_bps).collect(),
+            flows: Vec::new(),
+            free: Vec::new(),
+            link_flows: vec![Vec::new(); topo.links.len()],
+            last_advance: Time::ZERO,
+            active_count: 0,
+            recomputes: 0,
+            delivered_bytes: 0.0,
+        }
+    }
+
+    /// Number of currently live (pending or active) flows.
+    pub fn live_flows(&self) -> usize {
+        self.flows.iter().filter(|f| f.live).count()
+    }
+
+    /// Start a flow of `bytes` over `path` with a setup `latency` before it
+    /// occupies any bandwidth. Returns its id. Call `poll(now)` afterwards
+    /// (mutations are lazy).
+    pub fn start_flow(
+        &mut self,
+        now: Time,
+        path: &[LinkId],
+        bytes: u64,
+        latency: Time,
+        tag: FlowTag,
+    ) -> FlowId {
+        debug_assert!(!path.is_empty());
+        self.advance_to(now);
+        let flow = Flow {
+            path: path.to_vec(),
+            remaining: bytes.max(1) as f64,
+            total: bytes.max(1),
+            rate: 0.0,
+            phase: Phase::Pending {
+                active_at: now + latency,
+            },
+            tag,
+            started: now,
+            live: true,
+        };
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.flows[i as usize] = flow;
+                i
+            }
+            None => {
+                self.flows.push(flow);
+                (self.flows.len() - 1) as u32
+            }
+        };
+        FlowId(id)
+    }
+
+    /// Cancel a live flow (used by failure-injection tests).
+    pub fn cancel(&mut self, now: Time, id: FlowId) {
+        self.advance_to(now);
+        let f = &mut self.flows[id.0 as usize];
+        if !f.live {
+            return;
+        }
+        let was_active = f.phase == Phase::Active;
+        // Mark dead *before* recomputing, or the rate allocation would
+        // still count the cancelled flow.
+        f.live = false;
+        f.phase = Phase::Done;
+        if was_active {
+            self.detach(id.0);
+            self.recompute();
+        }
+        self.free.push(id.0);
+    }
+
+    /// Advance to `now`, activating due pending flows and harvesting
+    /// completions. Returns completion records in deterministic order.
+    pub fn poll(&mut self, now: Time) -> Vec<FlowDone> {
+        let mut done = Vec::new();
+        // Process piecewise: there may be several internal events (an
+        // activation changes rates, which changes completion times) between
+        // last_advance and now.
+        loop {
+            let next = self.next_internal_event();
+            let step_to = match next {
+                Some(t) if t <= now => t,
+                _ => now,
+            };
+            self.advance_to(step_to);
+            let mut changed = false;
+            // Activations due.
+            for i in 0..self.flows.len() {
+                let f = &mut self.flows[i];
+                if f.live {
+                    if let Phase::Pending { active_at } = f.phase {
+                        if active_at <= step_to {
+                            f.phase = Phase::Active;
+                            for &l in &self.flows[i].path.clone() {
+                                self.link_flows[l.0 as usize].push(i as u32);
+                            }
+                            self.active_count += 1;
+                            changed = true;
+                        }
+                    }
+                }
+            }
+            // Completions due (remaining hit zero during advance).
+            for i in 0..self.flows.len() {
+                let f = &self.flows[i];
+                if f.live && f.phase == Phase::Active && f.remaining <= 0.25 {
+                    let rec = FlowDone {
+                        id: FlowId(i as u32),
+                        tag: f.tag,
+                        bytes: f.total,
+                        started: f.started,
+                        finished: step_to,
+                    };
+                    self.detach(i as u32);
+                    let f = &mut self.flows[i];
+                    f.live = false;
+                    f.phase = Phase::Done;
+                    self.free.push(i as u32);
+                    done.push(rec);
+                    changed = true;
+                }
+            }
+            if changed {
+                self.recompute();
+            }
+            if step_to >= now {
+                break;
+            }
+        }
+        done
+    }
+
+    /// Earliest future time at which fabric state changes (activation or
+    /// completion), or `None` if fully idle.
+    pub fn next_event_time(&self) -> Option<Time> {
+        self.next_internal_event()
+    }
+
+    /// Instantaneous rate of a live flow (bytes/sec; 0 while pending).
+    pub fn flow_rate(&self, id: FlowId) -> f64 {
+        let f = &self.flows[id.0 as usize];
+        if f.live && f.phase == Phase::Active {
+            f.rate
+        } else {
+            0.0
+        }
+    }
+
+    /// Instantaneous utilization of a link: sum of active flow rates (B/s).
+    pub fn link_rate(&self, link: LinkId) -> f64 {
+        self.link_flows[link.0 as usize]
+            .iter()
+            .map(|&i| self.flows[i as usize].rate)
+            .sum()
+    }
+
+    /// Sum of instantaneous rates of all live flows whose tag satisfies the
+    /// predicate — the figure harnesses use this to plot per-class
+    /// bandwidth over time (Fig 9).
+    pub fn class_rate(&self, pred: impl Fn(FlowTag) -> bool) -> f64 {
+        self.flows
+            .iter()
+            .filter(|f| f.live && f.phase == Phase::Active && pred(f.tag))
+            .map(|f| f.rate)
+            .sum()
+    }
+
+    // ----- internals -------------------------------------------------
+
+    fn next_internal_event(&self) -> Option<Time> {
+        let mut best: Option<Time> = None;
+        for f in &self.flows {
+            if !f.live {
+                continue;
+            }
+            let t = match f.phase {
+                Phase::Pending { active_at } => active_at,
+                Phase::Active => {
+                    if f.rate <= 0.0 {
+                        continue; // starved; completes only after others free capacity
+                    }
+                    // Ceil to a whole nanosecond and always make progress:
+                    // a sub-ns rounding to zero would stall the poll loop.
+                    let ns = (f.remaining / f.rate * 1e9).ceil().max(1.0) as u64;
+                    self.last_advance + Time(ns)
+                }
+                Phase::Done => continue,
+            };
+            best = Some(match best {
+                None => t,
+                Some(b) => b.min(t),
+            });
+        }
+        best
+    }
+
+    fn advance_to(&mut self, now: Time) {
+        if now <= self.last_advance {
+            return;
+        }
+        let dt = (now - self.last_advance).as_secs_f64();
+        for f in &mut self.flows {
+            if f.live && f.phase == Phase::Active && f.rate > 0.0 {
+                let moved = f.rate * dt;
+                let used = moved.min(f.remaining);
+                f.remaining -= used;
+                self.delivered_bytes += used;
+                if f.remaining < 0.25 {
+                    f.remaining = 0.0;
+                }
+            }
+        }
+        self.last_advance = now;
+    }
+
+    fn detach(&mut self, idx: u32) {
+        for &l in &self.flows[idx as usize].path.clone() {
+            let v = &mut self.link_flows[l.0 as usize];
+            if let Some(p) = v.iter().position(|&x| x == idx) {
+                v.swap_remove(p);
+            }
+        }
+        self.active_count -= 1;
+    }
+
+    fn recompute(&mut self) {
+        self.recomputes += 1;
+        let mut actives: Vec<u32> = Vec::with_capacity(self.active_count);
+        for (i, f) in self.flows.iter().enumerate() {
+            if f.live && f.phase == Phase::Active {
+                actives.push(i as u32);
+            }
+        }
+        let paths: Vec<&[LinkId]> = actives
+            .iter()
+            .map(|&i| self.flows[i as usize].path.as_slice())
+            .collect();
+        let rates = max_min_rates(&self.capacity, &paths);
+        for (k, &i) in actives.iter().enumerate() {
+            self.flows[i as usize].rate = rates[k];
+        }
+    }
+}
+
+/// Convenience: run a closed set of flows to completion and return each
+/// flow's completion time. Used heavily in tests.
+pub fn run_to_completion(fabric: &mut Fabric, mut now: Time) -> HashMap<FlowTag, Time> {
+    let mut out = HashMap::new();
+    loop {
+        for d in fabric.poll(now) {
+            out.insert(d.tag, d.finished);
+        }
+        match fabric.next_event_time() {
+            Some(t) => now = t,
+            None => break,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{h20x8, Direction, GpuId, NumaId};
+
+    fn topo() -> Topology {
+        h20x8()
+    }
+
+    #[test]
+    fn single_flow_runs_at_link_capacity() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let bytes = 1_000_000_000u64; // 1 GB
+        f.start_flow(Time::ZERO, &path, bytes, Time::from_us(10), 1);
+        let done = run_to_completion(&mut f, Time::ZERO);
+        let finish = done[&1];
+        let expect = 10e-6 + bytes as f64 / t.pcie_capacity(GpuId(0), Direction::H2D);
+        let got = finish.as_secs_f64();
+        assert!(
+            (got - expect).abs() / expect < 1e-6,
+            "got {got}, expect {expect}"
+        );
+    }
+
+    #[test]
+    fn two_flows_share_one_link_fairly() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let b = 1_000_000_000u64;
+        f.start_flow(Time::ZERO, &path, b, Time::ZERO, 1);
+        f.start_flow(Time::ZERO, &path, b, Time::ZERO, 2);
+        f.poll(Time::ZERO);
+        let cap = t.pcie_capacity(GpuId(0), Direction::H2D);
+        assert!((f.flow_rate(FlowId(0)) - cap / 2.0).abs() < 1.0);
+        assert!((f.flow_rate(FlowId(1)) - cap / 2.0).abs() < 1.0);
+        let done = run_to_completion(&mut f, Time::ZERO);
+        // Both finish together at 2x the solo time.
+        let solo = b as f64 / cap;
+        assert!((done[&1].as_secs_f64() - 2.0 * solo).abs() / solo < 1e-6);
+        assert!((done[&2].as_secs_f64() - 2.0 * solo).abs() / solo < 1e-6);
+    }
+
+    #[test]
+    fn disjoint_paths_do_not_interfere() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let b = 500_000_000u64;
+        f.start_flow(Time::ZERO, &t.h2d_direct(NumaId(0), GpuId(0)), b, Time::ZERO, 1);
+        f.start_flow(Time::ZERO, &t.h2d_direct(NumaId(0), GpuId(2)), b, Time::ZERO, 2);
+        f.poll(Time::ZERO);
+        let cap = t.pcie_capacity(GpuId(0), Direction::H2D);
+        // GPUs 0 and 2 are behind different switches; only DRAM is shared
+        // (380 GB/s >> 2x53.6) so both run at full lane rate.
+        assert!((f.flow_rate(FlowId(0)) - cap).abs() < 1.0);
+        assert!((f.flow_rate(FlowId(1)) - cap).abs() < 1.0);
+    }
+
+    #[test]
+    fn switch_uplink_contends_two_gpus() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let b = 1_000_000_000u64;
+        // GPUs 0 and 1 share switch 0 (uplink 100 GB/s < 2x53.6).
+        f.start_flow(Time::ZERO, &t.h2d_direct(NumaId(0), GpuId(0)), b, Time::ZERO, 1);
+        f.start_flow(Time::ZERO, &t.h2d_direct(NumaId(0), GpuId(1)), b, Time::ZERO, 2);
+        f.poll(Time::ZERO);
+        let r0 = f.flow_rate(FlowId(0));
+        let r1 = f.flow_rate(FlowId(1));
+        assert!((r0 - 50e9).abs() < 1e6, "r0={r0}");
+        assert!((r1 - 50e9).abs() < 1e6, "r1={r1}");
+    }
+
+    #[test]
+    fn early_completion_releases_bandwidth() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let cap = t.pcie_capacity(GpuId(0), Direction::H2D);
+        // Flow 1 is half the size of flow 2; once it finishes, flow 2
+        // should speed up to full capacity.
+        f.start_flow(Time::ZERO, &path, 500_000_000, Time::ZERO, 1);
+        f.start_flow(Time::ZERO, &path, 1_000_000_000, Time::ZERO, 2);
+        let done = run_to_completion(&mut f, Time::ZERO);
+        // flow1: 0.5GB at cap/2 -> 1/ cap *1e9 secs. flow2: 0.5GB at cap/2 + 0.5GB at cap.
+        let t1 = 0.5e9 / (cap / 2.0);
+        let t2 = t1 + 0.5e9 / cap;
+        assert!((done[&1].as_secs_f64() - t1).abs() / t1 < 1e-6);
+        assert!((done[&2].as_secs_f64() - t2).abs() / t2 < 1e-6);
+    }
+
+    #[test]
+    fn pending_latency_consumes_no_bandwidth() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        f.start_flow(Time::ZERO, &path, 1_000_000, Time::from_us(100), 1);
+        f.poll(Time::from_us(50));
+        assert_eq!(f.flow_rate(FlowId(0)), 0.0);
+        assert_eq!(f.link_rate(path[0]), 0.0);
+        f.poll(Time::from_us(101));
+        assert!(f.flow_rate(FlowId(0)) > 0.0);
+    }
+
+    #[test]
+    fn cancel_frees_capacity() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let a = f.start_flow(Time::ZERO, &path, 1_000_000_000, Time::ZERO, 1);
+        f.start_flow(Time::ZERO, &path, 1_000_000_000, Time::ZERO, 2);
+        f.poll(Time::ZERO);
+        let half = f.flow_rate(FlowId(1));
+        f.cancel(Time::from_ms(1), a);
+        f.poll(Time::from_ms(1));
+        assert!(f.flow_rate(FlowId(1)) > 1.9 * half);
+    }
+
+    #[test]
+    fn class_rate_sums_by_tag() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        f.start_flow(Time::ZERO, &t.h2d_direct(NumaId(0), GpuId(0)), 1 << 30, Time::ZERO, 10);
+        f.start_flow(Time::ZERO, &t.h2d_direct(NumaId(0), GpuId(2)), 1 << 30, Time::ZERO, 20);
+        f.poll(Time::ZERO);
+        let all = f.class_rate(|_| true);
+        let tens = f.class_rate(|t| t == 10);
+        assert!(tens > 0.0 && tens < all);
+    }
+
+    #[test]
+    fn p2p_alone_matches_table2() {
+        // Table 2: P2P_alone = 367.60 GB/s.
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.p2p(GpuId(0), GpuId(1));
+        let b = 4u64 << 30;
+        f.start_flow(Time::ZERO, &path, b, Time::ZERO, 1);
+        let done = run_to_completion(&mut f, Time::ZERO);
+        let bw = b as f64 / done[&1].as_secs_f64() / 1e9;
+        assert!((bw - 368.0).abs() < 2.0, "p2p alone bw {bw}");
+    }
+
+    #[test]
+    fn reuses_freed_slots() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        for _ in 0..100 {
+            let now = f.last_advance;
+            f.start_flow(now, &path, 1_000_000, Time::ZERO, 7);
+            run_to_completion(&mut f, now);
+        }
+        assert!(f.flows.len() <= 2, "slab grew: {}", f.flows.len());
+    }
+}

@@ -1,0 +1,245 @@
+//! Robustness / load-balancing figures: Fig 9 (coexistence), Fig 10
+//! (adaptivity vs static splits), Fig 11 (CPU overhead). §5.1.2, §5.3.
+
+use crate::baseline;
+use crate::mma::{MmaConfig, SimWorld, TransferDesc};
+use crate::sim::Time;
+use crate::topology::{h20x8, Direction, GpuId, NumaId};
+use crate::util::table::Table;
+
+/// Fig 9: bandwidth over time when (a) an MMA flow shares the fabric with
+/// a native CUDA stream pinning one direct link, and (b) two concurrent
+/// MMA flows share the relay capacity.
+pub fn fig9_coexistence() -> Table {
+    let mut t = Table::new(["t (ms)", "scenario", "MMA-A GB/s", "other GB/s"]);
+
+    // (a) MMA + native background on gpu2's PCIe link.
+    {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        w.enable_sampling(Time::from_ms(10), Time::from_ms(120));
+        let bg_path = w.topo.h2d_direct(NumaId(0), GpuId(2));
+        w.start_bg_loop(bg_path, 128 << 20, 45, 2); // class 2 = native bg
+        let s = w.stream(GpuId(0));
+        w.memcpy_async(
+            s,
+            TransferDesc {
+                class: 1,
+                ..TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30)
+            },
+        );
+        w.run_until_idle();
+        for smp in w.samples.iter() {
+            t.row([
+                format!("{:.0}", smp.at.as_ms_f64()),
+                "a:mma+native".to_string(),
+                format!("{:.1}", smp.rates[1].abs() / 1e9),
+                format!("{:.1}", smp.rates[2].abs() / 1e9),
+            ]);
+        }
+    }
+
+    // (b) two concurrent MMA flows (separate processes/queues).
+    {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        let p1 = w.add_process(MmaConfig::default());
+        w.enable_sampling(Time::from_ms(10), Time::from_ms(120));
+        let s0 = w.stream(GpuId(0));
+        let s4 = w.stream(GpuId(4));
+        w.memcpy_async_on(
+            0,
+            s0,
+            TransferDesc {
+                class: 1,
+                ..TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 6 << 30)
+            },
+        );
+        w.memcpy_async_on(
+            p1,
+            s4,
+            TransferDesc {
+                class: 4,
+                ..TransferDesc::new(Direction::H2D, GpuId(4), NumaId(1), 6 << 30)
+            },
+        );
+        w.run_until_idle();
+        for smp in w.samples.iter() {
+            t.row([
+                format!("{:.0}", smp.at.as_ms_f64()),
+                "b:mma+mma".to_string(),
+                format!("{:.1}", smp.rates[1].abs() / 1e9),
+                format!("{:.1}", smp.rates[4].abs() / 1e9),
+            ]);
+        }
+    }
+    t
+}
+
+/// One Fig 10 cell: completion time of a 512 MB H2D to gpu0 over two paths
+/// (direct + relay gpu1) under a given splitter, ± background traffic on
+/// the direct link.
+fn fig10_cell(cfg: MmaConfig, background: bool) -> f64 {
+    let mut w = SimWorld::new(h20x8(), cfg);
+    if background {
+        // Third-party native traffic pinning gpu0's direct PCIe link for
+        // the whole experiment window.
+        let bg = w.topo.h2d_direct(NumaId(0), GpuId(0));
+        w.start_bg_loop(bg, 256 << 20, 40, 2);
+    }
+    let s = w.stream(GpuId(0));
+    let id = w.memcpy_async(
+        s,
+        TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 512 << 20),
+    );
+    let done = w.run_until_transfer(id);
+    done.since(w.rec(id).submitted).as_ms_f64()
+}
+
+/// Fig 10: MMA's pull-based scheduling vs static splits, ± background.
+pub fn fig10_static_split() -> Table {
+    let two_path = MmaConfig::with_relays(vec![GpuId(1)]);
+    let rows: Vec<(&str, MmaConfig)> = vec![
+        ("native", MmaConfig::native()),
+        ("static 1:1", baseline::split_1_1(GpuId(0), GpuId(1))),
+        ("static 1:2", baseline::split_1_2(GpuId(0), GpuId(1))),
+        ("MMA (pull)", two_path),
+    ];
+    let mut t = Table::new(["method", "no-bg (ms)", "with-bg (ms)"]);
+    for (name, cfg) in rows {
+        let a = fig10_cell(cfg.clone(), false);
+        let b = fig10_cell(cfg, true);
+        t.row([name.to_string(), format!("{a:.1}"), format!("{b:.1}")]);
+    }
+    t
+}
+
+/// Fig 11: additional CPU cores consumed by MMA vs number of relay GPUs,
+/// under bidirectional traffic (both engines active, as in the paper's
+/// default flow-control mode accounting).
+pub fn fig11_cpu_overhead() -> Table {
+    let mut t = Table::new(["active GPUs", "equivalent cores"]);
+    for gpus in 1..=8usize {
+        let relays = gpus - 1;
+        let topo = h20x8();
+        let relay_set: Vec<GpuId> = topo
+            .relay_order(GpuId(0), &[])
+            .into_iter()
+            .take(relays)
+            .collect();
+        let cfg = MmaConfig::with_relays(relay_set);
+        let mut w = SimWorld::new(topo, cfg);
+        let s = w.stream(GpuId(0));
+        w.memcpy_async(
+            s,
+            TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 4 << 30),
+        );
+        let sd = w.stream(GpuId(0));
+        w.memcpy_async(
+            sd,
+            TransferDesc::new(Direction::D2H, GpuId(0), NumaId(0), 4 << 30),
+        );
+        let end = w.run_until_idle();
+        let cores = w.engine(0, Direction::H2D).stats.equivalent_cores(end)
+            + w.engine(0, Direction::D2H).stats.equivalent_cores(end);
+        t.row([gpus.to_string(), format!("{cores:.2}")]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9a_mma_keeps_most_bandwidth_under_native_contention() {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        w.enable_sampling(Time::from_ms(1), Time::from_ms(200));
+        let bg_path = w.topo.h2d_direct(NumaId(0), GpuId(2));
+        w.start_bg_loop(bg_path, 512 << 20, 10, 2);
+        let s = w.stream(GpuId(0));
+        w.memcpy_async(
+            s,
+            TransferDesc {
+                class: 1,
+                ..TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30)
+            },
+        );
+        w.run_until_idle();
+        // During contention, MMA still gets far above single-link rate and
+        // the native stream still makes progress.
+        let peak_mma = w.samples.iter().map(|s| s.rates[1]).fold(0.0, f64::max);
+        let peak_bg = w.samples.iter().map(|s| s.rates[2]).fold(0.0, f64::max);
+        assert!(peak_mma > 150e9, "mma peak {peak_mma}");
+        assert!(peak_bg > 20e9, "bg starved: {peak_bg}");
+    }
+
+    #[test]
+    fn fig9b_two_mma_flows_both_beat_native() {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        let p1 = w.add_process(MmaConfig::default());
+        let s0 = w.stream(GpuId(0));
+        let s4 = w.stream(GpuId(4));
+        let a = w.memcpy_async_on(
+            0,
+            s0,
+            TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 4 << 30),
+        );
+        let b = w.memcpy_async_on(
+            p1,
+            s4,
+            TransferDesc::new(Direction::H2D, GpuId(4), NumaId(1), 4 << 30),
+        );
+        w.run_until_idle();
+        let bwa = w.rec(a).bandwidth().unwrap();
+        let bwb = w.rec(b).bandwidth().unwrap();
+        assert!(bwa > 90e9 && bwb > 90e9, "{bwa} {bwb}");
+    }
+
+    #[test]
+    fn fig10_mma_tracks_best_static_split() {
+        let t = fig10_static_split();
+        let s = t.render();
+        let mut rows: std::collections::HashMap<String, (f64, f64)> = Default::default();
+        for line in s.lines().skip(2) {
+            let cells: Vec<&str> = line.split_whitespace().collect();
+            let n = cells.len();
+            if n >= 3 {
+                let name = cells[..n - 2].join(" ");
+                rows.insert(
+                    name,
+                    (cells[n - 2].parse().unwrap(), cells[n - 1].parse().unwrap()),
+                );
+            }
+        }
+        let mma = rows["MMA (pull)"];
+        let s11 = rows["static 1:1"];
+        let s12 = rows["static 1:2"];
+        let native = rows["native"];
+        // No background: 1:1 is the good static split; MMA must match it
+        // (within 15%) and beat the mis-tuned 1:2.
+        assert!(mma.0 <= s11.0 * 1.15, "no-bg: mma {} vs 1:1 {}", mma.0, s11.0);
+        assert!(s12.0 > s11.0 * 1.1, "1:2 should lag without bg");
+        // With background: 1:2 becomes the good split; MMA must track it.
+        assert!(mma.1 <= s12.1 * 1.15, "bg: mma {} vs 1:2 {}", mma.1, s12.1);
+        assert!(s11.1 > s12.1 * 1.05, "1:1 should lag with bg");
+        // And MMA always beats native.
+        assert!(mma.0 < native.0 && mma.1 < native.1);
+    }
+
+    #[test]
+    fn fig11_linear_and_capped() {
+        let t = fig11_cpu_overhead();
+        let s = t.render();
+        let cores: Vec<f64> = s
+            .lines()
+            .skip(2)
+            .filter_map(|l| l.split_whitespace().last()?.parse().ok())
+            .collect();
+        assert_eq!(cores.len(), 8);
+        // Monotone growth, roughly linear, ≤ ~10 cores at 8 GPUs (paper: 8.2).
+        for w in cores.windows(2) {
+            assert!(w[1] >= w[0] * 0.9, "{cores:?}");
+        }
+        assert!(cores[7] > cores[0] * 3.0, "{cores:?}");
+        assert!((5.0..11.0).contains(&cores[7]), "8-GPU cores {}", cores[7]);
+    }
+}

@@ -1,0 +1,216 @@
+//! End-to-end serving figures: Fig 2 (fetch share of TTFT), Fig 3
+//! (transfer share of sleep/wake), Fig 12 (TTFT baseline vs MMA), Fig 13
+//! (switch latency baseline vs MMA). §2.1 and §5.2.
+
+use crate::config::ServingConfig;
+use crate::metrics::Summary;
+use crate::mma::{MmaConfig, SimWorld};
+use crate::models::{paper_models, ModelSpec};
+use crate::roofline::h20;
+use crate::serving::{ModelRegistry, ServingEngine};
+use crate::sim::Time;
+use crate::topology::{h20x8, GpuId, NumaId};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workload::longdoc_sessions;
+
+/// Context lengths of §5.2.1.
+pub const CONTEXTS: [u32; 3] = [16_384, 32_768, 65_536];
+
+/// Run the §5.2.1 multi-turn QA workload: returns (mean TTFT seconds,
+/// mean fetch fraction) over prefix-hit turns (turn 1 discarded).
+pub fn qa_ttft(model: &ModelSpec, context: u32, mma: MmaConfig, n_docs: usize) -> (f64, f64) {
+    let mut rng = Rng::seed_from_u64(0xF1_6);
+    let sessions = longdoc_sessions(&mut rng, n_docs, context, 3);
+    let cfg = ServingConfig {
+        // Big enough pools that capacity effects don't interfere; the
+        // prefix starts in the HOST tier (the §5.2.1 offloaded state).
+        gpu_kv_blocks: 1 << 20,
+        host_kv_blocks: 1 << 22,
+        max_batch_tokens: 128 * 1024,
+        ..Default::default()
+    };
+    let world = SimWorld::new(h20x8(), mma);
+    let mut eng = ServingEngine::new(
+        cfg,
+        model.clone(),
+        world,
+        Box::new(h20()),
+        GpuId(0),
+        NumaId(0),
+    );
+    let mut requests = Vec::new();
+    let mut id = 0u64;
+    for (i, s) in sessions.iter().enumerate() {
+        // Seed the document KV in host memory, as after a previous session.
+        eng.seed_host_prefix(s.key, s.context_tokens);
+        // Wide spacing: each turn runs on an otherwise idle engine, as in
+        // the paper's per-request TTFT measurement.
+        let mut reqs = s.requests(id, Time::from_secs_f64(2000.0 * i as f64), Time::from_secs_f64(200.0));
+        id += reqs.len() as u64;
+        // Drop turn 1 later: mark by remembering ids.
+        requests.append(&mut reqs);
+    }
+    let outcomes = eng.run(requests.clone());
+    let mut ttft = Summary::new();
+    let mut frac = Summary::new();
+    for (req, out) in requests.iter().zip(&outcomes) {
+        if req.cached_prefix_tokens == 0 {
+            continue; // discard the cold first turn, as the paper does
+        }
+        // GPU-tier hits (fetch 0) happen when a later turn reuses blocks
+        // still resident; the paper's offloaded setting is the host hit.
+        ttft.record(out.ttft.total());
+        frac.record(out.ttft.fetch_fraction());
+    }
+    (ttft.mean(), frac.mean())
+}
+
+/// Fig 2: proportion of prefix-cache fetching time in TTFT (baseline).
+pub fn fig2_ttft_share(fast: bool) -> Table {
+    let n_docs = if fast { 2 } else { 5 };
+    let mut t = Table::new(["model", "context", "TTFT (s)", "fetch share"]);
+    for m in paper_models() {
+        for ctx in CONTEXTS {
+            let (ttft, frac) = qa_ttft(&m, ctx, MmaConfig::native(), n_docs);
+            t.row([
+                m.name.to_string(),
+                format!("{}k", ctx / 1024),
+                format!("{ttft:.3}"),
+                format!("{:.0}%", frac * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 12: TTFT baseline vs MMA across models × context lengths.
+pub fn fig12_ttft(fast: bool) -> Table {
+    let n_docs = if fast { 2 } else { 5 };
+    let mut t = Table::new(["model", "context", "baseline TTFT (s)", "MMA TTFT (s)", "speedup"]);
+    for m in paper_models() {
+        for ctx in CONTEXTS {
+            let (base, _) = qa_ttft(&m, ctx, MmaConfig::native(), n_docs);
+            let (mma, _) = qa_ttft(&m, ctx, MmaConfig::default(), n_docs);
+            t.row([
+                m.name.to_string(),
+                format!("{}k", ctx / 1024),
+                format!("{base:.3}"),
+                format!("{mma:.3}"),
+                format!("{:.2}x", base / mma),
+            ]);
+        }
+    }
+    t
+}
+
+/// One sleep/wake measurement. Returns (sleep, wake) phase results.
+pub fn sleep_wake(
+    model: &ModelSpec,
+    mma: MmaConfig,
+) -> (
+    crate::serving::model_registry::PhaseResult,
+    crate::serving::model_registry::PhaseResult,
+) {
+    let mut world = SimWorld::new(h20x8(), mma);
+    let mut reg = ModelRegistry::new(NumaId(0));
+    let idx = reg.register(model.clone(), vec![GpuId(0)]);
+    let s = reg.sleep(&mut world, idx);
+    let w = reg.wake(&mut world, idx);
+    (s, w)
+}
+
+/// Fig 3: proportion of H2D/D2H transfer time in swap-in/out latency.
+pub fn fig3_swap_share() -> Table {
+    let mut t = Table::new([
+        "model",
+        "sleep total (s)",
+        "sleep transfer share",
+        "wake total (s)",
+        "wake transfer share",
+    ]);
+    for m in paper_models() {
+        let (s, w) = sleep_wake(&m, MmaConfig::native());
+        t.row([
+            m.name.to_string(),
+            format!("{:.3}", s.total().as_secs_f64()),
+            format!("{:.0}%", s.transfer_fraction() * 100.0),
+            format!("{:.3}", w.total().as_secs_f64()),
+            format!("{:.0}%", w.transfer_fraction() * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig 13: fall-asleep and wake-up latency, baseline vs MMA.
+pub fn fig13_switching() -> Table {
+    let mut t = Table::new([
+        "model",
+        "sleep base (s)",
+        "sleep MMA (s)",
+        "sleep x",
+        "wake base (s)",
+        "wake MMA (s)",
+        "wake x",
+    ]);
+    for m in paper_models() {
+        let (sb, wb) = sleep_wake(&m, MmaConfig::native());
+        let (sm, wm) = sleep_wake(&m, MmaConfig::default());
+        let sx = sb.total().as_secs_f64() / sm.total().as_secs_f64();
+        let wx = wb.total().as_secs_f64() / wm.total().as_secs_f64();
+        t.row([
+            m.name.to_string(),
+            format!("{:.3}", sb.total().as_secs_f64()),
+            format!("{:.3}", sm.total().as_secs_f64()),
+            format!("{sx:.2}x"),
+            format!("{:.3}", wb.total().as_secs_f64()),
+            format!("{:.3}", wm.total().as_secs_f64()),
+            format!("{wx:.2}x"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{qwen3_32b, qwen_7b_chat};
+
+    #[test]
+    fn fig2_fetch_share_grows_with_context_and_hits_70pct() {
+        let m = qwen_7b_chat();
+        let (_, f16) = qa_ttft(&m, 16_384, MmaConfig::native(), 2);
+        let (_, f64k) = qa_ttft(&m, 65_536, MmaConfig::native(), 2);
+        assert!(f64k > f16, "share must grow with context: {f16} → {f64k}");
+        // Paper: up to 70% at 64k on Qwen-7B-Chat.
+        assert!((0.5..0.9).contains(&f64k), "64k fetch share {f64k}");
+    }
+
+    #[test]
+    fn fig12_speedup_band() {
+        let m = qwen_7b_chat();
+        let (base, _) = qa_ttft(&m, 65_536, MmaConfig::native(), 2);
+        let (mma, _) = qa_ttft(&m, 65_536, MmaConfig::default(), 2);
+        let x = base / mma;
+        // Paper: 1.14–2.38x, largest at 64k (2.38x).
+        assert!((1.5..3.2).contains(&x), "64k TTFT speedup {x}");
+        let (b16, _) = qa_ttft(&m, 16_384, MmaConfig::native(), 2);
+        let (m16, _) = qa_ttft(&m, 16_384, MmaConfig::default(), 2);
+        assert!(b16 / m16 < x, "longer prefixes must benefit more");
+    }
+
+    #[test]
+    fn fig13_32b_switching_band() {
+        let m = qwen3_32b();
+        let (sb, wb) = sleep_wake(&m, MmaConfig::native());
+        let (sm, wm) = sleep_wake(&m, MmaConfig::default());
+        let sx = sb.total().as_secs_f64() / sm.total().as_secs_f64();
+        let wx = wb.total().as_secs_f64() / wm.total().as_secs_f64();
+        // Paper: 2.32–2.48x for Qwen3-32B.
+        assert!((1.9..3.5).contains(&sx), "sleep speedup {sx}");
+        assert!((1.9..3.5).contains(&wx), "wake speedup {wx}");
+        // Baseline wake ~2.5s headline ("switching a 32B model takes ~2.5s").
+        let switch_base = sb.total().as_secs_f64() + wb.total().as_secs_f64();
+        assert!((1.8..3.2).contains(&switch_base), "32B switch {switch_base}");
+    }
+}

@@ -1,0 +1,502 @@
+//! CUDA-semantics execution model over the virtual clock.
+//!
+//! Reproduces exactly the properties of the CUDA execution model that the
+//! paper's design wrestles with (§2.3):
+//!
+//! * **Streams are FIFO**: tasks execute strictly in order; a task's
+//!   completion releases the next one.
+//! * **Enqueue-time binding (C1)**: a `Memcpy` task that enters a stream is
+//!   committed — the only pre-dispatch hook is at the API boundary, which
+//!   is where [`crate::mma::Interceptor`] interposes.
+//! * **Single-task completion (C2)**: downstream work observes only
+//!   stream-task completion, so distributed multipath completion must be
+//!   funneled through one stream-visible task (the Dummy Task =
+//!   [`StreamTask::HostCallback`] + [`StreamTask::SpinKernel`]).
+//! * **Events**: `record`/`wait` pairs order work across streams.
+//!
+//! The model is passive: the driver (see [`crate::mma::driver`]) calls
+//! [`GpuSim::try_advance`] when a stream may be able to make progress and
+//! acts on the returned [`Action`]s (start a DMA flow, schedule a kernel
+//! completion, run a host callback...).
+
+use crate::sim::Time;
+use crate::topology::GpuId;
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Stream index within a device.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub u16);
+
+/// A host-visible copy registered with the runtime (native or intercepted).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TransferId(pub u32);
+
+/// Mapped pinned-host flag a spin kernel polls (`cudaHostAllocMapped`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlagId(pub u32);
+
+/// Host-callback handle (`cudaLaunchHostFunc`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CbId(pub u32);
+
+/// CUDA event handle.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CudaEventId(pub u32);
+
+impl fmt::Debug for StreamId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+impl fmt::Debug for TransferId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xfer{}", self.0)
+    }
+}
+impl fmt::Debug for FlagId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "flag{}", self.0)
+    }
+}
+impl fmt::Debug for CbId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cb{}", self.0)
+    }
+}
+impl fmt::Debug for CudaEventId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ev{}", self.0)
+    }
+}
+
+/// A task in a CUDA stream.
+#[derive(Clone, Debug)]
+pub enum StreamTask {
+    /// Compute kernel with a fixed duration.
+    Kernel {
+        /// Execution time once scheduled.
+        dur: Time,
+        /// Debug label.
+        label: &'static str,
+    },
+    /// A memory copy bound to its path at enqueue time (native semantics).
+    /// The driver starts the DMA when the task reaches the stream head and
+    /// calls [`GpuSim::complete_head`] when the flow finishes.
+    Memcpy {
+        /// The registered transfer this task carries.
+        transfer: TransferId,
+    },
+    /// `cudaLaunchHostFunc`: runs on the CPU when it reaches the head;
+    /// stream→CPU notification only (cannot block the stream afterwards).
+    HostCallback {
+        /// Which callback to run.
+        cb: CbId,
+    },
+    /// MMA's spin kernel: occupies the stream until the mapped flag is set
+    /// (CPU→stream direction of the bidirectional handshake, §3.3).
+    SpinKernel {
+        /// Flag to poll with `__ldcg` + `__nanosleep`.
+        flag: FlagId,
+    },
+    /// `cudaEventRecord`: completes instantly, timestamping the event.
+    RecordEvent {
+        /// Event to record.
+        event: CudaEventId,
+    },
+    /// `cudaStreamWaitEvent`: blocks until the event is recorded.
+    WaitEvent {
+        /// Event to wait for.
+        event: CudaEventId,
+    },
+}
+
+/// What the driver must do after a stream advanced onto a new head task.
+#[derive(Clone, Debug)]
+pub enum Action {
+    /// A kernel started: schedule `complete_head` after `dur`.
+    KernelStarted {
+        /// Device/stream that must be completed later.
+        dev: GpuId,
+        /// Stream.
+        stream: StreamId,
+        /// Kernel duration.
+        dur: Time,
+    },
+    /// A native (non-intercepted) copy reached the head: start its DMA.
+    CopyReachedHead {
+        /// Device owning the stream.
+        dev: GpuId,
+        /// Stream.
+        stream: StreamId,
+        /// The transfer to launch.
+        transfer: TransferId,
+    },
+    /// Run a host callback now (the stream continues past it immediately).
+    RunCallback {
+        /// Callback id.
+        cb: CbId,
+    },
+    /// The stream parked on a spin kernel whose flag is still unset.
+    /// When the flag is set, the driver releases it after a PCIe RTT.
+    SpinParked {
+        /// Device.
+        dev: GpuId,
+        /// Stream.
+        stream: StreamId,
+        /// Flag being polled.
+        flag: FlagId,
+    },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum HeadState {
+    /// Nothing started at the head.
+    Idle,
+    /// Head task started and waiting for external completion.
+    Running,
+    /// Parked on a spin kernel / event.
+    Blocked,
+}
+
+#[derive(Debug, Default)]
+struct Stream {
+    q: VecDeque<StreamTask>,
+    state: HeadState,
+    /// Completion count, for idle detection.
+    completed: u64,
+}
+
+impl Default for HeadState {
+    fn default() -> Self {
+        HeadState::Idle
+    }
+}
+
+#[derive(Debug, Default)]
+struct Device {
+    streams: Vec<Stream>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FlagState {
+    Unset,
+    Set,
+}
+
+/// The device-side world: all GPUs, their streams, CUDA events, and mapped
+/// host flags.
+pub struct GpuSim {
+    devices: Vec<Device>,
+    flags: Vec<FlagState>,
+    /// (dev, stream) parked on each flag.
+    flag_waiters: Vec<Vec<(GpuId, StreamId)>>,
+    events: Vec<Option<Time>>, // recorded at
+    event_waiters: Vec<Vec<(GpuId, StreamId)>>,
+}
+
+impl GpuSim {
+    /// Create with `gpu_count` devices, each starting with zero streams.
+    pub fn new(gpu_count: usize) -> GpuSim {
+        GpuSim {
+            devices: (0..gpu_count).map(|_| Device::default()).collect(),
+            flags: Vec::new(),
+            flag_waiters: Vec::new(),
+            events: Vec::new(),
+            event_waiters: Vec::new(),
+        }
+    }
+
+    /// Create a stream on a device (`cudaStreamCreate`).
+    pub fn create_stream(&mut self, dev: GpuId) -> StreamId {
+        let d = &mut self.devices[dev.0 as usize];
+        d.streams.push(Stream::default());
+        StreamId((d.streams.len() - 1) as u16)
+    }
+
+    /// Allocate a mapped pinned-host flag (`cudaHostAllocMapped`).
+    pub fn alloc_flag(&mut self) -> FlagId {
+        self.flags.push(FlagState::Unset);
+        self.flag_waiters.push(Vec::new());
+        FlagId((self.flags.len() - 1) as u32)
+    }
+
+    /// Create a CUDA event (`cudaEventCreate`).
+    pub fn create_event(&mut self) -> CudaEventId {
+        self.events.push(None);
+        self.event_waiters.push(Vec::new());
+        CudaEventId((self.events.len() - 1) as u32)
+    }
+
+    /// Enqueue a task (`cudaMemcpyAsync` / kernel launch / ...).
+    /// Returns the streams that may now advance (just this one).
+    pub fn enqueue(&mut self, dev: GpuId, stream: StreamId, task: StreamTask) {
+        self.devices[dev.0 as usize].streams[stream.0 as usize]
+            .q
+            .push_back(task);
+    }
+
+    /// True if the stream has no pending tasks.
+    pub fn stream_idle(&self, dev: GpuId, stream: StreamId) -> bool {
+        self.devices[dev.0 as usize].streams[stream.0 as usize]
+            .q
+            .is_empty()
+    }
+
+    /// Number of tasks this stream has fully retired.
+    pub fn stream_completed(&self, dev: GpuId, stream: StreamId) -> u64 {
+        self.devices[dev.0 as usize].streams[stream.0 as usize].completed
+    }
+
+    /// Whether a CUDA event has been recorded (and when).
+    pub fn event_recorded(&self, ev: CudaEventId) -> Option<Time> {
+        self.events[ev.0 as usize]
+    }
+
+    /// Advance a stream as far as possible. Returns driver actions. Call
+    /// whenever the stream may progress (after enqueue, completion, flag
+    /// set, or event record).
+    pub fn try_advance(&mut self, now: Time, dev: GpuId, stream: StreamId) -> Vec<Action> {
+        let mut actions = Vec::new();
+        loop {
+            let s = &mut self.devices[dev.0 as usize].streams[stream.0 as usize];
+            if s.state != HeadState::Idle {
+                break; // running or blocked; external completion will resume us
+            }
+            let Some(head) = s.q.front().cloned() else {
+                break;
+            };
+            match head {
+                StreamTask::Kernel { dur, .. } => {
+                    s.state = HeadState::Running;
+                    actions.push(Action::KernelStarted { dev, stream, dur });
+                    break;
+                }
+                StreamTask::Memcpy { transfer } => {
+                    s.state = HeadState::Running;
+                    actions.push(Action::CopyReachedHead {
+                        dev,
+                        stream,
+                        transfer,
+                    });
+                    break;
+                }
+                StreamTask::HostCallback { cb } => {
+                    // Executes "instantly" on the CPU; stream moves on.
+                    s.q.pop_front();
+                    s.completed += 1;
+                    actions.push(Action::RunCallback { cb });
+                }
+                StreamTask::SpinKernel { flag } => {
+                    match self.flags[flag.0 as usize] {
+                        FlagState::Set => {
+                            // Flag already set: kernel exits immediately.
+                            let s =
+                                &mut self.devices[dev.0 as usize].streams[stream.0 as usize];
+                            s.q.pop_front();
+                            s.completed += 1;
+                        }
+                        FlagState::Unset => {
+                            let s =
+                                &mut self.devices[dev.0 as usize].streams[stream.0 as usize];
+                            s.state = HeadState::Blocked;
+                            self.flag_waiters[flag.0 as usize].push((dev, stream));
+                            actions.push(Action::SpinParked { dev, stream, flag });
+                            break;
+                        }
+                    }
+                }
+                StreamTask::RecordEvent { event } => {
+                    s.q.pop_front();
+                    s.completed += 1;
+                    self.events[event.0 as usize] = Some(now);
+                    // Waiters resume; caller must try_advance them. We return
+                    // them as RunCallback-free actions? Keep it simple: the
+                    // driver re-advances waiters via `take_event_waiters`.
+                }
+                StreamTask::WaitEvent { event } => {
+                    if self.events[event.0 as usize].is_some() {
+                        s.q.pop_front();
+                        s.completed += 1;
+                    } else {
+                        s.state = HeadState::Blocked;
+                        self.event_waiters[event.0 as usize].push((dev, stream));
+                        break;
+                    }
+                }
+            }
+        }
+        actions
+    }
+
+    /// Complete the currently-running head task of a stream (kernel done,
+    /// native copy done, intercepted transfer done). The caller then calls
+    /// [`Self::try_advance`] again.
+    pub fn complete_head(&mut self, dev: GpuId, stream: StreamId) {
+        let s = &mut self.devices[dev.0 as usize].streams[stream.0 as usize];
+        debug_assert_eq!(s.state, HeadState::Running, "complete_head on non-running");
+        s.q.pop_front();
+        s.completed += 1;
+        s.state = HeadState::Idle;
+    }
+
+    /// CPU sets a mapped flag (`*h_flag = 1`). Returns the streams whose
+    /// spin kernels observe it; the driver releases each after a PCIe RTT
+    /// by calling [`Self::release_spin`].
+    pub fn set_flag(&mut self, flag: FlagId) -> Vec<(GpuId, StreamId)> {
+        self.flags[flag.0 as usize] = FlagState::Set;
+        std::mem::take(&mut self.flag_waiters[flag.0 as usize])
+    }
+
+    /// Reset a flag for reuse (MMA pools its mapped flags).
+    pub fn reset_flag(&mut self, flag: FlagId) {
+        self.flags[flag.0 as usize] = FlagState::Unset;
+    }
+
+    /// The spin kernel observed the flag: pop it and unblock the stream.
+    pub fn release_spin(&mut self, dev: GpuId, stream: StreamId) {
+        let s = &mut self.devices[dev.0 as usize].streams[stream.0 as usize];
+        debug_assert_eq!(s.state, HeadState::Blocked);
+        debug_assert!(matches!(s.q.front(), Some(StreamTask::SpinKernel { .. })));
+        s.q.pop_front();
+        s.completed += 1;
+        s.state = HeadState::Idle;
+    }
+
+    /// Streams parked on an event that has just been recorded. The driver
+    /// unblocks (state → Idle) and re-advances each.
+    pub fn take_event_waiters(&mut self, ev: CudaEventId) -> Vec<(GpuId, StreamId)> {
+        let ws = std::mem::take(&mut self.event_waiters[ev.0 as usize]);
+        for &(dev, stream) in &ws {
+            let s = &mut self.devices[dev.0 as usize].streams[stream.0 as usize];
+            debug_assert_eq!(s.state, HeadState::Blocked);
+            s.state = HeadState::Idle;
+        }
+        ws
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(i: u8) -> GpuId {
+        GpuId(i)
+    }
+
+    #[test]
+    fn fifo_order_kernel_then_copy() {
+        let mut sim = GpuSim::new(2);
+        let s = sim.create_stream(g(0));
+        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(5), label: "k" });
+        sim.enqueue(g(0), s, StreamTask::Memcpy { transfer: TransferId(7) });
+        let a = sim.try_advance(Time::ZERO, g(0), s);
+        assert!(matches!(a[..], [Action::KernelStarted { .. }]));
+        // Copy must NOT start while the kernel runs.
+        assert!(sim.try_advance(Time::ZERO, g(0), s).is_empty());
+        sim.complete_head(g(0), s);
+        let a = sim.try_advance(Time::from_us(5), g(0), s);
+        assert!(
+            matches!(a[..], [Action::CopyReachedHead { transfer: TransferId(7), .. }]),
+            "{a:?}"
+        );
+    }
+
+    #[test]
+    fn host_callback_runs_and_stream_continues() {
+        let mut sim = GpuSim::new(1);
+        let s = sim.create_stream(g(0));
+        let cb = CbId(3);
+        sim.enqueue(g(0), s, StreamTask::HostCallback { cb });
+        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(1), label: "k" });
+        let a = sim.try_advance(Time::ZERO, g(0), s);
+        // Callback fires AND the next kernel starts in the same advance:
+        // host callbacks give stream→CPU notification but cannot block.
+        assert_eq!(a.len(), 2);
+        assert!(matches!(a[0], Action::RunCallback { cb: CbId(3) }));
+        assert!(matches!(a[1], Action::KernelStarted { .. }));
+    }
+
+    #[test]
+    fn spin_kernel_blocks_until_flag() {
+        let mut sim = GpuSim::new(1);
+        let s = sim.create_stream(g(0));
+        let flag = sim.alloc_flag();
+        sim.enqueue(g(0), s, StreamTask::SpinKernel { flag });
+        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(1), label: "down" });
+        let a = sim.try_advance(Time::ZERO, g(0), s);
+        assert!(matches!(a[..], [Action::SpinParked { .. }]));
+        // Downstream kernel must not start: C2's stale-read hazard.
+        assert!(sim.try_advance(Time::ZERO, g(0), s).is_empty());
+        // CPU sets the flag.
+        let waiters = sim.set_flag(flag);
+        assert_eq!(waiters, vec![(g(0), s)]);
+        sim.release_spin(g(0), s);
+        let a = sim.try_advance(Time::from_us(2), g(0), s);
+        assert!(matches!(a[..], [Action::KernelStarted { .. }]));
+    }
+
+    #[test]
+    fn spin_kernel_with_preset_flag_passes_through() {
+        let mut sim = GpuSim::new(1);
+        let s = sim.create_stream(g(0));
+        let flag = sim.alloc_flag();
+        sim.set_flag(flag);
+        sim.enqueue(g(0), s, StreamTask::SpinKernel { flag });
+        let a = sim.try_advance(Time::ZERO, g(0), s);
+        assert!(a.is_empty());
+        assert!(sim.stream_idle(g(0), s));
+        assert_eq!(sim.stream_completed(g(0), s), 1);
+    }
+
+    #[test]
+    fn events_order_across_streams() {
+        let mut sim = GpuSim::new(1);
+        let s1 = sim.create_stream(g(0));
+        let s2 = sim.create_stream(g(0));
+        let ev = sim.create_event();
+        // s2 waits on ev; s1 records it after a kernel.
+        sim.enqueue(g(0), s2, StreamTask::WaitEvent { event: ev });
+        sim.enqueue(g(0), s2, StreamTask::Kernel { dur: Time::from_us(1), label: "after" });
+        let a = sim.try_advance(Time::ZERO, g(0), s2);
+        assert!(a.is_empty(), "s2 must block: {a:?}");
+
+        sim.enqueue(g(0), s1, StreamTask::Kernel { dur: Time::from_us(3), label: "k" });
+        sim.enqueue(g(0), s1, StreamTask::RecordEvent { event: ev });
+        let a = sim.try_advance(Time::ZERO, g(0), s1);
+        assert!(matches!(a[..], [Action::KernelStarted { .. }]));
+        sim.complete_head(g(0), s1);
+        let a = sim.try_advance(Time::from_us(3), g(0), s1);
+        assert!(a.is_empty()); // record is instant
+        assert_eq!(sim.event_recorded(ev), Some(Time::from_us(3)));
+        let waiters = sim.take_event_waiters(ev);
+        assert_eq!(waiters, vec![(g(0), s2)]);
+        let a = sim.try_advance(Time::from_us(3), g(0), s2);
+        assert!(matches!(a[..], [Action::KernelStarted { .. }]));
+    }
+
+    #[test]
+    fn wait_on_already_recorded_event_is_instant() {
+        let mut sim = GpuSim::new(1);
+        let s1 = sim.create_stream(g(0));
+        let ev = sim.create_event();
+        sim.enqueue(g(0), s1, StreamTask::RecordEvent { event: ev });
+        sim.try_advance(Time::ZERO, g(0), s1);
+        let s2 = sim.create_stream(g(0));
+        sim.enqueue(g(0), s2, StreamTask::WaitEvent { event: ev });
+        sim.try_advance(Time::ZERO, g(0), s2);
+        assert!(sim.stream_idle(g(0), s2));
+    }
+
+    #[test]
+    fn flag_reuse_after_reset() {
+        let mut sim = GpuSim::new(1);
+        let s = sim.create_stream(g(0));
+        let flag = sim.alloc_flag();
+        sim.set_flag(flag);
+        sim.reset_flag(flag);
+        sim.enqueue(g(0), s, StreamTask::SpinKernel { flag });
+        let a = sim.try_advance(Time::ZERO, g(0), s);
+        assert!(matches!(a[..], [Action::SpinParked { .. }]), "reset flag must block");
+    }
+}

@@ -1,0 +1,49 @@
+//! # MMA — Multipath Memory Access
+//!
+//! Reproduction of *"Multipath Memory Access: Breaking Host-GPU Bandwidth
+//! Bottlenecks in LLM Serving"* (Tang et al., 2025).
+//!
+//! MMA expands a single host↔GPU memory copy across the target GPU's direct
+//! PCIe path plus relay paths through peer GPUs (peer PCIe link + NVLink
+//! hop), within one multi-GPU server, without hardware/driver/application
+//! changes.
+//!
+//! Because the paper's testbed (8×NVIDIA H20) is a hardware gate, this
+//! crate ships a high-fidelity substrate:
+//!
+//! * [`sim`] — discrete-event simulation core (virtual nanosecond clock).
+//! * [`topology`] — intra-server interconnect model (PCIe/NVLink/xGMI/DRAM).
+//! * [`fabric`] — flow-level bandwidth simulator (max-min fair sharing).
+//! * [`gpusim`] — CUDA-semantics execution model (streams/events/kernels).
+//!
+//! and the paper's system on top:
+//!
+//! * [`mma`] — Transfer Task Interceptor, Sync Engine, Multipath Transfer
+//!   Engine (Task Manager / Path Selector / Task Launcher).
+//! * [`baseline`] — native single-path copies and static splitters.
+//! * [`serving`] — vLLM-like serving layer (paged KV cache, prefix cache,
+//!   sleep/wake model registry, continuous batching, PD scheduling).
+//! * [`runtime`] — PJRT client: loads AOT-compiled JAX/Pallas artifacts and
+//!   executes the real model on the serving path.
+//! * [`figures`] — one runner per paper table/figure.
+
+pub mod baseline;
+pub mod testkit;
+pub mod util;
+pub mod config;
+pub mod fabric;
+pub mod figures;
+pub mod gpusim;
+pub mod memory;
+pub mod metrics;
+pub mod mma;
+pub mod models;
+pub mod roofline;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod topology;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

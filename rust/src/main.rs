@@ -1,0 +1,148 @@
+//! `mma` CLI: the leader entrypoint.
+//!
+//! ```text
+//! mma topo [--preset h20x8]               describe the simulated server
+//! mma microbench [--dir h2d] [--size 1GB] [--relays 7] [--mode mma|native]
+//! mma figure <id|all> [--fast]            regenerate a paper table/figure
+//! mma serve [--model qwen-7b] [--ctx 65536] [--docs 4] [--mode mma|native]
+//! mma switch [--model qwen3-32b] [--mode mma|native]
+//! mma config-check <file.toml>            validate a config file
+//! ```
+
+use mma::config::RunConfig;
+use mma::figures;
+use mma::mma::{MmaConfig, SimWorld, TransferDesc};
+use mma::models;
+use mma::topology::{Direction, GpuId, NumaId, Preset};
+use mma::util::cli::Args;
+use mma::util::fmt;
+
+fn mma_cfg(args: &Args) -> MmaConfig {
+    let mut cfg = match args.str_or("mode", "mma").as_str() {
+        "native" => MmaConfig::native(),
+        _ => MmaConfig::default(),
+    };
+    if let Some(r) = args.get_as::<usize>("relays") {
+        let topo = Preset::H20x8.build();
+        cfg.relay_gpus = Some(
+            topo.relay_order(GpuId(0), &[])
+                .into_iter()
+                .take(r)
+                .collect(),
+        );
+    }
+    cfg.chunk_bytes = args.size_or("chunk", cfg.chunk_bytes);
+    cfg.outstanding_depth = args.or("depth", cfg.outstanding_depth);
+    cfg
+}
+
+fn model_by_name(name: &str) -> models::ModelSpec {
+    match name.to_ascii_lowercase().as_str() {
+        "qwen3-0.6b" | "0.6b" => models::qwen3_0_6b(),
+        "qwen3-4b" | "4b" => models::qwen3_4b(),
+        "qwen-7b" | "qwen-7b-chat" | "7b" => models::qwen_7b_chat(),
+        "qwen3-32b" | "32b" => models::qwen3_32b(),
+        "tiny" => models::tiny_serve(),
+        other => {
+            eprintln!("unknown model {other:?}; using qwen-7b-chat");
+            models::qwen_7b_chat()
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = RunConfig::default();
+    cfg.apply_env();
+    match args.pos(0).unwrap_or("help") {
+        "topo" => {
+            let preset = Preset::parse(&args.str_or("preset", "h20x8")).unwrap_or(Preset::H20x8);
+            print!("{}", preset.build().describe());
+        }
+        "microbench" => {
+            let dir = match args.str_or("dir", "h2d").as_str() {
+                "d2h" => Direction::D2H,
+                _ => Direction::H2D,
+            };
+            let bytes = args.size_or("size", 1 << 30);
+            let mcfg = mma_cfg(&args);
+            let mut w = SimWorld::new(cfg.topology(), mcfg);
+            let s = w.stream(GpuId(0));
+            let t = w.memcpy_async(s, TransferDesc::new(dir, GpuId(0), NumaId(0), bytes));
+            w.run_until_transfer(t);
+            let rec = w.rec(t);
+            println!(
+                "{} {} via {}: {} ({} direct / {} relay)",
+                dir.label(),
+                fmt::bytes(bytes),
+                args.str_or("mode", "mma"),
+                fmt::gbps(rec.bandwidth().unwrap_or(0.0)),
+                fmt::bytes(rec.bytes_direct),
+                fmt::bytes(rec.bytes_relay),
+            );
+        }
+        "figure" => {
+            let id = args.pos(1).unwrap_or("all");
+            let fast = args.flag("fast");
+            if id == "all" {
+                for id in figures::all_ids() {
+                    println!("\n===== figure {id} =====");
+                    print!("{}", figures::run_by_name(id, fast).unwrap());
+                }
+            } else {
+                match figures::run_by_name(id, fast) {
+                    Some(s) => print!("{s}"),
+                    None => {
+                        eprintln!("unknown figure {id:?}; one of {:?}", figures::all_ids());
+                        std::process::exit(2);
+                    }
+                }
+            }
+        }
+        "serve" => {
+            let model = model_by_name(&args.str_or("model", "qwen-7b-chat"));
+            let ctx: u32 = args.or("ctx", 65_536);
+            let docs: usize = args.or("docs", 4);
+            let mcfg = mma_cfg(&args);
+            let (ttft, frac) = figures::serving_figs::qa_ttft(&model, ctx, mcfg, docs);
+            println!(
+                "{} ctx={}k docs={docs} mode={}: mean TTFT {} (fetch share {:.0}%)",
+                model.name,
+                ctx / 1024,
+                args.str_or("mode", "mma"),
+                fmt::secs(ttft),
+                frac * 100.0
+            );
+        }
+        "switch" => {
+            let model = model_by_name(&args.str_or("model", "qwen3-32b"));
+            let mcfg = mma_cfg(&args);
+            let (s, w) = figures::serving_figs::sleep_wake(&model, mcfg);
+            println!(
+                "{} mode={}: sleep {} (transfer {:.0}%), wake {} (transfer {:.0}%)",
+                model.name,
+                args.str_or("mode", "mma"),
+                fmt::secs(s.total().as_secs_f64()),
+                s.transfer_fraction() * 100.0,
+                fmt::secs(w.total().as_secs_f64()),
+                w.transfer_fraction() * 100.0,
+            );
+        }
+        "config-check" => {
+            let path = args.pos(1).expect("usage: mma config-check <file.toml>");
+            let text = std::fs::read_to_string(path).expect("read config");
+            match RunConfig::from_toml(&text) {
+                Ok(c) => println!("ok: preset={:?}, chunk={}", c.preset, c.mma.chunk_bytes),
+                Err(e) => {
+                    eprintln!("invalid config: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            println!("mma — Multipath Memory Access (paper reproduction)");
+            println!("subcommands: topo | microbench | figure <id|all> | serve | switch | config-check");
+            println!("figures: {:?}", figures::all_ids());
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Memory substrates: a pinned host-buffer pool (what `cudaHostAlloc`
+//! hands out, NUMA-placed) and a per-GPU HBM allocator (block-granular,
+//! what the serving layer carves KV pages and weight buffers from).
+//!
+//! The simulation never stores payload bytes — allocations track *placement
+//! and capacity*, which is what routing and admission decisions depend on.
+
+use crate::topology::{GpuId, NumaId};
+
+/// Handle to a pinned host allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct HostAlloc(pub u32);
+
+/// Handle to a device (HBM) allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DevAlloc(pub u32);
+
+#[derive(Debug, Clone)]
+struct Region {
+    bytes: u64,
+    live: bool,
+}
+
+/// Pinned host memory pool with per-NUMA capacity accounting.
+#[derive(Debug)]
+pub struct HostPool {
+    capacity: Vec<u64>,
+    used: Vec<u64>,
+    regions: Vec<(NumaId, Region)>,
+    free_slots: Vec<u32>,
+}
+
+impl HostPool {
+    /// Pool with `capacity_per_numa` bytes on each of `numa_count` nodes.
+    pub fn new(numa_count: u8, capacity_per_numa: u64) -> HostPool {
+        HostPool {
+            capacity: vec![capacity_per_numa; numa_count as usize],
+            used: vec![0; numa_count as usize],
+            regions: Vec::new(),
+            free_slots: Vec::new(),
+        }
+    }
+
+    /// Allocate pinned bytes on a NUMA node. Fails if it would exceed
+    /// capacity (host DRAM is finite — the serving layer's offload tier
+    /// sizing depends on this signal).
+    pub fn alloc(&mut self, numa: NumaId, bytes: u64) -> Option<HostAlloc> {
+        let n = numa.0 as usize;
+        if self.used[n] + bytes > self.capacity[n] {
+            return None;
+        }
+        self.used[n] += bytes;
+        let region = (numa, Region { bytes, live: true });
+        let id = match self.free_slots.pop() {
+            Some(i) => {
+                self.regions[i as usize] = region;
+                i
+            }
+            None => {
+                self.regions.push(region);
+                (self.regions.len() - 1) as u32
+            }
+        };
+        Some(HostAlloc(id))
+    }
+
+    /// Free an allocation (idempotent-hostile: double free panics).
+    pub fn free(&mut self, a: HostAlloc) {
+        let (numa, region) = &mut self.regions[a.0 as usize];
+        assert!(region.live, "double free of {a:?}");
+        region.live = false;
+        self.used[numa.0 as usize] -= region.bytes;
+        self.free_slots.push(a.0);
+    }
+
+    /// NUMA node of an allocation.
+    pub fn numa_of(&self, a: HostAlloc) -> NumaId {
+        self.regions[a.0 as usize].0
+    }
+
+    /// Bytes of an allocation.
+    pub fn bytes_of(&self, a: HostAlloc) -> u64 {
+        self.regions[a.0 as usize].1.bytes
+    }
+
+    /// Used bytes on a node.
+    pub fn used(&self, numa: NumaId) -> u64 {
+        self.used[numa.0 as usize]
+    }
+
+    /// Free bytes on a node.
+    pub fn available(&self, numa: NumaId) -> u64 {
+        self.capacity[numa.0 as usize] - self.used[numa.0 as usize]
+    }
+}
+
+/// Per-GPU HBM allocator with bump+freelist semantics at byte granularity.
+#[derive(Debug)]
+pub struct HbmAllocator {
+    capacity: Vec<u64>,
+    used: Vec<u64>,
+    regions: Vec<(GpuId, Region)>,
+    free_slots: Vec<u32>,
+}
+
+impl HbmAllocator {
+    /// `capacity` bytes on each of `gpu_count` GPUs (H20: 96 GB).
+    pub fn new(gpu_count: usize, capacity: u64) -> HbmAllocator {
+        HbmAllocator {
+            capacity: vec![capacity; gpu_count],
+            used: vec![0; gpu_count],
+            regions: Vec::new(),
+            free_slots: Vec::new(),
+        }
+    }
+
+    /// Allocate on a GPU; `None` when HBM is exhausted (triggers KV
+    /// eviction / refuses model wake-up upstream).
+    pub fn alloc(&mut self, gpu: GpuId, bytes: u64) -> Option<DevAlloc> {
+        let g = gpu.0 as usize;
+        if self.used[g] + bytes > self.capacity[g] {
+            return None;
+        }
+        self.used[g] += bytes;
+        let region = (gpu, Region { bytes, live: true });
+        let id = match self.free_slots.pop() {
+            Some(i) => {
+                self.regions[i as usize] = region;
+                i
+            }
+            None => {
+                self.regions.push(region);
+                (self.regions.len() - 1) as u32
+            }
+        };
+        Some(DevAlloc(id))
+    }
+
+    /// Free an allocation.
+    pub fn free(&mut self, a: DevAlloc) {
+        let (gpu, region) = &mut self.regions[a.0 as usize];
+        assert!(region.live, "double free of {a:?}");
+        region.live = false;
+        self.used[gpu.0 as usize] -= region.bytes;
+        self.free_slots.push(a.0);
+    }
+
+    /// Used bytes on a GPU.
+    pub fn used(&self, gpu: GpuId) -> u64 {
+        self.used[gpu.0 as usize]
+    }
+
+    /// Free bytes on a GPU.
+    pub fn available(&self, gpu: GpuId) -> u64 {
+        self.capacity[gpu.0 as usize] - self.used[gpu.0 as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn host_pool_capacity_enforced() {
+        let mut p = HostPool::new(2, 100);
+        let a = p.alloc(NumaId(0), 60).unwrap();
+        assert!(p.alloc(NumaId(0), 50).is_none(), "over capacity");
+        assert!(p.alloc(NumaId(1), 50).is_some(), "other node unaffected");
+        assert_eq!(p.used(NumaId(0)), 60);
+        p.free(a);
+        assert_eq!(p.used(NumaId(0)), 0);
+        assert!(p.alloc(NumaId(0), 100).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn host_double_free_panics() {
+        let mut p = HostPool::new(1, 100);
+        let a = p.alloc(NumaId(0), 10).unwrap();
+        p.free(a);
+        p.free(a);
+    }
+
+    #[test]
+    fn hbm_alloc_free_cycles() {
+        let mut h = HbmAllocator::new(2, 1000);
+        let a = h.alloc(GpuId(0), 400).unwrap();
+        let b = h.alloc(GpuId(0), 600).unwrap();
+        assert!(h.alloc(GpuId(0), 1).is_none());
+        assert_eq!(h.available(GpuId(1)), 1000);
+        h.free(a);
+        assert_eq!(h.available(GpuId(0)), 400);
+        h.free(b);
+        assert_eq!(h.used(GpuId(0)), 0);
+    }
+
+    #[test]
+    fn accounting_invariant_under_random_ops() {
+        testkit::check("memory-accounting", |rng| {
+            let mut h = HbmAllocator::new(4, 1 << 20);
+            let mut live: Vec<(DevAlloc, GpuId, u64)> = Vec::new();
+            let mut expect = [0u64; 4];
+            for _ in 0..200 {
+                if live.is_empty() || rng.bool(0.6) {
+                    let g = GpuId(rng.range_u64(0, 4) as u8);
+                    let b = rng.range_u64(1, 1 << 16);
+                    if let Some(a) = h.alloc(g, b) {
+                        live.push((a, g, b));
+                        expect[g.0 as usize] += b;
+                    }
+                } else {
+                    let i = rng.range_usize(0, live.len());
+                    let (a, g, b) = live.swap_remove(i);
+                    h.free(a);
+                    expect[g.0 as usize] -= b;
+                }
+                for g in 0..4u8 {
+                    assert_eq!(h.used(GpuId(g)), expect[g as usize]);
+                    assert!(h.used(GpuId(g)) <= 1 << 20);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn placement_queries() {
+        let mut p = HostPool::new(2, 1000);
+        let a = p.alloc(NumaId(1), 123).unwrap();
+        assert_eq!(p.numa_of(a), NumaId(1));
+        assert_eq!(p.bytes_of(a), 123);
+        assert_eq!(p.available(NumaId(1)), 877);
+    }
+}

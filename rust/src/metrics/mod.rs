@@ -1,0 +1,148 @@
+//! Metrics: streaming histograms, percentiles, and serving-latency
+//! trackers (TTFT, TPOT) shared by the serving layer and the harnesses.
+
+use crate::sim::Time;
+
+/// A simple exact-sample summary (sufficient at harness scales; switch to
+/// sketches only if sample counts explode).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Summary {
+        Summary::default()
+    }
+
+    /// Record a sample.
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    /// Record a duration in seconds.
+    pub fn record_time(&mut self, t: Time) {
+        self.record(t.as_secs_f64());
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Arithmetic mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Minimum (0 if empty).
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Maximum (0 if empty).
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in `[0,100]` by nearest-rank (0 if empty).
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let idx = ((self.samples.len() - 1) as f64 * (p / 100.0)).round() as usize;
+        self.samples[idx]
+    }
+
+    /// p50 shortcut.
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    /// p99 shortcut.
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Per-request serving latency breakdown (drives Fig 2 / Fig 12).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TtftBreakdown {
+    /// Queueing before scheduling, seconds.
+    pub queue_s: f64,
+    /// Prefix-cache KV fetch (host→GPU), seconds.
+    pub fetch_s: f64,
+    /// Prefill compute, seconds.
+    pub prefill_s: f64,
+}
+
+impl TtftBreakdown {
+    /// Total TTFT.
+    pub fn total(&self) -> f64 {
+        self.queue_s + self.fetch_s + self.prefill_s
+    }
+    /// Fraction of TTFT spent fetching KV pages (the Fig 2 metric).
+    pub fn fetch_fraction(&self) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.fetch_s / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::new();
+        for v in [3.0, 1.0, 2.0, 4.0, 5.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn ttft_breakdown_fraction() {
+        let b = TtftBreakdown {
+            queue_s: 0.01,
+            fetch_s: 0.7,
+            prefill_s: 0.29,
+        };
+        assert!((b.total() - 1.0).abs() < 1e-12);
+        assert!((b.fetch_fraction() - 0.7).abs() < 1e-12);
+        assert_eq!(TtftBreakdown::default().fetch_fraction(), 0.0);
+    }
+}

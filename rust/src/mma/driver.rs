@@ -1,0 +1,721 @@
+//! The composed simulation world: fabric + gpusim + MMA engines + event
+//! loop. This is the executable model of one multi-GPU server running MMA
+//! (or the native/static baselines) — every figure harness, integration
+//! test, and the serving layer's transfer clock run through [`SimWorld`].
+
+use super::engine::{Engine, EngineAction};
+use super::interceptor::{self, Route};
+use super::sync_engine::SyncEngine;
+use super::transfer_task::{SubmitKind, TransferDesc, TransferRec, TransferState};
+use super::MmaConfig;
+use crate::fabric::{Fabric, FlowDone};
+use crate::gpusim::{Action, GpuSim, StreamId, StreamTask, TransferId};
+use crate::sim::{EventQueue, Time};
+use crate::topology::{Direction, GpuId, LinkId, Topology};
+
+/// Flow-tag layout: `[class:8][kind:8][a:24][b:24]`.
+mod tag {
+    pub const KIND_CHUNK: u8 = 0;
+    pub const KIND_NATIVE: u8 = 1;
+    pub const KIND_BG: u8 = 2;
+    /// Non-terminal relay stage (excluded from delivered-bandwidth sampling).
+    pub const KIND_CHUNK_MID: u8 = 3;
+
+    pub fn pack(class: u8, kind: u8, a: u32, b: u32) -> u64 {
+        ((class as u64) << 56)
+            | ((kind as u64) << 48)
+            | (((a as u64) & 0xFF_FFFF) << 24)
+            | ((b as u64) & 0xFF_FFFF)
+    }
+    pub fn class(t: u64) -> u8 {
+        (t >> 56) as u8
+    }
+    pub fn kind(t: u64) -> u8 {
+        (t >> 48) as u8
+    }
+    pub fn a(t: u64) -> u32 {
+        ((t >> 24) & 0xFF_FFFF) as u32
+    }
+    pub fn b(t: u64) -> u32 {
+        (t & 0xFF_FFFF) as u32
+    }
+}
+
+/// Driver events.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Poll the fabric (flows activate/complete).
+    Fabric,
+    /// Wake engine `e`'s worker for `gpu`.
+    EngineWake { e: u8, gpu: GpuId },
+    /// Engine `e`'s sync thread retires chunk `key` on `gpu`'s queue.
+    Retire { e: u8, gpu: GpuId, key: u64 },
+    /// A kernel at the head of (dev, stream) finished.
+    KernelDone { dev: GpuId, stream: StreamId },
+    /// A spin kernel observed its flag (one PCIe RTT after the set).
+    SpinRelease {
+        dev: GpuId,
+        stream: StreamId,
+        transfer: TransferId,
+    },
+    /// Periodic bandwidth sampling (Fig 9 time series).
+    Sample,
+    /// Background copy loop `id` starts its next iteration.
+    BgNext { id: u32 },
+}
+
+/// A stream handle returned by [`SimWorld::stream`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamHandle {
+    /// Device owning the stream.
+    pub dev: GpuId,
+    /// Stream id on that device.
+    pub id: StreamId,
+}
+
+/// One bandwidth sample: time + per-class instantaneous rates (B/s).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Sample time.
+    pub at: Time,
+    /// `rates[c]` = aggregate rate of traffic class `c` (0..8).
+    pub rates: [f64; 8],
+}
+
+/// A background copy loop: back-to-back DMA on a fixed path (emulating
+/// third-party traffic such as NIC DMA or a co-running native app).
+struct BgLoop {
+    path: Vec<LinkId>,
+    bytes: u64,
+    remaining: u64,
+    class: u8,
+    latency: Time,
+    /// Completion time of each finished iteration.
+    iters: Vec<Time>,
+    stopped: bool,
+}
+
+/// The composed world. See module docs.
+pub struct SimWorld {
+    /// Server topology.
+    pub topo: Topology,
+    /// Interconnect simulator.
+    pub fabric: Fabric,
+    /// CUDA execution model.
+    pub gpus: GpuSim,
+    engines: Vec<Engine>,
+    sync: SyncEngine,
+    q: EventQueue<Ev>,
+    /// All transfers ever submitted (index = `TransferId.0`).
+    pub transfers: Vec<TransferRec>,
+    bg: Vec<BgLoop>,
+    /// Collected bandwidth samples (if sampling enabled).
+    pub samples: Vec<Sample>,
+    sample_every: Option<Time>,
+    sample_until: Time,
+    /// Cumulative payload bytes delivered per class (terminal stages only).
+    class_delivered: [f64; 8],
+    last_sampled: ([f64; 8], Time),
+}
+
+impl SimWorld {
+    /// Build a world with one MMA "process" (an H2D + D2H engine pair)
+    /// configured by `cfg`.
+    pub fn new(topo: Topology, cfg: MmaConfig) -> SimWorld {
+        let n = topo.gpu_count();
+        let fabric = Fabric::new(&topo);
+        SimWorld {
+            fabric,
+            gpus: GpuSim::new(n),
+            engines: vec![
+                Engine::new(0, Direction::H2D, cfg.clone(), n),
+                Engine::new(1, Direction::D2H, cfg, n),
+            ],
+            sync: SyncEngine::new(),
+            q: EventQueue::new(),
+            transfers: Vec::new(),
+            bg: Vec::new(),
+            samples: Vec::new(),
+            sample_every: None,
+            sample_until: Time::ZERO,
+            class_delivered: [0.0; 8],
+            last_sampled: ([0.0; 8], Time::ZERO),
+            topo,
+        }
+    }
+
+    /// Add another MMA process (its own queues and pull scheduler sharing
+    /// the same physical fabric — Fig 9b). Returns the process index.
+    pub fn add_process(&mut self, cfg: MmaConfig) -> u8 {
+        let n = self.topo.gpu_count();
+        let base = self.engines.len() as u8;
+        self.engines
+            .push(Engine::new(base, Direction::H2D, cfg.clone(), n));
+        self.engines
+            .push(Engine::new(base + 1, Direction::D2H, cfg, n));
+        (base / 2) as u8
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.q.now()
+    }
+
+    /// Engine instance for a process/direction (stats access).
+    pub fn engine(&self, process: u8, dir: Direction) -> &Engine {
+        let idx = process as usize * 2 + matches!(dir, Direction::D2H) as usize;
+        &self.engines[idx]
+    }
+
+    /// Create a stream on a device.
+    pub fn stream(&mut self, dev: GpuId) -> StreamHandle {
+        StreamHandle {
+            dev,
+            id: self.gpus.create_stream(dev),
+        }
+    }
+
+    /// `cudaMemcpyAsync` through the interceptor, on process 0.
+    pub fn memcpy_async(&mut self, s: StreamHandle, desc: TransferDesc) -> TransferId {
+        self.memcpy_async_on(0, s, desc)
+    }
+
+    /// `cudaMemcpyAsync` through a specific process's interceptor.
+    pub fn memcpy_async_on(
+        &mut self,
+        process: u8,
+        s: StreamHandle,
+        desc: TransferDesc,
+    ) -> TransferId {
+        let now = self.now();
+        let engine_idx = process as usize * 2 + matches!(desc.dir, Direction::D2H) as usize;
+        let tid = TransferId(self.transfers.len() as u32);
+        let route = interceptor::route(&self.engines[engine_idx].cfg, &desc);
+        let mut rec = TransferRec {
+            id: tid,
+            desc,
+            kind: SubmitKind::Async { stream: s.id },
+            engine: Some(engine_idx as u8),
+            flag: None,
+            state: TransferState::Recorded,
+            submitted: now,
+            activated: None,
+            completed: None,
+            released: None,
+            bytes_direct: 0,
+            bytes_relay: 0,
+        };
+        match route {
+            Route::Engine => {
+                let flag = self
+                    .sync
+                    .install_dummy_task(&mut self.gpus, s.dev, s.id, tid);
+                rec.flag = Some(flag);
+            }
+            Route::Native => {
+                rec.engine = None;
+                self.engines[engine_idx].stats.fallback_transfers += 1;
+                self.gpus
+                    .enqueue(s.dev, s.id, StreamTask::Memcpy { transfer: tid });
+            }
+        }
+        self.transfers.push(rec);
+        self.advance_stream(now, s.dev, s.id);
+        tid
+    }
+
+    /// `cudaMemcpy` (synchronous): starts immediately, bypassing streams.
+    /// Use [`Self::run_until_transfer`] to emulate the blocked caller.
+    pub fn memcpy_sync(&mut self, desc: TransferDesc) -> TransferId {
+        self.memcpy_sync_on(0, desc)
+    }
+
+    /// Synchronous copy through a specific process.
+    pub fn memcpy_sync_on(&mut self, process: u8, desc: TransferDesc) -> TransferId {
+        let now = self.now();
+        let engine_idx = process as usize * 2 + matches!(desc.dir, Direction::D2H) as usize;
+        let tid = TransferId(self.transfers.len() as u32);
+        let route = interceptor::route(&self.engines[engine_idx].cfg, &desc);
+        let mut rec = TransferRec {
+            id: tid,
+            desc,
+            kind: SubmitKind::Sync,
+            engine: Some(engine_idx as u8),
+            flag: None,
+            state: TransferState::Active,
+            submitted: now,
+            activated: Some(now),
+            completed: None,
+            released: None,
+            bytes_direct: 0,
+            bytes_relay: 0,
+        };
+        match route {
+            Route::Engine => {
+                self.transfers.push(rec);
+                let acts =
+                    self.engines[engine_idx].activate(now, tid, desc, &self.topo);
+                self.apply(now, engine_idx as u8, acts);
+            }
+            Route::Native => {
+                rec.engine = None;
+                self.engines[engine_idx].stats.fallback_transfers += 1;
+                self.transfers.push(rec);
+                self.start_native_flow(now, tid);
+            }
+        }
+        tid
+    }
+
+    /// Enqueue a compute kernel on a stream.
+    pub fn enqueue_kernel(&mut self, s: StreamHandle, dur: Time, label: &'static str) {
+        let now = self.now();
+        self.gpus.enqueue(s.dev, s.id, StreamTask::Kernel { dur, label });
+        self.advance_stream(now, s.dev, s.id);
+    }
+
+    /// Start a background copy loop: `repeat` back-to-back copies of
+    /// `bytes` over `path` (native-style single flows). Returns the loop id.
+    pub fn start_bg_loop(
+        &mut self,
+        path: Vec<LinkId>,
+        bytes: u64,
+        repeat: u64,
+        class: u8,
+    ) -> u32 {
+        let id = self.bg.len() as u32;
+        let latency = Time::from_ns(self.topo.lat.dma_setup_ns);
+        self.bg.push(BgLoop {
+            path,
+            bytes,
+            remaining: repeat,
+            class,
+            latency,
+            iters: Vec::new(),
+            stopped: false,
+        });
+        let now = self.now();
+        self.q.schedule_at(now, Ev::BgNext { id });
+        id
+    }
+
+    /// Stop a background loop after its current iteration.
+    pub fn stop_bg_loop(&mut self, id: u32) {
+        self.bg[id as usize].stopped = true;
+    }
+
+    /// Completion times of a background loop's finished iterations.
+    pub fn bg_iters(&self, id: u32) -> &[Time] {
+        &self.bg[id as usize].iters
+    }
+
+    /// Enable periodic per-class bandwidth sampling until `until`.
+    pub fn enable_sampling(&mut self, every: Time, until: Time) {
+        self.sample_every = Some(every);
+        self.sample_until = until;
+        let now = self.now();
+        self.q.schedule_at(now + every, Ev::Sample);
+    }
+
+    /// Transfer record.
+    pub fn rec(&self, t: TransferId) -> &TransferRec {
+        &self.transfers[t.0 as usize]
+    }
+
+    /// Run until no events remain (all submitted work finished).
+    pub fn run_until_idle(&mut self) -> Time {
+        while self.step() {}
+        let now = self.now();
+        for e in &mut self.engines {
+            e.stats.finish(now);
+        }
+        now
+    }
+
+    /// Run until `t` (events after `t` stay queued).
+    pub fn run_until(&mut self, t: Time) {
+        loop {
+            match self.q.peek_time() {
+                Some(next) if next <= t => {
+                    self.step();
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Run until a specific transfer completes; returns completion time.
+    /// Panics if the world idles first (transfer can never finish).
+    pub fn run_until_transfer(&mut self, t: TransferId) -> Time {
+        loop {
+            if let Some(done) = self.transfers[t.0 as usize].completed {
+                return done;
+            }
+            assert!(self.step(), "world idle but {t:?} incomplete");
+        }
+    }
+
+    // ----- internals ---------------------------------------------------
+
+    fn step(&mut self) -> bool {
+        self.arm_fabric();
+        let Some((now, ev)) = self.q.pop() else {
+            return false;
+        };
+        match ev {
+            Ev::Fabric => {
+                let done = self.fabric.poll(now);
+                for d in done {
+                    self.route_flow_done(now, d);
+                }
+            }
+            Ev::EngineWake { e, gpu } => {
+                let acts = self.engines[e as usize].on_wake(now, gpu, &self.topo);
+                self.apply(now, e, acts);
+            }
+            Ev::Retire { e, gpu, key } => {
+                let acts = self.engines[e as usize].on_retire(now, gpu, key, &self.topo);
+                self.apply(now, e, acts);
+            }
+            Ev::KernelDone { dev, stream } => {
+                self.gpus.complete_head(dev, stream);
+                self.advance_stream(now, dev, stream);
+            }
+            Ev::SpinRelease { dev, stream, transfer } => {
+                self.gpus.release_spin(dev, stream);
+                self.transfers[transfer.0 as usize].released = Some(now);
+                self.advance_stream(now, dev, stream);
+            }
+            Ev::Sample => {
+                // Windowed delivered-bytes rate per class: payload bytes
+                // that landed at their destination since the last sample.
+                // (Instantaneous link rates would double-count relay
+                // stages and flicker with micro-burst drains.)
+                let (ref last, last_t) = self.last_sampled;
+                let dt = now.since(last_t).as_secs_f64().max(1e-12);
+                let mut rates = [0.0f64; 8];
+                for c in 0..8 {
+                    rates[c] = (self.class_delivered[c] - last[c]) / dt;
+                }
+                self.last_sampled = (self.class_delivered, now);
+                self.samples.push(Sample { at: now, rates });
+                if let Some(every) = self.sample_every {
+                    if now + every <= self.sample_until {
+                        self.q.schedule_at(now + every, Ev::Sample);
+                    }
+                }
+            }
+            Ev::BgNext { id } => {
+                let lp = &mut self.bg[id as usize];
+                if lp.remaining > 0 && !lp.stopped {
+                    lp.remaining -= 1;
+                    let t = tag::pack(lp.class, tag::KIND_BG, 0, id);
+                    let (path, bytes, latency) = (lp.path.clone(), lp.bytes, lp.latency);
+                    self.fabric.start_flow(now, &path, bytes, latency, t);
+                }
+            }
+        }
+        self.arm_fabric();
+        true
+    }
+
+    /// Keep a fabric poll event scheduled at the fabric's next change.
+    fn arm_fabric(&mut self) {
+        if let Some(t) = self.fabric.next_event_time() {
+            // Harmless over-scheduling: stale Fabric events are idempotent.
+            match self.q.peek_time() {
+                Some(head) if head <= t => {} // something earlier already queued
+                _ => self.q.schedule_at(t, Ev::Fabric),
+            }
+        }
+    }
+
+    fn route_flow_done(&mut self, now: Time, d: FlowDone) {
+        if tag::kind(d.tag) != tag::KIND_CHUNK_MID {
+            // Terminal stages only: relayed bytes count once.
+            self.class_delivered[tag::class(d.tag) as usize % 8] += d.bytes as f64;
+        }
+        match tag::kind(d.tag) {
+            tag::KIND_CHUNK | tag::KIND_CHUNK_MID => {
+                let e = tag::a(d.tag) as u8;
+                let key = tag::b(d.tag) as u64;
+                let acts = self.engines[e as usize].on_flow_done(now, key, &self.topo);
+                self.apply(now, e, acts);
+            }
+            tag::KIND_NATIVE => {
+                let tid = TransferId(tag::b(d.tag));
+                let rec = &mut self.transfers[tid.0 as usize];
+                rec.completed = Some(now);
+                rec.released = Some(now);
+                rec.state = TransferState::Complete;
+                rec.bytes_direct += rec.desc.bytes;
+                if let SubmitKind::Async { stream } = rec.kind {
+                    let dev = rec.desc.gpu;
+                    self.gpus.complete_head(dev, stream);
+                    self.advance_stream(now, dev, stream);
+                }
+            }
+            tag::KIND_BG => {
+                let id = tag::b(d.tag);
+                self.bg[id as usize].iters.push(now);
+                self.q.schedule_at(now, Ev::BgNext { id });
+            }
+            k => panic!("unknown flow tag kind {k}"),
+        }
+    }
+
+    fn apply(&mut self, now: Time, e: u8, acts: Vec<EngineAction>) {
+        for a in acts {
+            match a {
+                EngineAction::StartFlow {
+                    key,
+                    path,
+                    bytes,
+                    latency,
+                    class,
+                    terminal,
+                } => {
+                    let kind = if terminal { tag::KIND_CHUNK } else { tag::KIND_CHUNK_MID };
+                    let t = tag::pack(class, kind, e as u32, key as u32);
+                    self.fabric.start_flow(now, &path, bytes, latency, t);
+                }
+                EngineAction::WakeAt { gpu, at } => {
+                    self.q.schedule_at(at, Ev::EngineWake { e, gpu });
+                }
+                EngineAction::RetireAt { gpu, key, at } => {
+                    self.q.schedule_at(at, Ev::Retire { e, gpu, key });
+                }
+                EngineAction::TransferComplete {
+                    transfer,
+                    bytes_direct,
+                    bytes_relay,
+                } => {
+                    let rec = &mut self.transfers[transfer.0 as usize];
+                    rec.completed = Some(now);
+                    rec.state = TransferState::Complete;
+                    rec.bytes_direct = bytes_direct;
+                    rec.bytes_relay = bytes_relay;
+                    if let SubmitKind::Async { stream } = rec.kind {
+                        let dev = rec.desc.gpu;
+                        let rtt = Time::from_ns(self.topo.lat.pcie_rtt_ns);
+                        let waiters = self.sync.complete(&mut self.gpus, transfer);
+                        for (wdev, wstream) in waiters {
+                            debug_assert_eq!((wdev, wstream), (dev, stream));
+                            self.q.schedule_at(
+                                now + rtt,
+                                Ev::SpinRelease {
+                                    dev: wdev,
+                                    stream: wstream,
+                                    transfer,
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn advance_stream(&mut self, now: Time, dev: GpuId, stream: StreamId) {
+        let actions = self.gpus.try_advance(now, dev, stream);
+        for a in actions {
+            match a {
+                Action::KernelStarted { dev, stream, dur } => {
+                    self.q.schedule_at(now + dur, Ev::KernelDone { dev, stream });
+                }
+                Action::CopyReachedHead { transfer, .. } => {
+                    self.transfers[transfer.0 as usize].activated = Some(now);
+                    self.start_native_flow(now, transfer);
+                }
+                Action::RunCallback { cb } => {
+                    // The Dummy Task's copy point is active (§3.1 step ②).
+                    let tid = self.sync.transfer_of(cb);
+                    let rec = &mut self.transfers[tid.0 as usize];
+                    rec.activated = Some(now);
+                    rec.state = TransferState::Active;
+                    let e = rec.engine.expect("callback for native transfer");
+                    let desc = rec.desc;
+                    let acts = self.engines[e as usize].activate(now, tid, desc, &self.topo);
+                    self.apply(now, e, acts);
+                }
+                Action::SpinParked { .. } => {}
+            }
+        }
+    }
+
+    /// Launch the single direct-path DMA of a native (non-engine) copy.
+    fn start_native_flow(&mut self, now: Time, tid: TransferId) {
+        let rec = &self.transfers[tid.0 as usize];
+        let desc = rec.desc;
+        let path = match desc.dir {
+            Direction::H2D => self.topo.h2d_direct(desc.host_numa, desc.gpu),
+            Direction::D2H => self.topo.d2h_direct(desc.gpu, desc.host_numa),
+        };
+        let latency = Time::from_ns(self.topo.lat.dma_setup_ns);
+        let t = tag::pack(desc.class, tag::KIND_NATIVE, 0, tid.0);
+        self.fabric.start_flow(now, &path, desc.bytes, latency, t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{h20x8, NumaId};
+
+    fn world(cfg: MmaConfig) -> SimWorld {
+        SimWorld::new(h20x8(), cfg)
+    }
+
+    fn h2d(bytes: u64) -> TransferDesc {
+        TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), bytes)
+    }
+
+    #[test]
+    fn native_async_copy_runs_at_pcie_rate() {
+        let mut w = world(MmaConfig::native());
+        let s = w.stream(GpuId(0));
+        let t = w.memcpy_async(s, h2d(1_000_000_000));
+        let done = w.run_until_transfer(t);
+        let bw = w.rec(t).bandwidth().unwrap();
+        assert!((bw - 53.4e9).abs() < 0.5e9, "native bw {bw}");
+        assert!(done.as_ms_f64() < 20.0);
+    }
+
+    #[test]
+    fn mma_async_copy_beats_native_substantially() {
+        let bytes = 2_000_000_000u64;
+        let mut wn = world(MmaConfig::native());
+        let sn = wn.stream(GpuId(0));
+        let tn = wn.memcpy_async(sn, h2d(bytes));
+        wn.run_until_transfer(tn);
+        let native_bw = wn.rec(tn).bandwidth().unwrap();
+
+        let mut wm = world(MmaConfig::default());
+        let sm = wm.stream(GpuId(0));
+        let tm = wm.memcpy_async(sm, h2d(bytes));
+        wm.run_until_transfer(tm);
+        let mma_bw = wm.rec(tm).bandwidth().unwrap();
+
+        assert!(
+            mma_bw > 3.0 * native_bw,
+            "mma {mma_bw:.2e} vs native {native_bw:.2e}"
+        );
+        // Relay bytes dominate with 7 relays.
+        let rec = wm.rec(tm);
+        assert!(rec.bytes_relay > rec.bytes_direct);
+        assert_eq!(rec.bytes_relay + rec.bytes_direct, bytes);
+    }
+
+    #[test]
+    fn downstream_kernel_waits_for_mma_transfer() {
+        let mut w = world(MmaConfig::default());
+        let s = w.stream(GpuId(0));
+        let t = w.memcpy_async(s, h2d(500_000_000));
+        w.enqueue_kernel(s, Time::from_us(10), "consumer");
+        w.run_until_idle();
+        let rec = w.rec(t);
+        let released = rec.released.expect("spin never released");
+        let completed = rec.completed.unwrap();
+        // Spin kernel releases one PCIe RTT after the flag set.
+        assert_eq!(released.ns() - completed.ns(), w.topo.lat.pcie_rtt_ns);
+        // The consumer kernel ran only after release: stream completed all
+        // 3 tasks (callback, spin, kernel).
+        assert_eq!(w.gpus.stream_completed(GpuId(0), s.id), 3);
+    }
+
+    #[test]
+    fn small_copy_takes_fallback() {
+        let mut w = world(MmaConfig::default());
+        let s = w.stream(GpuId(0));
+        let t = w.memcpy_async(s, h2d(1_000_000)); // 1 MB < 11.3 MB
+        w.run_until_transfer(t);
+        let rec = w.rec(t);
+        assert_eq!(rec.bytes_relay, 0);
+        assert_eq!(rec.bytes_direct, 1_000_000);
+        assert_eq!(w.engine(0, Direction::H2D).stats.fallback_transfers, 1);
+    }
+
+    #[test]
+    fn sync_copy_completes_without_stream() {
+        let mut w = world(MmaConfig::default());
+        let t = w.memcpy_sync(h2d(500_000_000));
+        let done = w.run_until_transfer(t);
+        assert!(done > Time::ZERO);
+        assert!(w.rec(t).bandwidth().unwrap() > 100e9);
+    }
+
+    #[test]
+    fn d2h_uses_engine_too() {
+        let mut w = world(MmaConfig::default());
+        let t = w.memcpy_sync(TransferDesc::new(
+            Direction::D2H,
+            GpuId(0),
+            NumaId(0),
+            1_000_000_000,
+        ));
+        w.run_until_transfer(t);
+        let bw = w.rec(t).bandwidth().unwrap();
+        assert!(bw > 150e9, "d2h mma bw {bw}");
+    }
+
+    #[test]
+    fn stream_order_kernel_then_copy_then_kernel() {
+        // The copy must not start until the preceding kernel finishes
+        // (C1: stream FIFO), and the following kernel must wait (C2).
+        let mut w = world(MmaConfig::default());
+        let s = w.stream(GpuId(0));
+        w.enqueue_kernel(s, Time::from_ms(2), "pre");
+        let t = w.memcpy_async(s, h2d(200_000_000));
+        w.enqueue_kernel(s, Time::from_us(1), "post");
+        w.run_until_idle();
+        let rec = w.rec(t);
+        assert!(rec.activated.unwrap() >= Time::from_ms(2));
+        assert!(rec.released.unwrap() > rec.activated.unwrap());
+    }
+
+    #[test]
+    fn two_processes_share_fabric() {
+        let mut w = world(MmaConfig::default());
+        let p1 = w.add_process(MmaConfig::default());
+        assert_eq!(p1, 1);
+        let s0 = w.stream(GpuId(0));
+        let s4 = w.stream(GpuId(4));
+        let a = w.memcpy_async_on(0, s0, h2d(1_000_000_000));
+        let b = w.memcpy_async_on(
+            1,
+            s4,
+            TransferDesc::new(Direction::H2D, GpuId(4), NumaId(1), 1_000_000_000),
+        );
+        w.run_until_idle();
+        let bwa = w.rec(a).bandwidth().unwrap();
+        let bwb = w.rec(b).bandwidth().unwrap();
+        // Both exceed native even while contending.
+        assert!(bwa > 80e9, "{bwa}");
+        assert!(bwb > 80e9, "{bwb}");
+    }
+
+    #[test]
+    fn bg_loop_iterates_and_stops() {
+        let mut w = world(MmaConfig::native());
+        let path = w.topo.h2d_direct(NumaId(0), GpuId(2));
+        let id = w.start_bg_loop(path, 100_000_000, 5, 0);
+        w.run_until_idle();
+        assert_eq!(w.bg_iters(id).len(), 5);
+    }
+
+    #[test]
+    fn sampling_records_series() {
+        let mut w = world(MmaConfig::default());
+        w.enable_sampling(Time::from_us(200), Time::from_ms(20));
+        let s = w.stream(GpuId(0));
+        w.memcpy_async(s, h2d(1_000_000_000));
+        w.run_until_idle();
+        assert!(w.samples.len() > 10);
+        let peak = w
+            .samples
+            .iter()
+            .map(|s| s.rates[1])
+            .fold(0.0f64, f64::max);
+        assert!(peak > 100e9, "sampled peak {peak}");
+    }
+}

@@ -1,0 +1,844 @@
+//! Multipath Transfer Engine (§3.4): per-direction engine instances that
+//! split transfers into micro-tasks, pull them into per-link outstanding
+//! queues, and launch direct/relay DMA — including the Task Launcher's
+//! two-stage relay with dual-pipeline overlap (Fig 6).
+//!
+//! The engine is a passive state machine: the driver feeds it events
+//! (`activate`, `on_wake`, `on_flow_done`, `on_retire`) and executes the
+//! returned [`EngineAction`]s against the fabric and event queue. In the
+//! paper these transitions run on per-GPU *transfer* and *synchronization*
+//! threads; the virtual-time model preserves their scheduling behaviour
+//! (dispatch serialization, `cudaEventSynchronize` wake-up latency) via
+//! explicit latency terms, and accounts their CPU burn in
+//! [`super::stats::EngineStats`].
+
+use super::path_selector::{OutstandingQueue, PathSelector, Pulled};
+use super::stats::EngineStats;
+use super::task_manager::{Chunk, TaskManager};
+use super::transfer_task::TransferDesc;
+use super::{Mode, MmaConfig};
+use crate::gpusim::TransferId;
+use crate::sim::Time;
+use crate::topology::{Direction, GpuId, LinkId, NumaId, Topology};
+use std::collections::{HashMap, VecDeque};
+
+/// What the driver must do on the engine's behalf.
+#[derive(Debug, Clone)]
+pub enum EngineAction {
+    /// Launch a DMA flow for a micro-task stage.
+    StartFlow {
+        /// In-flight chunk key (routes the completion back).
+        key: u64,
+        /// Links the flow traverses.
+        path: Vec<LinkId>,
+        /// Bytes.
+        bytes: u64,
+        /// Setup latency before the flow occupies bandwidth.
+        latency: Time,
+        /// Traffic class (for per-class bandwidth sampling).
+        class: u8,
+        /// True when this stage delivers the chunk to its destination
+        /// (direct, or the relay's forwarding hop). Bandwidth sampling
+        /// counts only terminal stages, so relayed bytes aren't counted
+        /// twice.
+        terminal: bool,
+    },
+    /// Wake the worker for `gpu` at `at` (schedule `on_wake`).
+    WakeAt {
+        /// Worker's GPU.
+        gpu: GpuId,
+        /// When.
+        at: Time,
+    },
+    /// The sync thread retires chunk `key` at `at` (schedule `on_retire`).
+    RetireAt {
+        /// Owning queue's GPU.
+        gpu: GpuId,
+        /// Chunk key.
+        key: u64,
+        /// When (delivery + `cudaEventSynchronize` wake-up).
+        at: Time,
+    },
+    /// Every micro-task of `transfer` has landed and been retired.
+    TransferComplete {
+        /// The finished transfer.
+        transfer: TransferId,
+        /// Bytes that took the direct path.
+        bytes_direct: u64,
+        /// Bytes that took relay paths.
+        bytes_relay: u64,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct ActiveTransfer {
+    desc: TransferDesc,
+    total_chunks: u32,
+    retired_chunks: u32,
+    bytes_direct: u64,
+    bytes_relay: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    chunk: Chunk,
+    /// The PCIe-link GPU whose outstanding queue holds this chunk.
+    path_gpu: GpuId,
+    relay: bool,
+    host_numa: NumaId,
+    dispatched: Time,
+    stage: u8,
+    /// Uncontended expected service time (for contention inference),
+    /// accounting for chunks queued ahead on the same lane at dispatch.
+    expected_s: f64,
+}
+
+/// Which per-GPU DMA lane a stage occupies. Copies queued on the same lane
+/// execute back-to-back (one copy engine per lane per direction), which is
+/// what lets depth-2 outstanding queues pipeline without bubbles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LaneKind {
+    /// The GPU's PCIe copy engine for this engine's direction.
+    Pcie = 0,
+    /// The GPU's P2P (NVLink) copy engine.
+    Nv = 1,
+}
+
+/// A flow whose DMA descriptor is programmed but waiting behind the lane's
+/// active copy.
+#[derive(Debug, Clone)]
+struct QueuedFlow {
+    key: u64,
+    path: Vec<LinkId>,
+    bytes: u64,
+    class: u8,
+    terminal: bool,
+}
+
+/// One GPU's pair of serializing DMA lanes.
+#[derive(Debug, Default)]
+struct Lanes {
+    active: [Option<u64>; 2],
+    waiting: [VecDeque<QueuedFlow>; 2],
+}
+
+impl Lanes {
+    fn occupancy(&self, lane: LaneKind) -> usize {
+        let i = lane as usize;
+        self.active[i].is_some() as usize + self.waiting[i].len()
+    }
+}
+
+/// One direction's Multipath Transfer Engine.
+pub struct Engine {
+    /// Engine index within the driver.
+    pub id: u8,
+    /// Direction this instance serves (H2D and D2H run separately, §4).
+    pub dir: Direction,
+    /// Tunables.
+    pub cfg: MmaConfig,
+    tm: TaskManager,
+    queues: Vec<OutstandingQueue>,
+    lanes: Vec<Lanes>,
+    relay_inflight: Vec<u32>,
+    inflight: HashMap<u64, InFlight>,
+    next_key: u64,
+    transfers: HashMap<u32, ActiveTransfer>,
+    /// Counters (Fig 11 CPU accounting, relay/direct byte split).
+    pub stats: EngineStats,
+    central_busy_until: Time,
+}
+
+impl Engine {
+    /// New engine over `gpu_count` PCIe links.
+    pub fn new(id: u8, dir: Direction, cfg: MmaConfig, gpu_count: usize) -> Engine {
+        Engine {
+            id,
+            dir,
+            tm: TaskManager::new(gpu_count),
+            queues: (0..gpu_count)
+                .map(|g| OutstandingQueue::new(GpuId(g as u8), cfg.outstanding_depth))
+                .collect(),
+            lanes: (0..gpu_count).map(|_| Lanes::default()).collect(),
+            relay_inflight: vec![0; gpu_count],
+            inflight: HashMap::new(),
+            next_key: 0,
+            transfers: HashMap::new(),
+            stats: EngineStats::new(gpu_count),
+            central_busy_until: Time::ZERO,
+            cfg,
+        }
+    }
+
+    /// Any work queued or in flight?
+    pub fn is_idle(&self) -> bool {
+        self.tm.is_empty() && self.inflight.is_empty()
+    }
+
+    /// Number of live transfers.
+    pub fn active_transfers(&self) -> usize {
+        self.transfers.len()
+    }
+
+    /// The copy point of `transfer` is active (§3.1 step ②→③): split into
+    /// micro-tasks and wake the workers.
+    pub fn activate(
+        &mut self,
+        now: Time,
+        transfer: TransferId,
+        desc: TransferDesc,
+        _topo: &Topology,
+    ) -> Vec<EngineAction> {
+        let chunks = TaskManager::split(transfer, desc.gpu, desc.bytes, self.cfg.chunk_bytes);
+        let total = chunks.len() as u32;
+        self.transfers.insert(
+            transfer.0,
+            ActiveTransfer {
+                desc,
+                total_chunks: total,
+                retired_chunks: 0,
+                bytes_direct: 0,
+                bytes_relay: 0,
+            },
+        );
+        match self.cfg.mode.clone() {
+            Mode::Static(ratios) => {
+                // Smooth weighted round-robin over the configured paths.
+                let total_w: f64 = ratios.iter().map(|(_, w)| *w).sum();
+                let mut current: Vec<f64> = vec![0.0; ratios.len()];
+                for c in chunks {
+                    let mut best = 0;
+                    for i in 0..ratios.len() {
+                        current[i] += ratios[i].1;
+                        if current[i] > current[best] {
+                            best = i;
+                        }
+                    }
+                    current[best] -= total_w;
+                    self.tm.push_assigned(ratios[best].0, c);
+                }
+            }
+            _ => self.tm.push_pending(&chunks),
+        }
+        // Wake every worker after the fixed activation overhead; workers
+        // with no eligible work simply find nothing to pull.
+        let at = now + Time::from_ns(self.cfg.activation_ns);
+        (0..self.queues.len())
+            .map(|g| EngineAction::WakeAt {
+                gpu: GpuId(g as u8),
+                at,
+            })
+            .collect()
+    }
+
+    /// Transfer-thread wake-up for `gpu`: pull micro-tasks while the
+    /// outstanding queue has capacity, dispatching each (§3.4.2/§3.4.3).
+    pub fn on_wake(&mut self, now: Time, gpu: GpuId, topo: &Topology) -> Vec<EngineAction> {
+        let mut actions = Vec::new();
+        loop {
+            let gi = gpu.0 as usize;
+            if !self.queues[gi].has_capacity(self.cfg.contention_backoff) {
+                break;
+            }
+            // Naive single-pipeline relay (Fig 6a ablation): at most one
+            // relay micro-task in flight per relay GPU.
+            let relay_blocked = !self.cfg.dual_pipeline && self.relay_inflight[gi] > 0;
+            let pulled = if relay_blocked && !self.tm.has_direct(gpu) {
+                None
+            } else {
+                PathSelector::pull(&mut self.tm, topo, &self.cfg, gpu)
+            };
+            let Some(pulled) = pulled else { break };
+            actions.extend(self.dispatch(now, gpu, pulled, topo));
+        }
+        actions
+    }
+
+    /// Dispatch one pulled micro-task through the Task Launcher.
+    fn dispatch(
+        &mut self,
+        now: Time,
+        gpu: GpuId,
+        pulled: Pulled,
+        topo: &Topology,
+    ) -> Vec<EngineAction> {
+        let chunk = pulled.chunk();
+        let relay = pulled.is_relay();
+        let gi = gpu.0 as usize;
+        let host_numa = self
+            .transfers
+            .get(&chunk.transfer.0)
+            .map(|t| t.desc.host_numa)
+            .expect("chunk for unknown transfer");
+        let class = self
+            .transfers
+            .get(&chunk.transfer.0)
+            .map(|t| t.desc.class)
+            .unwrap_or(1);
+
+        // Transfer-thread dispatch serialization: the (per-GPU or central)
+        // worker burns `dispatch_cpu_ns` per micro-task.
+        let lat = topo.lat;
+        let busy = if self.cfg.centralized_dispatch {
+            &mut self.central_busy_until
+        } else {
+            &mut self.queues[gi].busy_until
+        };
+        let start = (*busy).max(now) + Time::from_ns(lat.dispatch_cpu_ns);
+        *busy = start;
+        let cpu_wait = start.since(now);
+
+        let key = self.next_key;
+        self.next_key += 1;
+        if self.queues[gi].slots.is_empty() {
+            self.stats.queue_busy(gpu, now);
+        }
+        self.queues[gi].occupy(key);
+        if relay {
+            self.relay_inflight[gi] += 1;
+        }
+        self.stats
+            .dispatched(gpu, chunk.bytes, relay, lat.dispatch_cpu_ns);
+
+        // Stage-1 path + lane (§3.4.3 Task Launcher).
+        let (path, setup, lane) = match (self.dir, relay) {
+            (Direction::H2D, false) => (
+                topo.h2d_direct(host_numa, chunk.dest),
+                lat.dma_setup_ns,
+                LaneKind::Pcie,
+            ),
+            (Direction::H2D, true) => (
+                topo.h2d_relay_stage1(host_numa, gpu),
+                lat.dma_setup_ns,
+                LaneKind::Pcie,
+            ),
+            (Direction::D2H, false) => (
+                topo.d2h_direct(chunk.dest, host_numa),
+                lat.dma_setup_ns,
+                LaneKind::Pcie,
+            ),
+            (Direction::D2H, true) => (
+                topo.d2h_relay_stage1(chunk.dest, gpu),
+                lat.p2p_setup_ns,
+                LaneKind::Nv,
+            ),
+        };
+        let ahead = self.lanes[gi].occupancy(lane);
+        let expected_s =
+            self.expected_service_secs(chunk.bytes, relay, gpu, topo) * (ahead as f64 + 1.0);
+        self.inflight.insert(
+            key,
+            InFlight {
+                chunk,
+                path_gpu: gpu,
+                relay,
+                host_numa,
+                dispatched: now,
+                stage: 1,
+                expected_s,
+            },
+        );
+        self.lane_submit(
+            gpu,
+            lane,
+            QueuedFlow {
+                key,
+                path,
+                bytes: chunk.bytes,
+                class,
+                terminal: !relay,
+            },
+            cpu_wait + Time::from_ns(setup),
+        )
+        .into_iter()
+        .collect()
+    }
+
+    /// Submit a stage's flow to a serializing DMA lane. If the lane is
+    /// busy, the descriptor queues behind the active copy and launches
+    /// back-to-back when it finishes (returns no action yet).
+    fn lane_submit(
+        &mut self,
+        gpu: GpuId,
+        lane: LaneKind,
+        flow: QueuedFlow,
+        cold_latency: Time,
+    ) -> Option<EngineAction> {
+        let li = lane as usize;
+        let lanes = &mut self.lanes[gpu.0 as usize];
+        if lanes.active[li].is_none() {
+            lanes.active[li] = Some(flow.key);
+            Some(EngineAction::StartFlow {
+                key: flow.key,
+                path: flow.path,
+                bytes: flow.bytes,
+                latency: cold_latency,
+                class: flow.class,
+                terminal: flow.terminal,
+            })
+        } else {
+            lanes.waiting[li].push_back(flow);
+            None
+        }
+    }
+
+    /// A lane's active copy finished: hand the lane to the next queued
+    /// descriptor (warm turnaround).
+    fn lane_release(&mut self, gpu: GpuId, lane: LaneKind, key: u64, topo: &Topology) -> Option<EngineAction> {
+        let li = lane as usize;
+        let lanes = &mut self.lanes[gpu.0 as usize];
+        debug_assert_eq!(lanes.active[li], Some(key), "lane released by non-owner");
+        lanes.active[li] = None;
+        let next = lanes.waiting[li].pop_front()?;
+        lanes.active[li] = Some(next.key);
+        Some(EngineAction::StartFlow {
+            key: next.key,
+            path: next.path,
+            bytes: next.bytes,
+            latency: Time::from_ns(topo.lat.dma_turnaround_ns),
+            class: next.class,
+            terminal: next.terminal,
+        })
+    }
+
+    /// Lane used by a chunk's current stage.
+    fn lane_of(&self, inf: &InFlight) -> LaneKind {
+        match (self.dir, inf.relay, inf.stage) {
+            (_, false, _) => LaneKind::Pcie,
+            (Direction::H2D, true, 1) => LaneKind::Pcie,
+            (Direction::H2D, true, _) => LaneKind::Nv,
+            (Direction::D2H, true, 1) => LaneKind::Nv,
+            (Direction::D2H, true, _) => LaneKind::Pcie,
+        }
+    }
+
+    /// A micro-task stage's DMA finished.
+    pub fn on_flow_done(&mut self, now: Time, key: u64, topo: &Topology) -> Vec<EngineAction> {
+        let inf = *self.inflight.get(&key).expect("unknown chunk key");
+        let lat = topo.lat;
+        let mut actions = Vec::new();
+        // Free the lane this stage occupied; the next queued descriptor
+        // launches back-to-back.
+        let done_lane = self.lane_of(&inf);
+        actions.extend(self.lane_release(inf.path_gpu, done_lane, key, topo));
+
+        if inf.relay && inf.stage == 1 {
+            // Launch stage 2: the forwarding hop. Explicit stream
+            // dependencies order the two stages (§3.4.3); the dual-pipeline
+            // overlap comes from the second outstanding slot running its
+            // stage 1 on the other lane concurrently (Fig 6b).
+            let (path, setup, lane) = match self.dir {
+                Direction::H2D => (
+                    topo.h2d_relay_stage2(inf.path_gpu, inf.chunk.dest),
+                    lat.p2p_setup_ns,
+                    LaneKind::Nv,
+                ),
+                Direction::D2H => (
+                    topo.d2h_relay_stage2(inf.path_gpu, inf.host_numa),
+                    lat.dma_setup_ns,
+                    LaneKind::Pcie,
+                ),
+            };
+            let class = self
+                .transfers
+                .get(&inf.chunk.transfer.0)
+                .map(|t| t.desc.class)
+                .unwrap_or(1);
+            self.inflight.get_mut(&key).unwrap().stage = 2;
+            actions.extend(self.lane_submit(
+                inf.path_gpu,
+                lane,
+                QueuedFlow {
+                    key,
+                    path,
+                    bytes: inf.chunk.bytes,
+                    class,
+                    terminal: true,
+                },
+                Time::from_ns(setup),
+            ));
+            return actions;
+        }
+        // Delivered: the sync thread observes completion after the
+        // cudaEventSynchronize wake-up latency, then retires the slot.
+        actions.push(EngineAction::RetireAt {
+            gpu: inf.path_gpu,
+            key,
+            at: now + Time::from_ns(lat.event_sync_ns),
+        });
+        actions
+    }
+
+    /// Sync-thread retirement of a chunk: free the slot, detect contention,
+    /// account transfer progress, and pull more work.
+    pub fn on_retire(&mut self, now: Time, gpu: GpuId, key: u64, topo: &Topology) -> Vec<EngineAction> {
+        let inf = self.inflight.remove(&key).expect("retire unknown chunk");
+        debug_assert_eq!(inf.path_gpu, gpu);
+        let gi = gpu.0 as usize;
+        let retired = self.queues[gi].retire(key);
+        debug_assert!(retired);
+        if inf.relay {
+            self.relay_inflight[gi] -= 1;
+        }
+        if self.queues[gi].slots.is_empty() {
+            self.stats.queue_idle(gpu, now);
+        }
+
+        // Contention inference (§3.4.2): completion far beyond the
+        // uncontended expectation marks the path contended; a clean
+        // completion clears it.
+        if self.cfg.contention_backoff {
+            let observed = now.since(inf.dispatched).as_secs_f64();
+            let was = self.queues[gi].contended;
+            self.queues[gi].contended = observed > self.cfg.contention_beta * inf.expected_s;
+            if self.queues[gi].contended && !was {
+                self.stats.backoff_events[gi] += 1;
+            }
+        }
+
+        let mut actions = Vec::new();
+        // Transfer progress.
+        let done = {
+            let t = self
+                .transfers
+                .get_mut(&inf.chunk.transfer.0)
+                .expect("retire for unknown transfer");
+            t.retired_chunks += 1;
+            if inf.relay {
+                t.bytes_relay += inf.chunk.bytes;
+            } else {
+                t.bytes_direct += inf.chunk.bytes;
+            }
+            t.retired_chunks == t.total_chunks
+        };
+        if done {
+            let t = self.transfers.remove(&inf.chunk.transfer.0).unwrap();
+            self.stats.transfers_completed += 1;
+            actions.push(EngineAction::TransferComplete {
+                transfer: inf.chunk.transfer,
+                bytes_direct: t.bytes_direct,
+                bytes_relay: t.bytes_relay,
+            });
+        }
+        // Freed a slot: pull again immediately. Inlined rather than
+        // emitting `WakeAt {now}` — saves one event-queue round trip per
+        // retired chunk (see EXPERIMENTS.md §Perf).
+        actions.extend(self.on_wake(now, gpu, topo));
+        actions
+    }
+
+    /// Uncontended expected service time for one micro-task (seconds).
+    fn expected_service_secs(&self, bytes: u64, relay: bool, gpu: GpuId, topo: &Topology) -> f64 {
+        let lat = topo.lat;
+        let pcie = topo.pcie_capacity(gpu, self.dir);
+        let fixed = (lat.dispatch_cpu_ns + lat.dma_setup_ns + lat.event_sync_ns) as f64 * 1e-9;
+        let mut t = fixed + bytes as f64 / pcie;
+        if relay {
+            // Forwarding hop: NVLink stage + P2P launch.
+            let nv = topo.capacity(topo.link(crate::topology::LinkKind::NvOut(gpu)));
+            t += lat.p2p_setup_ns as f64 * 1e-9 + bytes as f64 / nv;
+        }
+        t
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::h20x8;
+
+    fn desc(bytes: u64) -> TransferDesc {
+        TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), bytes)
+    }
+
+    fn flow_keys(acts: &[EngineAction]) -> Vec<u64> {
+        acts.iter()
+            .filter_map(|a| match a {
+                EngineAction::StartFlow { key, .. } => Some(*key),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Tiny sequential executor: runs the engine's action graph to
+    /// quiescence with synthetic 1 us flow times. Returns completion info.
+    fn drain(e: &mut Engine, topo: &Topology, init: Vec<EngineAction>) -> Vec<(TransferId, u64, u64)> {
+        let mut pending: std::collections::VecDeque<EngineAction> = init.into();
+        let mut now = Time::ZERO;
+        let mut completes = Vec::new();
+        let mut steps = 0u32;
+        while let Some(act) = pending.pop_front() {
+            steps += 1;
+            assert!(steps < 1_000_000, "engine action graph does not quiesce");
+            match act {
+                EngineAction::StartFlow { key, .. } => {
+                    now = now + Time::from_us(1);
+                    pending.extend(e.on_flow_done(now, key, topo));
+                }
+                EngineAction::RetireAt { gpu, key, at } => {
+                    now = now.max(at);
+                    pending.extend(e.on_retire(now, gpu, key, topo));
+                }
+                EngineAction::WakeAt { gpu, at } => {
+                    now = now.max(at);
+                    pending.extend(e.on_wake(now, gpu, topo));
+                }
+                EngineAction::TransferComplete {
+                    transfer,
+                    bytes_direct,
+                    bytes_relay,
+                } => completes.push((transfer, bytes_direct, bytes_relay)),
+            }
+        }
+        completes
+    }
+
+    #[test]
+    fn activate_splits_and_wakes_all_workers() {
+        let topo = h20x8();
+        let mut e = Engine::new(0, Direction::H2D, MmaConfig::default(), 8);
+        let acts = e.activate(Time::ZERO, TransferId(0), desc(50_000_000), &topo);
+        let wakes = acts
+            .iter()
+            .filter(|a| matches!(a, EngineAction::WakeAt { .. }))
+            .count();
+        assert_eq!(wakes, 8);
+        assert!(!e.is_idle());
+        assert_eq!(e.active_transfers(), 1);
+    }
+
+    #[test]
+    fn wake_fills_outstanding_queue_to_depth() {
+        let topo = h20x8();
+        let mut e = Engine::new(0, Direction::H2D, MmaConfig::default(), 8);
+        e.activate(Time::ZERO, TransferId(0), desc(50_000_000), &topo);
+        let acts = e.on_wake(Time::ZERO, GpuId(0), &topo);
+        // Two slots occupied; only the first chunk's DMA starts (the second
+        // queues behind it on the PCIe lane).
+        assert_eq!(e.queues[0].slots.len(), 2);
+        assert_eq!(flow_keys(&acts).len(), 1);
+        // Re-waking without retirement does nothing (queue full).
+        assert!(e.on_wake(Time::ZERO, GpuId(0), &topo).is_empty());
+    }
+
+    #[test]
+    fn lane_serializes_back_to_back() {
+        let topo = h20x8();
+        let cfg = MmaConfig {
+            relay_gpus: Some(vec![]),
+            ..Default::default()
+        };
+        let mut e = Engine::new(0, Direction::H2D, cfg, 8);
+        e.activate(Time::ZERO, TransferId(0), desc(20_000_000), &topo);
+        let acts = e.on_wake(Time::ZERO, GpuId(0), &topo);
+        let keys = flow_keys(&acts);
+        assert_eq!(keys, vec![0]);
+        // First chunk's flow completes → lane hands off to chunk 1 with the
+        // warm turnaround latency, and chunk 0 goes to retirement.
+        let acts = e.on_flow_done(Time::from_us(100), keys[0], &topo);
+        let mut saw_next = false;
+        let mut saw_retire = false;
+        for a in &acts {
+            match a {
+                EngineAction::StartFlow { key, latency, .. } => {
+                    assert_eq!(*key, 1);
+                    assert_eq!(latency.ns(), topo.lat.dma_turnaround_ns);
+                    saw_next = true;
+                }
+                EngineAction::RetireAt { key, .. } => {
+                    assert_eq!(*key, 0);
+                    saw_retire = true;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(saw_next && saw_retire);
+    }
+
+    #[test]
+    fn relay_two_stage_uses_pcie_then_nvlink() {
+        let topo = h20x8();
+        let mut e = Engine::new(0, Direction::H2D, MmaConfig::default(), 8);
+        e.activate(Time::ZERO, TransferId(0), desc(50_000_000), &topo);
+        let acts = e.on_wake(Time::ZERO, GpuId(1), &topo);
+        let keys = flow_keys(&acts);
+        assert_eq!(keys.len(), 1);
+        // Stage 1 lands on the relay's own PCIe lane.
+        let EngineAction::StartFlow { ref path, .. } = acts[0] else {
+            panic!()
+        };
+        let kinds: Vec<_> = path.iter().map(|l| topo.links[l.0 as usize].kind).collect();
+        assert!(kinds.contains(&crate::topology::LinkKind::PcieH2D(GpuId(1))));
+        // Stage 1 done → next queued stage-1 starts AND stage 2 launches
+        // over NVLink to the target (two different lanes: dual pipeline).
+        let acts2 = e.on_flow_done(Time::from_us(100), keys[0], &topo);
+        let stage2 = acts2
+            .iter()
+            .find_map(|a| match a {
+                EngineAction::StartFlow { key, path, .. } if *key == keys[0] => Some(path),
+                _ => None,
+            })
+            .expect("stage 2 flow missing: {acts2:?}");
+        let kinds2: Vec<_> = stage2.iter().map(|l| topo.links[l.0 as usize].kind).collect();
+        assert!(kinds2.contains(&crate::topology::LinkKind::NvOut(GpuId(1))));
+        assert!(kinds2.contains(&crate::topology::LinkKind::NvIn(GpuId(0))));
+        // The other action is the next chunk's stage 1 on the PCIe lane.
+        let next = acts2
+            .iter()
+            .find_map(|a| match a {
+                EngineAction::StartFlow { key, path, .. } if *key != keys[0] => Some(path),
+                _ => None,
+            })
+            .expect("queued stage 1 missing");
+        let kinds3: Vec<_> = next.iter().map(|l| topo.links[l.0 as usize].kind).collect();
+        assert!(kinds3.contains(&crate::topology::LinkKind::PcieH2D(GpuId(1))));
+        // Stage 2 completion retires via the sync thread.
+        let acts3 = e.on_flow_done(Time::from_us(200), keys[0], &topo);
+        assert!(
+            acts3
+                .iter()
+                .any(|a| matches!(a, EngineAction::RetireAt { key, .. } if *key == keys[0])),
+            "{acts3:?}"
+        );
+    }
+
+    #[test]
+    fn full_transfer_direct_only_completes_with_split() {
+        let topo = h20x8();
+        let cfg = MmaConfig {
+            relay_gpus: Some(vec![]), // direct only
+            ..Default::default()
+        };
+        let mut e = Engine::new(0, Direction::H2D, cfg, 8);
+        let init = e.activate(Time::ZERO, TransferId(5), desc(8_000_000), &topo);
+        let completes = drain(&mut e, &topo, init);
+        assert_eq!(completes, vec![(TransferId(5), 8_000_000, 0)]);
+        assert!(e.is_idle());
+        assert_eq!(e.stats.transfers_completed, 1);
+    }
+
+    #[test]
+    fn full_transfer_with_relays_splits_bytes() {
+        let topo = h20x8();
+        let mut e = Engine::new(0, Direction::H2D, MmaConfig::default(), 8);
+        let init = e.activate(Time::ZERO, TransferId(2), desc(100_000_000), &topo);
+        let completes = drain(&mut e, &topo, init);
+        assert_eq!(completes.len(), 1);
+        let (t, bd, br) = completes[0];
+        assert_eq!(t, TransferId(2));
+        assert_eq!(bd + br, 100_000_000);
+        assert!(br > 0, "relays never used");
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn d2h_transfer_completes() {
+        let topo = h20x8();
+        let mut e = Engine::new(1, Direction::D2H, MmaConfig::default(), 8);
+        let d = TransferDesc::new(Direction::D2H, GpuId(3), NumaId(0), 40_000_000);
+        let init = e.activate(Time::ZERO, TransferId(7), d, &topo);
+        let completes = drain(&mut e, &topo, init);
+        assert_eq!(completes.len(), 1);
+        assert_eq!(completes[0].1 + completes[0].2, 40_000_000);
+    }
+
+    #[test]
+    fn single_pipeline_limits_relay_to_one_inflight() {
+        let topo = h20x8();
+        let cfg = MmaConfig {
+            dual_pipeline: false,
+            ..Default::default()
+        };
+        let mut e = Engine::new(0, Direction::H2D, cfg, 8);
+        e.activate(Time::ZERO, TransferId(0), desc(100_000_000), &topo);
+        e.on_wake(Time::ZERO, GpuId(3), &topo);
+        assert_eq!(e.queues[3].slots.len(), 1, "single pipeline: one relay slot");
+        let mut e2 = Engine::new(0, Direction::H2D, MmaConfig::default(), 8);
+        e2.activate(Time::ZERO, TransferId(0), desc(100_000_000), &topo);
+        e2.on_wake(Time::ZERO, GpuId(3), &topo);
+        assert_eq!(e2.queues[3].slots.len(), 2, "dual pipeline: two relay slots");
+    }
+
+    #[test]
+    fn static_mode_assigns_by_ratio() {
+        let topo = h20x8();
+        let cfg = MmaConfig {
+            mode: Mode::Static(vec![(GpuId(0), 1.0), (GpuId(1), 2.0)]),
+            ..Default::default()
+        };
+        let mut e = Engine::new(0, Direction::H2D, cfg, 8);
+        // 30 MB → 6 chunks; 1:2 split → 2 direct on gpu0, 4 relayed by gpu1.
+        let init = e.activate(Time::ZERO, TransferId(0), desc(30_000_000), &topo);
+        let completes = drain(&mut e, &topo, init);
+        assert_eq!(completes.len(), 1);
+        assert_eq!(e.stats.chunks_dispatched[0], 2);
+        assert_eq!(e.stats.chunks_dispatched[1], 4);
+        assert_eq!(completes[0].1, 10_000_000); // direct bytes
+        assert_eq!(completes[0].2, 20_000_000); // relay bytes
+    }
+
+    #[test]
+    fn contention_marks_backs_off_and_clears() {
+        let topo = h20x8();
+        let mut e = Engine::new(0, Direction::H2D, MmaConfig::default(), 8);
+        e.activate(Time::ZERO, TransferId(0), desc(40_000_000), &topo);
+        let acts = e.on_wake(Time::ZERO, GpuId(0), &topo);
+        let k0 = flow_keys(&acts)[0];
+        // Deliver chunk 0 absurdly late → contended on retire.
+        let acts = e.on_flow_done(Time::from_ms(50), k0, &topo);
+        let k1 = flow_keys(&acts)[0]; // queued chunk launches
+        let EngineAction::RetireAt { gpu, key, at } = acts
+            .iter()
+            .find(|a| matches!(a, EngineAction::RetireAt { .. }))
+            .cloned()
+            .unwrap()
+        else {
+            panic!()
+        };
+        e.on_retire(at, gpu, key, &topo);
+        assert!(e.queues[0].contended);
+        assert_eq!(e.stats.backoff_events[0], 1);
+        // Chunk 1 also late → still contended; queue now has 1 slot free
+        // but backoff caps effective depth at 1 → pulls only one chunk.
+        let acts = e.on_flow_done(Time::from_ms(51), k1, &topo);
+        let EngineAction::RetireAt { gpu, key, at } = acts
+            .iter()
+            .find(|a| matches!(a, EngineAction::RetireAt { .. }))
+            .cloned()
+            .unwrap()
+        else {
+            panic!()
+        };
+        let retire_acts = e.on_retire(at, gpu, key, &topo);
+        let wake_at = at;
+        assert!(e.queues[0].contended);
+        // Retirement inlines the worker wake: the pull happens right in
+        // the returned actions — exactly one chunk under backoff.
+        let keys = flow_keys(&retire_acts);
+        assert_eq!(keys.len(), 1, "backoff must reduce depth to 1");
+        assert_eq!(e.queues[0].slots.len(), 1);
+        // On-time delivery clears the contention mark.
+        let (k2, lat2, b2) = retire_acts
+            .iter()
+            .find_map(|a| match a {
+                EngineAction::StartFlow { key, latency, bytes, .. } => {
+                    Some((*key, *latency, *bytes))
+                }
+                _ => None,
+            })
+            .unwrap();
+        let on_time = wake_at + lat2 + Time::from_secs_f64(b2 as f64 / 53.6e9);
+        let acts = e.on_flow_done(on_time, k2, &topo);
+        let EngineAction::RetireAt { gpu, key, at } = acts
+            .iter()
+            .find(|a| matches!(a, EngineAction::RetireAt { .. }))
+            .cloned()
+            .unwrap()
+        else {
+            panic!()
+        };
+        e.on_retire(at, gpu, key, &topo);
+        assert!(!e.queues[0].contended, "clean completion must clear backoff");
+    }
+}

@@ -1,0 +1,80 @@
+//! Transfer Task Interceptor (§3.2): the CUDA memory-copy API boundary.
+//!
+//! The interceptor hooks `cudaMemcpy`/`cudaMemcpyAsync` (LD_PRELOAD in the
+//! paper; the [`super::driver::SimWorld`] copy API here) *before* CUDA
+//! binds the copy to the target GPU's PCIe path. It records the payload as
+//! a Transfer Task and decides the route:
+//!
+//! * large host↔device copies → the Multipath Transfer Engine, with a
+//!   Dummy Task replacing the stream-visible copy for async submissions;
+//! * copies below the fallback threshold → native single-path DMA (the
+//!   threshold also filters small control messages);
+//! * GPU↔GPU copies and collective traffic are never intercepted (they use
+//!   separate code paths: P2P DMA / kernel collectives).
+
+use super::transfer_task::TransferDesc;
+use super::{Mode, MmaConfig};
+
+/// Routing decision for one intercepted copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Hand to the Multipath Transfer Engine (Dummy Task for async).
+    Engine,
+    /// Native single-path `cudaMemcpyAsync` semantics.
+    Native,
+}
+
+/// Decide how to route an intercepted host↔device copy.
+pub fn route(cfg: &MmaConfig, desc: &TransferDesc) -> Route {
+    match cfg.mode {
+        Mode::Native => Route::Native,
+        Mode::Mma | Mode::Static(_) => {
+            if desc.bytes < cfg.fallback_threshold {
+                Route::Native
+            } else {
+                Route::Engine
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Direction, GpuId, NumaId};
+
+    fn desc(bytes: u64) -> TransferDesc {
+        TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), bytes)
+    }
+
+    #[test]
+    fn threshold_splits_routing() {
+        let cfg = MmaConfig::default(); // threshold 11.3 MB
+        assert_eq!(route(&cfg, &desc(1_000)), Route::Native);
+        assert_eq!(route(&cfg, &desc(11_299_999)), Route::Native);
+        assert_eq!(route(&cfg, &desc(11_300_000)), Route::Engine);
+        assert_eq!(route(&cfg, &desc(8 << 30)), Route::Engine);
+    }
+
+    #[test]
+    fn native_mode_always_native() {
+        let cfg = MmaConfig::native();
+        assert_eq!(route(&cfg, &desc(8 << 30)), Route::Native);
+    }
+
+    #[test]
+    fn no_fallback_sends_everything_to_engine() {
+        let cfg = MmaConfig::default().no_fallback();
+        assert_eq!(route(&cfg, &desc(1)), Route::Engine);
+    }
+
+    #[test]
+    fn static_mode_respects_threshold() {
+        let cfg = MmaConfig {
+            mode: Mode::Static(vec![(GpuId(0), 1.0)]),
+            ..Default::default()
+        };
+        assert_eq!(route(&cfg, &desc(1_000)), Route::Native);
+        assert_eq!(route(&cfg, &desc(100_000_000)), Route::Engine);
+    }
+}

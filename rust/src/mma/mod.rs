@@ -1,0 +1,119 @@
+//! MMA — the paper's system: Transfer Task Interceptor (§3.2), Sync Engine
+//! (§3.3), and Multipath Transfer Engine (§3.4), composed over the
+//! simulated fabric by [`driver::SimWorld`].
+//!
+//! The module layout mirrors Figure 4/5 of the paper:
+//!
+//! * [`transfer_task`] — the recorded payload of an intercepted copy.
+//! * [`interceptor`] — the CUDA-API boundary hook + fallback threshold.
+//! * [`sync_engine`] — Dummy Task lifecycle (host callback + spin kernel).
+//! * [`task_manager`] — chunking into micro-tasks, destination-tagged queue.
+//! * [`path_selector`] — pull-based selection with outstanding-queue
+//!   backpressure, direct-path priority and longest-remaining stealing.
+//! * [`engine`] — per-direction engine instances, worker actors, the Task
+//!   Launcher's direct/relay dispatch and dual-pipeline relay.
+//! * [`driver`] — the composed simulation world and its event loop.
+//! * [`stats`] — per-engine counters, CPU-time accounting (Fig 11).
+
+pub mod driver;
+pub mod engine;
+pub mod interceptor;
+pub mod path_selector;
+pub mod stats;
+pub mod sync_engine;
+pub mod task_manager;
+pub mod transfer_task;
+
+pub use driver::SimWorld;
+pub use engine::Engine;
+pub use transfer_task::{TransferClass, TransferDesc};
+
+use crate::topology::GpuId;
+
+/// Selector / splitting policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mode {
+    /// Full MMA: pull-based multipath with queue backpressure.
+    Mma,
+    /// Native CUDA semantics: single direct path, no interception.
+    Native,
+    /// Static splitting baseline (Fig 10): fixed byte ratios per path.
+    /// Entries are `(path_gpu, weight)`; the destination's own entry is the
+    /// direct path, others are relays.
+    Static(Vec<(GpuId, f64)>),
+}
+
+/// Runtime tunables of MMA (all exposed as env vars in the paper's
+/// implementation; here via [`crate::config`] / CLI).
+#[derive(Clone, Debug)]
+pub struct MmaConfig {
+    /// Engine mode.
+    pub mode: Mode,
+    /// Micro-task (chunk) size in bytes. Paper default: 5 MB (§3.4/§5.3).
+    pub chunk_bytes: u64,
+    /// Outstanding-queue depth per PCIe link. Paper sweet spot: 2 (§5.3).
+    pub outstanding_depth: usize,
+    /// Transfers below this fall back to native single-path copies (§3.2).
+    /// Paper break-even: 11.3 MB H2D / 13 MB D2H at 5 MB chunks (§5.3).
+    pub fallback_threshold: u64,
+    /// Relay candidates; `None` = every peer GPU (NVML topology discovery).
+    pub relay_gpus: Option<Vec<GpuId>>,
+    /// Prefer micro-tasks destined to the queue's own GPU (§3.4.2).
+    pub direct_priority: bool,
+    /// Back off a path whose completions run late (contention, §3.4.2).
+    pub contention_backoff: bool,
+    /// Restrict relays to the target's NUMA node (§6, predictable-latency).
+    pub numa_local_only: bool,
+    /// Dual-pipeline relay (Fig 6); `false` = naive single pipeline.
+    pub dual_pipeline: bool,
+    /// Centralized dispatch mode: one transfer worker serves all GPUs (§4).
+    pub centralized_dispatch: bool,
+    /// Fixed engine activation overhead (callback → first dispatch), ns.
+    pub activation_ns: u64,
+    /// Observed/expected service-time ratio that marks a path contended.
+    pub contention_beta: f64,
+}
+
+impl Default for MmaConfig {
+    fn default() -> Self {
+        MmaConfig {
+            mode: Mode::Mma,
+            chunk_bytes: 5_000_000,
+            outstanding_depth: 2,
+            fallback_threshold: 11_300_000,
+            relay_gpus: None,
+            direct_priority: true,
+            contention_backoff: true,
+            numa_local_only: false,
+            dual_pipeline: true,
+            centralized_dispatch: false,
+            activation_ns: 15_000,
+            contention_beta: 2.5,
+        }
+    }
+}
+
+impl MmaConfig {
+    /// Native-baseline configuration (everything bypasses the engine).
+    pub fn native() -> MmaConfig {
+        MmaConfig {
+            mode: Mode::Native,
+            ..Default::default()
+        }
+    }
+
+    /// MMA with an explicit relay set.
+    pub fn with_relays(relays: Vec<GpuId>) -> MmaConfig {
+        MmaConfig {
+            relay_gpus: Some(relays),
+            ..Default::default()
+        }
+    }
+
+    /// Disable the small-transfer fallback (used by sweeps that need the
+    /// engine exercised at every size, e.g. Fig 7/16).
+    pub fn no_fallback(mut self) -> MmaConfig {
+        self.fallback_threshold = 0;
+        self
+    }
+}

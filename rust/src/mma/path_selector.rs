@@ -1,0 +1,258 @@
+//! Path Selector (§3.4.2): pull-based selection with outstanding-queue
+//! backpressure as the implicit congestion signal.
+//!
+//! One *outstanding queue* exists per PCIe link (per direction), statically
+//! bound to its GPU. The selector never pushes work to a path; a path
+//! *pulls* a micro-task only when its outstanding queue has capacity. A
+//! congested path retires slowly, stays full, and stops pulling — no
+//! explicit link-state feedback needed.
+
+use super::task_manager::{Chunk, TaskManager};
+use super::{Mode, MmaConfig};
+use crate::sim::Time;
+use crate::topology::{GpuId, Topology};
+
+/// Per-GPU pull decision outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pulled {
+    /// A direct micro-task (dest == this GPU).
+    Direct(Chunk),
+    /// A relay micro-task (this GPU forwards to `chunk.dest`).
+    Relay(Chunk),
+}
+
+impl Pulled {
+    /// The underlying chunk.
+    pub fn chunk(&self) -> Chunk {
+        match self {
+            Pulled::Direct(c) | Pulled::Relay(c) => *c,
+        }
+    }
+    /// Is this a relay pull?
+    pub fn is_relay(&self) -> bool {
+        matches!(self, Pulled::Relay(_))
+    }
+}
+
+/// State of one outstanding queue (one per GPU per direction).
+#[derive(Debug, Clone)]
+pub struct OutstandingQueue {
+    /// The GPU whose PCIe link this queue is bound to.
+    pub gpu: GpuId,
+    /// In-flight micro-task keys.
+    pub slots: Vec<u64>,
+    /// Depth limit.
+    pub depth: usize,
+    /// Contention detected on this path (backoff mode, §3.4.2).
+    pub contended: bool,
+    /// CPU "transfer thread" is busy dispatching until this time.
+    pub busy_until: Time,
+}
+
+impl OutstandingQueue {
+    /// New queue with the configured depth.
+    pub fn new(gpu: GpuId, depth: usize) -> OutstandingQueue {
+        OutstandingQueue {
+            gpu,
+            slots: Vec::with_capacity(depth),
+            depth,
+            contended: false,
+            busy_until: Time::ZERO,
+        }
+    }
+
+    /// Effective capacity: a contended queue backs off to depth 1, yielding
+    /// bandwidth to latency-sensitive co-running traffic.
+    pub fn effective_depth(&self, backoff_enabled: bool) -> usize {
+        if backoff_enabled && self.contended {
+            1
+        } else {
+            self.depth
+        }
+    }
+
+    /// Can this queue pull more work?
+    pub fn has_capacity(&self, backoff_enabled: bool) -> bool {
+        self.slots.len() < self.effective_depth(backoff_enabled)
+    }
+
+    /// Occupy a slot with a chunk key.
+    pub fn occupy(&mut self, key: u64) {
+        debug_assert!(self.slots.len() < self.depth);
+        self.slots.push(key);
+    }
+
+    /// Retire a chunk key; returns true if it was present.
+    pub fn retire(&mut self, key: u64) -> bool {
+        if let Some(p) = self.slots.iter().position(|&k| k == key) {
+            self.slots.swap_remove(p);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The pull policy. Stateless over [`TaskManager`] + [`OutstandingQueue`]s;
+/// owned by the engine which carries the state.
+pub struct PathSelector;
+
+impl PathSelector {
+    /// Decide the next micro-task for `gpu`'s outstanding queue, honoring:
+    ///
+    /// 1. **Direct-path-first** (if `direct_priority`): own-destination
+    ///    micro-tasks before any relay work, minimizing NVLink spend.
+    /// 2. **Longest-remaining-destination stealing**: relay work comes from
+    ///    the destination with the most pending bytes.
+    /// 3. **Relay eligibility**: this GPU must be in the relay set, and
+    ///    NUMA restrictions respected.
+    ///
+    /// In static mode, only the pre-assigned queue for `gpu` is consulted.
+    pub fn pull(
+        tm: &mut TaskManager,
+        topo: &Topology,
+        cfg: &MmaConfig,
+        gpu: GpuId,
+    ) -> Option<Pulled> {
+        match &cfg.mode {
+            Mode::Static(_) => {
+                let c = tm.pop_assigned(gpu)?;
+                if c.dest == gpu {
+                    Some(Pulled::Direct(c))
+                } else {
+                    Some(Pulled::Relay(c))
+                }
+            }
+            Mode::Native => None,
+            Mode::Mma => {
+                if cfg.direct_priority {
+                    if let Some(c) = tm.pop_direct(gpu) {
+                        return Some(Pulled::Direct(c));
+                    }
+                }
+                let relay_ok = Self::in_relay_set(cfg, gpu);
+                if relay_ok {
+                    let steal = tm.pop_steal(gpu, |dest| {
+                        !cfg.numa_local_only || topo.numa_of(dest) == topo.numa_of(gpu)
+                    });
+                    if let Some(c) = steal {
+                        return Some(Pulled::Relay(c));
+                    }
+                }
+                if !cfg.direct_priority {
+                    // Without direct priority the queue may still end up
+                    // serving its own destination — but only after relay
+                    // stealing was considered first (the Table 2 ablation).
+                    if let Some(c) = tm.pop_direct(gpu) {
+                        return Some(Pulled::Direct(c));
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Is `gpu` allowed to relay?
+    pub fn in_relay_set(cfg: &MmaConfig, gpu: GpuId) -> bool {
+        match &cfg.relay_gpus {
+            None => true,
+            Some(set) => set.contains(&gpu),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::TransferId;
+    use crate::topology::h20x8;
+
+    fn mgr_with(dest: GpuId, bytes: u64) -> TaskManager {
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), dest, bytes, 5_000_000));
+        tm
+    }
+
+    #[test]
+    fn direct_priority_wins_over_steal() {
+        let topo = h20x8();
+        let cfg = MmaConfig::default();
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        // GPU 0 has own work → direct, even though dest 1 has more bytes.
+        let p = PathSelector::pull(&mut tm, &topo, &cfg, GpuId(0)).unwrap();
+        assert_eq!(p, Pulled::Direct(Chunk {
+            transfer: TransferId(1),
+            index: 0,
+            bytes: 5_000_000,
+            dest: GpuId(0),
+        }));
+    }
+
+    #[test]
+    fn without_direct_priority_steal_comes_first() {
+        let topo = h20x8();
+        let cfg = MmaConfig {
+            direct_priority: false,
+            ..Default::default()
+        };
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        let p = PathSelector::pull(&mut tm, &topo, &cfg, GpuId(0)).unwrap();
+        assert!(p.is_relay(), "{p:?}");
+        assert_eq!(p.chunk().dest, GpuId(1));
+    }
+
+    #[test]
+    fn relay_set_restriction() {
+        let topo = h20x8();
+        let cfg = MmaConfig::with_relays(vec![GpuId(2)]);
+        let mut tm = mgr_with(GpuId(0), 50_000_000);
+        // GPU 1 is not in the relay set: no pull.
+        assert!(PathSelector::pull(&mut tm, &topo, &cfg, GpuId(1)).is_none());
+        // GPU 2 is: relay pull.
+        let p = PathSelector::pull(&mut tm, &topo, &cfg, GpuId(2)).unwrap();
+        assert!(p.is_relay());
+    }
+
+    #[test]
+    fn numa_local_only_blocks_cross_socket_relay() {
+        let topo = h20x8();
+        let cfg = MmaConfig {
+            numa_local_only: true,
+            ..Default::default()
+        };
+        let mut tm = mgr_with(GpuId(0), 50_000_000); // dest on numa0
+        // GPU 5 lives on numa1 → not eligible.
+        assert!(PathSelector::pull(&mut tm, &topo, &cfg, GpuId(5)).is_none());
+        // GPU 1 (numa0) is eligible.
+        assert!(PathSelector::pull(&mut tm, &topo, &cfg, GpuId(1)).is_some());
+    }
+
+    #[test]
+    fn native_mode_never_pulls() {
+        let topo = h20x8();
+        let cfg = MmaConfig::native();
+        let mut tm = mgr_with(GpuId(0), 50_000_000);
+        assert!(PathSelector::pull(&mut tm, &topo, &cfg, GpuId(0)).is_none());
+    }
+
+    #[test]
+    fn outstanding_queue_capacity_and_backoff() {
+        let mut q = OutstandingQueue::new(GpuId(0), 2);
+        assert!(q.has_capacity(true));
+        q.occupy(1);
+        q.occupy(2);
+        assert!(!q.has_capacity(true));
+        assert!(q.retire(1));
+        assert!(!q.retire(1));
+        assert!(q.has_capacity(true));
+        // Contended queues back off to depth 1.
+        q.contended = true;
+        assert_eq!(q.effective_depth(true), 1);
+        assert!(!q.has_capacity(true), "1 slot used, backoff depth 1");
+        assert!(q.has_capacity(false), "backoff disabled → full depth");
+    }
+}

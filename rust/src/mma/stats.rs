@@ -1,0 +1,158 @@
+//! Per-engine counters and CPU-time accounting.
+//!
+//! The paper's default flow-control mode spawns, per engine (H2D/D2H),
+//! three threads per GPU: *transfer*, *synchronization*, *monitor* (§4).
+//! Only sync threads busy-wait (`cudaEventSynchronize` with spin
+//! scheduling); transfer threads burn CPU proportional to dispatch count;
+//! monitors are negligible. Fig 11 reports the total as equivalent
+//! fully-loaded cores — we reproduce that accounting here.
+
+use crate::sim::Time;
+use crate::topology::GpuId;
+
+/// Stats for one engine instance (one direction of one "process").
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    /// Chunks dispatched per GPU path.
+    pub chunks_dispatched: Vec<u64>,
+    /// Of which relay chunks.
+    pub relay_chunks: Vec<u64>,
+    /// Bytes moved per GPU path.
+    pub bytes_by_path: Vec<u64>,
+    /// CPU ns burned by transfer threads (dispatch work), per GPU.
+    pub transfer_cpu_ns: Vec<u64>,
+    /// CPU ns burned by sync threads (busy-wait while their outstanding
+    /// queue is non-empty), per GPU.
+    pub sync_cpu_ns: Vec<u64>,
+    /// Time each queue last became non-empty (None = currently empty).
+    busy_since: Vec<Option<Time>>,
+    /// Per-GPU count of contention backoff activations.
+    pub backoff_events: Vec<u64>,
+    /// Completed transfers.
+    pub transfers_completed: u64,
+    /// Transfers that took the native fallback path.
+    pub fallback_transfers: u64,
+}
+
+impl EngineStats {
+    /// Zeroed stats for `gpu_count` paths.
+    pub fn new(gpu_count: usize) -> EngineStats {
+        EngineStats {
+            chunks_dispatched: vec![0; gpu_count],
+            relay_chunks: vec![0; gpu_count],
+            bytes_by_path: vec![0; gpu_count],
+            transfer_cpu_ns: vec![0; gpu_count],
+            sync_cpu_ns: vec![0; gpu_count],
+            busy_since: vec![None; gpu_count],
+            backoff_events: vec![0; gpu_count],
+            transfers_completed: 0,
+            fallback_transfers: 0,
+        }
+    }
+
+    /// The outstanding queue for `gpu` became non-empty at `now`.
+    pub fn queue_busy(&mut self, gpu: GpuId, now: Time) {
+        let slot = &mut self.busy_since[gpu.0 as usize];
+        if slot.is_none() {
+            *slot = Some(now);
+        }
+    }
+
+    /// The outstanding queue for `gpu` drained at `now`: account the
+    /// busy-wait interval to the sync thread.
+    pub fn queue_idle(&mut self, gpu: GpuId, now: Time) {
+        if let Some(since) = self.busy_since[gpu.0 as usize].take() {
+            self.sync_cpu_ns[gpu.0 as usize] += now.since(since).ns();
+        }
+    }
+
+    /// Close any open busy intervals (end of run) at `now`.
+    pub fn finish(&mut self, now: Time) {
+        for g in 0..self.busy_since.len() {
+            self.queue_idle(GpuId(g as u8), now);
+        }
+    }
+
+    /// Record one dispatched chunk.
+    pub fn dispatched(&mut self, path_gpu: GpuId, bytes: u64, relay: bool, cpu_ns: u64) {
+        let i = path_gpu.0 as usize;
+        self.chunks_dispatched[i] += 1;
+        if relay {
+            self.relay_chunks[i] += 1;
+        }
+        self.bytes_by_path[i] += bytes;
+        self.transfer_cpu_ns[i] += cpu_ns;
+    }
+
+    /// Total CPU ns across thread classes (transfer + sync + monitor).
+    /// Sync threads spin in `cudaEventSynchronize` at ~50% duty (they block
+    /// on a condvar between micro-task batches, §5.3); the monitor thread
+    /// is ~2% of a core while its path is active ("negligible", §4).
+    pub fn total_cpu_ns(&self) -> u64 {
+        let xfer: u64 = self.transfer_cpu_ns.iter().sum();
+        let sync: u64 = self.sync_cpu_ns.iter().map(|&b| b / 2).sum();
+        let monitor: u64 = self.sync_cpu_ns.iter().map(|&b| b / 50).sum();
+        xfer + sync + monitor
+    }
+
+    /// Equivalent fully-loaded cores over an elapsed window (Fig 11).
+    pub fn equivalent_cores(&self, elapsed: Time) -> f64 {
+        if elapsed.ns() == 0 {
+            return 0.0;
+        }
+        self.total_cpu_ns() as f64 / elapsed.ns() as f64
+    }
+
+    /// Total relay bytes (all paths).
+    pub fn total_relay_chunks(&self) -> u64 {
+        self.relay_chunks.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_intervals_accumulate() {
+        let mut s = EngineStats::new(2);
+        s.queue_busy(GpuId(0), Time::from_us(10));
+        // Double-busy is idempotent.
+        s.queue_busy(GpuId(0), Time::from_us(12));
+        s.queue_idle(GpuId(0), Time::from_us(30));
+        assert_eq!(s.sync_cpu_ns[0], 20_000);
+        // Idle again is a no-op.
+        s.queue_idle(GpuId(0), Time::from_us(40));
+        assert_eq!(s.sync_cpu_ns[0], 20_000);
+    }
+
+    #[test]
+    fn finish_closes_open_intervals() {
+        let mut s = EngineStats::new(1);
+        s.queue_busy(GpuId(0), Time::from_us(5));
+        s.finish(Time::from_us(25));
+        assert_eq!(s.sync_cpu_ns[0], 20_000);
+    }
+
+    #[test]
+    fn equivalent_cores_math() {
+        let mut s = EngineStats::new(1);
+        s.queue_busy(GpuId(0), Time::ZERO);
+        s.queue_idle(GpuId(0), Time::from_ms(1));
+        // sync = 1ms at 50% duty, monitor = 2% of that, transfer = 0.
+        let cores = s.equivalent_cores(Time::from_ms(1));
+        assert!((cores - 0.52).abs() < 1e-9, "{cores}");
+    }
+
+    #[test]
+    fn dispatch_counters() {
+        let mut s = EngineStats::new(3);
+        s.dispatched(GpuId(1), 5_000_000, false, 3_000);
+        s.dispatched(GpuId(1), 5_000_000, true, 3_000);
+        assert_eq!(s.chunks_dispatched[1], 2);
+        assert_eq!(s.relay_chunks[1], 1);
+        assert_eq!(s.bytes_by_path[1], 10_000_000);
+        assert_eq!(s.transfer_cpu_ns[1], 6_000);
+        assert_eq!(s.total_relay_chunks(), 1);
+    }
+}

@@ -1,0 +1,273 @@
+//! Task Manager (§3.4.1): splits each transfer into fixed-size micro-tasks
+//! and maintains the destination-tagged micro-task queue of Figure 5.
+
+use crate::gpusim::TransferId;
+use crate::topology::GpuId;
+use std::collections::VecDeque;
+
+/// One micro-task: a fixed-size slice of a transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Chunk {
+    /// Parent transfer.
+    pub transfer: TransferId,
+    /// Index within the transfer (0-based).
+    pub index: u32,
+    /// Size of this chunk (the tail chunk may be short).
+    pub bytes: u64,
+    /// Destination (H2D) or source (D2H) GPU — the "color" in Figure 5.
+    pub dest: GpuId,
+}
+
+/// Destination-tagged micro-task queue. Chunks of the same destination keep
+/// FIFO order; `remaining_bytes` per destination drives the
+/// longest-remaining-destination relay-stealing policy (§3.4.2).
+pub struct TaskManager {
+    pending: Vec<VecDeque<Chunk>>,
+    remaining: Vec<u64>,
+    /// Statically pre-assigned chunks per path GPU (static-split baseline).
+    assigned: Vec<VecDeque<Chunk>>,
+    total_pending: usize,
+}
+
+impl TaskManager {
+    /// Create for a server with `gpu_count` GPUs.
+    pub fn new(gpu_count: usize) -> TaskManager {
+        TaskManager {
+            pending: (0..gpu_count).map(|_| VecDeque::new()).collect(),
+            remaining: vec![0; gpu_count],
+            assigned: (0..gpu_count).map(|_| VecDeque::new()).collect(),
+            total_pending: 0,
+        }
+    }
+
+    /// Split `bytes` into `chunk_bytes`-sized micro-tasks. The tail chunk
+    /// carries the remainder (never zero-sized).
+    pub fn split(
+        transfer: TransferId,
+        dest: GpuId,
+        bytes: u64,
+        chunk_bytes: u64,
+    ) -> Vec<Chunk> {
+        assert!(bytes > 0, "empty transfer");
+        let cb = chunk_bytes.max(1);
+        let n = bytes.div_ceil(cb);
+        (0..n)
+            .map(|i| {
+                let off = i * cb;
+                Chunk {
+                    transfer,
+                    index: i as u32,
+                    bytes: (bytes - off).min(cb),
+                    dest,
+                }
+            })
+            .collect()
+    }
+
+    /// Enqueue chunks into the destination-tagged queue (pull mode).
+    pub fn push_pending(&mut self, chunks: &[Chunk]) {
+        for c in chunks {
+            self.pending[c.dest.0 as usize].push_back(*c);
+            self.remaining[c.dest.0 as usize] += c.bytes;
+            self.total_pending += 1;
+        }
+    }
+
+    /// Enqueue a chunk onto a specific path GPU's assigned queue
+    /// (static-split mode; no stealing ever happens from these).
+    pub fn push_assigned(&mut self, path_gpu: GpuId, chunk: Chunk) {
+        self.assigned[path_gpu.0 as usize].push_back(chunk);
+        self.total_pending += 1;
+    }
+
+    /// Pop the next direct micro-task for `gpu` (dest == gpu).
+    pub fn pop_direct(&mut self, gpu: GpuId) -> Option<Chunk> {
+        let c = self.pending[gpu.0 as usize].pop_front()?;
+        self.remaining[gpu.0 as usize] -= c.bytes;
+        self.total_pending -= 1;
+        Some(c)
+    }
+
+    /// Pop the next statically-assigned micro-task for path `gpu`.
+    pub fn pop_assigned(&mut self, gpu: GpuId) -> Option<Chunk> {
+        let c = self.assigned[gpu.0 as usize].pop_front()?;
+        self.total_pending -= 1;
+        Some(c)
+    }
+
+    /// Pop a relay micro-task for `gpu`: steals from the destination with
+    /// the most remaining pending bytes (§3.4.2, longest-remaining policy).
+    /// `eligible` filters candidate destinations (NUMA restrictions etc.).
+    pub fn pop_steal(
+        &mut self,
+        gpu: GpuId,
+        mut eligible: impl FnMut(GpuId) -> bool,
+    ) -> Option<Chunk> {
+        let mut best: Option<GpuId> = None;
+        let mut best_remaining = 0u64;
+        for d in 0..self.pending.len() {
+            let dest = GpuId(d as u8);
+            if dest == gpu || self.remaining[d] == 0 || !eligible(dest) {
+                continue;
+            }
+            if self.remaining[d] > best_remaining {
+                best_remaining = self.remaining[d];
+                best = Some(dest);
+            }
+        }
+        let dest = best?;
+        let c = self.pending[dest.0 as usize].pop_front()?;
+        self.remaining[dest.0 as usize] -= c.bytes;
+        self.total_pending -= 1;
+        Some(c)
+    }
+
+    /// Remaining pending bytes for a destination.
+    pub fn remaining_for(&self, dest: GpuId) -> u64 {
+        self.remaining[dest.0 as usize]
+    }
+
+    /// Pending direct work available for `gpu`?
+    pub fn has_direct(&self, gpu: GpuId) -> bool {
+        !self.pending[gpu.0 as usize].is_empty()
+    }
+
+    /// Any statically-assigned work for `gpu`?
+    pub fn has_assigned(&self, gpu: GpuId) -> bool {
+        !self.assigned[gpu.0 as usize].is_empty()
+    }
+
+    /// Total micro-tasks awaiting dispatch.
+    pub fn pending_count(&self) -> usize {
+        self.total_pending
+    }
+
+    /// True when no work is queued anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.total_pending == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn tid(i: u32) -> TransferId {
+        TransferId(i)
+    }
+
+    #[test]
+    fn split_covers_all_bytes_exactly() {
+        let chunks = TaskManager::split(tid(1), GpuId(0), 12_000_000, 5_000_000);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].bytes, 5_000_000);
+        assert_eq!(chunks[1].bytes, 5_000_000);
+        assert_eq!(chunks[2].bytes, 2_000_000);
+        assert_eq!(chunks.iter().map(|c| c.bytes).sum::<u64>(), 12_000_000);
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.index, i as u32);
+        }
+    }
+
+    #[test]
+    fn split_property_total_and_sizes() {
+        testkit::check("split-total", |rng| {
+            let bytes = rng.range_u64(1, 1 << 34);
+            let chunk = rng.range_u64(1, 64 << 20);
+            let chunks = TaskManager::split(tid(0), GpuId(1), bytes, chunk);
+            assert_eq!(chunks.iter().map(|c| c.bytes).sum::<u64>(), bytes);
+            for c in &chunks[..chunks.len() - 1] {
+                assert_eq!(c.bytes, chunk);
+            }
+            let tail = chunks.last().unwrap();
+            assert!(tail.bytes > 0 && tail.bytes <= chunk);
+        });
+    }
+
+    #[test]
+    fn direct_pop_fifo_per_destination() {
+        let mut tm = TaskManager::new(4);
+        let a = TaskManager::split(tid(1), GpuId(2), 10, 4);
+        tm.push_pending(&a);
+        assert!(tm.has_direct(GpuId(2)));
+        assert!(!tm.has_direct(GpuId(0)));
+        assert_eq!(tm.pop_direct(GpuId(2)).unwrap().index, 0);
+        assert_eq!(tm.pop_direct(GpuId(2)).unwrap().index, 1);
+        assert_eq!(tm.pop_direct(GpuId(2)).unwrap().index, 2);
+        assert!(tm.pop_direct(GpuId(2)).is_none());
+        assert!(tm.is_empty());
+    }
+
+    #[test]
+    fn steal_prefers_longest_remaining_destination() {
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&TaskManager::split(tid(1), GpuId(1), 10_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(tid(2), GpuId(2), 30_000_000, 5_000_000));
+        // GPU 0 steals: destination 2 has more remaining.
+        let c = tm.pop_steal(GpuId(0), |_| true).unwrap();
+        assert_eq!(c.dest, GpuId(2));
+        assert_eq!(tm.remaining_for(GpuId(2)), 25_000_000);
+    }
+
+    #[test]
+    fn steal_never_takes_own_destination_or_ineligible() {
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&TaskManager::split(tid(1), GpuId(0), 50_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(tid(2), GpuId(3), 10_000_000, 5_000_000));
+        // GPU 0's own work is not "relay" work.
+        let c = tm.pop_steal(GpuId(0), |_| true).unwrap();
+        assert_eq!(c.dest, GpuId(3));
+        // With destination 3 filtered out, nothing remains stealable.
+        assert!(tm.pop_steal(GpuId(0), |d| d != GpuId(3)).is_none());
+    }
+
+    #[test]
+    fn assigned_queue_is_per_path_gpu() {
+        let mut tm = TaskManager::new(2);
+        let chunks = TaskManager::split(tid(1), GpuId(0), 9, 3);
+        tm.push_assigned(GpuId(0), chunks[0]);
+        tm.push_assigned(GpuId(1), chunks[1]);
+        tm.push_assigned(GpuId(1), chunks[2]);
+        assert!(tm.has_assigned(GpuId(1)));
+        assert_eq!(tm.pop_assigned(GpuId(1)).unwrap().index, 1);
+        assert_eq!(tm.pop_assigned(GpuId(0)).unwrap().index, 0);
+        assert_eq!(tm.pop_assigned(GpuId(1)).unwrap().index, 2);
+        assert!(tm.is_empty());
+    }
+
+    #[test]
+    fn remaining_bytes_tracks_pop_order() {
+        testkit::check("remaining-invariant", |rng| {
+            let mut tm = TaskManager::new(4);
+            let mut expect = [0u64; 4];
+            for t in 0..rng.range_u64(1, 6) {
+                let dest = GpuId(rng.range_u64(0, 4) as u8);
+                let bytes = rng.range_u64(1, 40_000_000);
+                tm.push_pending(&TaskManager::split(tid(t as u32), dest, bytes, 5_000_000));
+                expect[dest.0 as usize] += bytes;
+            }
+            // Drain randomly via direct and steal pops.
+            loop {
+                let g = GpuId(rng.range_u64(0, 4) as u8);
+                let c = if rng.bool(0.5) {
+                    tm.pop_direct(g)
+                } else {
+                    tm.pop_steal(g, |_| true)
+                };
+                match c {
+                    Some(c) => expect[c.dest.0 as usize] -= c.bytes,
+                    None => {
+                        if tm.is_empty() {
+                            break;
+                        }
+                    }
+                }
+                for d in 0..4 {
+                    assert_eq!(tm.remaining_for(GpuId(d as u8)), expect[d]);
+                }
+            }
+            assert_eq!(expect, [0, 0, 0, 0]);
+        });
+    }
+}

@@ -1,0 +1,104 @@
+//! H20 compute-time roofline model.
+//!
+//! The figure harnesses need *compute* time (prefill, decode) for
+//! paper-scale models to put transfer time in context (Fig 2's "fetch
+//! fraction of TTFT", Fig 12's end-to-end TTFT). The live end-to-end
+//! example uses real PJRT execution of the tiny model; paper-scale models
+//! use this roofline: time = max(flops/peak_flops, bytes/hbm_bw) / eff.
+//!
+//! H20 characteristics: ~148 TFLOPS dense FP16/BF16, ~4.0 TB/s HBM3.
+
+use crate::models::ModelSpec;
+
+/// GPU compute/memory capability for roofline estimates.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuRoofline {
+    /// Peak dense FP16 FLOPs/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bps: f64,
+    /// Achievable fraction of peak in a tuned serving stack.
+    pub efficiency: f64,
+    /// Fixed per-step launch/framework overhead, seconds.
+    pub step_overhead_s: f64,
+}
+
+/// NVIDIA H20 (the paper's testbed GPU).
+pub fn h20() -> GpuRoofline {
+    GpuRoofline {
+        peak_flops: 148e12,
+        hbm_bps: 4.0e12,
+        efficiency: 0.55,
+        step_overhead_s: 2.0e-3,
+    }
+}
+
+impl GpuRoofline {
+    /// Prefill time for `new_tokens` of a model with `context` total
+    /// attended tokens, tensor-parallel over `tp` GPUs.
+    pub fn prefill_secs(&self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64 {
+        let flops = m.flops_per_token(context) * new_tokens as f64;
+        // Prefill is compute-bound: weights stream once per step.
+        let compute = flops / (self.peak_flops * self.efficiency);
+        let weights = m.weight_bytes() as f64 / self.hbm_bps;
+        (compute.max(weights) / tp as f64) + self.step_overhead_s
+    }
+
+    /// Per-output-token decode time (memory-bound: weights + KV stream).
+    pub fn decode_secs_per_token(&self, m: &ModelSpec, context: u64, tp: u32) -> f64 {
+        let bytes = m.weight_bytes() as f64 + m.kv_bytes(context) as f64;
+        let mem = bytes / (self.hbm_bps * self.efficiency);
+        let flops = m.flops_per_token(context) / (self.peak_flops * self.efficiency);
+        (mem.max(flops) / tp as f64) + self.step_overhead_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{qwen3_0_6b, qwen3_32b, qwen_7b_chat};
+
+    #[test]
+    fn prefill_scales_with_tokens_and_model() {
+        let g = h20();
+        let small = g.prefill_secs(&qwen3_0_6b(), 16_384, 16_384, 1);
+        let big = g.prefill_secs(&qwen3_32b(), 16_384, 16_384, 1);
+        assert!(big > 10.0 * small, "32B prefill {big} vs 0.6B {small}");
+        let longer = g.prefill_secs(&qwen3_0_6b(), 65_536, 65_536, 1);
+        assert!(longer > 3.0 * small);
+    }
+
+    #[test]
+    fn fig2_regime_fetch_can_dominate_ttft() {
+        // Sanity for Fig 2: at 64k tokens on Qwen-7B-Chat, the KV fetch
+        // over one PCIe link (~53.6 GB/s) should be comparable to or larger
+        // than prefill-of-suffix compute, allowing fetch fractions ≥50%.
+        let g = h20();
+        let m = qwen_7b_chat();
+        let fetch_s = m.kv_bytes(64 * 1024) as f64 / 53.6e9;
+        // On a prefix hit only a small suffix is prefences — say 256 tokens.
+        let prefill_s = g.prefill_secs(&m, 256, 64 * 1024, 1);
+        assert!(
+            fetch_s > prefill_s,
+            "fetch {fetch_s:.3}s must dominate suffix prefill {prefill_s:.3}s"
+        );
+    }
+
+    #[test]
+    fn decode_is_memory_bound_for_7b() {
+        let g = h20();
+        let m = qwen_7b_chat();
+        let t = g.decode_secs_per_token(&m, 8_192, 1);
+        // ~15.4 GB weights / (4 TB/s * 0.55) ≈ 7 ms + overhead.
+        assert!(t > 5e-3 && t < 30e-3, "decode tok time {t}");
+    }
+
+    #[test]
+    fn tp_divides_compute() {
+        let g = h20();
+        let m = qwen3_32b();
+        let t1 = g.prefill_secs(&m, 32_768, 32_768, 1);
+        let t4 = g.prefill_secs(&m, 32_768, 32_768, 4);
+        assert!(t4 < t1 / 2.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Paged KV-cache manager (vLLM-style): fixed-size token blocks, per-GPU
+//! free lists, per-sequence block tables with copy-on-reuse refcounts.
+
+use std::collections::HashMap;
+
+/// Index of a KV block within its GPU's pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+/// Sequence identifier (serving-engine scoped).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SeqId(pub u64);
+
+/// One GPU's paged KV pool + the block tables of resident sequences.
+#[derive(Debug)]
+pub struct KvCacheManager {
+    block_tokens: u32,
+    free: Vec<BlockId>,
+    refcount: Vec<u32>,
+    tables: HashMap<u64, Vec<BlockId>>,
+    total: u32,
+}
+
+impl KvCacheManager {
+    /// Pool of `total_blocks` blocks of `block_tokens` tokens each.
+    pub fn new(total_blocks: u32, block_tokens: u32) -> KvCacheManager {
+        KvCacheManager {
+            block_tokens,
+            free: (0..total_blocks).rev().map(BlockId).collect(),
+            refcount: vec![0; total_blocks as usize],
+            tables: HashMap::new(),
+            total: total_blocks,
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_tokens(&self) -> u32 {
+        self.block_tokens
+    }
+
+    /// Blocks needed for `tokens`.
+    pub fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Free blocks available.
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    /// Used blocks.
+    pub fn used_blocks(&self) -> u32 {
+        self.total - self.free_blocks()
+    }
+
+    /// Allocate a block table for a new sequence of `tokens`. Returns
+    /// `None` (no partial allocation) if the pool can't fit it.
+    pub fn alloc_seq(&mut self, seq: SeqId, tokens: u32) -> Option<&[BlockId]> {
+        let need = self.blocks_for(tokens) as usize;
+        if self.free.len() < need || self.tables.contains_key(&seq.0) {
+            return None;
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcount[b.0 as usize] = 1;
+            blocks.push(b);
+        }
+        self.tables.insert(seq.0, blocks);
+        Some(&self.tables[&seq.0])
+    }
+
+    /// Extend a sequence by `new_tokens` (decode growth). Returns false if
+    /// out of blocks (caller must evict/offload).
+    pub fn extend_seq(&mut self, seq: SeqId, old_tokens: u32, new_tokens: u32) -> bool {
+        let have = self.blocks_for(old_tokens);
+        let need = self.blocks_for(old_tokens + new_tokens);
+        let extra = (need - have) as usize;
+        if self.free.len() < extra {
+            return false;
+        }
+        let table = self.tables.get_mut(&seq.0).expect("extend unknown seq");
+        for _ in 0..extra {
+            let b = self.free.pop().unwrap();
+            self.refcount[b.0 as usize] = 1;
+            table.push(b);
+        }
+        true
+    }
+
+    /// Share an existing sequence's prefix blocks into a new sequence
+    /// (prefix-cache hit on GPU): bumps refcounts, no copies.
+    pub fn fork_prefix(&mut self, from: SeqId, to: SeqId, prefix_blocks: u32) -> bool {
+        let Some(src) = self.tables.get(&from.0) else {
+            return false;
+        };
+        if self.tables.contains_key(&to.0) || src.len() < prefix_blocks as usize {
+            return false;
+        }
+        let shared: Vec<BlockId> = src[..prefix_blocks as usize].to_vec();
+        for b in &shared {
+            self.refcount[b.0 as usize] += 1;
+        }
+        self.tables.insert(to.0, shared);
+        true
+    }
+
+    /// Release a sequence; blocks return to the pool when refcounts drop
+    /// to zero. Returns the number of blocks actually freed.
+    pub fn free_seq(&mut self, seq: SeqId) -> u32 {
+        let Some(blocks) = self.tables.remove(&seq.0) else {
+            return 0;
+        };
+        let mut freed = 0;
+        for b in blocks {
+            let rc = &mut self.refcount[b.0 as usize];
+            debug_assert!(*rc > 0);
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Block table of a sequence.
+    pub fn table(&self, seq: SeqId) -> Option<&[BlockId]> {
+        self.tables.get(&seq.0).map(Vec::as_slice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn alloc_and_free_round_trip() {
+        let mut kv = KvCacheManager::new(16, 16);
+        assert_eq!(kv.blocks_for(33), 3);
+        let t = kv.alloc_seq(SeqId(1), 33).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(kv.free_blocks(), 13);
+        assert_eq!(kv.free_seq(SeqId(1)), 3);
+        assert_eq!(kv.free_blocks(), 16);
+    }
+
+    #[test]
+    fn no_partial_allocation() {
+        let mut kv = KvCacheManager::new(4, 16);
+        assert!(kv.alloc_seq(SeqId(1), 100).is_none(), "needs 7 > 4 blocks");
+        assert_eq!(kv.free_blocks(), 4, "failed alloc must not leak");
+    }
+
+    #[test]
+    fn extend_grows_table() {
+        let mut kv = KvCacheManager::new(8, 16);
+        kv.alloc_seq(SeqId(1), 16).unwrap();
+        assert!(kv.extend_seq(SeqId(1), 16, 1)); // crosses into block 2
+        assert_eq!(kv.table(SeqId(1)).unwrap().len(), 2);
+        assert!(kv.extend_seq(SeqId(1), 17, 15)); // fills block 2, no new
+        assert_eq!(kv.table(SeqId(1)).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn fork_shares_blocks_with_refcounts() {
+        let mut kv = KvCacheManager::new(8, 16);
+        kv.alloc_seq(SeqId(1), 64).unwrap(); // 4 blocks
+        assert!(kv.fork_prefix(SeqId(1), SeqId(2), 2));
+        assert_eq!(kv.free_blocks(), 4, "fork must not allocate");
+        // Freeing the original keeps shared blocks alive.
+        assert_eq!(kv.free_seq(SeqId(1)), 2);
+        assert_eq!(kv.free_blocks(), 6);
+        assert_eq!(kv.free_seq(SeqId(2)), 2);
+        assert_eq!(kv.free_blocks(), 8);
+    }
+
+    #[test]
+    fn property_block_conservation() {
+        testkit::check("kv-conservation", |rng| {
+            let total = 64;
+            let mut kv = KvCacheManager::new(total, 16);
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..100 {
+                if live.is_empty() || rng.bool(0.55) {
+                    let id = SeqId(next);
+                    next += 1;
+                    let tokens = rng.range_u64(1, 300) as u32;
+                    if kv.alloc_seq(id, tokens).is_some() {
+                        live.push(id);
+                    }
+                } else if rng.bool(0.3) && !live.is_empty() {
+                    let from = *rng.choose(&live);
+                    let id = SeqId(next);
+                    next += 1;
+                    let nb = kv.table(from).map(|t| t.len()).unwrap_or(0) as u32;
+                    if nb > 0 && kv.fork_prefix(from, id, rng.range_u64(1, nb as u64 + 1) as u32) {
+                        live.push(id);
+                    }
+                } else {
+                    let i = rng.range_usize(0, live.len());
+                    let id = live.swap_remove(i);
+                    kv.free_seq(id);
+                }
+                assert!(kv.free_blocks() <= total);
+            }
+            for id in live {
+                kv.free_seq(id);
+            }
+            assert_eq!(kv.free_blocks(), total, "blocks leaked");
+        });
+    }
+}

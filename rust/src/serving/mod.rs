@@ -1,0 +1,19 @@
+//! vLLM-like serving layer: the host system whose transfer paths MMA
+//! accelerates. Provides paged KV caching with a host offload tier and
+//! prefix reuse (LMCache-style), a sleep/wake model registry (vLLM Sleep
+//! Mode Level 1), a continuous-batching prefill/decode scheduler, and a
+//! request router — everything §5.2's end-to-end experiments exercise.
+
+pub mod engine;
+pub mod kv_cache;
+pub mod model_registry;
+pub mod prefix_cache;
+pub mod router;
+pub mod scheduler;
+
+pub use engine::{Compute, RequestOutcome, ServingEngine};
+pub use kv_cache::{BlockId, KvCacheManager};
+pub use model_registry::{ModelRegistry, ModelState};
+pub use prefix_cache::{PrefixCache, Tier};
+pub use router::Router;
+pub use scheduler::{Request, RequestId, Scheduler};

@@ -1,0 +1,301 @@
+//! Prefix cache with a host offload tier (LMCache-style).
+//!
+//! Prefixes are indexed by a rolling content hash over token blocks. Hot
+//! prefixes live in GPU KV blocks; evicted ones move to pinned host memory
+//! and are *fetched back* on a hit — the H2D transfer that dominates TTFT
+//! in Fig 2 and that MMA accelerates in Fig 12.
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Where a cached prefix currently resides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Resident in GPU KV blocks (hit = zero-copy block sharing).
+    Gpu,
+    /// Offloaded to pinned host DRAM (hit = H2D fetch of the KV bytes).
+    Host,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    tokens: u32,
+    tier: Tier,
+    last_use: u64,
+}
+
+/// Content-addressed prefix store with two tiers and LRU demotion.
+#[derive(Debug)]
+pub struct PrefixCache {
+    block_tokens: u32,
+    gpu_capacity_tokens: u64,
+    host_capacity_tokens: u64,
+    gpu_used: u64,
+    host_used: u64,
+    entries: HashMap<u64, Entry>,
+    clock: u64,
+}
+
+/// Rolling hash of a token prefix (block-aligned chain hash, as LMCache
+/// keys chunks by content).
+pub fn prefix_hash(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV offset
+    for t in tokens {
+        h ^= *t as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl PrefixCache {
+    /// Capacities are in tokens (block-aligned internally).
+    pub fn new(block_tokens: u32, gpu_capacity_tokens: u64, host_capacity_tokens: u64) -> Self {
+        PrefixCache {
+            block_tokens,
+            gpu_capacity_tokens,
+            host_capacity_tokens,
+            gpu_used: 0,
+            host_used: 0,
+            entries: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Round tokens up to block granularity.
+    fn rounded(&self, tokens: u32) -> u64 {
+        (tokens as u64).div_ceil(self.block_tokens as u64) * self.block_tokens as u64
+    }
+
+    /// Insert (or refresh) a prefix of `tokens` under `key`, initially on
+    /// GPU. May demote LRU entries to host, and drop LRU host entries.
+    pub fn insert(&mut self, key: u64, tokens: u32) {
+        let now = self.tick();
+        let size = self.rounded(tokens);
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = now;
+            return;
+        }
+        // Make room on GPU.
+        while self.gpu_used + size > self.gpu_capacity_tokens {
+            if !self.demote_lru_gpu() {
+                break;
+            }
+        }
+        if self.gpu_used + size > self.gpu_capacity_tokens {
+            // Doesn't fit on GPU at all: insert directly into host tier.
+            self.host_insert(key, tokens, now);
+            return;
+        }
+        self.gpu_used += size;
+        self.entries.insert(
+            key,
+            Entry {
+                tokens,
+                tier: Tier::Gpu,
+                last_use: now,
+            },
+        );
+    }
+
+    fn host_insert(&mut self, key: u64, tokens: u32, now: u64) {
+        let size = self.rounded(tokens);
+        while self.host_used + size > self.host_capacity_tokens {
+            if !self.drop_lru_host() {
+                return; // larger than the whole tier: skip caching
+            }
+        }
+        self.host_used += size;
+        self.entries.insert(
+            key,
+            Entry {
+                tokens,
+                tier: Tier::Host,
+                last_use: now,
+            },
+        );
+    }
+
+    fn lru_in_tier(&self, tier: Tier) -> Option<u64> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.tier == tier)
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(k, _)| *k)
+    }
+
+    /// Demote the LRU GPU entry to host. Returns false if none.
+    fn demote_lru_gpu(&mut self) -> bool {
+        let Some(k) = self.lru_in_tier(Tier::Gpu) else {
+            return false;
+        };
+        let e = self.entries.remove(&k).unwrap();
+        let size = self.rounded(e.tokens);
+        self.gpu_used -= size;
+        self.host_insert(k, e.tokens, e.last_use);
+        true
+    }
+
+    fn drop_lru_host(&mut self) -> bool {
+        let Some(k) = self.lru_in_tier(Tier::Host) else {
+            return false;
+        };
+        let e = self.entries.remove(&k).unwrap();
+        self.host_used -= self.rounded(e.tokens);
+        true
+    }
+
+    /// Force-offload a specific prefix to host (explicit eviction path,
+    /// e.g. when the serving engine reclaims GPU KV blocks).
+    pub fn offload(&mut self, key: u64) -> bool {
+        match self.entries.get(&key) {
+            Some(e) if e.tier == Tier::Gpu => {
+                let e = self.entries.remove(&key).unwrap();
+                self.gpu_used -= self.rounded(e.tokens);
+                self.host_insert(key, e.tokens, e.last_use);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Look up a prefix. On a hit, refreshes LRU and (for host hits)
+    /// promotes it back to the GPU tier — the caller is responsible for
+    /// issuing the actual KV fetch transfer of `tokens` worth of KV bytes.
+    pub fn lookup(&mut self, key: u64) -> Option<(u32, Tier)> {
+        let now = self.tick();
+        let (tokens, tier) = {
+            let e = self.entries.get_mut(&key)?;
+            e.last_use = now;
+            (e.tokens, e.tier)
+        };
+        if tier == Tier::Host {
+            // Promote: host → GPU (caller performs the H2D fetch).
+            let size = self.rounded(tokens);
+            self.host_used -= size;
+            self.entries.remove(&key);
+            while self.gpu_used + size > self.gpu_capacity_tokens {
+                if !self.demote_lru_gpu() {
+                    break;
+                }
+            }
+            if self.gpu_used + size <= self.gpu_capacity_tokens {
+                self.gpu_used += size;
+                self.entries.insert(
+                    key,
+                    Entry {
+                        tokens,
+                        tier: Tier::Gpu,
+                        last_use: now,
+                    },
+                );
+            } else {
+                // Could not promote (GPU tier too small): stays on host.
+                self.host_used += size;
+                self.entries.insert(
+                    key,
+                    Entry {
+                        tokens,
+                        tier: Tier::Host,
+                        last_use: now,
+                    },
+                );
+            }
+        }
+        Some((tokens, tier))
+    }
+
+    /// Tokens resident per tier (GPU, host).
+    pub fn usage(&self) -> (u64, u64) {
+        (self.gpu_used, self.host_used)
+    }
+
+    /// Number of cached prefixes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fill with `n` synthetic prefixes of `tokens` each (workload setup).
+    pub fn populate(&mut self, rng: &mut Rng, n: usize, tokens: u32) -> Vec<u64> {
+        (0..n)
+            .map(|_| {
+                let key = rng.next_u64();
+                self.insert(key, tokens);
+                key
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_prefix_sensitive() {
+        let a = prefix_hash(&[1, 2, 3]);
+        let b = prefix_hash(&[1, 2, 4]);
+        let c = prefix_hash(&[1, 2, 3]);
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn insert_then_gpu_hit() {
+        let mut pc = PrefixCache::new(16, 1 << 20, 1 << 24);
+        pc.insert(42, 1000);
+        assert_eq!(pc.lookup(42), Some((1000, Tier::Gpu)));
+        assert_eq!(pc.lookup(43), None);
+    }
+
+    #[test]
+    fn gpu_pressure_demotes_to_host_and_hit_promotes() {
+        // GPU holds 2x1024 tokens; third insert demotes the LRU.
+        let mut pc = PrefixCache::new(16, 2048, 1 << 20);
+        pc.insert(1, 1024);
+        pc.insert(2, 1024);
+        pc.insert(3, 1024); // demotes key 1
+        assert_eq!(pc.lookup(1).unwrap().1, Tier::Host, "LRU went to host");
+        // That lookup promoted key 1 back to GPU (demoting key 2).
+        assert_eq!(pc.lookup(1).unwrap().1, Tier::Gpu);
+        assert_eq!(pc.lookup(2).unwrap().1, Tier::Host);
+    }
+
+    #[test]
+    fn host_tier_drops_lru_when_full() {
+        let mut pc = PrefixCache::new(16, 1024, 2048);
+        pc.insert(1, 1024);
+        pc.insert(2, 1024); // 1 → host
+        pc.insert(3, 1024); // 2 → host
+        pc.insert(4, 1024); // 3 → host, host full → drop LRU (1)
+        assert_eq!(pc.lookup(1), None, "oldest host entry dropped");
+        assert_eq!(pc.len(), 3);
+    }
+
+    #[test]
+    fn explicit_offload() {
+        let mut pc = PrefixCache::new(16, 1 << 20, 1 << 20);
+        pc.insert(7, 512);
+        assert!(pc.offload(7));
+        assert_eq!(pc.lookup(7).unwrap().1, Tier::Host);
+        assert!(!pc.offload(999));
+    }
+
+    #[test]
+    fn usage_accounting_block_aligned() {
+        let mut pc = PrefixCache::new(16, 1 << 20, 1 << 20);
+        pc.insert(1, 17); // rounds to 32
+        assert_eq!(pc.usage(), (32, 0));
+        pc.offload(1);
+        assert_eq!(pc.usage(), (0, 32));
+    }
+}

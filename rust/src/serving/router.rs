@@ -1,0 +1,141 @@
+//! Request router / frontend: maps incoming requests to model instances,
+//! waking sleeping models on demand (the vLLM-router-style control plane
+//! whose switch latency Fig 13 measures).
+
+use super::model_registry::{ModelRegistry, ModelState, PhaseResult};
+use crate::mma::SimWorld;
+use crate::sim::Time;
+
+/// Routing policy across replicas of the same model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Rotate across ready instances.
+    RoundRobin,
+    /// Pick the instance with the fewest in-flight requests.
+    LeastLoaded,
+}
+
+/// Router over the instances of a [`ModelRegistry`].
+pub struct Router {
+    policy: Policy,
+    inflight: Vec<u32>,
+    rr_next: usize,
+    /// Wake latency paid per on-demand wake, recorded for reporting.
+    pub wake_events: Vec<(usize, PhaseResult)>,
+}
+
+impl Router {
+    /// Router for `instances` model slots.
+    pub fn new(policy: Policy, instances: usize) -> Router {
+        Router {
+            policy,
+            inflight: vec![0; instances],
+            rr_next: 0,
+            wake_events: Vec::new(),
+        }
+    }
+
+    /// Route a request for model instance-set `candidates` (replica ids).
+    /// If every candidate is asleep, the first is woken on demand (cost
+    /// recorded and returned). Returns `(instance, wake_cost)`.
+    pub fn route(
+        &mut self,
+        world: &mut SimWorld,
+        registry: &mut ModelRegistry,
+        candidates: &[usize],
+    ) -> (usize, Option<Time>) {
+        assert!(!candidates.is_empty());
+        let ready: Vec<usize> = candidates
+            .iter()
+            .copied()
+            .filter(|&i| registry.instance(i).state == ModelState::Active)
+            .collect();
+        let (chosen, wake) = if ready.is_empty() {
+            // Cold hit: wake on demand.
+            let target = candidates[0];
+            let phase = registry.wake(world, target);
+            self.wake_events.push((target, phase));
+            (target, Some(phase.total()))
+        } else {
+            let pick = match self.policy {
+                Policy::RoundRobin => {
+                    let i = ready[self.rr_next % ready.len()];
+                    self.rr_next += 1;
+                    i
+                }
+                Policy::LeastLoaded => *ready
+                    .iter()
+                    .min_by_key(|&&i| self.inflight[i])
+                    .unwrap(),
+            };
+            (pick, None)
+        };
+        self.inflight[chosen] += 1;
+        (chosen, wake)
+    }
+
+    /// A request finished on `instance`.
+    pub fn done(&mut self, instance: usize) {
+        debug_assert!(self.inflight[instance] > 0);
+        self.inflight[instance] -= 1;
+    }
+
+    /// Current load of an instance.
+    pub fn load(&self, instance: usize) -> u32 {
+        self.inflight[instance]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mma::MmaConfig;
+    use crate::models::qwen3_0_6b;
+    use crate::topology::{h20x8, GpuId, NumaId};
+
+    fn setup() -> (SimWorld, ModelRegistry) {
+        let world = SimWorld::new(h20x8(), MmaConfig::default());
+        let mut reg = ModelRegistry::new(NumaId(0));
+        reg.register(qwen3_0_6b(), vec![GpuId(0)]);
+        reg.register(qwen3_0_6b(), vec![GpuId(1)]);
+        (world, reg)
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let (mut w, mut reg) = setup();
+        let mut r = Router::new(Policy::RoundRobin, 2);
+        let (a, _) = r.route(&mut w, &mut reg, &[0, 1]);
+        let (b, _) = r.route(&mut w, &mut reg, &[0, 1]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let (mut w, mut reg) = setup();
+        let mut r = Router::new(Policy::LeastLoaded, 2);
+        let (a, _) = r.route(&mut w, &mut reg, &[0, 1]);
+        let (b, _) = r.route(&mut w, &mut reg, &[0, 1]);
+        assert_ne!(a, b, "second request must go to the idle replica");
+        r.done(a);
+        let (c, _) = r.route(&mut w, &mut reg, &[0, 1]);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn wake_on_demand_pays_switch_latency() {
+        let (mut w, mut reg) = setup();
+        reg.sleep(&mut w, 0);
+        reg.sleep(&mut w, 1);
+        let mut r = Router::new(Policy::RoundRobin, 2);
+        let (i, wake) = r.route(&mut w, &mut reg, &[0, 1]);
+        assert_eq!(i, 0);
+        let wake = wake.expect("must report wake cost");
+        assert!(wake > Time::ZERO);
+        assert_eq!(reg.instance(0).state, ModelState::Active);
+        assert_eq!(r.wake_events.len(), 1);
+        // Next request routes without waking.
+        let (_, wake2) = r.route(&mut w, &mut reg, &[0, 1]);
+        assert!(wake2.is_none());
+    }
+}

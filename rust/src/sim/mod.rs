@@ -1,0 +1,19 @@
+//! Discrete-event simulation core.
+//!
+//! Everything hardware-gated in the paper (PCIe/NVLink DMA, CUDA streams,
+//! spin kernels) is reproduced against a virtual nanosecond clock. The core
+//! is a deterministic event queue generic over the world's event type; the
+//! composition of fabric + gpusim + MMA engine lives in [`crate::mma::driver`].
+
+mod queue;
+mod time;
+
+pub use queue::EventQueue;
+pub use time::Time;
+
+/// Nanoseconds per microsecond.
+pub const NS_PER_US: u64 = 1_000;
+/// Nanoseconds per millisecond.
+pub const NS_PER_MS: u64 = 1_000_000;
+/// Nanoseconds per second.
+pub const NS_PER_SEC: u64 = 1_000_000_000;

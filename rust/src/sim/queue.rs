@@ -1,0 +1,158 @@
+//! Deterministic event queue.
+//!
+//! Events at equal timestamps pop in insertion order (FIFO tie-break via a
+//! monotone sequence number), which keeps every simulation run bit-exact —
+//! a property the calibration tests and the figure harnesses rely on.
+
+use super::Time;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    at: Time,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    // BinaryHeap is a max-heap; invert so earliest (then lowest seq) pops first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of timestamped events with FIFO tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: Time,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// Empty queue at time zero.
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: Time::ZERO,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at`. Scheduling in the past is
+    /// clamped to `now` (the event fires "immediately", after already-queued
+    /// events at `now`).
+    pub fn schedule_at(&mut self, at: Time, ev: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, ev });
+    }
+
+    /// Schedule `ev` after a delay relative to `now`.
+    pub fn schedule_in(&mut self, delay: Time, ev: E) {
+        self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Pop the earliest event, advancing `now` to its timestamp.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let entry = self.heap.pop()?;
+        debug_assert!(entry.at >= self.now, "time went backwards");
+        self.now = entry.at;
+        Some((entry.at, entry.ev))
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(Time(30), "c");
+        q.schedule_at(Time(10), "a");
+        q.schedule_at(Time(20), "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_tie_break_at_equal_times() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule_at(Time(5), i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn now_advances_and_past_scheduling_clamps() {
+        let mut q = EventQueue::new();
+        q.schedule_at(Time(100), 1);
+        assert_eq!(q.pop(), Some((Time(100), 1)));
+        assert_eq!(q.now(), Time(100));
+        // Scheduling "in the past" fires at now, not before.
+        q.schedule_at(Time(50), 2);
+        assert_eq!(q.pop(), Some((Time(100), 2)));
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(Time(10), 1);
+        q.pop();
+        q.schedule_in(Time(5), 2);
+        assert_eq!(q.pop(), Some((Time(15), 2)));
+    }
+
+    #[test]
+    fn len_and_peek() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.schedule_at(Time(7), 0);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek_time(), Some(Time(7)));
+    }
+}

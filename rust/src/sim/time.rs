@@ -1,0 +1,116 @@
+//! Virtual time: a monotone nanosecond counter.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time, in nanoseconds since simulation start.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+impl Time {
+    /// Simulation epoch.
+    pub const ZERO: Time = Time(0);
+    /// Sentinel for "never" (events that must sort after everything real).
+    pub const NEVER: Time = Time(u64::MAX);
+
+    /// Construct from nanoseconds.
+    pub fn from_ns(ns: u64) -> Time {
+        Time(ns)
+    }
+    /// Construct from microseconds.
+    pub fn from_us(us: u64) -> Time {
+        Time(us * 1_000)
+    }
+    /// Construct from milliseconds.
+    pub fn from_ms(ms: u64) -> Time {
+        Time(ms * 1_000_000)
+    }
+    /// Construct from (possibly fractional) seconds.
+    pub fn from_secs_f64(s: f64) -> Time {
+        Time((s * 1e9).round().max(0.0) as u64)
+    }
+
+    /// Raw nanoseconds.
+    pub fn ns(self) -> u64 {
+        self.0
+    }
+    /// As fractional microseconds.
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    /// As fractional milliseconds.
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    /// As fractional seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Saturating difference (self - earlier).
+    pub fn since(self, earlier: Time) -> Time {
+        Time(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Add for Time {
+    type Output = Time;
+    fn add(self, rhs: Time) -> Time {
+        Time(self.0.saturating_add(rhs.0))
+    }
+}
+
+impl AddAssign for Time {
+    fn add_assign(&mut self, rhs: Time) {
+        self.0 = self.0.saturating_add(rhs.0);
+    }
+}
+
+impl Sub for Time {
+    type Output = Time;
+    fn sub(self, rhs: Time) -> Time {
+        Time(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl fmt::Debug for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 == u64::MAX {
+            write!(f, "t=never")
+        } else {
+            write!(f, "t={:.3}us", self.as_us_f64())
+        }
+    }
+}
+
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_round_trip() {
+        assert_eq!(Time::from_us(3).ns(), 3_000);
+        assert_eq!(Time::from_ms(2).ns(), 2_000_000);
+        assert_eq!(Time::from_secs_f64(1.5).ns(), 1_500_000_000);
+        assert!((Time::from_ns(2_500).as_us_f64() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic_saturates() {
+        assert_eq!(Time(5) - Time(9), Time::ZERO);
+        assert_eq!(Time::NEVER + Time(1), Time::NEVER);
+        assert_eq!(Time(7).since(Time(3)), Time(4));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Time::ZERO < Time(1));
+        assert!(Time(1) < Time::NEVER);
+    }
+}

@@ -1,0 +1,82 @@
+//! Lightweight property-based testing (proptest is unavailable offline).
+//!
+//! [`check`] runs a property against many deterministic RNG seeds and, on
+//! failure, re-raises with the failing seed so the case can be replayed with
+//! `MMA_PT_SEED=<seed>`. Generators are free functions over [`Rng`].
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `MMA_PT_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("MMA_PT_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` against `cases` seeds. `prop` should panic (e.g. via assert!)
+/// on violation. If `MMA_PT_SEED` is set, only that seed runs.
+pub fn check_named(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    if let Ok(seed) = std::env::var("MMA_PT_SEED") {
+        let seed: u64 = seed.parse().expect("MMA_PT_SEED must be u64");
+        let mut rng = Rng::seed_from_u64(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        // Derive a well-mixed per-case seed.
+        let seed = case
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(0xD1B5_4A32_D192_ED03);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed on case {case} (replay with MMA_PT_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// [`check_named`] with the default case count.
+pub fn check(name: &str, prop: impl FnMut(&mut Rng)) {
+    check_named(name, default_cases(), prop);
+}
+
+/// Generate a vector with length in `[0, max_len)` from `gen`.
+pub fn vec_of<T>(rng: &mut Rng, max_len: usize, mut gen: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let n = rng.range_usize(0, max_len);
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("u64-range", |rng| {
+            let x = rng.range_u64(5, 10);
+            assert!((5..10).contains(&x));
+        });
+    }
+
+    #[test]
+    fn check_reports_failure() {
+        let r = std::panic::catch_unwind(|| {
+            check_named("always-fails", 4, |_rng| panic!("boom"));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn vec_of_respects_max() {
+        check("vec-len", |rng| {
+            let v = vec_of(rng, 17, |r| r.next_u64());
+            assert!(v.len() < 17);
+        });
+    }
+}

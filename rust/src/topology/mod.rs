@@ -1,0 +1,472 @@
+//! Intra-server interconnect topology.
+//!
+//! Models the paper's testbed class (Figure 1): a dual-socket host where
+//! each NUMA node carries PCIe switches with GPUs behind them, GPUs are
+//! fully connected through an NVSwitch fabric, and the two sockets are
+//! joined by xGMI links. Every physical resource that can become a
+//! bottleneck is a *directional link* with an effective capacity; the
+//! [`crate::fabric`] simulator shares each link max-min fairly among the
+//! flows crossing it.
+//!
+//! Capacities are *effective* (measured-equivalent) values, not theoretical
+//! peaks — see `presets::h20x8` for the calibration against Table 1 and
+//! §5.1 of the paper.
+
+mod presets;
+
+pub use presets::{a100x8, h20x8, single_numa_4gpu, Preset};
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// GPU index within the server.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId(pub u8);
+
+/// NUMA node (socket) index.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NumaId(pub u8);
+
+/// Index of a directional link in [`Topology::links`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub u16);
+
+impl fmt::Debug for GpuId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "gpu{}", self.0)
+    }
+}
+impl fmt::Debug for NumaId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "numa{}", self.0)
+    }
+}
+impl fmt::Debug for LinkId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "link{}", self.0)
+    }
+}
+
+/// Transfer direction of a host↔GPU copy.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Direction {
+    /// Host to device.
+    H2D,
+    /// Device to host.
+    D2H,
+}
+
+impl Direction {
+    /// The opposite direction.
+    pub fn flip(self) -> Direction {
+        match self {
+            Direction::H2D => Direction::D2H,
+            Direction::D2H => Direction::H2D,
+        }
+    }
+    /// Short label ("H2D"/"D2H").
+    pub fn label(self) -> &'static str {
+        match self {
+            Direction::H2D => "H2D",
+            Direction::D2H => "D2H",
+        }
+    }
+}
+
+/// Kind of directional link resource.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum LinkKind {
+    /// GPU's PCIe lane, host→device direction.
+    PcieH2D(GpuId),
+    /// GPU's PCIe lane, device→host direction.
+    PcieD2H(GpuId),
+    /// PCIe switch uplink toward the root complex, host→device direction.
+    SwitchH2D(u8),
+    /// PCIe switch uplink, device→host direction.
+    SwitchD2H(u8),
+    /// Per-GPU NVLink egress into the NVSwitch fabric.
+    NvOut(GpuId),
+    /// Per-GPU NVLink ingress from the NVSwitch fabric.
+    NvIn(GpuId),
+    /// Host DRAM read bandwidth of a NUMA node.
+    DramRd(NumaId),
+    /// Host DRAM write bandwidth of a NUMA node.
+    DramWr(NumaId),
+    /// Inter-socket link, directional (from → to).
+    Xgmi(NumaId, NumaId),
+    /// Per-GPU cross-socket DMA limit: a single IO agent cannot fill the
+    /// xGMI fabric (latency × outstanding-request limits), so each GPU's
+    /// remote-socket traffic is individually capped well below the shared
+    /// xGMI capacity. This is what makes aggregate bandwidth saturate at
+    /// ~6 relays (Fig 8) instead of immediately at the first remote relay.
+    XgmiLane(GpuId),
+    /// Aggregate DMA copy-engine bandwidth into a GPU's HBM.
+    HbmIn(GpuId),
+    /// Aggregate DMA copy-engine bandwidth out of a GPU's HBM.
+    HbmOut(GpuId),
+    /// Relay D2H serialization bottleneck: a relay GPU must interleave
+    /// NVLink ingress and PCIe egress on its internal copy engine (§5.1.1),
+    /// so its effective D2H forwarding rate sits below the raw PCIe lane.
+    RelayD2HCap(GpuId),
+}
+
+/// One GPU's placement in the host topology.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    /// NUMA node whose root complex this GPU hangs off.
+    pub numa: NumaId,
+    /// PCIe switch index (global) the GPU sits behind.
+    pub pcie_switch: u8,
+}
+
+/// A directional link with an effective capacity in bytes/second.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// What resource this is.
+    pub kind: LinkKind,
+    /// Effective capacity, bytes/second.
+    pub capacity_bps: f64,
+}
+
+/// Latency constants of the host platform (per-operation overheads).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySpec {
+    /// CPU-side launch + DMA engine setup for one `cudaMemcpyAsync`, ns.
+    pub dma_setup_ns: u64,
+    /// Same for a GPU-to-GPU P2P copy, ns.
+    pub p2p_setup_ns: u64,
+    /// One PCIe round trip (mapped-flag store→GPU observe), ns.
+    pub pcie_rtt_ns: u64,
+    /// DMA engine turnaround between back-to-back queued copies on the
+    /// same lane (descriptor already programmed), ns.
+    pub dma_turnaround_ns: u64,
+    /// `cudaEventSynchronize` wake-up latency after completion, ns.
+    pub event_sync_ns: u64,
+    /// MMA CPU dispatch cost per micro-task (path selection + queue ops), ns.
+    pub dispatch_cpu_ns: u64,
+}
+
+/// Full server topology: GPUs, switches, NUMA nodes, and directional links.
+pub struct Topology {
+    /// Human-readable preset name.
+    pub name: String,
+    /// Number of NUMA nodes.
+    pub numa_count: u8,
+    /// Number of PCIe switches (global indices).
+    pub switch_count: u8,
+    /// Per-GPU placement.
+    pub gpus: Vec<GpuSpec>,
+    /// All directional links.
+    pub links: Vec<LinkSpec>,
+    /// Platform latency constants.
+    pub lat: LatencySpec,
+    index: HashMap<LinkKind, LinkId>,
+}
+
+impl Topology {
+    /// Build from parts, creating the link index.
+    pub fn new(
+        name: &str,
+        numa_count: u8,
+        switch_count: u8,
+        gpus: Vec<GpuSpec>,
+        links: Vec<LinkSpec>,
+        lat: LatencySpec,
+    ) -> Topology {
+        let mut index = HashMap::new();
+        for (i, l) in links.iter().enumerate() {
+            let prev = index.insert(l.kind, LinkId(i as u16));
+            assert!(prev.is_none(), "duplicate link kind {:?}", l.kind);
+        }
+        Topology {
+            name: name.to_string(),
+            numa_count,
+            switch_count,
+            gpus,
+            links,
+            lat,
+            index,
+        }
+    }
+
+    /// Number of GPUs.
+    pub fn gpu_count(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// All GPU ids.
+    pub fn gpu_ids(&self) -> impl Iterator<Item = GpuId> + '_ {
+        (0..self.gpus.len() as u8).map(GpuId)
+    }
+
+    /// NUMA node of a GPU.
+    pub fn numa_of(&self, g: GpuId) -> NumaId {
+        self.gpus[g.0 as usize].numa
+    }
+
+    /// Look up a link id; panics if the preset lacks it.
+    pub fn link(&self, kind: LinkKind) -> LinkId {
+        *self
+            .index
+            .get(&kind)
+            .unwrap_or_else(|| panic!("topology {:?} has no link {kind:?}", self.name))
+    }
+
+    /// Capacity of a link (bytes/sec).
+    pub fn capacity(&self, id: LinkId) -> f64 {
+        self.links[id.0 as usize].capacity_bps
+    }
+
+    /// Effective single-PCIe-lane capacity for a GPU/direction — the native
+    /// baseline's asymptotic bandwidth.
+    pub fn pcie_capacity(&self, g: GpuId, dir: Direction) -> f64 {
+        let kind = match dir {
+            Direction::H2D => LinkKind::PcieH2D(g),
+            Direction::D2H => LinkKind::PcieD2H(g),
+        };
+        self.capacity(self.link(kind))
+    }
+
+    fn xgmi_hop(&self, from: NumaId, to: NumaId, gpu: GpuId, path: &mut Vec<LinkId>) {
+        if from != to {
+            path.push(self.link(LinkKind::Xgmi(from, to)));
+            path.push(self.link(LinkKind::XgmiLane(gpu)));
+        }
+    }
+
+    /// Direct H2D path: host buffer on `buf_numa` → GPU `dst`.
+    ///
+    /// DRAM read → (xGMI if crossing sockets) → PCIe switch uplink →
+    /// GPU PCIe lane → HBM ingest.
+    pub fn h2d_direct(&self, buf_numa: NumaId, dst: GpuId) -> Vec<LinkId> {
+        let spec = self.gpus[dst.0 as usize];
+        let mut p = vec![self.link(LinkKind::DramRd(buf_numa))];
+        self.xgmi_hop(buf_numa, spec.numa, dst, &mut p);
+        p.push(self.link(LinkKind::SwitchH2D(spec.pcie_switch)));
+        p.push(self.link(LinkKind::PcieH2D(dst)));
+        p.push(self.link(LinkKind::HbmIn(dst)));
+        p
+    }
+
+    /// H2D relay stage 1: host buffer → relay GPU's HBM (its own PCIe lane).
+    pub fn h2d_relay_stage1(&self, buf_numa: NumaId, relay: GpuId) -> Vec<LinkId> {
+        self.h2d_direct(buf_numa, relay)
+    }
+
+    /// H2D relay stage 2: relay GPU → target GPU over NVLink.
+    pub fn h2d_relay_stage2(&self, relay: GpuId, dst: GpuId) -> Vec<LinkId> {
+        vec![
+            self.link(LinkKind::HbmOut(relay)),
+            self.link(LinkKind::NvOut(relay)),
+            self.link(LinkKind::NvIn(dst)),
+            self.link(LinkKind::HbmIn(dst)),
+        ]
+    }
+
+    /// Direct D2H path: GPU `src` → host buffer on `buf_numa`.
+    pub fn d2h_direct(&self, src: GpuId, buf_numa: NumaId) -> Vec<LinkId> {
+        let spec = self.gpus[src.0 as usize];
+        let mut p = vec![
+            self.link(LinkKind::HbmOut(src)),
+            self.link(LinkKind::PcieD2H(src)),
+            self.link(LinkKind::SwitchD2H(spec.pcie_switch)),
+        ];
+        self.xgmi_hop(spec.numa, buf_numa, src, &mut p);
+        p.push(self.link(LinkKind::DramWr(buf_numa)));
+        p
+    }
+
+    /// D2H relay stage 1: target GPU → relay GPU over NVLink.
+    pub fn d2h_relay_stage1(&self, src: GpuId, relay: GpuId) -> Vec<LinkId> {
+        vec![
+            self.link(LinkKind::HbmOut(src)),
+            self.link(LinkKind::NvOut(src)),
+            self.link(LinkKind::NvIn(relay)),
+            self.link(LinkKind::HbmIn(relay)),
+        ]
+    }
+
+    /// D2H relay stage 2: relay GPU → host buffer over its own PCIe lane.
+    /// Includes the relay-serialization cap (§5.1.1: the relay must
+    /// interleave NVLink ingress and PCIe egress on its copy engine).
+    pub fn d2h_relay_stage2(&self, relay: GpuId, buf_numa: NumaId) -> Vec<LinkId> {
+        let spec = self.gpus[relay.0 as usize];
+        let mut p = vec![
+            self.link(LinkKind::HbmOut(relay)),
+            self.link(LinkKind::RelayD2HCap(relay)),
+            self.link(LinkKind::PcieD2H(relay)),
+            self.link(LinkKind::SwitchD2H(spec.pcie_switch)),
+        ];
+        self.xgmi_hop(spec.numa, buf_numa, relay, &mut p);
+        p.push(self.link(LinkKind::DramWr(buf_numa)));
+        p
+    }
+
+    /// GPU↔GPU P2P path over the NVSwitch fabric (used by the Table 2
+    /// probe and by NCCL-style background traffic).
+    pub fn p2p(&self, src: GpuId, dst: GpuId) -> Vec<LinkId> {
+        vec![
+            self.link(LinkKind::HbmOut(src)),
+            self.link(LinkKind::NvOut(src)),
+            self.link(LinkKind::NvIn(dst)),
+            self.link(LinkKind::HbmIn(dst)),
+        ]
+    }
+
+    /// Relay candidates for a target GPU, NUMA-local peers first (the
+    /// paper's NVML-driven topology discovery orders by NUMA affinity).
+    /// `exclude` removes GPUs busy with their own serving group.
+    pub fn relay_order(&self, target: GpuId, exclude: &[GpuId]) -> Vec<GpuId> {
+        let tn = self.numa_of(target);
+        let mut local: Vec<GpuId> = Vec::new();
+        let mut remote: Vec<GpuId> = Vec::new();
+        for g in self.gpu_ids() {
+            if g == target || exclude.contains(&g) {
+                continue;
+            }
+            if self.numa_of(g) == tn {
+                local.push(g);
+            } else {
+                remote.push(g);
+            }
+        }
+        local.extend(remote);
+        local
+    }
+
+    /// Render the topology as an indented summary (the `mma topo` command).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "{}: {} GPUs, {} NUMA nodes, {} PCIe switches\n",
+            self.name,
+            self.gpu_count(),
+            self.numa_count,
+            self.switch_count
+        );
+        for n in 0..self.numa_count {
+            s.push_str(&format!("  numa{n}:\n"));
+            for sw in 0..self.switch_count {
+                let gpus: Vec<String> = self
+                    .gpus
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, g)| g.numa == NumaId(n) && g.pcie_switch == sw)
+                    .map(|(i, _)| format!("gpu{i}"))
+                    .collect();
+                if !gpus.is_empty() {
+                    s.push_str(&format!("    switch{sw}: {}\n", gpus.join(", ")));
+                }
+            }
+        }
+        s.push_str("  links (effective):\n");
+        for l in &self.links {
+            s.push_str(&format!(
+                "    {:<22} {:>8.1} GB/s\n",
+                format!("{:?}", l.kind),
+                l.capacity_bps / 1e9
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h20_preset_shape() {
+        let t = h20x8();
+        assert_eq!(t.gpu_count(), 8);
+        assert_eq!(t.numa_count, 2);
+        assert_eq!(t.switch_count, 4);
+        // 4 GPUs per socket, 2 per switch.
+        for n in 0..2u8 {
+            let count = t.gpus.iter().filter(|g| g.numa == NumaId(n)).count();
+            assert_eq!(count, 4);
+        }
+        for sw in 0..4u8 {
+            let count = t.gpus.iter().filter(|g| g.pcie_switch == sw).count();
+            assert_eq!(count, 2);
+        }
+    }
+
+    #[test]
+    fn direct_path_local_has_no_xgmi() {
+        let t = h20x8();
+        let p = t.h2d_direct(NumaId(0), GpuId(0));
+        let kinds: Vec<LinkKind> = p.iter().map(|l| t.links[l.0 as usize].kind).collect();
+        assert!(kinds.contains(&LinkKind::DramRd(NumaId(0))));
+        assert!(kinds.contains(&LinkKind::PcieH2D(GpuId(0))));
+        assert!(!kinds.iter().any(|k| matches!(k, LinkKind::Xgmi(..))));
+    }
+
+    #[test]
+    fn direct_path_cross_socket_includes_xgmi() {
+        let t = h20x8();
+        // GPU 4 lives on numa1; buffer on numa0.
+        assert_eq!(t.numa_of(GpuId(4)), NumaId(1));
+        let p = t.h2d_direct(NumaId(0), GpuId(4));
+        let kinds: Vec<LinkKind> = p.iter().map(|l| t.links[l.0 as usize].kind).collect();
+        assert!(kinds.contains(&LinkKind::Xgmi(NumaId(0), NumaId(1))));
+    }
+
+    #[test]
+    fn d2h_relay_stage2_has_serialization_cap() {
+        let t = h20x8();
+        let p = t.d2h_relay_stage2(GpuId(1), NumaId(0));
+        let kinds: Vec<LinkKind> = p.iter().map(|l| t.links[l.0 as usize].kind).collect();
+        assert!(kinds.contains(&LinkKind::RelayD2HCap(GpuId(1))));
+        // And the cap is strictly below the raw PCIe lane.
+        let cap = t.capacity(t.link(LinkKind::RelayD2HCap(GpuId(1))));
+        let pcie = t.capacity(t.link(LinkKind::PcieD2H(GpuId(1))));
+        assert!(cap < pcie);
+    }
+
+    #[test]
+    fn relay_order_prefers_numa_local() {
+        let t = h20x8();
+        let order = t.relay_order(GpuId(0), &[]);
+        assert_eq!(order.len(), 7);
+        // First three are the other numa0 GPUs.
+        for g in &order[..3] {
+            assert_eq!(t.numa_of(*g), NumaId(0));
+        }
+        for g in &order[3..] {
+            assert_eq!(t.numa_of(*g), NumaId(1));
+        }
+        // Excludes work.
+        let order2 = t.relay_order(GpuId(0), &[GpuId(1), GpuId(5)]);
+        assert_eq!(order2.len(), 5);
+        assert!(!order2.contains(&GpuId(1)));
+        assert!(!order2.contains(&GpuId(5)));
+    }
+
+    #[test]
+    fn pcie_effective_capacity_near_paper_baseline() {
+        let t = h20x8();
+        let bw = t.pcie_capacity(GpuId(0), Direction::H2D);
+        // Paper: native saturates ~53 GB/s on PCIe 5.0 x16.
+        assert!((52e9..56e9).contains(&bw), "pcie eff {bw}");
+    }
+
+    #[test]
+    fn describe_mentions_every_gpu() {
+        let t = h20x8();
+        let d = t.describe();
+        for i in 0..8 {
+            assert!(d.contains(&format!("gpu{i}")), "missing gpu{i} in\n{d}");
+        }
+    }
+
+    #[test]
+    fn small_presets_build() {
+        let t = single_numa_4gpu();
+        assert_eq!(t.gpu_count(), 4);
+        assert_eq!(t.numa_count, 1);
+        let a = a100x8();
+        assert_eq!(a.gpu_count(), 8);
+        // A100 is PCIe 4.0: lane capacity well below H20's Gen5.
+        assert!(a.pcie_capacity(GpuId(0), Direction::H2D) < 30e9);
+    }
+}

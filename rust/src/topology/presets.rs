@@ -1,0 +1,212 @@
+//! Topology presets with effective capacities calibrated against the
+//! paper's Table 1 and §5.1 measurements.
+
+use super::*;
+
+/// Named preset selector (config/CLI surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// The paper's testbed: 8×H20, PCIe 5.0, NVLink4 + NVSwitch, dual EPYC.
+    H20x8,
+    /// An A100-class box: PCIe 4.0 lanes, NVLink3-like fabric.
+    A100x8,
+    /// A small single-socket 4-GPU box (latency-predictable mode, §6).
+    SingleNuma4,
+}
+
+impl Preset {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<Preset> {
+        match s.to_ascii_lowercase().as_str() {
+            "h20x8" | "h20" => Some(Preset::H20x8),
+            "a100x8" | "a100" => Some(Preset::A100x8),
+            "single_numa_4gpu" | "4gpu" => Some(Preset::SingleNuma4),
+            _ => None,
+        }
+    }
+    /// Build the topology.
+    pub fn build(self) -> Topology {
+        match self {
+            Preset::H20x8 => h20x8(),
+            Preset::A100x8 => a100x8(),
+            Preset::SingleNuma4 => single_numa_4gpu(),
+        }
+    }
+}
+
+fn gb(x: f64) -> f64 {
+    x * 1e9
+}
+
+struct Caps {
+    pcie: f64,
+    switch_uplink: f64,
+    nv: f64,
+    dram_rd: f64,
+    dram_wr: f64,
+    xgmi: f64,
+    xgmi_lane: f64,
+    hbm: f64,
+    relay_d2h: f64,
+}
+
+fn build(
+    name: &str,
+    numa_count: u8,
+    switches_per_numa: u8,
+    gpus_per_switch: u8,
+    caps: Caps,
+    lat: LatencySpec,
+) -> Topology {
+    let switch_count = numa_count * switches_per_numa;
+    let mut gpus = Vec::new();
+    for n in 0..numa_count {
+        for s in 0..switches_per_numa {
+            for _ in 0..gpus_per_switch {
+                gpus.push(GpuSpec {
+                    numa: NumaId(n),
+                    pcie_switch: n * switches_per_numa + s,
+                });
+            }
+        }
+    }
+    let mut links = Vec::new();
+    for (i, _) in gpus.iter().enumerate() {
+        let g = GpuId(i as u8);
+        links.push(LinkSpec { kind: LinkKind::PcieH2D(g), capacity_bps: caps.pcie });
+        links.push(LinkSpec { kind: LinkKind::PcieD2H(g), capacity_bps: caps.pcie });
+        links.push(LinkSpec { kind: LinkKind::NvOut(g), capacity_bps: caps.nv });
+        links.push(LinkSpec { kind: LinkKind::NvIn(g), capacity_bps: caps.nv });
+        links.push(LinkSpec { kind: LinkKind::HbmIn(g), capacity_bps: caps.hbm });
+        links.push(LinkSpec { kind: LinkKind::HbmOut(g), capacity_bps: caps.hbm });
+        links.push(LinkSpec {
+            kind: LinkKind::RelayD2HCap(g),
+            capacity_bps: caps.relay_d2h,
+        });
+        links.push(LinkSpec {
+            kind: LinkKind::XgmiLane(g),
+            capacity_bps: caps.xgmi_lane,
+        });
+    }
+    for sw in 0..switch_count {
+        links.push(LinkSpec {
+            kind: LinkKind::SwitchH2D(sw),
+            capacity_bps: caps.switch_uplink,
+        });
+        links.push(LinkSpec {
+            kind: LinkKind::SwitchD2H(sw),
+            capacity_bps: caps.switch_uplink,
+        });
+    }
+    for n in 0..numa_count {
+        links.push(LinkSpec {
+            kind: LinkKind::DramRd(NumaId(n)),
+            capacity_bps: caps.dram_rd,
+        });
+        links.push(LinkSpec {
+            kind: LinkKind::DramWr(NumaId(n)),
+            capacity_bps: caps.dram_wr,
+        });
+        for m in 0..numa_count {
+            if n != m {
+                links.push(LinkSpec {
+                    kind: LinkKind::Xgmi(NumaId(n), NumaId(m)),
+                    capacity_bps: caps.xgmi,
+                });
+            }
+        }
+    }
+    Topology::new(name, numa_count, switch_count, gpus, links, lat)
+}
+
+fn default_lat() -> LatencySpec {
+    LatencySpec {
+        dma_setup_ns: 9_000,     // cudaMemcpyAsync launch + DMA program
+        p2p_setup_ns: 6_000,     // P2P copy launch
+        pcie_rtt_ns: 1_500,      // mapped-flag store → __ldcg observe (§4)
+        dma_turnaround_ns: 1_200, // queued-descriptor handoff on a lane
+        event_sync_ns: 5_000,    // cudaEventSynchronize wake-up
+        dispatch_cpu_ns: 3_000,  // MMA micro-task dispatch CPU cost
+    }
+}
+
+/// The paper's testbed: dual EPYC 9654, 8×H20, PCIe 5.0 ×16, NVLink 4.0
+/// through NVSwitch, 4×xGMI3 between sockets, 24-channel DDR5-4800/socket.
+///
+/// Effective capacities (calibration, see DESIGN.md §6):
+/// * PCIe lane 53.6 GB/s — the paper's measured native baseline.
+/// * Switch uplink 100 GB/s — two GPUs per switch contend mildly.
+/// * NVLink 368 GB/s per GPU — matches Table 2's `P2P_alone` 367.6 GB/s.
+/// * DRAM 380 GB/s per direction per socket (~700 aggregate, Table 1).
+/// * xGMI 62 GB/s effective per direction for IO-agent DMA traffic — raw
+///   4×xGMI3 is ~256 GB/s but remote-socket DMA reads achieve a small
+///   fraction; calibrated so aggregate H2D saturates ≈245 GB/s at six
+///   relays (Fig 8).
+/// * Relay D2H forwarding cap 38 GB/s — NVLink-ingress/PCIe-egress
+///   serialization on the relay's copy engine (§5.1.1).
+pub fn h20x8() -> Topology {
+    build(
+        "h20x8",
+        2,
+        2,
+        2,
+        Caps {
+            pcie: gb(53.6),
+            switch_uplink: gb(100.0),
+            nv: gb(368.0),
+            dram_rd: gb(380.0),
+            dram_wr: gb(380.0),
+            xgmi: gb(62.0),
+            xgmi_lane: gb(28.0),
+            hbm: gb(400.0),
+            relay_d2h: gb(38.0),
+        },
+        default_lat(),
+    )
+}
+
+/// An A100-class server: PCIe 4.0 ×16 (~25 GB/s effective), NVLink3
+/// (~280 GB/s effective per GPU), same dual-socket layout.
+pub fn a100x8() -> Topology {
+    build(
+        "a100x8",
+        2,
+        2,
+        2,
+        Caps {
+            pcie: gb(25.0),
+            switch_uplink: gb(48.0),
+            nv: gb(280.0),
+            dram_rd: gb(300.0),
+            dram_wr: gb(300.0),
+            xgmi: gb(55.0),
+            xgmi_lane: gb(22.0),
+            hbm: gb(360.0),
+            relay_d2h: gb(18.0),
+        },
+        default_lat(),
+    )
+}
+
+/// Single-socket 4-GPU box: the §6 "latency-predictable" configuration
+/// with no xGMI hop anywhere.
+pub fn single_numa_4gpu() -> Topology {
+    build(
+        "single_numa_4gpu",
+        1,
+        2,
+        2,
+        Caps {
+            pcie: gb(53.6),
+            switch_uplink: gb(100.0),
+            nv: gb(368.0),
+            dram_rd: gb(380.0),
+            dram_wr: gb(380.0),
+            xgmi: gb(62.0), // unused (one socket) but harmless
+            xgmi_lane: gb(28.0),
+            hbm: gb(400.0),
+            relay_d2h: gb(38.0),
+        },
+        default_lat(),
+    )
+}

@@ -1,0 +1,127 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warms up, then runs timed batches until a target wall budget is spent,
+//! reporting mean / p50 / p99 per-iteration times. Used by
+//! `rust/benches/hotpath.rs` for the §Perf pass.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Total iterations measured.
+    pub iters: u64,
+    /// Mean ns per iteration.
+    pub mean_ns: f64,
+    /// Median ns per iteration (over batches).
+    pub p50_ns: f64,
+    /// 99th percentile ns per iteration (over batches).
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12.0} ns/iter  (p50 {:>10.0}, p99 {:>10.0}, n={})",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new(Duration::from_millis(200), Duration::from_secs(1))
+    }
+}
+
+impl Bencher {
+    /// Create with explicit warmup and measurement budgets.
+    pub fn new(warmup: Duration, budget: Duration) -> Bencher {
+        Bencher {
+            warmup,
+            budget,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. `f` is invoked repeatedly; keep per-call state
+    /// outside the closure.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + batch-size estimation.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        // Aim for ~200 batches over the budget.
+        let batch = ((self.budget.as_secs_f64() / 200.0 / per_iter).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new(); // ns per iter, per batch
+        let mut iters = 0u64;
+        let m0 = Instant::now();
+        while m0.elapsed() < self.budget {
+            let b0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = b0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(dt);
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p99_ns: pct(0.99),
+        };
+        println!("{}", res.summary());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bencher::new(Duration::from_millis(10), Duration::from_millis(50));
+        let mut acc = 0u64;
+        let r = b
+            .bench("noop-ish", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(r.iters > 1000);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns * 1.0001);
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch is done by the caller on the first
+//! positional.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options map + positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclude argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless next token is another option or absent
+                    let is_flag = iter
+                        .peek()
+                        .map(|n| n.starts_with("--"))
+                        .unwrap_or(true);
+                    if is_flag {
+                        out.opts.insert(stripped.to_string(), "true".to_string());
+                    } else {
+                        out.opts.insert(stripped.to_string(), iter.next().unwrap());
+                    }
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(String::as_str)
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option; panics with a clear message on parse failure.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                panic!("--{key}: cannot parse {v:?} as {}", std::any::type_name::<T>())
+            })
+        })
+    }
+
+    /// Typed option with default.
+    pub fn or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get_as(key).unwrap_or(default)
+    }
+
+    /// Boolean flag (present, `=true`, or `=1`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Byte-size option accepting "512MB" style suffixes.
+    pub fn size_or(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => super::fmt::parse_bytes_or_int(v)
+                .unwrap_or_else(|| panic!("--{key}: bad size {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // NB: a bare `--flag` greedily takes the next token as its value
+        // unless that token is another option or absent — boolean flags in
+        // front of positionals must use `--flag=true`.
+        let a = parse("serve run --gpus 8 --chunk=5MB --verbose");
+        assert_eq!(a.pos(0), Some("serve"));
+        assert_eq!(a.pos(1), Some("run"));
+        assert_eq!(a.or::<u32>("gpus", 1), 8);
+        assert_eq!(a.size_or("chunk", 0), 5_000_000);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.or::<f64>("ratio", 1.5), 1.5);
+        assert_eq!(a.str_or("mode", "mma"), "mma");
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("--fast");
+        assert!(a.flag("fast"));
+    }
+}

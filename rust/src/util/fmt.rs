@@ -1,0 +1,93 @@
+//! Human-readable formatting for sizes, bandwidths, and durations.
+
+/// Format a byte count with binary prefixes ("17.5 GiB").
+pub fn bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a bandwidth in GB/s (decimal, matching the paper's units).
+pub fn gbps(bytes_per_sec: f64) -> String {
+    format!("{:.1} GB/s", bytes_per_sec / 1e9)
+}
+
+/// Format a duration given in seconds adaptively (us / ms / s).
+pub fn secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Parse sizes like "512MB", "8GB", "64k", "1.5GiB" (case-insensitive,
+/// decimal multipliers for B-suffixed units to match the paper's figures).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let split = t.find(|c: char| !(c.is_ascii_digit() || c == '.'))?;
+    let (num, unit) = t.split_at(split);
+    let num: f64 = num.parse().ok()?;
+    let mult: f64 = match unit.trim() {
+        "b" => 1.0,
+        "k" | "kb" => 1e3,
+        "m" | "mb" => 1e6,
+        "g" | "gb" => 1e9,
+        "t" | "tb" => 1e12,
+        "kib" => 1024.0,
+        "mib" => 1024.0 * 1024.0,
+        "gib" => 1024.0 * 1024.0 * 1024.0,
+        _ => return None,
+    };
+    Some((num * mult).round() as u64)
+}
+
+/// Parse a size that may also be a bare integer (bytes).
+pub fn parse_bytes_or_int(s: &str) -> Option<u64> {
+    s.trim().parse::<u64>().ok().or_else(|| parse_bytes(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_binary_prefixes() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn gbps_decimal() {
+        assert_eq!(gbps(53.6e9), "53.6 GB/s");
+    }
+
+    #[test]
+    fn secs_adaptive() {
+        assert_eq!(secs(5e-6), "5.0 us");
+        assert_eq!(secs(2.5e-3), "2.50 ms");
+        assert_eq!(secs(2.5), "2.500 s");
+    }
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_bytes("8GB"), Some(8_000_000_000));
+        assert_eq!(parse_bytes("5mb"), Some(5_000_000));
+        assert_eq!(parse_bytes("1.5GiB"), Some(1_610_612_736));
+        assert_eq!(parse_bytes("100b"), Some(100));
+        assert_eq!(parse_bytes_or_int("4096"), Some(4096));
+        assert_eq!(parse_bytes("x"), None);
+    }
+}

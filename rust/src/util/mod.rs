@@ -1,0 +1,9 @@
+//! Small self-contained substrates that would normally come from crates.io
+//! (`rand`, `clap`, `criterion`, `prettytable`) but are unavailable in this
+//! offline build. Each is implemented from scratch and unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod fmt;
+pub mod rng;
+pub mod table;

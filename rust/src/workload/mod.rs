@@ -1,0 +1,118 @@
+//! Workload generators: multi-turn QA over long documents (the LongBench
+//! v2-style setup of §5.2.1), Poisson arrivals, and background-traffic
+//! patterns for the robustness experiments (§5.1.2).
+
+use crate::serving::{Request, RequestId};
+use crate::sim::Time;
+use crate::util::rng::Rng;
+
+/// A long-document multi-turn QA session: turn 1 misses the prefix cache,
+/// later turns hit it (the paper discards turn 1 and averages the rest).
+#[derive(Clone, Debug)]
+pub struct QaSession {
+    /// Prefix-cache key of the document.
+    pub key: u64,
+    /// Document context length in tokens.
+    pub context_tokens: u32,
+    /// Tokens appended per turn (the new question).
+    pub turn_suffix_tokens: u32,
+    /// Number of turns.
+    pub turns: u32,
+}
+
+impl QaSession {
+    /// Generate the per-turn requests with `gap` between turns.
+    pub fn requests(&self, first_id: u64, start: Time, gap: Time) -> Vec<Request> {
+        (0..self.turns)
+            .map(|t| {
+                let cached = if t == 0 { 0 } else { self.context_tokens };
+                Request {
+                    id: RequestId(first_id + t as u64),
+                    arrival: start + Time::from_ns(gap.ns() * t as u64),
+                    prompt_tokens: self.context_tokens + (t + 1) * self.turn_suffix_tokens,
+                    cached_prefix_tokens: cached,
+                    prefix_key: self.key,
+                    output_tokens: 32,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Build a batch of QA sessions over documents of roughly `context` tokens
+/// (±5%, mimicking "documents whose context lengths are around 16K/32K/64K").
+pub fn longdoc_sessions(
+    rng: &mut Rng,
+    n_docs: usize,
+    context: u32,
+    turns: u32,
+) -> Vec<QaSession> {
+    (0..n_docs)
+        .map(|_| {
+            let jitter = rng.range_f64(0.95, 1.05);
+            QaSession {
+                key: rng.next_u64() | 1, // nonzero
+                context_tokens: ((context as f64 * jitter) as u32).max(1),
+                turn_suffix_tokens: 64,
+                turns,
+            }
+        })
+        .collect()
+}
+
+/// Poisson arrival times with mean rate `rps`, `n` arrivals from `start`.
+pub fn poisson_arrivals(rng: &mut Rng, start: Time, rps: f64, n: usize) -> Vec<Time> {
+    let mut t = start.as_secs_f64();
+    (0..n)
+        .map(|_| {
+            t += rng.exp(1.0 / rps);
+            Time::from_secs_f64(t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_turn_misses_later_turns_hit() {
+        let s = QaSession {
+            key: 7,
+            context_tokens: 1000,
+            turn_suffix_tokens: 64,
+            turns: 3,
+        };
+        let reqs = s.requests(10, Time::ZERO, Time::from_ms(100));
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].cached_prefix_tokens, 0, "turn 1 cold");
+        assert_eq!(reqs[1].cached_prefix_tokens, 1000);
+        assert_eq!(reqs[2].cached_prefix_tokens, 1000);
+        assert!(reqs[1].prompt_tokens > reqs[0].prompt_tokens);
+        assert_eq!(reqs[2].arrival, Time::from_ms(200));
+    }
+
+    #[test]
+    fn sessions_are_near_target_length() {
+        let mut rng = Rng::seed_from_u64(1);
+        let ss = longdoc_sessions(&mut rng, 20, 32_000, 4);
+        assert_eq!(ss.len(), 20);
+        for s in &ss {
+            assert!((30_000..=34_000).contains(&s.context_tokens));
+            assert_ne!(s.key, 0);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_rate_roughly_holds() {
+        let mut rng = Rng::seed_from_u64(2);
+        let arr = poisson_arrivals(&mut rng, Time::ZERO, 100.0, 2000);
+        assert_eq!(arr.len(), 2000);
+        let span = arr.last().unwrap().as_secs_f64();
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() / 100.0 < 0.1, "rate {rate}");
+        for w in arr.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Cross-module integration tests: interceptor → engine → fabric → gpusim
+//! under realistic serving scenarios, plus determinism and failure cases.
+
+use mma::config::RunConfig;
+use mma::mma::{Mode, MmaConfig, SimWorld, TransferDesc};
+use mma::models::{qwen3_4b, qwen_7b_chat};
+use mma::serving::{ModelRegistry, ModelState};
+use mma::sim::Time;
+use mma::topology::{h20x8, single_numa_4gpu, Direction, GpuId, NumaId};
+
+fn h2d(gpu: u8, bytes: u64) -> TransferDesc {
+    TransferDesc::new(Direction::H2D, GpuId(gpu), NumaId(0), bytes)
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let run = || {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        let s0 = w.stream(GpuId(0));
+        let s3 = w.stream(GpuId(3));
+        let a = w.memcpy_async(s0, h2d(0, 700_000_000));
+        let b = w.memcpy_async(s3, h2d(3, 300_000_000));
+        w.run_until_idle();
+        (
+            w.rec(a).completed.unwrap().ns(),
+            w.rec(b).completed.unwrap().ns(),
+            w.rec(a).bytes_relay,
+            w.rec(b).bytes_relay,
+        )
+    };
+    assert_eq!(run(), run(), "same inputs must give bit-exact results");
+}
+
+#[test]
+fn concurrent_transfers_to_all_gpus_complete() {
+    let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+    let mut ids = Vec::new();
+    for g in 0..8u8 {
+        let s = w.stream(GpuId(g));
+        let numa = w.topo.numa_of(GpuId(g));
+        ids.push(w.memcpy_async(
+            s,
+            TransferDesc::new(Direction::H2D, GpuId(g), numa, 500_000_000),
+        ));
+    }
+    w.run_until_idle();
+    for id in ids {
+        let rec = w.rec(id);
+        assert!(rec.completed.is_some(), "{id:?} never completed");
+        assert_eq!(rec.bytes_direct + rec.bytes_relay, 500_000_000);
+        // With every GPU busy on its own transfer, direct priority keeps
+        // most bytes on the direct path (Table 2's mechanism).
+        assert!(
+            rec.direct_fraction() > 0.5,
+            "{id:?} relayed too much: {}",
+            rec.direct_fraction()
+        );
+    }
+}
+
+#[test]
+fn mixed_directions_share_the_fabric() {
+    let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+    let s0 = w.stream(GpuId(0));
+    let s1 = w.stream(GpuId(1));
+    let up = w.memcpy_async(s0, h2d(0, 1 << 30));
+    let down = w.memcpy_async(s1, TransferDesc::new(Direction::D2H, GpuId(1), NumaId(0), 1 << 30));
+    w.run_until_idle();
+    // PCIe is full duplex: concurrent H2D and D2H barely interfere.
+    let bw_up = w.rec(up).bandwidth().unwrap();
+    let bw_down = w.rec(down).bandwidth().unwrap();
+    assert!(bw_up > 150e9, "H2D degraded: {bw_up}");
+    assert!(bw_down > 120e9, "D2H degraded: {bw_down}");
+}
+
+#[test]
+fn single_numa_preset_runs_mma() {
+    let topo = single_numa_4gpu();
+    let mut w = SimWorld::new(topo, MmaConfig::default());
+    let s = w.stream(GpuId(0));
+    let t = w.memcpy_async(s, h2d(0, 1 << 30));
+    w.run_until_transfer(t);
+    let bw = w.rec(t).bandwidth().unwrap();
+    // 4 paths, no xGMI anywhere: ~switch-limited ≈ 180-200 GB/s (§6).
+    assert!((150e9..220e9).contains(&bw), "single-numa bw {bw}");
+}
+
+#[test]
+fn static_split_mode_end_to_end() {
+    let cfg = mma::baseline::split_1_1(GpuId(0), GpuId(1));
+    let mut w = SimWorld::new(h20x8(), cfg);
+    let s = w.stream(GpuId(0));
+    let t = w.memcpy_async(s, h2d(0, 512 << 20));
+    w.run_until_transfer(t);
+    let rec = w.rec(t);
+    // 1:1 split: half the bytes relayed (chunk-rounding slack allowed).
+    let frac = rec.direct_fraction();
+    assert!((0.4..0.6).contains(&frac), "1:1 split fraction {frac}");
+}
+
+#[test]
+fn config_file_drives_the_world() {
+    let cfg = RunConfig::from_toml(
+        r#"
+        [run]
+        preset = "h20x8"
+        [mma]
+        mode = "mma"
+        chunk_bytes = 2_000_000
+        relay_gpus = [1]
+        "#,
+    )
+    .unwrap();
+    let mut w = SimWorld::new(cfg.topology(), cfg.mma.clone());
+    let s = w.stream(GpuId(0));
+    let t = w.memcpy_async(s, h2d(0, 512 << 20));
+    w.run_until_transfer(t);
+    let bw = w.rec(t).bandwidth().unwrap();
+    // Exactly two paths (direct + gpu1) sharing one PCIe switch uplink.
+    assert!((90e9..110e9).contains(&bw), "two-path bw {bw}");
+}
+
+#[test]
+fn serving_registry_over_shared_world() {
+    // A registry sleep/wake storm while a KV fetch runs: everything shares
+    // one fabric and still completes.
+    let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+    let mut reg = ModelRegistry::new(NumaId(0));
+    let m = reg.register(qwen3_4b(), vec![GpuId(2)]);
+    let s = w.stream(GpuId(0));
+    let fetch = w.memcpy_async(s, h2d(0, qwen_7b_chat().kv_bytes(16_384)));
+    let slept = reg.sleep(&mut w, m);
+    assert_eq!(reg.instance(m).state, ModelState::Asleep);
+    w.run_until_transfer(fetch);
+    assert!(slept.transfer > Time::ZERO);
+    let woke = reg.wake(&mut w, m);
+    assert!(woke.transfer > Time::ZERO);
+    w.run_until_idle();
+}
+
+#[test]
+fn backpressure_shifts_work_off_contended_path() {
+    // Pin gpu1's PCIe lane with background traffic; MMA must route around
+    // it: gpu1 relays fewer bytes than an uncontended peer behind the
+    // other switch.
+    let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+    let bg_path = w.topo.h2d_direct(NumaId(0), GpuId(1));
+    w.start_bg_loop(bg_path, 512 << 20, 30, 2);
+    let s = w.stream(GpuId(0));
+    w.memcpy_async(s, h2d(0, 4 << 30));
+    w.run_until_idle();
+    let stats = &w.engine(0, Direction::H2D).stats;
+    let relayed_g1 = stats.bytes_by_path[1];
+    let relayed_g2 = stats.bytes_by_path[2];
+    assert!(
+        relayed_g1 < relayed_g2,
+        "contended path must carry less: g1={relayed_g1} g2={relayed_g2}"
+    );
+}
+
+#[test]
+fn fallback_and_engine_routes_coexist_on_one_stream() {
+    let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+    let s = w.stream(GpuId(0));
+    let small = w.memcpy_async(s, h2d(0, 1_000_000)); // fallback
+    let large = w.memcpy_async(s, h2d(0, 200_000_000)); // engine
+    let small2 = w.memcpy_async(s, h2d(0, 2_000_000)); // fallback again
+    w.run_until_idle();
+    // Stream FIFO: small completes before large starts, etc.
+    let t1 = w.rec(small).completed.unwrap();
+    let a2 = w.rec(large).activated.unwrap();
+    let t2 = w.rec(large).released.unwrap();
+    let a3 = w.rec(small2).activated.unwrap();
+    assert!(t1 <= a2, "large copy started before the small one finished");
+    assert!(t2 <= a3, "stream order violated after dummy task");
+    assert_eq!(w.rec(small).bytes_relay, 0);
+    assert!(w.rec(large).bytes_relay > 0);
+}
+
+#[test]
+fn centralized_dispatch_mode_works() {
+    let cfg = MmaConfig {
+        centralized_dispatch: true,
+        ..Default::default()
+    };
+    let mut w = SimWorld::new(h20x8(), cfg);
+    let s = w.stream(GpuId(0));
+    let t = w.memcpy_async(s, h2d(0, 1 << 30));
+    w.run_until_transfer(t);
+    let bw = w.rec(t).bandwidth().unwrap();
+    // Slightly below per-GPU mode (one dispatcher serializes harder), but
+    // still multipath-fast.
+    assert!(bw > 180e9, "centralized bw {bw}");
+}
+
+#[test]
+fn mode_matrix_all_complete() {
+    // Property-style matrix: every mode/direction/size combination must
+    // complete with conserved bytes.
+    for mode in [Mode::Native, Mode::Mma] {
+        for dir in [Direction::H2D, Direction::D2H] {
+            for bytes in [1_000u64, 5_000_000, 123_456_789] {
+                let cfg = MmaConfig {
+                    mode: mode.clone(),
+                    ..Default::default()
+                };
+                let mut w = SimWorld::new(h20x8(), cfg);
+                let s = w.stream(GpuId(5));
+                let numa = w.topo.numa_of(GpuId(5));
+                let t = w.memcpy_async(s, TransferDesc::new(dir, GpuId(5), numa, bytes));
+                w.run_until_idle();
+                let rec = w.rec(t);
+                assert!(rec.completed.is_some(), "{mode:?}/{dir:?}/{bytes}");
+                assert_eq!(
+                    rec.bytes_direct + rec.bytes_relay,
+                    bytes,
+                    "{mode:?}/{dir:?}/{bytes}: bytes not conserved"
+                );
+            }
+        }
+    }
+}
