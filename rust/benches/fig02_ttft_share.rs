@@ -1,16 +1,17 @@
 //! Fig 2: proportion of prefix-cache fetching time in TTFT.
 //!
 //! Regenerates the paper's rows on the simulated 8xH20 testbed.
-//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs;
+//! `--seed N` pins the workload generator.
 
-use mma::figures::fig2_ttft_share;
+use mma::figures::{fig2_ttft_share, DEFAULT_SEED};
 use mma::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
     let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
-    let _ = fast;
+    let seed = args.seed_or(DEFAULT_SEED);
     println!("=== Fig 2: proportion of prefix-cache fetching time in TTFT ===");
-    let t = fig2_ttft_share(fast);
+    let t = fig2_ttft_share(fast, seed);
     t.print();
 }

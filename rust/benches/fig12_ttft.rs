@@ -1,16 +1,17 @@
 //! Fig 12: TTFT baseline vs MMA across models and contexts.
 //!
 //! Regenerates the paper's rows on the simulated 8xH20 testbed.
-//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs.
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs;
+//! `--seed N` pins the workload generator.
 
-use mma::figures::fig12_ttft;
+use mma::figures::{fig12_ttft, DEFAULT_SEED};
 use mma::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
     let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
-    let _ = fast;
+    let seed = args.seed_or(DEFAULT_SEED);
     println!("=== Fig 12: TTFT baseline vs MMA across models and contexts ===");
-    let t = fig12_ttft(fast);
+    let t = fig12_ttft(fast, seed);
     t.print();
 }

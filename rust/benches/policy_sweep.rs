@@ -1,0 +1,16 @@
+//! Policy sweep: every transfer policy on the Fig-8 bandwidth-vs-paths
+//! workload — native, static-split, mma-greedy, congestion-feedback and
+//! numa-aware through the identical engine/measurement path.
+//!
+//! `--fast` (or `cargo bench -- --fast`) shrinks the transfer size.
+
+use mma::figures::policy_sweep;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    println!("=== Policy sweep: H2D bandwidth vs relay paths, per policy ===");
+    let t = policy_sweep(fast);
+    t.print();
+}

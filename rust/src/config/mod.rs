@@ -9,6 +9,7 @@ mod toml_lite;
 pub use toml_lite::{parse as parse_toml, TomlValue};
 
 use crate::mma::MmaConfig;
+use crate::policy::PolicySpec;
 use crate::topology::{GpuId, Preset, Topology};
 use std::collections::BTreeMap;
 
@@ -80,16 +81,26 @@ impl RunConfig {
             match section.as_str() {
                 "" | "run" => apply_run(&mut cfg, table)?,
                 "mma" => apply_mma(&mut cfg.mma, table)?,
+                "policy" => apply_policy(&mut cfg.mma, table)?,
                 "serving" => apply_serving(&mut cfg.serving, table)?,
                 other => return Err(format!("unknown section [{other}]")),
             }
         }
+        // Cross-validate after all sections landed ([run] may follow
+        // [policy] in document order): a config that passes here must not
+        // panic when the engines are built.
+        let gpu_count = cfg.preset.build().gpu_count();
+        cfg.mma
+            .policy
+            .validate(gpu_count)
+            .map_err(|e| format!("[policy] {e}"))?;
         Ok(cfg)
     }
 
     /// Apply the paper's environment-variable overrides
     /// (`MMA_CHUNK_SIZE`, `MMA_RELAY_GPUS`, `MMA_THRESHOLD`,
-    /// `MMA_FLOW_CONTROL`, `MMA_DISABLE`).
+    /// `MMA_FLOW_CONTROL`, `MMA_DISABLE`), plus `MMA_POLICY` naming a
+    /// transfer policy (see [`PolicySpec::parse`]).
     pub fn apply_env(&mut self) {
         let get = |k: &str| std::env::var(k).ok();
         if let Some(v) = get("MMA_CHUNK_SIZE") {
@@ -113,8 +124,13 @@ impl RunConfig {
         if let Some(v) = get("MMA_FLOW_CONTROL") {
             self.mma.centralized_dispatch = v.eq_ignore_ascii_case("centralized");
         }
+        if let Some(v) = get("MMA_POLICY") {
+            if let Some(spec) = PolicySpec::parse(&v) {
+                self.mma.set_policy(spec);
+            }
+        }
         if get("MMA_DISABLE").is_some() {
-            self.mma.mode = crate::mma::Mode::Native;
+            self.mma.policy = PolicySpec::Native;
         }
     }
 }
@@ -151,10 +167,11 @@ fn apply_mma(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Result<(
             ("activation_ns", TomlValue::Int(i)) => m.activation_ns = *i as u64,
             ("contention_beta", TomlValue::Float(f)) => m.contention_beta = *f,
             ("contention_beta", TomlValue::Int(i)) => m.contention_beta = *i as f64,
+            // Back-compat spelling; the [policy] section is the full form.
             ("mode", TomlValue::Str(s)) => {
-                m.mode = match s.as_str() {
-                    "mma" => crate::mma::Mode::Mma,
-                    "native" => crate::mma::Mode::Native,
+                m.policy = match s.as_str() {
+                    "mma" => PolicySpec::MmaGreedy,
+                    "native" => PolicySpec::Native,
                     other => return Err(format!("unknown mma mode {other:?}")),
                 }
             }
@@ -164,6 +181,131 @@ fn apply_mma(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Result<(
             _ => return Err(format!("unknown or mistyped key {k:?} in [mma]")),
         }
     }
+    Ok(())
+}
+
+/// `[policy]` section: selects and parameterizes the transfer policy.
+///
+/// ```text
+/// [policy]
+/// name = "congestion-feedback"   # native | static-split | mma-greedy |
+///                                # congestion-feedback | numa-aware
+/// ewma_alpha = 0.25              # congestion-feedback only
+/// min_share = 0.35               # congestion-feedback only
+/// remote_penalty = 0.25          # numa-aware only
+/// min_remote_bytes = 32000000    # numa-aware only
+/// split_gpus = [0, 1]            # static-split only (path GPUs;
+/// split_weights = [1, 2]         #  parallel weights, ints)
+/// ```
+fn apply_policy(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    let mut name: Option<String> = None;
+    let mut split_gpus: Option<Vec<i64>> = None;
+    let mut split_weights: Option<Vec<i64>> = None;
+    let mut ewma_alpha: Option<f64> = None;
+    let mut min_share: Option<f64> = None;
+    let mut remote_penalty: Option<f64> = None;
+    let mut min_remote_bytes: Option<u64> = None;
+    let float = |v: &TomlValue| match v {
+        TomlValue::Float(f) => Some(*f),
+        TomlValue::Int(i) => Some(*i as f64),
+        _ => None,
+    };
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("name", TomlValue::Str(s)) => name = Some(s.clone()),
+            ("name", _) => return bad(k, "string"),
+            ("split_gpus", TomlValue::IntArray(xs)) => split_gpus = Some(xs.clone()),
+            ("split_weights", TomlValue::IntArray(xs)) => split_weights = Some(xs.clone()),
+            ("ewma_alpha", v) => ewma_alpha = Some(float(v).ok_or("ewma_alpha: number")?),
+            ("min_share", v) => min_share = Some(float(v).ok_or("min_share: number")?),
+            ("remote_penalty", v) => {
+                remote_penalty = Some(float(v).ok_or("remote_penalty: number")?)
+            }
+            ("min_remote_bytes", TomlValue::Int(i)) => min_remote_bytes = Some(*i as u64),
+            _ => return Err(format!("unknown or mistyped key {k:?} in [policy]")),
+        }
+    }
+    let name = name.ok_or_else(|| "[policy] requires a name".to_string())?;
+    let mut spec =
+        PolicySpec::parse(&name).ok_or_else(|| format!("unknown policy {name:?}"))?;
+    // Apply parameters, rejecting ones that don't fit the named policy
+    // (same typo-guard stance as the rest of the config).
+    match &mut spec {
+        PolicySpec::Static(ratios) => {
+            if ewma_alpha.is_some() || min_share.is_some() || remote_penalty.is_some()
+                || min_remote_bytes.is_some()
+            {
+                return Err(format!("policy {name:?} takes only split_gpus/split_weights"));
+            }
+            match (split_gpus, split_weights) {
+                (Some(g), Some(w)) => {
+                    if g.is_empty() || g.len() != w.len() {
+                        return Err(
+                            "split_gpus and split_weights must be non-empty and equal-length"
+                                .to_string(),
+                        );
+                    }
+                    if let Some(bad) = g.iter().find(|&&x| !(0..=255).contains(&x)) {
+                        return Err(format!("split_gpus entry {bad} is not a GPU id"));
+                    }
+                    *ratios = g
+                        .iter()
+                        .zip(&w)
+                        .map(|(&g, &w)| (GpuId(g as u8), w as f64))
+                        .collect();
+                }
+                (None, None) => {} // keep the parse default (1:1 over gpu0+gpu1)
+                _ => {
+                    return Err(
+                        "split_gpus and split_weights must be given together".to_string()
+                    )
+                }
+            }
+        }
+        PolicySpec::CongestionFeedback {
+            ewma_alpha: a,
+            min_share: s,
+        } => {
+            if split_gpus.is_some() || split_weights.is_some() || remote_penalty.is_some()
+                || min_remote_bytes.is_some()
+            {
+                return Err(format!("policy {name:?} takes only ewma_alpha/min_share"));
+            }
+            if let Some(x) = ewma_alpha {
+                *a = x;
+            }
+            if let Some(x) = min_share {
+                *s = x;
+            }
+        }
+        PolicySpec::NumaAware {
+            remote_penalty: p,
+            min_remote_bytes: b,
+        } => {
+            if split_gpus.is_some() || split_weights.is_some() || ewma_alpha.is_some()
+                || min_share.is_some()
+            {
+                return Err(format!(
+                    "policy {name:?} takes only remote_penalty/min_remote_bytes"
+                ));
+            }
+            if let Some(x) = remote_penalty {
+                *p = x;
+            }
+            if let Some(x) = min_remote_bytes {
+                *b = x;
+            }
+        }
+        PolicySpec::MmaGreedy | PolicySpec::Native => {
+            if split_gpus.is_some() || split_weights.is_some() || ewma_alpha.is_some()
+                || min_share.is_some() || remote_penalty.is_some()
+                || min_remote_bytes.is_some()
+            {
+                return Err(format!("policy {name:?} takes no parameters"));
+            }
+        }
+    }
+    m.set_policy(spec);
     Ok(())
 }
 
@@ -226,11 +368,136 @@ mod tests {
     }
 
     #[test]
+    fn policy_section_selects_and_parameterizes() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [policy]
+            name = "congestion-feedback"
+            ewma_alpha = 0.5
+            min_share = 0.2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.mma.policy,
+            PolicySpec::CongestionFeedback {
+                ewma_alpha: 0.5,
+                min_share: 0.2
+            }
+        );
+
+        let cfg = RunConfig::from_toml(
+            r#"
+            [policy]
+            name = "static-split"
+            split_gpus = [0, 1, 2]
+            split_weights = [2, 1, 1]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.mma.policy,
+            PolicySpec::Static(vec![
+                (GpuId(0), 2.0),
+                (GpuId(1), 1.0),
+                (GpuId(2), 1.0)
+            ])
+        );
+
+        let cfg = RunConfig::from_toml("[policy]\nname = \"numa-aware\"\nmin_remote_bytes = 1000000").unwrap();
+        assert_eq!(
+            cfg.mma.policy,
+            PolicySpec::NumaAware {
+                remote_penalty: crate::policy::DEFAULT_REMOTE_PENALTY,
+                min_remote_bytes: 1_000_000
+            }
+        );
+    }
+
+    #[test]
+    fn static_split_by_name_disables_adaptive_machinery() {
+        // Choosing static-split through any named surface must establish
+        // the same invariants as policy::static_split (Fig 10: no
+        // adaptive machinery), not leave the greedy defaults on.
+        let cfg = RunConfig::from_toml(
+            "[policy]\nname = \"static-split\"\nsplit_gpus = [0, 1]\nsplit_weights = [1, 1]",
+        )
+        .unwrap();
+        assert!(!cfg.mma.contention_backoff);
+        assert!(!cfg.mma.direct_priority);
+        // Same invariant through the programmatic surface (which the
+        // MMA_POLICY env path also funnels through).
+        let mut direct = MmaConfig::default();
+        direct.set_policy(PolicySpec::Static(vec![(GpuId(0), 1.0)]));
+        assert!(!direct.contention_backoff);
+        assert!(!direct.direct_priority);
+    }
+
+    #[test]
+    fn config_validation_rejects_runtime_panics() {
+        // Out-of-range parameters and nonexistent GPUs must fail at
+        // config time, not when the engine is built.
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"congestion-feedback\"\newma_alpha = 3.0"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"numa-aware\"\nremote_penalty = 2.0"
+        )
+        .is_err());
+        // gpu 8 does not exist on the 8-GPU h20x8 preset.
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"static-split\"\nsplit_gpus = [0, 8]\nsplit_weights = [1, 1]"
+        )
+        .is_err());
+        // Negative / oversized ids and non-positive weights.
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"static-split\"\nsplit_gpus = [-1]\nsplit_weights = [1]"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"static-split\"\nsplit_gpus = [300]\nsplit_weights = [1]"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"static-split\"\nsplit_gpus = [0]\nsplit_weights = [0]"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn policy_section_rejects_mismatched_params() {
+        // Parameters must match the named policy.
+        assert!(RunConfig::from_toml("[policy]\nname = \"mma-greedy\"\newma_alpha = 0.5").is_err());
+        assert!(RunConfig::from_toml("[policy]\nname = \"numa-aware\"\nmin_share = 0.5").is_err());
+        // Unknown name / missing name / ragged split arrays.
+        assert!(RunConfig::from_toml("[policy]\nname = \"nope\"").is_err());
+        assert!(RunConfig::from_toml("[policy]\newma_alpha = 0.5").is_err());
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"static-split\"\nsplit_gpus = [0]\nsplit_weights = [1, 2]"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "[policy]\nname = \"static-split\"\nsplit_gpus = [0, 1]"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mode_key_still_maps_to_policy() {
+        let cfg = RunConfig::from_toml("[mma]\nmode = \"native\"").unwrap();
+        assert_eq!(cfg.mma.policy, PolicySpec::Native);
+        let cfg = RunConfig::from_toml("[mma]\nmode = \"mma\"").unwrap();
+        assert_eq!(cfg.mma.policy, PolicySpec::MmaGreedy);
+    }
+
+    #[test]
     fn env_overrides() {
         // Serialized via distinct var names to avoid test interference.
         std::env::set_var("MMA_CHUNK_SIZE", "2MB");
         std::env::set_var("MMA_RELAY_GPUS", "1,3,5");
         std::env::set_var("MMA_FLOW_CONTROL", "centralized");
+        std::env::set_var("MMA_POLICY", "numa-aware");
         let mut cfg = RunConfig::default();
         cfg.apply_env();
         assert_eq!(cfg.mma.chunk_bytes, 2_000_000);
@@ -239,9 +506,11 @@ mod tests {
             Some(vec![GpuId(1), GpuId(3), GpuId(5)])
         );
         assert!(cfg.mma.centralized_dispatch);
+        assert_eq!(cfg.mma.policy, PolicySpec::numa_aware());
         std::env::remove_var("MMA_CHUNK_SIZE");
         std::env::remove_var("MMA_RELAY_GPUS");
         std::env::remove_var("MMA_FLOW_CONTROL");
+        std::env::remove_var("MMA_POLICY");
     }
 
     #[test]

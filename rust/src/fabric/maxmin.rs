@@ -135,6 +135,152 @@ mod tests {
         assert!(max_min_rates(&[1.0], &[]).is_empty());
     }
 
+    /// Load of link `li` under `rates`.
+    fn link_load(paths: &[Vec<LinkId>], rates: &[f64], li: usize) -> f64 {
+        paths
+            .iter()
+            .zip(rates)
+            .filter(|(p, _)| p.iter().any(|&x| x.0 as usize == li))
+            .map(|(_, r)| r)
+            .sum()
+    }
+
+    #[test]
+    fn conservation_on_shared_bottleneck() {
+        // Conservation: everything the bottleneck can carry is handed out —
+        // no bandwidth lost to the allocator, none invented.
+        let caps = [120.0, 1000.0, 1000.0];
+        let p0: Vec<LinkId> = vec![l(0), l(1)];
+        let p1: Vec<LinkId> = vec![l(0), l(2)];
+        let p2: Vec<LinkId> = vec![l(0)];
+        let paths = [p0, p1, p2];
+        let refs: Vec<&[LinkId]> = paths.iter().map(|p| p.as_slice()).collect();
+        let rates = max_min_rates(&caps, &refs);
+        let total: f64 = rates.iter().sum();
+        assert!((total - 120.0).abs() < 1e-9, "allocated {total} of 120");
+        assert!((link_load(&paths, &rates, 0) - 120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_conservation_every_flow_bounded_by_its_links() {
+        // No flow exceeds any link it crosses, and per-link loads never
+        // exceed capacity: bytes are conserved end to end.
+        testkit::check("maxmin-conservation", |rng| {
+            let nl = rng.range_usize(1, 10);
+            let nf = rng.range_usize(1, 20);
+            let caps: Vec<f64> = (0..nl).map(|_| rng.range_f64(1.0, 500.0)).collect();
+            let paths: Vec<Vec<LinkId>> = (0..nf)
+                .map(|_| {
+                    let len = rng.range_usize(1, (nl + 1).min(4));
+                    let mut links: Vec<u16> = (0..nl as u16).collect();
+                    rng.shuffle(&mut links);
+                    links.truncate(len);
+                    links.into_iter().map(LinkId).collect()
+                })
+                .collect();
+            let refs: Vec<&[LinkId]> = paths.iter().map(|p| p.as_slice()).collect();
+            let rates = max_min_rates(&caps, &refs);
+            for (p, r) in paths.iter().zip(&rates) {
+                for &x in p {
+                    assert!(
+                        *r <= caps[x.0 as usize] * (1.0 + 1e-9) + 1e-9,
+                        "flow rate {r} exceeds link {x:?} cap {}",
+                        caps[x.0 as usize]
+                    );
+                }
+            }
+            for li in 0..nl {
+                let load = link_load(&paths, &rates, li);
+                assert!(load <= caps[li] * (1.0 + 1e-9) + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn property_bottleneck_saturation() {
+        // The globally most-constrained link is always driven to exactly
+        // its capacity — the allocator never leaves the bottleneck idle.
+        testkit::check("maxmin-bottleneck-saturation", |rng| {
+            let nl = rng.range_usize(1, 8);
+            let nf = rng.range_usize(1, 16);
+            let caps: Vec<f64> = (0..nl).map(|_| rng.range_f64(1.0, 100.0)).collect();
+            let paths: Vec<Vec<LinkId>> = (0..nf)
+                .map(|_| {
+                    let len = rng.range_usize(1, (nl + 1).min(4));
+                    let mut links: Vec<u16> = (0..nl as u16).collect();
+                    rng.shuffle(&mut links);
+                    links.truncate(len);
+                    links.into_iter().map(LinkId).collect()
+                })
+                .collect();
+            let refs: Vec<&[LinkId]> = paths.iter().map(|p| p.as_slice()).collect();
+            let rates = max_min_rates(&caps, &refs);
+            // The first-round bottleneck: min cap/active over used links.
+            let mut active = vec![0u32; nl];
+            for p in &paths {
+                for &x in p {
+                    active[x.0 as usize] += 1;
+                }
+            }
+            let bottleneck = (0..nl)
+                .filter(|&li| active[li] > 0)
+                .min_by(|&a, &b| {
+                    let sa = caps[a] / active[a] as f64;
+                    let sb = caps[b] / active[b] as f64;
+                    sa.partial_cmp(&sb).unwrap()
+                });
+            if let Some(li) = bottleneck {
+                let load = link_load(&paths, &rates, li);
+                assert!(
+                    (load - caps[li]).abs() <= caps[li] * 1e-9 + 1e-9,
+                    "bottleneck link {li} not saturated: {load} vs {}",
+                    caps[li]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn property_maxmin_dominance() {
+        // The max-min witness: every flow crosses a saturated link on which
+        // its rate is at least every other crossing flow's rate. (If not,
+        // the flow could be raised by lowering a *larger* flow — the
+        // allocation would not be max-min fair.)
+        testkit::check("maxmin-dominance", |rng| {
+            let nl = rng.range_usize(1, 10);
+            let nf = rng.range_usize(1, 20);
+            let caps: Vec<f64> = (0..nl).map(|_| rng.range_f64(1.0, 300.0)).collect();
+            let paths: Vec<Vec<LinkId>> = (0..nf)
+                .map(|_| {
+                    let len = rng.range_usize(1, (nl + 1).min(5));
+                    let mut links: Vec<u16> = (0..nl as u16).collect();
+                    rng.shuffle(&mut links);
+                    links.truncate(len);
+                    links.into_iter().map(LinkId).collect()
+                })
+                .collect();
+            let refs: Vec<&[LinkId]> = paths.iter().map(|p| p.as_slice()).collect();
+            let rates = max_min_rates(&caps, &refs);
+            for (f, p) in paths.iter().enumerate() {
+                let witness = p.iter().any(|&x| {
+                    let li = x.0 as usize;
+                    let load = link_load(&paths, &rates, li);
+                    let saturated = load >= caps[li] * (1.0 - 1e-9) - 1e-9;
+                    let dominant = paths.iter().zip(&rates).all(|(q, r)| {
+                        !q.iter().any(|&y| y.0 as usize == li)
+                            || rates[f] >= *r - 1e-9 - *r * 1e-9
+                    });
+                    saturated && dominant
+                });
+                assert!(
+                    witness,
+                    "flow {f} (rate {}) has no saturated link it dominates",
+                    rates[f]
+                );
+            }
+        });
+    }
+
     #[test]
     fn property_feasible_and_saturating() {
         testkit::check("maxmin-feasible", |rng| {

@@ -3,15 +3,22 @@
 //! print them. See DESIGN.md §5 for the experiment index.
 
 pub mod micro;
+pub mod policy_sweep;
 pub mod robust;
 pub mod serving_figs;
 
 pub use micro::{fig14_tp_sweep, fig15_sensitivity, fig16_fallback, fig7_bw_vs_size, fig8_bw_vs_paths, table2_direct_priority};
+pub use policy_sweep::policy_sweep;
 pub use robust::{fig10_static_split, fig11_cpu_overhead, fig9_coexistence};
 pub use serving_figs::{fig12_ttft, fig13_switching, fig2_ttft_share, fig3_swap_share};
 
 use crate::topology::h20x8;
 use crate::util::table::Table;
+
+/// Default RNG seed of the stochastic runners (overridable via `--seed`).
+/// Historically hardwired inside `serving_figs`; kept at the same value so
+/// default outputs are unchanged.
+pub const DEFAULT_SEED: u64 = 0xF16;
 
 /// Table 1: effective interconnect bandwidths of the simulated testbed.
 pub fn table1_interconnects() -> Table {
@@ -23,33 +30,36 @@ pub fn table1_interconnects() -> Table {
     t
 }
 
-/// Run a figure by id ("2", "7", "table2", ...) with default parameters;
-/// returns the printable report. Used by the CLI.
-pub fn run_by_name(id: &str, fast: bool) -> Option<String> {
+/// Run a figure by id ("2", "7", "table2", "policy", ...) with default
+/// parameters; returns the printable report. `seed` drives the stochastic
+/// runners (Fig 2/12 workload generation). Used by the CLI.
+pub fn run_by_name(id: &str, fast: bool, seed: u64) -> Option<String> {
     let s = match id {
         "table1" | "1" => table1_interconnects().render(),
-        "2" | "fig2" => fig2_ttft_share(fast).render(),
+        "2" | "fig2" => fig2_ttft_share(fast, seed).render(),
         "3" | "fig3" => fig3_swap_share().render(),
         "7" | "fig7" => fig7_bw_vs_size(fast).render(),
         "8" | "fig8" => fig8_bw_vs_paths(fast).render(),
         "9" | "fig9" => fig9_coexistence().render(),
         "10" | "fig10" => fig10_static_split().render(),
         "11" | "fig11" => fig11_cpu_overhead().render(),
-        "12" | "fig12" => fig12_ttft(fast).render(),
+        "12" | "fig12" => fig12_ttft(fast, seed).render(),
         "13" | "fig13" => fig13_switching().render(),
         "14" | "fig14" => fig14_tp_sweep().render(),
         "15" | "fig15" => fig15_sensitivity(fast).render(),
         "16" | "fig16" => fig16_fallback().render(),
         "table2" => table2_direct_priority().render(),
+        "policy" | "policy_sweep" => policy_sweep(fast).render(),
         _ => return None,
     };
     Some(s)
 }
 
-/// All figure ids, in paper order.
+/// All figure ids, in paper order (the policy sweep is this repo's own).
 pub fn all_ids() -> &'static [&'static str] {
     &[
         "table1", "2", "3", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "table2",
+        "policy",
     ]
 }
 
@@ -67,7 +77,7 @@ mod tests {
 
     #[test]
     fn run_by_name_dispatches() {
-        assert!(run_by_name("table1", true).is_some());
-        assert!(run_by_name("nope", true).is_none());
+        assert!(run_by_name("table1", true, DEFAULT_SEED).is_some());
+        assert!(run_by_name("nope", true, DEFAULT_SEED).is_none());
     }
 }

@@ -1,0 +1,120 @@
+//! Policy sweep: every transfer policy on the Fig-8 workload
+//! (bandwidth vs number of relay paths, one large H2D copy to gpu0).
+//!
+//! This is the cross-policy comparison the old architecture could not
+//! produce: native, static-split, the paper's greedy selector, and the
+//! two adaptive policies all run through the identical engine/measurement
+//! path, differing only in their [`crate::policy::TransferPolicy`].
+
+use crate::figures::micro::measure_bw;
+use crate::mma::MmaConfig;
+use crate::policy::{self, PolicySpec};
+use crate::topology::{h20x8, Direction, GpuId};
+use crate::util::table::Table;
+
+/// Policies compared, in table-column order.
+pub const POLICIES: [&str; 5] = [
+    "native",
+    "static-split",
+    "mma-greedy",
+    "congestion-feedback",
+    "numa-aware",
+];
+
+/// The first `n` relays for gpu0 (NUMA-local first, as Fig 8 sweeps them).
+fn relays_for(n: usize) -> Vec<GpuId> {
+    h20x8().relay_order(GpuId(0), &[]).into_iter().take(n).collect()
+}
+
+/// Engine configuration for one `(policy, relay-count)` sweep cell.
+/// Static-split spreads equal weights over the direct path + relays.
+pub fn cfg_for(policy: &str, n_relays: usize) -> MmaConfig {
+    let relays = relays_for(n_relays);
+    match policy {
+        "native" => MmaConfig::native(),
+        "static-split" => {
+            let weights = vec![1.0; relays.len() + 1];
+            policy::static_split(GpuId(0), &relays, &weights)
+        }
+        "mma-greedy" => MmaConfig::with_relays(relays),
+        "congestion-feedback" => MmaConfig {
+            policy: PolicySpec::congestion_feedback(),
+            ..MmaConfig::with_relays(relays)
+        },
+        "numa-aware" => MmaConfig {
+            policy: PolicySpec::numa_aware(),
+            ..MmaConfig::with_relays(relays)
+        },
+        other => panic!("unknown sweep policy {other:?}"),
+    }
+}
+
+/// The sweep table: H2D GB/s per policy at 0..=7 relay paths.
+pub fn policy_sweep(fast: bool) -> Table {
+    let bytes: u64 = if fast { 1 << 30 } else { 4 << 30 };
+    let mut header = vec!["relays".to_string()];
+    header.extend(POLICIES.iter().map(|p| format!("{p} GB/s")));
+    let mut t = Table::new(header);
+    for n in 0..=7usize {
+        let mut row = vec![n.to_string()];
+        for p in POLICIES {
+            let bw = measure_bw(Direction::H2D, bytes, cfg_for(p, n));
+            row.push(format!("{:.1}", bw / 1e9));
+        }
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::micro::mma_with_relays;
+
+    #[test]
+    fn sweep_reports_all_five_policies() {
+        let t = policy_sweep(true).render();
+        for p in POLICIES {
+            assert!(t.contains(p), "missing column {p}:\n{t}");
+        }
+        assert_eq!(t.lines().count(), 2 + 8, "8 relay rows:\n{t}");
+    }
+
+    #[test]
+    fn greedy_cell_matches_fig8_measurement_exactly() {
+        // The sweep must reproduce Fig 8's mma numbers: same policy, same
+        // engine path, same workload → within 1% (they are in fact the
+        // identical configuration).
+        let bytes = 2u64 << 30;
+        for n in [0usize, 3, 7] {
+            let fig8 = measure_bw(Direction::H2D, bytes, mma_with_relays(n));
+            let sweep = measure_bw(Direction::H2D, bytes, cfg_for("mma-greedy", n));
+            assert!(
+                (sweep - fig8).abs() <= 0.01 * fig8,
+                "{n} relays: sweep {sweep} vs fig8 {fig8}"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_policies_track_greedy_on_clean_fabric() {
+        // Uncontended Fig-8 workload: congestion feedback has no reason to
+        // demote paths, and numa-aware's 1 GB backlog is far above its
+        // remote threshold — both should land near greedy.
+        let bytes = 1u64 << 30;
+        let greedy = measure_bw(Direction::H2D, bytes, cfg_for("mma-greedy", 7));
+        for p in ["congestion-feedback", "numa-aware"] {
+            let bw = measure_bw(Direction::H2D, bytes, cfg_for(p, 7));
+            assert!(
+                bw > 0.9 * greedy,
+                "{p} fell behind greedy: {bw} vs {greedy}"
+            );
+        }
+    }
+
+    #[test]
+    fn native_cell_is_single_path() {
+        let bw = measure_bw(Direction::H2D, 1 << 30, cfg_for("native", 7));
+        assert!((45e9..60e9).contains(&bw), "native bw {bw}");
+    }
+}

@@ -1,8 +1,8 @@
 //! Robustness / load-balancing figures: Fig 9 (coexistence), Fig 10
 //! (adaptivity vs static splits), Fig 11 (CPU overhead). §5.1.2, §5.3.
 
-use crate::baseline;
 use crate::mma::{MmaConfig, SimWorld, TransferDesc};
+use crate::policy;
 use crate::sim::Time;
 use crate::topology::{h20x8, Direction, GpuId, NumaId};
 use crate::util::table::Table;
@@ -99,8 +99,8 @@ pub fn fig10_static_split() -> Table {
     let two_path = MmaConfig::with_relays(vec![GpuId(1)]);
     let rows: Vec<(&str, MmaConfig)> = vec![
         ("native", MmaConfig::native()),
-        ("static 1:1", baseline::split_1_1(GpuId(0), GpuId(1))),
-        ("static 1:2", baseline::split_1_2(GpuId(0), GpuId(1))),
+        ("static 1:1", policy::split_1_1(GpuId(0), GpuId(1))),
+        ("static 1:2", policy::split_1_2(GpuId(0), GpuId(1))),
         ("MMA (pull)", two_path),
     ];
     let mut t = Table::new(["method", "no-bg (ms)", "with-bg (ms)"]);

@@ -19,8 +19,15 @@ pub const CONTEXTS: [u32; 3] = [16_384, 32_768, 65_536];
 
 /// Run the §5.2.1 multi-turn QA workload: returns (mean TTFT seconds,
 /// mean fetch fraction) over prefix-hit turns (turn 1 discarded).
-pub fn qa_ttft(model: &ModelSpec, context: u32, mma: MmaConfig, n_docs: usize) -> (f64, f64) {
-    let mut rng = Rng::seed_from_u64(0xF1_6);
+/// `seed` drives the session generator (`--seed` end to end).
+pub fn qa_ttft(
+    model: &ModelSpec,
+    context: u32,
+    mma: MmaConfig,
+    n_docs: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = Rng::seed_from_u64(seed);
     let sessions = longdoc_sessions(&mut rng, n_docs, context, 3);
     let cfg = ServingConfig {
         // Big enough pools that capacity effects don't interfere; the
@@ -67,12 +74,12 @@ pub fn qa_ttft(model: &ModelSpec, context: u32, mma: MmaConfig, n_docs: usize) -
 }
 
 /// Fig 2: proportion of prefix-cache fetching time in TTFT (baseline).
-pub fn fig2_ttft_share(fast: bool) -> Table {
+pub fn fig2_ttft_share(fast: bool, seed: u64) -> Table {
     let n_docs = if fast { 2 } else { 5 };
     let mut t = Table::new(["model", "context", "TTFT (s)", "fetch share"]);
     for m in paper_models() {
         for ctx in CONTEXTS {
-            let (ttft, frac) = qa_ttft(&m, ctx, MmaConfig::native(), n_docs);
+            let (ttft, frac) = qa_ttft(&m, ctx, MmaConfig::native(), n_docs, seed);
             t.row([
                 m.name.to_string(),
                 format!("{}k", ctx / 1024),
@@ -85,13 +92,13 @@ pub fn fig2_ttft_share(fast: bool) -> Table {
 }
 
 /// Fig 12: TTFT baseline vs MMA across models × context lengths.
-pub fn fig12_ttft(fast: bool) -> Table {
+pub fn fig12_ttft(fast: bool, seed: u64) -> Table {
     let n_docs = if fast { 2 } else { 5 };
     let mut t = Table::new(["model", "context", "baseline TTFT (s)", "MMA TTFT (s)", "speedup"]);
     for m in paper_models() {
         for ctx in CONTEXTS {
-            let (base, _) = qa_ttft(&m, ctx, MmaConfig::native(), n_docs);
-            let (mma, _) = qa_ttft(&m, ctx, MmaConfig::default(), n_docs);
+            let (base, _) = qa_ttft(&m, ctx, MmaConfig::native(), n_docs, seed);
+            let (mma, _) = qa_ttft(&m, ctx, MmaConfig::default(), n_docs, seed);
             t.row([
                 m.name.to_string(),
                 format!("{}k", ctx / 1024),
@@ -176,11 +183,13 @@ mod tests {
     use super::*;
     use crate::models::{qwen3_32b, qwen_7b_chat};
 
+    const SEED: u64 = crate::figures::DEFAULT_SEED;
+
     #[test]
     fn fig2_fetch_share_grows_with_context_and_hits_70pct() {
         let m = qwen_7b_chat();
-        let (_, f16) = qa_ttft(&m, 16_384, MmaConfig::native(), 2);
-        let (_, f64k) = qa_ttft(&m, 65_536, MmaConfig::native(), 2);
+        let (_, f16) = qa_ttft(&m, 16_384, MmaConfig::native(), 2, SEED);
+        let (_, f64k) = qa_ttft(&m, 65_536, MmaConfig::native(), 2, SEED);
         assert!(f64k > f16, "share must grow with context: {f16} → {f64k}");
         // Paper: up to 70% at 64k on Qwen-7B-Chat.
         assert!((0.5..0.9).contains(&f64k), "64k fetch share {f64k}");
@@ -189,14 +198,26 @@ mod tests {
     #[test]
     fn fig12_speedup_band() {
         let m = qwen_7b_chat();
-        let (base, _) = qa_ttft(&m, 65_536, MmaConfig::native(), 2);
-        let (mma, _) = qa_ttft(&m, 65_536, MmaConfig::default(), 2);
+        let (base, _) = qa_ttft(&m, 65_536, MmaConfig::native(), 2, SEED);
+        let (mma, _) = qa_ttft(&m, 65_536, MmaConfig::default(), 2, SEED);
         let x = base / mma;
         // Paper: 1.14–2.38x, largest at 64k (2.38x).
         assert!((1.5..3.2).contains(&x), "64k TTFT speedup {x}");
-        let (b16, _) = qa_ttft(&m, 16_384, MmaConfig::native(), 2);
-        let (m16, _) = qa_ttft(&m, 16_384, MmaConfig::default(), 2);
+        let (b16, _) = qa_ttft(&m, 16_384, MmaConfig::native(), 2, SEED);
+        let (m16, _) = qa_ttft(&m, 16_384, MmaConfig::default(), 2, SEED);
         assert!(b16 / m16 < x, "longer prefixes must benefit more");
+    }
+
+    #[test]
+    fn qa_ttft_reproducible_and_seed_sensitive() {
+        // Same seed → identical results; the seed genuinely reaches the
+        // workload generator (different seed → different sessions).
+        let m = qwen_7b_chat();
+        let a = qa_ttft(&m, 16_384, MmaConfig::native(), 2, 7);
+        let b = qa_ttft(&m, 16_384, MmaConfig::native(), 2, 7);
+        assert_eq!(a, b, "same seed must reproduce bit-exactly");
+        let c = qa_ttft(&m, 16_384, MmaConfig::native(), 2, 8);
+        assert_ne!(a, c, "different seed must change the workload");
     }
 
     #[test]

@@ -19,15 +19,20 @@
 //! and the paper's system on top:
 //!
 //! * [`mma`] — Transfer Task Interceptor, Sync Engine, Multipath Transfer
-//!   Engine (Task Manager / Path Selector / Task Launcher).
-//! * [`baseline`] — native single-path copies and static splitters.
+//!   Engine (Task Manager / Task Launcher); placement is delegated to a
+//!   policy.
+//! * [`policy`] — the pluggable transfer-policy layer: one
+//!   [`policy::TransferPolicy`] trait, with the paper's greedy selector,
+//!   the native and static-split baselines, and adaptive strategies
+//!   (congestion feedback, NUMA-aware) as interchangeable implementations.
 //! * [`serving`] — vLLM-like serving layer (paged KV cache, prefix cache,
 //!   sleep/wake model registry, continuous batching, PD scheduling).
 //! * [`runtime`] — PJRT client: loads AOT-compiled JAX/Pallas artifacts and
-//!   executes the real model on the serving path.
-//! * [`figures`] — one runner per paper table/figure.
+//!   executes the real model on the serving path (stubbed without the
+//!   `pjrt` feature).
+//! * [`figures`] — one runner per paper table/figure, plus the
+//!   cross-policy `policy_sweep`.
 
-pub mod baseline;
 pub mod testkit;
 pub mod util;
 pub mod config;
@@ -38,6 +43,7 @@ pub mod memory;
 pub mod metrics;
 pub mod mma;
 pub mod models;
+pub mod policy;
 pub mod roofline;
 pub mod runtime;
 pub mod serving;
@@ -45,5 +51,8 @@ pub mod sim;
 pub mod topology;
 pub mod workload;
 
+/// Crate-wide error type (offline build: no `anyhow`).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, Error>;

@@ -2,17 +2,23 @@
 //!
 //! ```text
 //! mma topo [--preset h20x8]               describe the simulated server
-//! mma microbench [--dir h2d] [--size 1GB] [--relays 7] [--mode mma|native]
-//! mma figure <id|all> [--fast]            regenerate a paper table/figure
-//! mma serve [--model qwen-7b] [--ctx 65536] [--docs 4] [--mode mma|native]
-//! mma switch [--model qwen3-32b] [--mode mma|native]
+//! mma microbench [--dir h2d] [--size 1GB] [--relays 7] [--policy <name>]
+//! mma figure <id|all> [--fast] [--seed N] regenerate a paper table/figure
+//! mma serve [--model qwen-7b] [--ctx 65536] [--docs 4] [--policy <name>]
+//! mma switch [--model qwen3-32b] [--policy <name>]
 //! mma config-check <file.toml>            validate a config file
 //! ```
+//!
+//! `--policy` selects the transfer policy on any run: `native`,
+//! `static-split` (or `static:<gpu>:<w>,...`), `mma-greedy`,
+//! `congestion-feedback`, `numa-aware`. The older `--mode mma|native`
+//! spelling still works. `--seed N` makes stochastic runners reproducible.
 
 use mma::config::RunConfig;
 use mma::figures;
 use mma::mma::{MmaConfig, SimWorld, TransferDesc};
 use mma::models;
+use mma::policy::PolicySpec;
 use mma::topology::{Direction, GpuId, NumaId, Preset};
 use mma::util::cli::Args;
 use mma::util::fmt;
@@ -22,6 +28,20 @@ fn mma_cfg(args: &Args) -> MmaConfig {
         "native" => MmaConfig::native(),
         _ => MmaConfig::default(),
     };
+    if let Some(p) = args.get("policy") {
+        let spec = PolicySpec::parse(p).unwrap_or_else(|| {
+            eprintln!(
+                "unknown policy {p:?}; one of native, static-split, \
+                 static:<gpu>:<w>[,...], mma-greedy, congestion-feedback, numa-aware"
+            );
+            std::process::exit(2);
+        });
+        if let Err(e) = spec.validate(Preset::H20x8.build().gpu_count()) {
+            eprintln!("invalid --policy: {e}");
+            std::process::exit(2);
+        }
+        cfg.set_policy(spec);
+    }
     if let Some(r) = args.get_as::<usize>("relays") {
         let topo = Preset::H20x8.build();
         cfg.relay_gpus = Some(
@@ -54,6 +74,7 @@ fn main() {
     let args = Args::from_env();
     let mut cfg = RunConfig::default();
     cfg.apply_env();
+    let seed = args.seed_or(figures::DEFAULT_SEED);
     match args.pos(0).unwrap_or("help") {
         "topo" => {
             let preset = Preset::parse(&args.str_or("preset", "h20x8")).unwrap_or(Preset::H20x8);
@@ -66,6 +87,7 @@ fn main() {
             };
             let bytes = args.size_or("size", 1 << 30);
             let mcfg = mma_cfg(&args);
+            let policy = mcfg.policy.name();
             let mut w = SimWorld::new(cfg.topology(), mcfg);
             let s = w.stream(GpuId(0));
             let t = w.memcpy_async(s, TransferDesc::new(dir, GpuId(0), NumaId(0), bytes));
@@ -75,7 +97,7 @@ fn main() {
                 "{} {} via {}: {} ({} direct / {} relay)",
                 dir.label(),
                 fmt::bytes(bytes),
-                args.str_or("mode", "mma"),
+                policy,
                 fmt::gbps(rec.bandwidth().unwrap_or(0.0)),
                 fmt::bytes(rec.bytes_direct),
                 fmt::bytes(rec.bytes_relay),
@@ -87,10 +109,10 @@ fn main() {
             if id == "all" {
                 for id in figures::all_ids() {
                     println!("\n===== figure {id} =====");
-                    print!("{}", figures::run_by_name(id, fast).unwrap());
+                    print!("{}", figures::run_by_name(id, fast, seed).unwrap());
                 }
             } else {
-                match figures::run_by_name(id, fast) {
+                match figures::run_by_name(id, fast, seed) {
                     Some(s) => print!("{s}"),
                     None => {
                         eprintln!("unknown figure {id:?}; one of {:?}", figures::all_ids());
@@ -104,12 +126,12 @@ fn main() {
             let ctx: u32 = args.or("ctx", 65_536);
             let docs: usize = args.or("docs", 4);
             let mcfg = mma_cfg(&args);
-            let (ttft, frac) = figures::serving_figs::qa_ttft(&model, ctx, mcfg, docs);
+            let policy = mcfg.policy.name();
+            let (ttft, frac) = figures::serving_figs::qa_ttft(&model, ctx, mcfg, docs, seed);
             println!(
-                "{} ctx={}k docs={docs} mode={}: mean TTFT {} (fetch share {:.0}%)",
+                "{} ctx={}k docs={docs} policy={policy}: mean TTFT {} (fetch share {:.0}%)",
                 model.name,
                 ctx / 1024,
-                args.str_or("mode", "mma"),
                 fmt::secs(ttft),
                 frac * 100.0
             );
@@ -117,11 +139,11 @@ fn main() {
         "switch" => {
             let model = model_by_name(&args.str_or("model", "qwen3-32b"));
             let mcfg = mma_cfg(&args);
+            let policy = mcfg.policy.name();
             let (s, w) = figures::serving_figs::sleep_wake(&model, mcfg);
             println!(
-                "{} mode={}: sleep {} (transfer {:.0}%), wake {} (transfer {:.0}%)",
+                "{} policy={policy}: sleep {} (transfer {:.0}%), wake {} (transfer {:.0}%)",
                 model.name,
-                args.str_or("mode", "mma"),
                 fmt::secs(s.total().as_secs_f64()),
                 s.transfer_fraction() * 100.0,
                 fmt::secs(w.total().as_secs_f64()),
@@ -132,7 +154,12 @@ fn main() {
             let path = args.pos(1).expect("usage: mma config-check <file.toml>");
             let text = std::fs::read_to_string(path).expect("read config");
             match RunConfig::from_toml(&text) {
-                Ok(c) => println!("ok: preset={:?}, chunk={}", c.preset, c.mma.chunk_bytes),
+                Ok(c) => println!(
+                    "ok: preset={:?}, policy={}, chunk={}",
+                    c.preset,
+                    c.mma.policy.name(),
+                    c.mma.chunk_bytes
+                ),
                 Err(e) => {
                     eprintln!("invalid config: {e}");
                     std::process::exit(1);
@@ -143,6 +170,10 @@ fn main() {
             println!("mma — Multipath Memory Access (paper reproduction)");
             println!("subcommands: topo | microbench | figure <id|all> | serve | switch | config-check");
             println!("figures: {:?}", figures::all_ids());
+            println!(
+                "policies (--policy): native | static-split | static:<gpu>:<w>[,...] | \
+                 mma-greedy | congestion-feedback | numa-aware"
+            );
         }
     }
 }

@@ -167,6 +167,11 @@ impl SimWorld {
         &self.engines[idx]
     }
 
+    /// Name of process 0's transfer policy (what `mma serve` reports).
+    pub fn policy_name(&self) -> &'static str {
+        self.engines[0].cfg.policy.name()
+    }
+
     /// Create a stream on a device.
     pub fn stream(&mut self, dev: GpuId) -> StreamHandle {
         StreamHandle {

@@ -12,12 +12,12 @@
 //! explicit latency terms, and accounts their CPU burn in
 //! [`super::stats::EngineStats`].
 
-use super::path_selector::{OutstandingQueue, PathSelector, Pulled};
 use super::stats::EngineStats;
 use super::task_manager::{Chunk, TaskManager};
 use super::transfer_task::TransferDesc;
-use super::{Mode, MmaConfig};
+use super::MmaConfig;
 use crate::gpusim::TransferId;
+use crate::policy::{OutstandingQueue, PolicyView, Pulled, TransferPolicy};
 use crate::sim::Time;
 use crate::topology::{Direction, GpuId, LinkId, NumaId, Topology};
 use std::collections::{HashMap, VecDeque};
@@ -137,6 +137,9 @@ pub struct Engine {
     pub dir: Direction,
     /// Tunables.
     pub cfg: MmaConfig,
+    /// The pluggable chunk→path placement strategy (built from
+    /// `cfg.policy`; each engine instance carries its own state).
+    policy: Box<dyn TransferPolicy>,
     tm: TaskManager,
     queues: Vec<OutstandingQueue>,
     lanes: Vec<Lanes>,
@@ -155,6 +158,7 @@ impl Engine {
         Engine {
             id,
             dir,
+            policy: cfg.policy.build(&cfg),
             tm: TaskManager::new(gpu_count),
             queues: (0..gpu_count)
                 .map(|g| OutstandingQueue::new(GpuId(g as u8), cfg.outstanding_depth))
@@ -181,13 +185,13 @@ impl Engine {
     }
 
     /// The copy point of `transfer` is active (§3.1 step ②→③): split into
-    /// micro-tasks and wake the workers.
+    /// micro-tasks, hand them to the policy, and wake the workers.
     pub fn activate(
         &mut self,
         now: Time,
         transfer: TransferId,
         desc: TransferDesc,
-        _topo: &Topology,
+        topo: &Topology,
     ) -> Vec<EngineAction> {
         let chunks = TaskManager::split(transfer, desc.gpu, desc.bytes, self.cfg.chunk_bytes);
         let total = chunks.len() as u32;
@@ -201,25 +205,13 @@ impl Engine {
                 bytes_relay: 0,
             },
         );
-        match self.cfg.mode.clone() {
-            Mode::Static(ratios) => {
-                // Smooth weighted round-robin over the configured paths.
-                let total_w: f64 = ratios.iter().map(|(_, w)| *w).sum();
-                let mut current: Vec<f64> = vec![0.0; ratios.len()];
-                for c in chunks {
-                    let mut best = 0;
-                    for i in 0..ratios.len() {
-                        current[i] += ratios[i].1;
-                        if current[i] > current[best] {
-                            best = i;
-                        }
-                    }
-                    current[best] -= total_w;
-                    self.tm.push_assigned(ratios[best].0, c);
-                }
-            }
-            _ => self.tm.push_pending(&chunks),
-        }
+        let view = PolicyView {
+            topo,
+            dir: self.dir,
+            queues: &self.queues,
+            now,
+        };
+        self.policy.admit(&chunks, &mut self.tm, &view);
         // Wake every worker after the fixed activation overhead; workers
         // with no eligible work simply find nothing to pull.
         let at = now + Time::from_ns(self.cfg.activation_ns);
@@ -246,7 +238,13 @@ impl Engine {
             let pulled = if relay_blocked && !self.tm.has_direct(gpu) {
                 None
             } else {
-                PathSelector::pull(&mut self.tm, topo, &self.cfg, gpu)
+                let view = PolicyView {
+                    topo,
+                    dir: self.dir,
+                    queues: &self.queues,
+                    now,
+                };
+                self.policy.pull(&mut self.tm, gpu, &view)
             };
             let Some(pulled) = pulled else { break };
             actions.extend(self.dispatch(now, gpu, pulled, topo));
@@ -484,11 +482,15 @@ impl Engine {
             self.stats.queue_idle(gpu, now);
         }
 
+        // Feed the completion back to the policy (its congestion signal).
+        let observed = now.since(inf.dispatched).as_secs_f64();
+        self.policy
+            .on_completion(gpu, inf.chunk.bytes, inf.relay, observed, inf.expected_s);
+
         // Contention inference (§3.4.2): completion far beyond the
         // uncontended expectation marks the path contended; a clean
         // completion clears it.
         if self.cfg.contention_backoff {
-            let observed = now.since(inf.dispatched).as_secs_f64();
             let was = self.queues[gi].contended;
             self.queues[gi].contended = observed > self.cfg.contention_beta * inf.expected_s;
             if self.queues[gi].contended && !was {
@@ -761,10 +763,10 @@ mod tests {
     }
 
     #[test]
-    fn static_mode_assigns_by_ratio() {
+    fn static_policy_assigns_by_ratio() {
         let topo = h20x8();
         let cfg = MmaConfig {
-            mode: Mode::Static(vec![(GpuId(0), 1.0), (GpuId(1), 2.0)]),
+            policy: crate::policy::PolicySpec::Static(vec![(GpuId(0), 1.0), (GpuId(1), 2.0)]),
             ..Default::default()
         };
         let mut e = Engine::new(0, Direction::H2D, cfg, 8);

@@ -11,9 +11,13 @@
 //!   threshold also filters small control messages);
 //! * GPU↔GPU copies and collective traffic are never intercepted (they use
 //!   separate code paths: P2P DMA / kernel collectives).
+//!
+//! Whether a policy wants copies in the engine at all is the policy's own
+//! call ([`crate::policy::PolicySpec::engine_eligible`]) — the native
+//! baseline's defining property is precisely *not* being intercepted.
 
 use super::transfer_task::TransferDesc;
-use super::{Mode, MmaConfig};
+use super::MmaConfig;
 
 /// Routing decision for one intercepted copy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,21 +30,17 @@ pub enum Route {
 
 /// Decide how to route an intercepted host↔device copy.
 pub fn route(cfg: &MmaConfig, desc: &TransferDesc) -> Route {
-    match cfg.mode {
-        Mode::Native => Route::Native,
-        Mode::Mma | Mode::Static(_) => {
-            if desc.bytes < cfg.fallback_threshold {
-                Route::Native
-            } else {
-                Route::Engine
-            }
-        }
+    if !cfg.policy.engine_eligible() || desc.bytes < cfg.fallback_threshold {
+        Route::Native
+    } else {
+        Route::Engine
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::PolicySpec;
     use crate::topology::{Direction, GpuId, NumaId};
 
     fn desc(bytes: u64) -> TransferDesc {
@@ -57,7 +57,7 @@ mod tests {
     }
 
     #[test]
-    fn native_mode_always_native() {
+    fn native_policy_always_native() {
         let cfg = MmaConfig::native();
         assert_eq!(route(&cfg, &desc(8 << 30)), Route::Native);
     }
@@ -69,12 +69,16 @@ mod tests {
     }
 
     #[test]
-    fn static_mode_respects_threshold() {
-        let cfg = MmaConfig {
-            mode: Mode::Static(vec![(GpuId(0), 1.0)]),
-            ..Default::default()
-        };
-        assert_eq!(route(&cfg, &desc(1_000)), Route::Native);
-        assert_eq!(route(&cfg, &desc(100_000_000)), Route::Engine);
+    fn every_engine_policy_respects_threshold() {
+        for policy in [
+            PolicySpec::MmaGreedy,
+            PolicySpec::Static(vec![(GpuId(0), 1.0)]),
+            PolicySpec::congestion_feedback(),
+            PolicySpec::numa_aware(),
+        ] {
+            let cfg = MmaConfig::with_policy(policy);
+            assert_eq!(route(&cfg, &desc(1_000)), Route::Native);
+            assert_eq!(route(&cfg, &desc(100_000_000)), Route::Engine);
+        }
     }
 }

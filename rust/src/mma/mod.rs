@@ -8,17 +8,20 @@
 //! * [`interceptor`] — the CUDA-API boundary hook + fallback threshold.
 //! * [`sync_engine`] — Dummy Task lifecycle (host callback + spin kernel).
 //! * [`task_manager`] — chunking into micro-tasks, destination-tagged queue.
-//! * [`path_selector`] — pull-based selection with outstanding-queue
-//!   backpressure, direct-path priority and longest-remaining stealing.
 //! * [`engine`] — per-direction engine instances, worker actors, the Task
 //!   Launcher's direct/relay dispatch and dual-pipeline relay.
 //! * [`driver`] — the composed simulation world and its event loop.
 //! * [`stats`] — per-engine counters, CPU-time accounting (Fig 11).
+//!
+//! Chunk→path *placement* is not decided here: the engine delegates it to
+//! a pluggable [`crate::policy::TransferPolicy`] selected by
+//! [`MmaConfig::policy`]. The paper's pull-based greedy selector (§3.4.2)
+//! is one implementation ([`crate::policy::MmaGreedy`]); the native and
+//! static-split baselines and the adaptive strategies are others.
 
 pub mod driver;
 pub mod engine;
 pub mod interceptor;
-pub mod path_selector;
 pub mod stats;
 pub mod sync_engine;
 pub mod task_manager;
@@ -28,27 +31,16 @@ pub use driver::SimWorld;
 pub use engine::Engine;
 pub use transfer_task::{TransferClass, TransferDesc};
 
+use crate::policy::PolicySpec;
 use crate::topology::GpuId;
-
-/// Selector / splitting policy.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Mode {
-    /// Full MMA: pull-based multipath with queue backpressure.
-    Mma,
-    /// Native CUDA semantics: single direct path, no interception.
-    Native,
-    /// Static splitting baseline (Fig 10): fixed byte ratios per path.
-    /// Entries are `(path_gpu, weight)`; the destination's own entry is the
-    /// direct path, others are relays.
-    Static(Vec<(GpuId, f64)>),
-}
 
 /// Runtime tunables of MMA (all exposed as env vars in the paper's
 /// implementation; here via [`crate::config`] / CLI).
 #[derive(Clone, Debug)]
 pub struct MmaConfig {
-    /// Engine mode.
-    pub mode: Mode,
+    /// Transfer policy deciding chunk→path placement (see
+    /// [`crate::policy`]).
+    pub policy: PolicySpec,
     /// Micro-task (chunk) size in bytes. Paper default: 5 MB (§3.4/§5.3).
     pub chunk_bytes: u64,
     /// Outstanding-queue depth per PCIe link. Paper sweet spot: 2 (§5.3).
@@ -77,7 +69,7 @@ pub struct MmaConfig {
 impl Default for MmaConfig {
     fn default() -> Self {
         MmaConfig {
-            mode: Mode::Mma,
+            policy: PolicySpec::MmaGreedy,
             chunk_bytes: 5_000_000,
             outstanding_depth: 2,
             fallback_threshold: 11_300_000,
@@ -97,9 +89,31 @@ impl MmaConfig {
     /// Native-baseline configuration (everything bypasses the engine).
     pub fn native() -> MmaConfig {
         MmaConfig {
-            mode: Mode::Native,
+            policy: PolicySpec::Native,
             ..Default::default()
         }
+    }
+
+    /// Default configuration running the given policy (see
+    /// [`MmaConfig::set_policy`] for the implications applied).
+    pub fn with_policy(policy: PolicySpec) -> MmaConfig {
+        let mut cfg = MmaConfig::default();
+        cfg.set_policy(policy);
+        cfg
+    }
+
+    /// Select `policy`, applying its configuration implications. Static
+    /// splitting has no adaptive machinery (Fig 10's defining property),
+    /// so choosing it by name disables contention backoff and direct
+    /// priority — the same invariants [`crate::policy::static_split`]
+    /// establishes. Every policy-selection surface (TOML `[policy]`,
+    /// `MMA_POLICY`, `--policy`) funnels through here.
+    pub fn set_policy(&mut self, policy: PolicySpec) {
+        if matches!(policy, PolicySpec::Static(_)) {
+            self.contention_backoff = false;
+            self.direct_priority = false;
+        }
+        self.policy = policy;
     }
 
     /// MMA with an explicit relay set.

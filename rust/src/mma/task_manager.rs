@@ -103,15 +103,37 @@ impl TaskManager {
         gpu: GpuId,
         mut eligible: impl FnMut(GpuId) -> bool,
     ) -> Option<Chunk> {
+        self.pop_steal_scored(gpu, |dest, remaining| {
+            if eligible(dest) {
+                Some(remaining as f64)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Pop a relay micro-task for `gpu` from the destination with the
+    /// highest `score(dest, remaining_bytes)`; `None` scores mark a
+    /// destination ineligible, ties keep the lowest GPU index. This is the
+    /// generalized steal that [`crate::policy`] implementations rank with
+    /// (NUMA discounts, backlog thresholds, ...).
+    pub fn pop_steal_scored(
+        &mut self,
+        gpu: GpuId,
+        mut score: impl FnMut(GpuId, u64) -> Option<f64>,
+    ) -> Option<Chunk> {
         let mut best: Option<GpuId> = None;
-        let mut best_remaining = 0u64;
+        let mut best_score = 0.0f64;
         for d in 0..self.pending.len() {
             let dest = GpuId(d as u8);
-            if dest == gpu || self.remaining[d] == 0 || !eligible(dest) {
+            if dest == gpu || self.remaining[d] == 0 {
                 continue;
             }
-            if self.remaining[d] > best_remaining {
-                best_remaining = self.remaining[d];
+            let Some(s) = score(dest, self.remaining[d]) else {
+                continue;
+            };
+            if s > best_score {
+                best_score = s;
                 best = Some(dest);
             }
         }
@@ -220,6 +242,27 @@ mod tests {
         assert_eq!(c.dest, GpuId(3));
         // With destination 3 filtered out, nothing remains stealable.
         assert!(tm.pop_steal(GpuId(0), |d| d != GpuId(3)).is_none());
+    }
+
+    #[test]
+    fn scored_steal_ranks_and_filters() {
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&TaskManager::split(tid(1), GpuId(1), 10_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(tid(2), GpuId(2), 30_000_000, 5_000_000));
+        // Inverted scoring: the *smaller* backlog wins.
+        let c = tm
+            .pop_steal_scored(GpuId(0), |_, rem| Some(1.0 / rem as f64))
+            .unwrap();
+        assert_eq!(c.dest, GpuId(1));
+        // None scores exclude destinations entirely.
+        let c = tm
+            .pop_steal_scored(GpuId(0), |d, rem| {
+                (d != GpuId(2)).then_some(rem as f64)
+            })
+            .unwrap();
+        assert_eq!(c.dest, GpuId(1));
+        // Zero scores never win (nothing stealable).
+        assert!(tm.pop_steal_scored(GpuId(0), |_, _| Some(0.0)).is_none());
     }
 
     #[test]

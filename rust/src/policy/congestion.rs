@@ -1,0 +1,193 @@
+//! Congestion-feedback policy: greedy selection re-weighted by *observed*
+//! per-path delivered bandwidth.
+//!
+//! The paper's selector infers congestion per micro-task (observed vs
+//! expected service time) and backs the queue off binarily. This policy
+//! instead integrates the completion stream into a per-path EWMA of
+//! delivered bandwidth and compares paths against each other: a path whose
+//! EWMA falls below `min_share` of the current best path stops volunteering
+//! for relay work (its own destination's traffic still flows) until its
+//! EWMA recovers. The old architecture could not express this — the
+//! hardwired selector had no completion feedback channel and no cross-path
+//! state.
+
+use super::{PolicyView, Pulled, TransferPolicy};
+use crate::mma::task_manager::TaskManager;
+use crate::mma::MmaConfig;
+use crate::topology::GpuId;
+
+/// Greedy pulls gated by relative per-path EWMA delivered bandwidth.
+#[derive(Debug, Clone)]
+pub struct CongestionFeedback {
+    /// Prefer own-destination micro-tasks first.
+    pub direct_priority: bool,
+    /// Relay candidates; `None` = every peer GPU.
+    pub relay_gpus: Option<Vec<GpuId>>,
+    /// Restrict relays to the target's NUMA node.
+    pub numa_local_only: bool,
+    /// EWMA smoothing factor in `(0, 1]`.
+    pub ewma_alpha: f64,
+    /// Relay-eligibility threshold vs the best path's EWMA.
+    pub min_share: f64,
+    /// Per-path EWMA of delivered bandwidth (B/s); `None` = no samples yet.
+    ewma_bps: Vec<Option<f64>>,
+}
+
+impl CongestionFeedback {
+    /// Build from the engine's shared knobs plus the feedback parameters.
+    pub fn new(cfg: &MmaConfig, ewma_alpha: f64, min_share: f64) -> CongestionFeedback {
+        assert!(
+            ewma_alpha > 0.0 && ewma_alpha <= 1.0,
+            "ewma_alpha must be in (0, 1]"
+        );
+        assert!(
+            (0.0..=1.0).contains(&min_share),
+            "min_share must be in [0, 1]"
+        );
+        CongestionFeedback {
+            direct_priority: cfg.direct_priority,
+            relay_gpus: cfg.relay_gpus.clone(),
+            numa_local_only: cfg.numa_local_only,
+            ewma_alpha,
+            min_share,
+            ewma_bps: Vec::new(),
+        }
+    }
+
+    /// Current EWMA for a path, if it has completions.
+    pub fn ewma_bps(&self, gpu: GpuId) -> Option<f64> {
+        self.ewma_bps.get(gpu.0 as usize).copied().flatten()
+    }
+
+    /// Is `gpu`'s delivered bandwidth healthy enough to take relay work?
+    /// Optimistic before the first sample (cold paths must get a chance to
+    /// prove themselves).
+    pub fn share_ok(&self, gpu: GpuId) -> bool {
+        let Some(mine) = self.ewma_bps(gpu) else {
+            return true;
+        };
+        let best = self
+            .ewma_bps
+            .iter()
+            .filter_map(|x| *x)
+            .fold(0.0f64, f64::max);
+        best <= 0.0 || mine >= self.min_share * best
+    }
+}
+
+impl TransferPolicy for CongestionFeedback {
+    fn name(&self) -> &'static str {
+        "congestion-feedback"
+    }
+
+    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, view: &PolicyView) -> Option<Pulled> {
+        let topo = view.topo;
+        let numa_local_only = self.numa_local_only;
+        // Greedy, with the EWMA gate layered onto relay eligibility.
+        let relay_ok = super::in_relay_set(&self.relay_gpus, gpu) && self.share_ok(gpu);
+        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, |dest, remaining| {
+            if !numa_local_only || topo.numa_of(dest) == topo.numa_of(gpu) {
+                Some(remaining as f64)
+            } else {
+                None
+            }
+        })
+    }
+
+    fn on_completion(
+        &mut self,
+        path_gpu: GpuId,
+        bytes: u64,
+        _relay: bool,
+        observed_s: f64,
+        _expected_s: f64,
+    ) {
+        let i = path_gpu.0 as usize;
+        if self.ewma_bps.len() <= i {
+            self.ewma_bps.resize(i + 1, None);
+        }
+        let inst = bytes as f64 / observed_s.max(1e-12);
+        self.ewma_bps[i] = Some(match self.ewma_bps[i] {
+            None => inst,
+            Some(prev) => self.ewma_alpha * inst + (1.0 - self.ewma_alpha) * prev,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::TransferId;
+    use crate::sim::Time;
+    use crate::topology::{h20x8, Direction, Topology};
+
+    fn view(topo: &Topology) -> PolicyView<'_> {
+        PolicyView {
+            topo,
+            dir: Direction::H2D,
+            queues: &[],
+            now: Time::ZERO,
+        }
+    }
+
+    fn policy() -> CongestionFeedback {
+        CongestionFeedback::new(&MmaConfig::default(), 0.5, 0.4)
+    }
+
+    #[test]
+    fn ewma_tracks_completions() {
+        let mut p = policy();
+        assert_eq!(p.ewma_bps(GpuId(2)), None);
+        // 5 MB in 100 us → 50 GB/s.
+        p.on_completion(GpuId(2), 5_000_000, true, 100e-6, 80e-6);
+        let first = p.ewma_bps(GpuId(2)).unwrap();
+        assert!((first - 50e9).abs() < 1e6, "{first}");
+        // A slow completion (5 GB/s) pulls the EWMA halfway down (α=0.5).
+        p.on_completion(GpuId(2), 5_000_000, true, 1e-3, 80e-6);
+        let second = p.ewma_bps(GpuId(2)).unwrap();
+        assert!((second - 27.5e9).abs() < 1e6, "{second}");
+    }
+
+    #[test]
+    fn slow_path_loses_relay_eligibility_and_recovers() {
+        let topo = h20x8();
+        let mut p = policy();
+        // Healthy peer at 50 GB/s; gpu1 crawling at 2 GB/s (< 40% of best).
+        p.on_completion(GpuId(2), 5_000_000, true, 100e-6, 80e-6);
+        p.on_completion(GpuId(1), 5_000_000, true, 2.5e-3, 80e-6);
+        assert!(p.share_ok(GpuId(2)));
+        assert!(!p.share_ok(GpuId(1)));
+
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 50_000_000, 5_000_000));
+        // The degraded path declines relay work; the healthy one takes it.
+        assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_none());
+        assert!(p.pull(&mut tm, GpuId(2), &view(&topo)).unwrap().is_relay());
+
+        // Fast completions restore the EWMA and eligibility (α=0.5 →
+        // two 50 GB/s samples lift 2 GB/s back above the 20 GB/s bar).
+        p.on_completion(GpuId(1), 5_000_000, true, 100e-6, 80e-6);
+        p.on_completion(GpuId(1), 5_000_000, true, 100e-6, 80e-6);
+        assert!(p.share_ok(GpuId(1)));
+        assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).unwrap().is_relay());
+    }
+
+    #[test]
+    fn direct_work_flows_even_on_a_degraded_path() {
+        let topo = h20x8();
+        let mut p = policy();
+        p.on_completion(GpuId(2), 5_000_000, true, 100e-6, 80e-6);
+        p.on_completion(GpuId(0), 5_000_000, false, 2.5e-3, 80e-6);
+        assert!(!p.share_ok(GpuId(0)));
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        // gpu0's own destination traffic is never gated.
+        assert!(!p.pull(&mut tm, GpuId(0), &view(&topo)).unwrap().is_relay());
+    }
+
+    #[test]
+    fn cold_paths_are_optimistic() {
+        let p = policy();
+        assert!(p.share_ok(GpuId(7)), "no samples yet → eligible");
+    }
+}

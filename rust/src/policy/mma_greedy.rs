@@ -1,0 +1,147 @@
+//! The paper's Path Selector (§3.4.2) as a [`TransferPolicy`]: pull-based
+//! selection with outstanding-queue backpressure as the implicit
+//! congestion signal.
+//!
+//! One *outstanding queue* exists per PCIe link (per direction), statically
+//! bound to its GPU. The selector never pushes work to a path; a path
+//! *pulls* a micro-task only when its outstanding queue has capacity. A
+//! congested path retires slowly, stays full, and stops pulling — no
+//! explicit link-state feedback needed.
+
+use super::{PolicyView, Pulled, TransferPolicy};
+use crate::mma::task_manager::TaskManager;
+use crate::mma::MmaConfig;
+use crate::topology::GpuId;
+
+/// The greedy pull policy, honoring:
+///
+/// 1. **Direct-path-first** (if `direct_priority`): own-destination
+///    micro-tasks before any relay work, minimizing NVLink spend.
+/// 2. **Longest-remaining-destination stealing**: relay work comes from
+///    the destination with the most pending bytes.
+/// 3. **Relay eligibility**: this GPU must be in the relay set, and
+///    NUMA restrictions respected.
+#[derive(Debug, Clone)]
+pub struct MmaGreedy {
+    /// Prefer micro-tasks destined to the queue's own GPU (§3.4.2).
+    pub direct_priority: bool,
+    /// Relay candidates; `None` = every peer GPU.
+    pub relay_gpus: Option<Vec<GpuId>>,
+    /// Restrict relays to the target's NUMA node (§6).
+    pub numa_local_only: bool,
+}
+
+impl MmaGreedy {
+    /// Build from the engine's shared knobs.
+    pub fn from_cfg(cfg: &MmaConfig) -> MmaGreedy {
+        MmaGreedy {
+            direct_priority: cfg.direct_priority,
+            relay_gpus: cfg.relay_gpus.clone(),
+            numa_local_only: cfg.numa_local_only,
+        }
+    }
+}
+
+impl TransferPolicy for MmaGreedy {
+    fn name(&self) -> &'static str {
+        "mma-greedy"
+    }
+
+    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, view: &PolicyView) -> Option<Pulled> {
+        let topo = view.topo;
+        let numa_local_only = self.numa_local_only;
+        let relay_ok = super::in_relay_set(&self.relay_gpus, gpu);
+        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, |dest, remaining| {
+            if !numa_local_only || topo.numa_of(dest) == topo.numa_of(gpu) {
+                Some(remaining as f64)
+            } else {
+                None
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::TransferId;
+    use crate::mma::task_manager::Chunk;
+    use crate::sim::Time;
+    use crate::topology::{h20x8, Direction, Topology};
+
+    fn view(topo: &Topology) -> PolicyView<'_> {
+        PolicyView {
+            topo,
+            dir: Direction::H2D,
+            queues: &[],
+            now: Time::ZERO,
+        }
+    }
+
+    fn mgr_with(dest: GpuId, bytes: u64) -> TaskManager {
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), dest, bytes, 5_000_000));
+        tm
+    }
+
+    #[test]
+    fn direct_priority_wins_over_steal() {
+        let topo = h20x8();
+        let mut p = MmaGreedy::from_cfg(&MmaConfig::default());
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        // GPU 0 has own work → direct, even though dest 1 has more bytes.
+        let got = p.pull(&mut tm, GpuId(0), &view(&topo)).unwrap();
+        assert_eq!(
+            got,
+            Pulled::Direct(Chunk {
+                transfer: TransferId(1),
+                index: 0,
+                bytes: 5_000_000,
+                dest: GpuId(0),
+            })
+        );
+    }
+
+    #[test]
+    fn without_direct_priority_steal_comes_first() {
+        let topo = h20x8();
+        let mut p = MmaGreedy {
+            direct_priority: false,
+            ..MmaGreedy::from_cfg(&MmaConfig::default())
+        };
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        let got = p.pull(&mut tm, GpuId(0), &view(&topo)).unwrap();
+        assert!(got.is_relay(), "{got:?}");
+        assert_eq!(got.chunk().dest, GpuId(1));
+    }
+
+    #[test]
+    fn relay_set_restriction() {
+        let topo = h20x8();
+        let mut p = MmaGreedy::from_cfg(&MmaConfig::with_relays(vec![GpuId(2)]));
+        let mut tm = mgr_with(GpuId(0), 50_000_000);
+        // GPU 1 is not in the relay set: no pull.
+        assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_none());
+        // GPU 2 is: relay pull.
+        let got = p.pull(&mut tm, GpuId(2), &view(&topo)).unwrap();
+        assert!(got.is_relay());
+    }
+
+    #[test]
+    fn numa_local_only_blocks_cross_socket_relay() {
+        let topo = h20x8();
+        let mut p = MmaGreedy {
+            numa_local_only: true,
+            ..MmaGreedy::from_cfg(&MmaConfig::default())
+        };
+        let mut tm = mgr_with(GpuId(0), 50_000_000); // dest on numa0
+        // GPU 5 lives on numa1 → not eligible.
+        assert!(p.pull(&mut tm, GpuId(5), &view(&topo)).is_none());
+        // GPU 1 (numa0) is eligible.
+        assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_some());
+    }
+}

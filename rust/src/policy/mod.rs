@@ -1,0 +1,589 @@
+//! Pluggable transfer-policy layer: *which path carries which micro-task*.
+//!
+//! The Multipath Transfer Engine ([`crate::mma::engine`]) owns the
+//! *mechanism* — outstanding queues, DMA lanes, two-stage relay launch,
+//! retirement. This module owns the *policy*: given the topology, the
+//! per-link outstanding queues, and observed flow completions, decide
+//! which micro-task each path pulls next. The paper's pull-based greedy
+//! selector (§3.4.2), the native single-path baseline, and the Fig-10
+//! static splitter are three implementations of one [`TransferPolicy`]
+//! trait, alongside two adaptive strategies the old hardwired dispatch
+//! could not express (congestion feedback, NUMA-aware penalties).
+//!
+//! Policies are *declared* by a [`PolicySpec`] (cloneable, parseable from
+//! `--policy` / the `[policy]` config section) and *instantiated* per
+//! engine instance via [`PolicySpec::build`], so the H2D and D2H engines
+//! each carry their own policy state.
+//!
+//! To add a new policy:
+//!
+//! 1. implement [`TransferPolicy`] in a new submodule (decide placement in
+//!    `pull`, optionally pre-assign in `admit` and learn in
+//!    `on_completion`);
+//! 2. add a [`PolicySpec`] variant, its [`PolicySpec::parse`] spelling and
+//!    [`PolicySpec::build`] arm;
+//! 3. it is now selectable end-to-end: CLI (`--policy`), TOML
+//!    (`[policy] name = "..."`), the serving engine, and
+//!    `figures::policy_sweep` (add it to the sweep's policy list).
+
+pub mod congestion;
+pub mod mma_greedy;
+pub mod native;
+pub mod numa_aware;
+pub mod static_split;
+
+pub use congestion::CongestionFeedback;
+pub use mma_greedy::MmaGreedy;
+pub use native::NativeDirect;
+pub use numa_aware::NumaAware;
+pub use static_split::StaticSplit;
+
+use crate::mma::task_manager::{Chunk, TaskManager};
+use crate::mma::MmaConfig;
+use crate::sim::Time;
+use crate::topology::{Direction, GpuId, Topology};
+
+/// Default EWMA smoothing factor of [`CongestionFeedback`].
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
+/// Default minimum delivered-bandwidth share (vs the best path) below
+/// which [`CongestionFeedback`] stops handing a path relay work.
+pub const DEFAULT_MIN_SHARE: f64 = 0.35;
+/// Default discount [`NumaAware`] applies to cross-socket relay backlog.
+pub const DEFAULT_REMOTE_PENALTY: f64 = 0.25;
+/// Default backlog below which [`NumaAware`] refuses cross-socket relays.
+pub const DEFAULT_MIN_REMOTE_BYTES: u64 = 32_000_000;
+
+/// Declarative description of a transfer policy. Lives in
+/// [`MmaConfig`]; built into a live [`TransferPolicy`] per engine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicySpec {
+    /// The paper's pull-based greedy selector (§3.4.2): direct-path
+    /// priority + longest-remaining-destination relay stealing.
+    MmaGreedy,
+    /// Native CUDA semantics: single direct path. The interceptor routes
+    /// every copy around the engine (no chunking); if a transfer does run
+    /// through the engine under this policy, only direct micro-tasks are
+    /// pulled.
+    Native,
+    /// Fixed byte ratios per path (Fig 10). Entries are
+    /// `(path_gpu, weight)`; the destination's own entry is the direct
+    /// path, others are relays.
+    Static(Vec<(GpuId, f64)>),
+    /// Greedy selection re-weighted by observed per-path delivered
+    /// bandwidth: a path whose completion-rate EWMA falls below
+    /// `min_share` of the best path stops pulling relay work until its
+    /// EWMA recovers.
+    CongestionFeedback {
+        /// EWMA smoothing factor in `(0, 1]` (higher = more reactive).
+        ewma_alpha: f64,
+        /// Relay-eligibility threshold as a fraction of the best path's
+        /// EWMA bandwidth.
+        min_share: f64,
+    },
+    /// Greedy selection that penalizes cross-socket relay hops: remote
+    /// destinations' backlogs are discounted by `remote_penalty` when
+    /// choosing whom to help, and ignored entirely below
+    /// `min_remote_bytes` (small transfers stay NUMA-local, §6).
+    NumaAware {
+        /// Multiplier applied to a cross-socket destination's backlog.
+        remote_penalty: f64,
+        /// Minimum cross-socket backlog worth a relay hop.
+        min_remote_bytes: u64,
+    },
+}
+
+impl PolicySpec {
+    /// Canonical name (the spelling `parse` accepts and tables print).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicySpec::MmaGreedy => "mma-greedy",
+            PolicySpec::Native => "native",
+            PolicySpec::Static(_) => "static-split",
+            PolicySpec::CongestionFeedback { .. } => "congestion-feedback",
+            PolicySpec::NumaAware { .. } => "numa-aware",
+        }
+    }
+
+    /// Congestion-feedback spec with default parameters.
+    pub fn congestion_feedback() -> PolicySpec {
+        PolicySpec::CongestionFeedback {
+            ewma_alpha: DEFAULT_EWMA_ALPHA,
+            min_share: DEFAULT_MIN_SHARE,
+        }
+    }
+
+    /// NUMA-aware spec with default parameters.
+    pub fn numa_aware() -> PolicySpec {
+        PolicySpec::NumaAware {
+            remote_penalty: DEFAULT_REMOTE_PENALTY,
+            min_remote_bytes: DEFAULT_MIN_REMOTE_BYTES,
+        }
+    }
+
+    /// Parse a policy name as used by `--policy` and `[policy] name`.
+    ///
+    /// Accepted: `mma-greedy` (aliases `mma`, `greedy`), `native`,
+    /// `congestion-feedback` (alias `congestion`), `numa-aware` (alias
+    /// `numa`), `static-split` (alias `static`; defaults to a 1:1 split
+    /// over gpu0's direct path + gpu1 as in Fig 10), and the explicit
+    /// form `static:<gpu>:<weight>,<gpu>:<weight>,...`.
+    pub fn parse(s: &str) -> Option<PolicySpec> {
+        let s = s.trim();
+        match s {
+            "mma" | "greedy" | "mma-greedy" => return Some(PolicySpec::MmaGreedy),
+            "native" => return Some(PolicySpec::Native),
+            "congestion" | "congestion-feedback" => {
+                return Some(PolicySpec::congestion_feedback())
+            }
+            "numa" | "numa-aware" => return Some(PolicySpec::numa_aware()),
+            "static" | "static-split" => {
+                return Some(PolicySpec::Static(vec![
+                    (GpuId(0), 1.0),
+                    (GpuId(1), 1.0),
+                ]))
+            }
+            _ => {}
+        }
+        // static:<gpu>:<weight>,<gpu>:<weight>,...
+        let rest = s.strip_prefix("static:")?;
+        let mut ratios = Vec::new();
+        for pair in rest.split(',') {
+            let (g, w) = pair.split_once(':')?;
+            let g: u8 = g.trim().parse().ok()?;
+            let w: f64 = w.trim().parse().ok()?;
+            if !(w.is_finite() && w > 0.0) {
+                return None;
+            }
+            ratios.push((GpuId(g), w));
+        }
+        if ratios.is_empty() {
+            return None;
+        }
+        Some(PolicySpec::Static(ratios))
+    }
+
+    /// Does this policy want large copies routed through the engine?
+    /// `false` only for [`PolicySpec::Native`], whose whole point is the
+    /// un-intercepted single-flow DMA.
+    pub fn engine_eligible(&self) -> bool {
+        !matches!(self, PolicySpec::Native)
+    }
+
+    /// Validate the spec against a concrete server size. Config loading
+    /// calls this so a bad `[policy]` section fails at `config-check`
+    /// time rather than panicking when the engine is built.
+    pub fn validate(&self, gpu_count: usize) -> Result<(), String> {
+        match self {
+            PolicySpec::Static(ratios) => {
+                if ratios.is_empty() {
+                    return Err("static split needs at least one path".to_string());
+                }
+                for (g, w) in ratios {
+                    if g.0 as usize >= gpu_count {
+                        return Err(format!(
+                            "static split path gpu{} out of range (server has {gpu_count} GPUs)",
+                            g.0
+                        ));
+                    }
+                    if !(w.is_finite() && *w > 0.0) {
+                        return Err(format!("static split weight {w} must be positive"));
+                    }
+                }
+            }
+            PolicySpec::CongestionFeedback {
+                ewma_alpha,
+                min_share,
+            } => {
+                if !(*ewma_alpha > 0.0 && *ewma_alpha <= 1.0) {
+                    return Err(format!("ewma_alpha {ewma_alpha} must be in (0, 1]"));
+                }
+                if !(0.0..=1.0).contains(min_share) {
+                    return Err(format!("min_share {min_share} must be in [0, 1]"));
+                }
+            }
+            PolicySpec::NumaAware { remote_penalty, .. } => {
+                if !(0.0..=1.0).contains(remote_penalty) {
+                    return Err(format!("remote_penalty {remote_penalty} must be in [0, 1]"));
+                }
+            }
+            PolicySpec::MmaGreedy | PolicySpec::Native => {}
+        }
+        Ok(())
+    }
+
+    /// Instantiate the live policy for one engine instance. Shared knobs
+    /// (`relay_gpus`, `direct_priority`, `numa_local_only`) come from the
+    /// surrounding [`MmaConfig`].
+    pub fn build(&self, cfg: &MmaConfig) -> Box<dyn TransferPolicy> {
+        match self {
+            PolicySpec::MmaGreedy => Box::new(MmaGreedy::from_cfg(cfg)),
+            PolicySpec::Native => Box::new(NativeDirect),
+            PolicySpec::Static(ratios) => Box::new(StaticSplit::new(ratios.clone())),
+            PolicySpec::CongestionFeedback {
+                ewma_alpha,
+                min_share,
+            } => Box::new(CongestionFeedback::new(cfg, *ewma_alpha, *min_share)),
+            PolicySpec::NumaAware {
+                remote_penalty,
+                min_remote_bytes,
+            } => Box::new(NumaAware::new(cfg, *remote_penalty, *min_remote_bytes)),
+        }
+    }
+}
+
+/// Read-only view the engine exposes to a policy at decision points.
+pub struct PolicyView<'a> {
+    /// Server topology (link capacities, NUMA placement, relay ordering).
+    pub topo: &'a Topology,
+    /// Direction this engine instance serves.
+    pub dir: Direction,
+    /// Per-PCIe-link outstanding queues (occupancy + contention marks).
+    pub queues: &'a [OutstandingQueue],
+    /// Current virtual time.
+    pub now: Time,
+}
+
+/// A transfer policy: decides chunk→path placement for one engine
+/// instance. The engine calls `admit` once per activated transfer,
+/// `pull` whenever a path's outstanding queue has capacity, and
+/// `on_completion` as micro-tasks retire (the feedback channel).
+pub trait TransferPolicy {
+    /// Canonical policy name (matches [`PolicySpec::name`]).
+    fn name(&self) -> &'static str;
+
+    /// A transfer's micro-tasks entered the engine. The default places
+    /// them in the shared destination-tagged queue for pull-based
+    /// policies; pre-assigning policies (static split) override this.
+    fn admit(&mut self, chunks: &[Chunk], tm: &mut TaskManager, view: &PolicyView) {
+        let _ = view;
+        tm.push_pending(chunks);
+    }
+
+    /// Decide the next micro-task for `gpu`'s outstanding queue, or
+    /// `None` to leave the path idle this round.
+    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, view: &PolicyView) -> Option<Pulled>;
+
+    /// A micro-task dispatched on `path_gpu`'s queue retired.
+    /// `observed_s` is dispatch→retire wall time, `expected_s` the
+    /// uncontended expectation — together the congestion signal.
+    fn on_completion(
+        &mut self,
+        path_gpu: GpuId,
+        bytes: u64,
+        relay: bool,
+        observed_s: f64,
+        expected_s: f64,
+    ) {
+        let _ = (path_gpu, bytes, relay, observed_s, expected_s);
+    }
+}
+
+/// Is `gpu` in an optional relay set? `None` = every peer GPU relays.
+pub fn in_relay_set(set: &Option<Vec<GpuId>>, gpu: GpuId) -> bool {
+    match set {
+        None => true,
+        Some(set) => set.contains(&gpu),
+    }
+}
+
+/// The shared greedy pull skeleton (§3.4.2 ordering) that the
+/// greedy-family policies parameterize instead of duplicating:
+///
+/// 1. own-destination work first when `direct_priority`;
+/// 2. a relay steal ranked by `score` (see
+///    [`TaskManager::pop_steal_scored`]) when `relay_ok`;
+/// 3. own-destination work *after* stealing otherwise (the Table 2
+///    ablation ordering).
+pub fn greedy_pull(
+    tm: &mut TaskManager,
+    gpu: GpuId,
+    direct_priority: bool,
+    relay_ok: bool,
+    score: impl FnMut(GpuId, u64) -> Option<f64>,
+) -> Option<Pulled> {
+    if direct_priority {
+        if let Some(c) = tm.pop_direct(gpu) {
+            return Some(Pulled::Direct(c));
+        }
+    }
+    if relay_ok {
+        if let Some(c) = tm.pop_steal_scored(gpu, score) {
+            return Some(Pulled::Relay(c));
+        }
+    }
+    if !direct_priority {
+        if let Some(c) = tm.pop_direct(gpu) {
+            return Some(Pulled::Direct(c));
+        }
+    }
+    None
+}
+
+/// Per-GPU pull decision outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pulled {
+    /// A direct micro-task (dest == this GPU).
+    Direct(Chunk),
+    /// A relay micro-task (this GPU forwards to `chunk.dest`).
+    Relay(Chunk),
+}
+
+impl Pulled {
+    /// The underlying chunk.
+    pub fn chunk(&self) -> Chunk {
+        match self {
+            Pulled::Direct(c) | Pulled::Relay(c) => *c,
+        }
+    }
+    /// Is this a relay pull?
+    pub fn is_relay(&self) -> bool {
+        matches!(self, Pulled::Relay(_))
+    }
+}
+
+/// State of one outstanding queue (one per GPU per direction, §3.4.2).
+/// Owned by the engine; policies observe it through [`PolicyView`].
+#[derive(Debug, Clone)]
+pub struct OutstandingQueue {
+    /// The GPU whose PCIe link this queue is bound to.
+    pub gpu: GpuId,
+    /// In-flight micro-task keys.
+    pub slots: Vec<u64>,
+    /// Depth limit.
+    pub depth: usize,
+    /// Contention detected on this path (backoff mode, §3.4.2).
+    pub contended: bool,
+    /// CPU "transfer thread" is busy dispatching until this time.
+    pub busy_until: Time,
+}
+
+impl OutstandingQueue {
+    /// New queue with the configured depth.
+    pub fn new(gpu: GpuId, depth: usize) -> OutstandingQueue {
+        OutstandingQueue {
+            gpu,
+            slots: Vec::with_capacity(depth),
+            depth,
+            contended: false,
+            busy_until: Time::ZERO,
+        }
+    }
+
+    /// Effective capacity: a contended queue backs off to depth 1, yielding
+    /// bandwidth to latency-sensitive co-running traffic.
+    pub fn effective_depth(&self, backoff_enabled: bool) -> usize {
+        if backoff_enabled && self.contended {
+            1
+        } else {
+            self.depth
+        }
+    }
+
+    /// Can this queue pull more work?
+    pub fn has_capacity(&self, backoff_enabled: bool) -> bool {
+        self.slots.len() < self.effective_depth(backoff_enabled)
+    }
+
+    /// Occupy a slot with a chunk key.
+    pub fn occupy(&mut self, key: u64) {
+        debug_assert!(self.slots.len() < self.depth);
+        self.slots.push(key);
+    }
+
+    /// Retire a chunk key; returns true if it was present.
+    pub fn retire(&mut self, key: u64) -> bool {
+        if let Some(p) = self.slots.iter().position(|&k| k == key) {
+            self.slots.swap_remove(p);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ----- baseline configuration constructors ------------------------------
+//
+// These used to live in a separate `baseline` module with its own
+// dispatch path; they are now thin constructors over the policy layer so
+// every baseline runs through the identical engine code.
+
+/// Native single-path configuration (plain `cudaMemcpyAsync` semantics).
+pub fn native() -> MmaConfig {
+    MmaConfig::native()
+}
+
+/// Static split across the direct path and `relays`, with the given
+/// weights. `weights[0]` belongs to the direct path; `weights[1..]` map to
+/// `relays` in order. Panics on length mismatch.
+pub fn static_split(target: GpuId, relays: &[GpuId], weights: &[f64]) -> MmaConfig {
+    assert_eq!(
+        weights.len(),
+        relays.len() + 1,
+        "need one weight for the direct path plus one per relay"
+    );
+    let mut ratios = vec![(target, weights[0])];
+    for (r, w) in relays.iter().zip(&weights[1..]) {
+        assert_ne!(*r, target, "relay cannot be the target");
+        ratios.push((*r, *w));
+    }
+    MmaConfig {
+        policy: PolicySpec::Static(ratios),
+        // Static splitting has no adaptive machinery.
+        contention_backoff: false,
+        direct_priority: false,
+        ..Default::default()
+    }
+}
+
+/// Convenience: equal 1:1 split over direct + one relay (Fig 10's "1:1").
+pub fn split_1_1(target: GpuId, relay: GpuId) -> MmaConfig {
+    static_split(target, &[relay], &[1.0, 1.0])
+}
+
+/// 1:2 split (Fig 10's tuned-for-congestion setting: one third on the
+/// congested direct path, two thirds on the relay).
+pub fn split_1_2(target: GpuId, relay: GpuId) -> MmaConfig {
+    static_split(target, &[relay], &[1.0, 2.0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrips_names() {
+        for name in [
+            "mma-greedy",
+            "native",
+            "static-split",
+            "congestion-feedback",
+            "numa-aware",
+        ] {
+            let spec = PolicySpec::parse(name).unwrap();
+            assert_eq!(spec.name(), name);
+        }
+        assert_eq!(PolicySpec::parse("mma"), Some(PolicySpec::MmaGreedy));
+        assert_eq!(PolicySpec::parse("nope"), None);
+    }
+
+    #[test]
+    fn spec_parse_explicit_static_ratios() {
+        let spec = PolicySpec::parse("static:0:1,1:2.5").unwrap();
+        assert_eq!(
+            spec,
+            PolicySpec::Static(vec![(GpuId(0), 1.0), (GpuId(1), 2.5)])
+        );
+        assert_eq!(PolicySpec::parse("static:"), None);
+        assert_eq!(PolicySpec::parse("static:0"), None);
+        assert_eq!(PolicySpec::parse("static:0:-1"), None);
+    }
+
+    #[test]
+    fn only_native_bypasses_the_engine() {
+        assert!(!PolicySpec::Native.engine_eligible());
+        assert!(PolicySpec::MmaGreedy.engine_eligible());
+        assert!(PolicySpec::congestion_feedback().engine_eligible());
+    }
+
+    #[test]
+    fn validate_catches_bad_parameters() {
+        assert!(PolicySpec::MmaGreedy.validate(8).is_ok());
+        assert!(PolicySpec::congestion_feedback().validate(8).is_ok());
+        // Static split: GPU ids must exist, weights must be positive.
+        assert!(PolicySpec::Static(vec![(GpuId(0), 1.0)]).validate(8).is_ok());
+        assert!(PolicySpec::Static(vec![(GpuId(8), 1.0)]).validate(8).is_err());
+        assert!(PolicySpec::Static(vec![(GpuId(0), 0.0)]).validate(8).is_err());
+        assert!(PolicySpec::Static(vec![]).validate(8).is_err());
+        // Parameter ranges.
+        assert!(PolicySpec::CongestionFeedback {
+            ewma_alpha: 3.0,
+            min_share: 0.5
+        }
+        .validate(8)
+        .is_err());
+        assert!(PolicySpec::CongestionFeedback {
+            ewma_alpha: 0.5,
+            min_share: 1.5
+        }
+        .validate(8)
+        .is_err());
+        assert!(PolicySpec::NumaAware {
+            remote_penalty: 2.0,
+            min_remote_bytes: 0
+        }
+        .validate(8)
+        .is_err());
+    }
+
+    #[test]
+    fn greedy_pull_skeleton_ordering() {
+        use crate::gpusim::TransferId;
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        // direct_priority: own work wins.
+        let p = greedy_pull(&mut tm, GpuId(0), true, true, |_, r| Some(r as f64)).unwrap();
+        assert!(!p.is_relay());
+        // without priority: steal first.
+        let p = greedy_pull(&mut tm, GpuId(0), false, true, |_, r| Some(r as f64)).unwrap();
+        assert!(p.is_relay());
+        // relay_ok=false: falls back to own work even without priority.
+        let p = greedy_pull(&mut tm, GpuId(0), false, false, |_, r| Some(r as f64)).unwrap();
+        assert!(!p.is_relay());
+    }
+
+    #[test]
+    fn build_produces_matching_names() {
+        let cfg = MmaConfig::default();
+        for spec in [
+            PolicySpec::MmaGreedy,
+            PolicySpec::Native,
+            PolicySpec::Static(vec![(GpuId(0), 1.0)]),
+            PolicySpec::congestion_feedback(),
+            PolicySpec::numa_aware(),
+        ] {
+            assert_eq!(spec.build(&cfg).name(), spec.name());
+        }
+    }
+
+    #[test]
+    fn outstanding_queue_capacity_and_backoff() {
+        let mut q = OutstandingQueue::new(GpuId(0), 2);
+        assert!(q.has_capacity(true));
+        q.occupy(1);
+        q.occupy(2);
+        assert!(!q.has_capacity(true));
+        assert!(q.retire(1));
+        assert!(!q.retire(1));
+        assert!(q.has_capacity(true));
+        // Contended queues back off to depth 1.
+        q.contended = true;
+        assert_eq!(q.effective_depth(true), 1);
+        assert!(!q.has_capacity(true), "1 slot used, backoff depth 1");
+        assert!(q.has_capacity(false), "backoff disabled → full depth");
+    }
+
+    #[test]
+    fn static_split_builds_ratios() {
+        let cfg = static_split(GpuId(0), &[GpuId(1), GpuId(2)], &[1.0, 2.0, 3.0]);
+        let PolicySpec::Static(r) = &cfg.policy else {
+            panic!()
+        };
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0], (GpuId(0), 1.0));
+        assert_eq!(r[2], (GpuId(2), 3.0));
+        assert!(!cfg.contention_backoff);
+    }
+
+    #[test]
+    #[should_panic(expected = "one weight")]
+    fn weight_mismatch_panics() {
+        static_split(GpuId(0), &[GpuId(1)], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "relay cannot be the target")]
+    fn relay_equals_target_panics() {
+        static_split(GpuId(0), &[GpuId(0)], &[1.0, 1.0]);
+    }
+}

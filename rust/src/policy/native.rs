@@ -1,0 +1,54 @@
+//! Native single-path baseline as a [`TransferPolicy`].
+//!
+//! The real baseline is *no interception at all*: the interceptor (which
+//! consults [`super::PolicySpec::engine_eligible`]) routes every copy to a
+//! single whole-transfer DMA on the direct PCIe path, so engine machinery
+//! never runs. This impl covers the remaining case — a transfer that does
+//! enter the engine under the native policy — by pulling only
+//! own-destination micro-tasks: chunked, but strictly single-path.
+
+use super::{PolicyView, Pulled, TransferPolicy};
+use crate::mma::task_manager::TaskManager;
+use crate::topology::GpuId;
+
+/// Direct-path-only pulls; never relays.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeDirect;
+
+impl TransferPolicy for NativeDirect {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, _view: &PolicyView) -> Option<Pulled> {
+        tm.pop_direct(gpu).map(Pulled::Direct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::TransferId;
+    use crate::sim::Time;
+    use crate::topology::{h20x8, Direction};
+
+    #[test]
+    fn pulls_only_own_destination() {
+        let topo = h20x8();
+        let view = PolicyView {
+            topo: &topo,
+            dir: Direction::H2D,
+            queues: &[],
+            now: Time::ZERO,
+        };
+        let mut p = NativeDirect;
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 50_000_000, 5_000_000));
+        // A would-be relay path gets nothing...
+        assert!(p.pull(&mut tm, GpuId(1), &view).is_none());
+        // ...while the destination drains its own queue.
+        let got = p.pull(&mut tm, GpuId(0), &view).unwrap();
+        assert!(!got.is_relay());
+        assert_eq!(got.chunk().dest, GpuId(0));
+    }
+}

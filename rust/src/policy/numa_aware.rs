@@ -1,0 +1,166 @@
+//! NUMA-aware policy: greedy selection with *soft* cross-socket penalties.
+//!
+//! The paper's `numa_local_only` knob is a hard gate — cross-socket relays
+//! are either allowed or forbidden. This policy prices the hop instead:
+//! when a relay chooses whom to help, a destination on the other socket
+//! has its backlog discounted by `remote_penalty` (so local work wins
+//! ties by a wide margin) and is skipped entirely while its backlog sits
+//! below `min_remote_bytes` — small transfers stay NUMA-local for
+//! predictable latency (§6), while bulk transfers still recruit the whole
+//! server. Inexpressible in the old architecture, whose eligibility
+//! filter was a boolean with no notion of backlog size.
+
+use super::{PolicyView, Pulled, TransferPolicy};
+use crate::mma::task_manager::TaskManager;
+use crate::mma::MmaConfig;
+use crate::topology::GpuId;
+
+/// Greedy pulls with discounted cross-socket stealing.
+#[derive(Debug, Clone)]
+pub struct NumaAware {
+    /// Prefer own-destination micro-tasks first.
+    pub direct_priority: bool,
+    /// Relay candidates; `None` = every peer GPU.
+    pub relay_gpus: Option<Vec<GpuId>>,
+    /// Hard NUMA gate inherited from the shared config: when set,
+    /// cross-socket steals are forbidden outright (the soft penalty only
+    /// prices hops this knob still allows).
+    pub numa_local_only: bool,
+    /// Multiplier applied to a cross-socket destination's backlog when
+    /// ranking steal candidates (0 = never, 1 = no penalty).
+    pub remote_penalty: f64,
+    /// Minimum cross-socket backlog worth a relay hop at all.
+    pub min_remote_bytes: u64,
+}
+
+impl NumaAware {
+    /// Build from the engine's shared knobs plus the penalty parameters.
+    pub fn new(cfg: &MmaConfig, remote_penalty: f64, min_remote_bytes: u64) -> NumaAware {
+        assert!(
+            (0.0..=1.0).contains(&remote_penalty),
+            "remote_penalty must be in [0, 1]"
+        );
+        NumaAware {
+            direct_priority: cfg.direct_priority,
+            relay_gpus: cfg.relay_gpus.clone(),
+            numa_local_only: cfg.numa_local_only,
+            remote_penalty,
+            min_remote_bytes,
+        }
+    }
+}
+
+impl TransferPolicy for NumaAware {
+    fn name(&self) -> &'static str {
+        "numa-aware"
+    }
+
+    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, view: &PolicyView) -> Option<Pulled> {
+        let topo = view.topo;
+        let my_numa = topo.numa_of(gpu);
+        let penalty = self.remote_penalty;
+        let min_remote = self.min_remote_bytes;
+        let numa_local_only = self.numa_local_only;
+        let relay_ok = super::in_relay_set(&self.relay_gpus, gpu);
+        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, |dest, remaining| {
+            if topo.numa_of(dest) == my_numa {
+                Some(remaining as f64)
+            } else if !numa_local_only && penalty > 0.0 && remaining >= min_remote {
+                Some(remaining as f64 * penalty)
+            } else {
+                None
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::TransferId;
+    use crate::sim::Time;
+    use crate::topology::{h20x8, Direction, Topology};
+
+    fn view(topo: &Topology) -> PolicyView<'_> {
+        PolicyView {
+            topo,
+            dir: Direction::H2D,
+            queues: &[],
+            now: Time::ZERO,
+        }
+    }
+
+    fn policy() -> NumaAware {
+        NumaAware::new(&MmaConfig::default(), 0.25, 32_000_000)
+    }
+
+    #[test]
+    fn small_remote_backlogs_are_refused() {
+        let topo = h20x8();
+        let mut p = policy();
+        let mut tm = TaskManager::new(8);
+        // 10 MB destined to gpu0 (numa0): below the 32 MB remote bar.
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        // gpu5 (numa1) refuses the cross-socket hop...
+        assert!(p.pull(&mut tm, GpuId(5), &view(&topo)).is_none());
+        // ...but gpu1 (numa0) relays it.
+        assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).unwrap().is_relay());
+    }
+
+    #[test]
+    fn bulk_remote_backlogs_recruit_the_other_socket() {
+        let topo = h20x8();
+        let mut p = policy();
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 200_000_000, 5_000_000));
+        let got = p.pull(&mut tm, GpuId(5), &view(&topo)).unwrap();
+        assert!(got.is_relay());
+        assert_eq!(got.chunk().dest, GpuId(0));
+    }
+
+    #[test]
+    fn local_backlog_wins_despite_larger_remote_one() {
+        let topo = h20x8();
+        let mut p = policy();
+        let mut tm = TaskManager::new(8);
+        // gpu6 (numa1): 100 MB local backlog on gpu4 vs 300 MB remote on
+        // gpu0. Discounted remote score 75 MB < 100 MB local → helps local.
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 300_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(4), 100_000_000, 5_000_000));
+        let got = p.pull(&mut tm, GpuId(6), &view(&topo)).unwrap();
+        assert_eq!(got.chunk().dest, GpuId(4));
+        // At 4x the local backlog, the remote destination wins even after
+        // the 0.25x discount.
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 500_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(4), 100_000_000, 5_000_000));
+        let got = p.pull(&mut tm, GpuId(6), &view(&topo)).unwrap();
+        assert_eq!(got.chunk().dest, GpuId(0));
+    }
+
+    #[test]
+    fn numa_local_only_is_a_hard_gate() {
+        let topo = h20x8();
+        let cfg = MmaConfig {
+            numa_local_only: true,
+            ..Default::default()
+        };
+        let mut p = NumaAware::new(&cfg, 0.25, 32_000_000);
+        let mut tm = TaskManager::new(8);
+        // 500 MB remote backlog, far above the soft threshold — still
+        // refused because the shared hard gate is set.
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 500_000_000, 5_000_000));
+        assert!(p.pull(&mut tm, GpuId(5), &view(&topo)).is_none());
+        assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_some());
+    }
+
+    #[test]
+    fn zero_penalty_degenerates_to_hard_numa_local() {
+        let topo = h20x8();
+        let mut p = NumaAware::new(&MmaConfig::default(), 0.0, 0);
+        let mut tm = TaskManager::new(8);
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 500_000_000, 5_000_000));
+        assert!(p.pull(&mut tm, GpuId(5), &view(&topo)).is_none());
+        assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_some());
+    }
+}

@@ -1,0 +1,97 @@
+//! Static splitting baseline (Fig 10) as a [`TransferPolicy`]: fixed byte
+//! ratios across a fixed path set, chosen in advance. The strawman MMA's
+//! pull-based scheduling is measured against — it cannot react when a
+//! path's effective bandwidth changes mid-transfer.
+
+use super::{PolicyView, Pulled, TransferPolicy};
+use crate::mma::task_manager::{Chunk, TaskManager};
+use crate::topology::GpuId;
+
+/// Pre-assigns each transfer's micro-tasks to paths by smooth weighted
+/// round-robin; paths then drain only their own assignment (no stealing).
+#[derive(Debug, Clone)]
+pub struct StaticSplit {
+    /// `(path_gpu, weight)`; the destination's own entry is the direct
+    /// path, others are relays.
+    pub ratios: Vec<(GpuId, f64)>,
+}
+
+impl StaticSplit {
+    /// New splitter over the given ratios. Panics on an empty set.
+    pub fn new(ratios: Vec<(GpuId, f64)>) -> StaticSplit {
+        assert!(!ratios.is_empty(), "static split needs at least one path");
+        StaticSplit { ratios }
+    }
+}
+
+impl TransferPolicy for StaticSplit {
+    fn name(&self) -> &'static str {
+        "static-split"
+    }
+
+    /// Smooth weighted round-robin over the configured paths, interleaving
+    /// assignments so every path starts pulling immediately.
+    fn admit(&mut self, chunks: &[Chunk], tm: &mut TaskManager, _view: &PolicyView) {
+        let total_w: f64 = self.ratios.iter().map(|(_, w)| *w).sum();
+        let mut current: Vec<f64> = vec![0.0; self.ratios.len()];
+        for c in chunks {
+            let mut best = 0;
+            for i in 0..self.ratios.len() {
+                current[i] += self.ratios[i].1;
+                if current[i] > current[best] {
+                    best = i;
+                }
+            }
+            current[best] -= total_w;
+            tm.push_assigned(self.ratios[best].0, *c);
+        }
+    }
+
+    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, _view: &PolicyView) -> Option<Pulled> {
+        let c = tm.pop_assigned(gpu)?;
+        if c.dest == gpu {
+            Some(Pulled::Direct(c))
+        } else {
+            Some(Pulled::Relay(c))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::TransferId;
+    use crate::sim::Time;
+    use crate::topology::{h20x8, Direction};
+
+    #[test]
+    fn wrr_assignment_matches_ratios_and_drains_per_path() {
+        let topo = h20x8();
+        let view = PolicyView {
+            topo: &topo,
+            dir: Direction::H2D,
+            queues: &[],
+            now: Time::ZERO,
+        };
+        let mut p = StaticSplit::new(vec![(GpuId(0), 1.0), (GpuId(1), 2.0)]);
+        let mut tm = TaskManager::new(8);
+        // 30 MB → 6 chunks; 1:2 split → 2 on gpu0 (direct), 4 on gpu1.
+        let chunks = TaskManager::split(TransferId(0), GpuId(0), 30_000_000, 5_000_000);
+        p.admit(&chunks, &mut tm, &view);
+        let mut direct = 0;
+        let mut relay = 0;
+        while let Some(got) = p.pull(&mut tm, GpuId(0), &view) {
+            assert!(!got.is_relay());
+            direct += 1;
+        }
+        while let Some(got) = p.pull(&mut tm, GpuId(1), &view) {
+            assert!(got.is_relay());
+            relay += 1;
+        }
+        assert_eq!((direct, relay), (2, 4));
+        assert!(tm.is_empty());
+        // No stealing: an unconfigured path never receives work.
+        p.admit(&chunks, &mut tm, &view);
+        assert!(p.pull(&mut tm, GpuId(2), &view).is_none());
+    }
+}

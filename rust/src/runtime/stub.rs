@@ -1,0 +1,95 @@
+//! Offline stand-in for the PJRT runtime (built without the `pjrt`
+//! feature). Mirrors the real module's public surface so callers compile
+//! unchanged; every operation reports that real execution is unavailable.
+
+use crate::Result;
+use std::collections::HashMap;
+use std::path::Path;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(format!(
+        "{what}: built without the `pjrt` feature (the `xla` crate is \
+         unavailable offline); rebuild with `--features pjrt` in an \
+         environment that provides it"
+    )
+    .into())
+}
+
+/// Opaque tensor placeholder matching `xla::Literal`'s role in signatures.
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+/// A loaded, compiled computation (stub: name only).
+pub struct LoadedModel {
+    /// Artifact stem, e.g. "tiny_prefill".
+    pub name: String,
+}
+
+/// PJRT client wrapper owning every compiled executable (stub).
+pub struct PjrtRuntime {
+    models: HashMap<String, LoadedModel>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client. Always fails in the stub.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        unavailable("pjrt cpu client")
+    }
+
+    /// Platform name ("stub" here; "Host" on the real CPU client).
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Load + compile one HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, _name: &str, _path: &Path) -> Result<()> {
+        unavailable("load_hlo_text")
+    }
+
+    /// Load every `*.hlo.txt` in a directory, keyed by file stem.
+    pub fn load_dir(&mut self, _dir: &Path) -> Result<Vec<String>> {
+        unavailable("load_dir")
+    }
+
+    /// Is a model loaded?
+    pub fn has(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    /// Execute a loaded model.
+    pub fn execute(&self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        unavailable("execute")
+    }
+}
+
+/// Literal helpers mirroring the real module's `lit` namespace.
+pub mod lit {
+    use super::*;
+
+    /// f32 tensor from data + dims (stub: always errors).
+    pub fn f32(_data: &[f32], _dims: &[i64]) -> Result<Literal> {
+        unavailable("lit::f32")
+    }
+
+    /// i32 tensor from data + dims (stub: always errors).
+    pub fn i32(_data: &[i32], _dims: &[i64]) -> Result<Literal> {
+        unavailable("lit::i32")
+    }
+
+    /// Read back as Vec<f32> (stub: always errors).
+    pub fn to_f32(_l: &Literal) -> Result<Vec<f32>> {
+        unavailable("lit::to_f32")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = PjrtRuntime::cpu().err().expect("stub must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
+    }
+}

@@ -141,6 +141,12 @@ impl ServingEngine {
         &self.model
     }
 
+    /// Name of the transfer policy every KV fetch / offload in this engine
+    /// runs under (from the [`SimWorld`]'s engine configuration).
+    pub fn policy_name(&self) -> &'static str {
+        self.world.policy_name()
+    }
+
     /// Run `requests` to completion; returns outcomes in request order.
     pub fn run(&mut self, mut requests: Vec<Request>) -> Vec<RequestOutcome> {
         // Outcomes are returned in the caller's submission order.

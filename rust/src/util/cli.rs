@@ -93,6 +93,22 @@ impl Args {
                 .unwrap_or_else(|| panic!("--{key}: bad size {v:?}")),
         }
     }
+
+    /// The shared `--seed` flag: every stochastic runner (workload
+    /// generation, figure harnesses) derives its RNG from this one value
+    /// so runs are reproducible. Accepts decimal or `0x`-prefixed hex.
+    pub fn seed_or(&self, default: u64) -> u64 {
+        match self.get("seed") {
+            None => default,
+            Some(v) => {
+                let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+                    Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                    None => v.parse().ok(),
+                };
+                parsed.unwrap_or_else(|| panic!("--seed: bad value {v:?}"))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -128,5 +144,12 @@ mod tests {
     fn trailing_flag_is_boolean() {
         let a = parse("--fast");
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn seed_accepts_decimal_and_hex() {
+        assert_eq!(parse("x").seed_or(42), 42);
+        assert_eq!(parse("--seed 7 x").seed_or(42), 7);
+        assert_eq!(parse("--seed 0xF16 x").seed_or(42), 0xF16);
     }
 }

@@ -2,8 +2,9 @@
 //! under realistic serving scenarios, plus determinism and failure cases.
 
 use mma::config::RunConfig;
-use mma::mma::{Mode, MmaConfig, SimWorld, TransferDesc};
+use mma::mma::{MmaConfig, SimWorld, TransferDesc};
 use mma::models::{qwen3_4b, qwen_7b_chat};
+use mma::policy::PolicySpec;
 use mma::serving::{ModelRegistry, ModelState};
 use mma::sim::Time;
 use mma::topology::{h20x8, single_numa_4gpu, Direction, GpuId, NumaId};
@@ -87,7 +88,7 @@ fn single_numa_preset_runs_mma() {
 
 #[test]
 fn static_split_mode_end_to_end() {
-    let cfg = mma::baseline::split_1_1(GpuId(0), GpuId(1));
+    let cfg = mma::policy::split_1_1(GpuId(0), GpuId(1));
     let mut w = SimWorld::new(h20x8(), cfg);
     let s = w.stream(GpuId(0));
     let t = w.memcpy_async(s, h2d(0, 512 << 20));
@@ -194,14 +195,21 @@ fn centralized_dispatch_mode_works() {
 }
 
 #[test]
-fn mode_matrix_all_complete() {
-    // Property-style matrix: every mode/direction/size combination must
-    // complete with conserved bytes.
-    for mode in [Mode::Native, Mode::Mma] {
+fn policy_matrix_all_complete() {
+    // Property-style matrix: every policy/direction/size combination must
+    // complete with conserved bytes through the one shared engine path.
+    let policies = [
+        PolicySpec::Native,
+        PolicySpec::MmaGreedy,
+        PolicySpec::Static(vec![(GpuId(5), 1.0), (GpuId(4), 1.0)]),
+        PolicySpec::congestion_feedback(),
+        PolicySpec::numa_aware(),
+    ];
+    for policy in &policies {
         for dir in [Direction::H2D, Direction::D2H] {
             for bytes in [1_000u64, 5_000_000, 123_456_789] {
                 let cfg = MmaConfig {
-                    mode: mode.clone(),
+                    policy: policy.clone(),
                     ..Default::default()
                 };
                 let mut w = SimWorld::new(h20x8(), cfg);
@@ -210,13 +218,61 @@ fn mode_matrix_all_complete() {
                 let t = w.memcpy_async(s, TransferDesc::new(dir, GpuId(5), numa, bytes));
                 w.run_until_idle();
                 let rec = w.rec(t);
-                assert!(rec.completed.is_some(), "{mode:?}/{dir:?}/{bytes}");
+                assert!(rec.completed.is_some(), "{policy:?}/{dir:?}/{bytes}");
                 assert_eq!(
                     rec.bytes_direct + rec.bytes_relay,
                     bytes,
-                    "{mode:?}/{dir:?}/{bytes}: bytes not conserved"
+                    "{policy:?}/{dir:?}/{bytes}: bytes not conserved"
                 );
             }
         }
     }
+}
+
+#[test]
+fn policy_config_section_drives_the_world() {
+    // A [policy] section selects the adaptive policy end-to-end; the run
+    // completes and reports the policy's name through the serving surface.
+    let cfg = RunConfig::from_toml(
+        r#"
+        [policy]
+        name = "congestion-feedback"
+        ewma_alpha = 0.5
+        "#,
+    )
+    .unwrap();
+    let mut w = SimWorld::new(cfg.topology(), cfg.mma.clone());
+    assert_eq!(w.policy_name(), "congestion-feedback");
+    let s = w.stream(GpuId(0));
+    let t = w.memcpy_async(s, h2d(0, 1 << 30));
+    w.run_until_transfer(t);
+    let rec = w.rec(t);
+    // Adaptive multipath on a clean fabric: far beyond single-path rate.
+    assert!(rec.bandwidth().unwrap() > 150e9);
+    assert!(rec.bytes_relay > 0);
+}
+
+#[test]
+fn numa_aware_policy_profile_differs_from_greedy() {
+    // 60 MB = 12 chunks: by the time the numa1 workers wake (FIFO wake
+    // order), the remaining backlog sits below the 32 MB remote threshold,
+    // so the numa-aware policy keeps the tail on-socket while greedy
+    // recruits both sockets.
+    let bytes = 60_000_000u64;
+    let relay_share_numa1 = |policy: PolicySpec| {
+        let cfg = MmaConfig {
+            policy,
+            ..Default::default()
+        };
+        let mut w = SimWorld::new(h20x8(), cfg);
+        let s = w.stream(GpuId(0));
+        let t = w.memcpy_async(s, h2d(0, bytes));
+        w.run_until_transfer(t);
+        let stats = &w.engine(0, Direction::H2D).stats;
+        (4..8).map(|g| stats.bytes_by_path[g]).sum::<u64>()
+    };
+    let greedy = relay_share_numa1(PolicySpec::MmaGreedy);
+    let numa = relay_share_numa1(PolicySpec::numa_aware());
+    assert_eq!(numa, 0, "numa-aware must keep a small transfer on-socket");
+    assert!(greedy > 0, "greedy should have recruited the remote socket");
 }
