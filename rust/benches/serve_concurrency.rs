@@ -1,0 +1,17 @@
+//! TTFT vs offered load per transfer policy, on the event-driven serving
+//! engine (Poisson arrivals, contending KV fetches).
+//!
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs;
+//! `--seed N` pins the arrival/workload generator.
+
+use mma::figures::{serve_concurrency, DEFAULT_SEED};
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let seed = args.seed_or(DEFAULT_SEED);
+    println!("=== Serving concurrency: TTFT vs offered load per policy ===");
+    let t = serve_concurrency(fast, seed);
+    t.print();
+}

@@ -30,6 +30,17 @@ pub struct ServingConfig {
     pub pd_disaggregation: bool,
     /// Tensor parallel degree of the serving group.
     pub tp: u32,
+    /// Open-loop offered load (requests/s) used by the concurrency
+    /// runners (`mma serve --arrival-rate`, `figures::serve_concurrency`)
+    /// to synthesize Poisson arrivals; 0 disables synthetic arrivals.
+    pub arrival_rate_rps: f64,
+    /// Admission cap on concurrently running sequences, on top of
+    /// `max_batch_seqs`; 0 = no extra cap.
+    pub max_concurrency: u32,
+    /// Chunks per host-tier prefix-cache fetch. 1 = fetch fully before
+    /// prefill (serialized); >1 pipelines the fetch with prefill compute
+    /// (prefill starts once the first chunk lands).
+    pub fetch_chunks: u32,
 }
 
 impl Default for ServingConfig {
@@ -42,6 +53,9 @@ impl Default for ServingConfig {
             max_batch_seqs: 64,
             pd_disaggregation: true,
             tp: 1,
+            arrival_rate_rps: 0.0,
+            max_concurrency: 0,
+            fetch_chunks: 1,
         }
     }
 }
@@ -319,6 +333,10 @@ fn apply_serving(s: &mut ServingConfig, table: &BTreeMap<String, TomlValue>) -> 
             ("max_batch_seqs", TomlValue::Int(i)) => s.max_batch_seqs = *i as u32,
             ("pd_disaggregation", TomlValue::Bool(b)) => s.pd_disaggregation = *b,
             ("tp", TomlValue::Int(i)) => s.tp = *i as u32,
+            ("arrival_rate_rps", TomlValue::Float(f)) => s.arrival_rate_rps = *f,
+            ("arrival_rate_rps", TomlValue::Int(i)) => s.arrival_rate_rps = *i as f64,
+            ("max_concurrency", TomlValue::Int(i)) => s.max_concurrency = *i as u32,
+            ("fetch_chunks", TomlValue::Int(i)) => s.fetch_chunks = (*i as u32).max(1),
             _ => return Err(format!("unknown or mistyped key {k:?} in [serving]")),
         }
     }
@@ -348,6 +366,9 @@ mod tests {
             kv_block_tokens = 16
             tp = 4
             pd_disaggregation = false
+            arrival_rate_rps = 2.5
+            max_concurrency = 8
+            fetch_chunks = 4
             "#,
         )
         .unwrap();
@@ -359,6 +380,9 @@ mod tests {
         );
         assert_eq!(cfg.serving.tp, 4);
         assert!(!cfg.serving.pd_disaggregation);
+        assert_eq!(cfg.serving.arrival_rate_rps, 2.5);
+        assert_eq!(cfg.serving.max_concurrency, 8);
+        assert_eq!(cfg.serving.fetch_chunks, 4);
     }
 
     #[test]

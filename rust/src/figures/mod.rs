@@ -5,11 +5,13 @@
 pub mod micro;
 pub mod policy_sweep;
 pub mod robust;
+pub mod serve_concurrency;
 pub mod serving_figs;
 
 pub use micro::{fig14_tp_sweep, fig15_sensitivity, fig16_fallback, fig7_bw_vs_size, fig8_bw_vs_paths, table2_direct_priority};
 pub use policy_sweep::policy_sweep;
 pub use robust::{fig10_static_split, fig11_cpu_overhead, fig9_coexistence};
+pub use serve_concurrency::serve_concurrency;
 pub use serving_figs::{fig12_ttft, fig13_switching, fig2_ttft_share, fig3_swap_share};
 
 use crate::topology::h20x8;
@@ -50,16 +52,18 @@ pub fn run_by_name(id: &str, fast: bool, seed: u64) -> Option<String> {
         "16" | "fig16" => fig16_fallback().render(),
         "table2" => table2_direct_priority().render(),
         "policy" | "policy_sweep" => policy_sweep(fast).render(),
+        "concurrency" | "serve_concurrency" => serve_concurrency(fast, seed).render(),
         _ => return None,
     };
     Some(s)
 }
 
-/// All figure ids, in paper order (the policy sweep is this repo's own).
+/// All figure ids, in paper order (the policy sweep and the serving
+/// concurrency sweep are this repo's own).
 pub fn all_ids() -> &'static [&'static str] {
     &[
         "table1", "2", "3", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "table2",
-        "policy",
+        "policy", "concurrency",
     ]
 }
 

@@ -1,15 +1,23 @@
 //! Robustness / load-balancing figures: Fig 9 (coexistence), Fig 10
 //! (adaptivity vs static splits), Fig 11 (CPU overhead). §5.1.2, §5.3.
+//! Scenario (c) of the coexistence figure generalizes Fig 9 end-to-end:
+//! the event-driven serving engine's KV fetch and a model-registry wake
+//! co-run on the same fabric under one clock.
 
+use crate::config::ServingConfig;
 use crate::mma::{MmaConfig, SimWorld, TransferDesc};
+use crate::models::{qwen3_32b, qwen_7b_chat};
 use crate::policy;
+use crate::roofline::h20;
+use crate::serving::{ModelRegistry, Request, RequestId, ServingEngine};
 use crate::sim::Time;
 use crate::topology::{h20x8, Direction, GpuId, NumaId};
 use crate::util::table::Table;
 
 /// Fig 9: bandwidth over time when (a) an MMA flow shares the fabric with
-/// a native CUDA stream pinning one direct link, and (b) two concurrent
-/// MMA flows share the relay capacity.
+/// a native CUDA stream pinning one direct link, (b) two concurrent MMA
+/// flows share the relay capacity, and (c) a serving KV fetch co-runs
+/// with a model-registry wake through the event-driven serving engine.
 pub fn fig9_coexistence() -> Table {
     let mut t = Table::new(["t (ms)", "scenario", "MMA-A GB/s", "other GB/s"]);
 
@@ -68,6 +76,52 @@ pub fn fig9_coexistence() -> Table {
                 "b:mma+mma".to_string(),
                 format!("{:.1}", smp.rates[1].abs() / 1e9),
                 format!("{:.1}", smp.rates[4].abs() / 1e9),
+            ]);
+        }
+    }
+
+    // (c) end-to-end: a serving KV fetch (class 1) and a 32B model wake
+    // (class 3) co-run on the one event loop — the generalization the
+    // unified serving layer enables.
+    {
+        let mut w = SimWorld::new(h20x8(), MmaConfig::default());
+        let mut reg = ModelRegistry::new(NumaId(1));
+        reg.transfer_class = 3;
+        let m = reg.register(qwen3_32b(), vec![GpuId(4)]);
+        reg.sleep(&mut w, m); // park the weights host-side first
+        let t0 = w.now();
+        w.enable_sampling(Time::from_ms(10), t0 + Time::from_ms(400));
+        let mut eng = ServingEngine::new(
+            ServingConfig {
+                gpu_kv_blocks: 1 << 20,
+                host_kv_blocks: 1 << 22,
+                max_batch_tokens: 128 * 1024,
+                ..Default::default()
+            },
+            qwen_7b_chat(),
+            w,
+            Box::new(h20()),
+            GpuId(0),
+            NumaId(0),
+        );
+        eng.seed_host_prefix(11, 65_536);
+        let wake = reg.start_wake(&mut eng.world, m);
+        eng.run(vec![Request {
+            id: RequestId(1),
+            arrival: t0,
+            prompt_tokens: 65_536 + 128,
+            cached_prefix_tokens: 65_536,
+            prefix_key: 11,
+            output_tokens: 4,
+        }]);
+        wake.wait(&mut eng.world);
+        eng.world.run_until_idle(); // flush the remaining sampling window
+        for smp in eng.world.samples.iter() {
+            t.row([
+                format!("{:.0}", smp.at.since(t0).as_ms_f64()),
+                "c:serve+wake".to_string(),
+                format!("{:.1}", smp.rates[1].abs() / 1e9),
+                format!("{:.1}", smp.rates[3].abs() / 1e9),
             ]);
         }
     }

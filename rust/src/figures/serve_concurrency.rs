@@ -1,0 +1,191 @@
+//! TTFT vs offered load per transfer policy — this repo's own sweep on
+//! the event-driven serving engine. Poisson arrivals of host-tier prefix
+//! hits whose KV fetches genuinely contend in the fabric (and whose
+//! compute overlaps in-flight fetches), so the curve shows how each
+//! policy degrades as concurrent serving load grows — the regime behind
+//! the paper's Fig 2/12 claims.
+
+use crate::config::ServingConfig;
+use crate::metrics::Summary;
+use crate::mma::{MmaConfig, SimWorld};
+use crate::models::{qwen_7b_chat, ModelSpec};
+use crate::roofline::h20;
+use crate::serving::{Request, RequestId, ServingEngine};
+use crate::sim::Time;
+use crate::topology::{h20x8, GpuId, NumaId};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workload::poisson_arrivals;
+
+/// Serving config for open-loop concurrency runs: pools big enough that
+/// capacity effects don't interfere, batch budget wide enough that
+/// admission (not the budget) sets the concurrency level.
+pub fn open_loop_serving(rate_rps: f64) -> ServingConfig {
+    ServingConfig {
+        gpu_kv_blocks: 1 << 20,
+        host_kv_blocks: 1 << 22,
+        max_batch_tokens: 512 * 1024,
+        arrival_rate_rps: rate_rps,
+        ..Default::default()
+    }
+}
+
+/// One open-loop run: `n` single-turn requests over distinct
+/// host-resident prefixes of `context` tokens, Poisson arrivals at
+/// `serving.arrival_rate_rps` (the `--seed`-driven generator). Returns
+/// (mean TTFT, p99 TTFT) in seconds.
+pub fn concurrency_run(
+    model: &ModelSpec,
+    context: u32,
+    mma: MmaConfig,
+    serving: ServingConfig,
+    n: usize,
+    seed: u64,
+) -> (f64, f64) {
+    assert!(
+        serving.arrival_rate_rps > 0.0,
+        "open-loop run needs arrival_rate_rps > 0"
+    );
+    let mut rng = Rng::seed_from_u64(seed);
+    let world = SimWorld::new(h20x8(), mma);
+    let mut eng = ServingEngine::new(
+        serving.clone(),
+        model.clone(),
+        world,
+        Box::new(h20()),
+        GpuId(0),
+        NumaId(0),
+    );
+    let arrivals = poisson_arrivals(&mut rng, Time::ZERO, serving.arrival_rate_rps, n);
+    let mut reqs = Vec::with_capacity(n);
+    for (i, at) in arrivals.into_iter().enumerate() {
+        let key = rng.next_u64() | 1;
+        eng.seed_host_prefix(key, context);
+        reqs.push(Request {
+            id: RequestId(i as u64),
+            arrival: at,
+            prompt_tokens: context + 64,
+            cached_prefix_tokens: context,
+            prefix_key: key,
+            output_tokens: 8,
+        });
+    }
+    let out = eng.run(reqs);
+    let mut s = Summary::new();
+    for o in &out {
+        s.record(o.ttft_s());
+    }
+    (s.mean(), s.p99())
+}
+
+/// The sweep: mean/p99 TTFT per policy × offered load.
+pub fn serve_concurrency(fast: bool, seed: u64) -> Table {
+    let model = qwen_7b_chat();
+    let context = if fast { 16_384 } else { 32_768 };
+    let n = if fast { 6 } else { 12 };
+    let rates: &[f64] = if fast {
+        &[0.5, 2.0]
+    } else {
+        &[0.5, 1.0, 2.0, 4.0]
+    };
+    let policies: [(&str, MmaConfig); 2] = [
+        ("native", MmaConfig::native()),
+        ("mma-greedy", MmaConfig::default()),
+    ];
+    let mut t = Table::new(["policy", "rate (req/s)", "mean TTFT (s)", "p99 TTFT (s)"]);
+    for (name, cfg) in &policies {
+        for &rate in rates {
+            let (mean, p99) = concurrency_run(
+                &model,
+                context,
+                cfg.clone(),
+                open_loop_serving(rate),
+                n,
+                seed,
+            );
+            t.row([
+                name.to_string(),
+                format!("{rate:.1}"),
+                format!("{mean:.3}"),
+                format!("{p99:.3}"),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEED: u64 = crate::figures::DEFAULT_SEED;
+
+    #[test]
+    fn ttft_degrades_with_offered_load() {
+        let m = qwen_7b_chat();
+        let lo = concurrency_run(
+            &m,
+            16_384,
+            MmaConfig::native(),
+            open_loop_serving(0.2),
+            4,
+            SEED,
+        );
+        let hi = concurrency_run(
+            &m,
+            16_384,
+            MmaConfig::native(),
+            open_loop_serving(8.0),
+            4,
+            SEED,
+        );
+        assert!(
+            hi.0 > lo.0 * 1.1,
+            "mean TTFT must rise under load: {lo:?} vs {hi:?}"
+        );
+        assert!(hi.1 >= hi.0, "p99 at least the mean");
+    }
+
+    #[test]
+    fn mma_beats_native_under_load() {
+        let m = qwen_7b_chat();
+        let nat = concurrency_run(
+            &m,
+            16_384,
+            MmaConfig::native(),
+            open_loop_serving(4.0),
+            4,
+            SEED,
+        );
+        let mma = concurrency_run(
+            &m,
+            16_384,
+            MmaConfig::default(),
+            open_loop_serving(4.0),
+            4,
+            SEED,
+        );
+        assert!(
+            mma.0 < nat.0,
+            "multipath fetches must lower loaded TTFT: mma {} vs native {}",
+            mma.0,
+            nat.0
+        );
+    }
+
+    #[test]
+    fn run_is_seed_reproducible() {
+        let m = qwen_7b_chat();
+        let mk = || {
+            concurrency_run(
+                &m,
+                16_384,
+                MmaConfig::native(),
+                open_loop_serving(2.0),
+                4,
+                7,
+            )
+        };
+        assert_eq!(mk(), mk(), "same seed must reproduce bit-exactly");
+    }
+}

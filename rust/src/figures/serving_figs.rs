@@ -67,7 +67,7 @@ pub fn qa_ttft(
         }
         // GPU-tier hits (fetch 0) happen when a later turn reuses blocks
         // still resident; the paper's offloaded setting is the host hit.
-        ttft.record(out.ttft.total());
+        ttft.record(out.ttft_s());
         frac.record(out.ttft.fetch_fraction());
     }
     (ttft.mean(), frac.mean())

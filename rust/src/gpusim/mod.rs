@@ -79,6 +79,11 @@ pub enum StreamTask {
         dur: Time,
         /// Debug label.
         label: &'static str,
+        /// Caller tag surfaced on completion (0 = untracked). The driver
+        /// turns a nonzero tag into a [`crate::mma::Notice::KernelDone`]
+        /// so external consumers (the serving layer) can react to kernel
+        /// completions without polling streams.
+        tag: u64,
     },
     /// A memory copy bound to its path at enqueue time (native semantics).
     /// The driver starts the DMA when the task reaches the stream head and
@@ -122,6 +127,8 @@ pub enum Action {
         stream: StreamId,
         /// Kernel duration.
         dur: Time,
+        /// Caller tag from the enqueued task (0 = untracked).
+        tag: u64,
     },
     /// A native (non-intercepted) copy reached the head: start its DMA.
     CopyReachedHead {
@@ -267,9 +274,14 @@ impl GpuSim {
                 break;
             };
             match head {
-                StreamTask::Kernel { dur, .. } => {
+                StreamTask::Kernel { dur, tag, .. } => {
                     s.state = HeadState::Running;
-                    actions.push(Action::KernelStarted { dev, stream, dur });
+                    actions.push(Action::KernelStarted {
+                        dev,
+                        stream,
+                        dur,
+                        tag,
+                    });
                     break;
                 }
                 StreamTask::Memcpy { transfer } => {
@@ -388,7 +400,7 @@ mod tests {
     fn fifo_order_kernel_then_copy() {
         let mut sim = GpuSim::new(2);
         let s = sim.create_stream(g(0));
-        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(5), label: "k" });
+        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(5), label: "k", tag: 0 });
         sim.enqueue(g(0), s, StreamTask::Memcpy { transfer: TransferId(7) });
         let a = sim.try_advance(Time::ZERO, g(0), s);
         assert!(matches!(a[..], [Action::KernelStarted { .. }]));
@@ -408,7 +420,7 @@ mod tests {
         let s = sim.create_stream(g(0));
         let cb = CbId(3);
         sim.enqueue(g(0), s, StreamTask::HostCallback { cb });
-        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(1), label: "k" });
+        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(1), label: "k", tag: 0 });
         let a = sim.try_advance(Time::ZERO, g(0), s);
         // Callback fires AND the next kernel starts in the same advance:
         // host callbacks give stream→CPU notification but cannot block.
@@ -423,7 +435,7 @@ mod tests {
         let s = sim.create_stream(g(0));
         let flag = sim.alloc_flag();
         sim.enqueue(g(0), s, StreamTask::SpinKernel { flag });
-        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(1), label: "down" });
+        sim.enqueue(g(0), s, StreamTask::Kernel { dur: Time::from_us(1), label: "down", tag: 0 });
         let a = sim.try_advance(Time::ZERO, g(0), s);
         assert!(matches!(a[..], [Action::SpinParked { .. }]));
         // Downstream kernel must not start: C2's stale-read hazard.
@@ -457,11 +469,11 @@ mod tests {
         let ev = sim.create_event();
         // s2 waits on ev; s1 records it after a kernel.
         sim.enqueue(g(0), s2, StreamTask::WaitEvent { event: ev });
-        sim.enqueue(g(0), s2, StreamTask::Kernel { dur: Time::from_us(1), label: "after" });
+        sim.enqueue(g(0), s2, StreamTask::Kernel { dur: Time::from_us(1), label: "after", tag: 0 });
         let a = sim.try_advance(Time::ZERO, g(0), s2);
         assert!(a.is_empty(), "s2 must block: {a:?}");
 
-        sim.enqueue(g(0), s1, StreamTask::Kernel { dur: Time::from_us(3), label: "k" });
+        sim.enqueue(g(0), s1, StreamTask::Kernel { dur: Time::from_us(3), label: "k", tag: 0 });
         sim.enqueue(g(0), s1, StreamTask::RecordEvent { event: ev });
         let a = sim.try_advance(Time::ZERO, g(0), s1);
         assert!(matches!(a[..], [Action::KernelStarted { .. }]));

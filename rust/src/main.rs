@@ -5,6 +5,7 @@
 //! mma microbench [--dir h2d] [--size 1GB] [--relays 7] [--policy <name>]
 //! mma figure <id|all> [--fast] [--seed N] regenerate a paper table/figure
 //! mma serve [--model qwen-7b] [--ctx 65536] [--docs 4] [--policy <name>]
+//!           [--arrival-rate R] [--max-concurrency N] [--fetch-chunks C]
 //! mma switch [--model qwen3-32b] [--policy <name>]
 //! mma config-check <file.toml>            validate a config file
 //! ```
@@ -13,6 +14,12 @@
 //! `static-split` (or `static:<gpu>:<w>,...`), `mma-greedy`,
 //! `congestion-feedback`, `numa-aware`. The older `--mode mma|native`
 //! spelling still works. `--seed N` makes stochastic runners reproducible.
+//!
+//! `mma serve --arrival-rate R` switches to open-loop mode: `--docs`
+//! Poisson arrivals per second of host-tier prefix hits are pushed
+//! through the event-driven engine (KV fetches from concurrent requests
+//! contend in the fabric); `--max-concurrency` caps admission and
+//! `--fetch-chunks` pipelines each fetch with prefill compute.
 
 use mma::config::RunConfig;
 use mma::figures;
@@ -127,14 +134,49 @@ fn main() {
             let docs: usize = args.or("docs", 4);
             let mcfg = mma_cfg(&args);
             let policy = mcfg.policy.name();
-            let (ttft, frac) = figures::serving_figs::qa_ttft(&model, ctx, mcfg, docs, seed);
-            println!(
-                "{} ctx={}k docs={docs} policy={policy}: mean TTFT {} (fetch share {:.0}%)",
-                model.name,
-                ctx / 1024,
-                fmt::secs(ttft),
-                frac * 100.0
-            );
+            let rate: f64 = args.or("arrival-rate", cfg.serving.arrival_rate_rps);
+            if rate > 0.0 {
+                // Open-loop mode: Poisson arrivals of host-tier prefix
+                // hits on the event-driven engine (fetches contend).
+                // Base = the run config's serving section (tp, PD mode,
+                // batch/seq knobs all honored); only the pools and batch
+                // budget are widened so admission, not capacity, governs
+                // the measured concurrency.
+                let serving = mma::config::ServingConfig {
+                    arrival_rate_rps: rate,
+                    max_concurrency: args.or("max-concurrency", cfg.serving.max_concurrency),
+                    fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
+                    gpu_kv_blocks: 1 << 20,
+                    host_kv_blocks: 1 << 22,
+                    max_batch_tokens: 512 * 1024,
+                    ..cfg.serving.clone()
+                };
+                let (mean, p99) = figures::serve_concurrency::concurrency_run(
+                    &model,
+                    ctx,
+                    mcfg,
+                    serving,
+                    docs.max(1),
+                    seed,
+                );
+                println!(
+                    "{} ctx={}k rate={rate}/s n={} policy={policy}: mean TTFT {}, p99 {}",
+                    model.name,
+                    ctx / 1024,
+                    docs.max(1),
+                    fmt::secs(mean),
+                    fmt::secs(p99),
+                );
+            } else {
+                let (ttft, frac) = figures::serving_figs::qa_ttft(&model, ctx, mcfg, docs, seed);
+                println!(
+                    "{} ctx={}k docs={docs} policy={policy}: mean TTFT {} (fetch share {:.0}%)",
+                    model.name,
+                    ctx / 1024,
+                    fmt::secs(ttft),
+                    frac * 100.0
+                );
+            }
         }
         "switch" => {
             let model = model_by_name(&args.str_or("model", "qwen3-32b"));

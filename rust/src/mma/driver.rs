@@ -12,6 +12,7 @@ use crate::fabric::{Fabric, FlowDone};
 use crate::gpusim::{Action, GpuSim, StreamId, StreamTask, TransferId};
 use crate::sim::{EventQueue, Time};
 use crate::topology::{Direction, GpuId, LinkId, Topology};
+use std::collections::VecDeque;
 
 /// Flow-tag layout: `[class:8][kind:8][a:24][b:24]`.
 mod tag {
@@ -50,8 +51,13 @@ enum Ev {
     EngineWake { e: u8, gpu: GpuId },
     /// Engine `e`'s sync thread retires chunk `key` on `gpu`'s queue.
     Retire { e: u8, gpu: GpuId, key: u64 },
-    /// A kernel at the head of (dev, stream) finished.
-    KernelDone { dev: GpuId, stream: StreamId },
+    /// A kernel at the head of (dev, stream) finished. `tag` != 0 emits a
+    /// [`Notice::KernelDone`].
+    KernelDone {
+        dev: GpuId,
+        stream: StreamId,
+        tag: u64,
+    },
     /// A spin kernel observed its flag (one PCIe RTT after the set).
     SpinRelease {
         dev: GpuId,
@@ -62,6 +68,25 @@ enum Ev {
     Sample,
     /// Background copy loop `id` starts its next iteration.
     BgNext { id: u32 },
+    /// A user timer scheduled via [`SimWorld::schedule_timer`] fires.
+    Timer { token: u64 },
+}
+
+/// A completion notification for external consumers of the event loop
+/// (the serving layer is the main one). Notices are queued as the
+/// simulation advances and drained via [`SimWorld::next_notice`]; nothing
+/// in the driver depends on them being consumed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Notice {
+    /// A submitted transfer's payload finished landing (same instant as
+    /// `TransferRec::completed`; for async copies the downstream stream is
+    /// released one PCIe RTT later).
+    TransferDone(TransferId),
+    /// A timer scheduled with [`SimWorld::schedule_timer`] fired.
+    Timer(u64),
+    /// A kernel enqueued with [`SimWorld::enqueue_kernel_tagged`] (nonzero
+    /// tag) finished.
+    KernelDone(u64),
 }
 
 /// A stream handle returned by [`SimWorld::stream`].
@@ -116,6 +141,8 @@ pub struct SimWorld {
     /// Cumulative payload bytes delivered per class (terminal stages only).
     class_delivered: [f64; 8],
     last_sampled: ([f64; 8], Time),
+    /// Pending completion notices for external consumers.
+    notices: VecDeque<Notice>,
 }
 
 impl SimWorld {
@@ -140,6 +167,7 @@ impl SimWorld {
             sample_until: Time::ZERO,
             class_delivered: [0.0; 8],
             last_sampled: ([0.0; 8], Time::ZERO),
+            notices: VecDeque::new(),
             topo,
         }
     }
@@ -274,9 +302,29 @@ impl SimWorld {
 
     /// Enqueue a compute kernel on a stream.
     pub fn enqueue_kernel(&mut self, s: StreamHandle, dur: Time, label: &'static str) {
+        self.enqueue_kernel_tagged(s, dur, label, 0);
+    }
+
+    /// Enqueue a compute kernel whose completion is surfaced as a
+    /// [`Notice::KernelDone`] carrying `tag` (must be nonzero to notify).
+    pub fn enqueue_kernel_tagged(
+        &mut self,
+        s: StreamHandle,
+        dur: Time,
+        label: &'static str,
+        tag: u64,
+    ) {
         let now = self.now();
-        self.gpus.enqueue(s.dev, s.id, StreamTask::Kernel { dur, label });
+        self.gpus
+            .enqueue(s.dev, s.id, StreamTask::Kernel { dur, label, tag });
         self.advance_stream(now, s.dev, s.id);
+    }
+
+    /// Schedule a [`Notice::Timer`] to fire at `at` (clamped to `now`).
+    /// Lets external consumers (request arrivals in the serving layer)
+    /// inject wake-ups into the one shared event loop.
+    pub fn schedule_timer(&mut self, at: Time, token: u64) {
+        self.q.schedule_at(at, Ev::Timer { token });
     }
 
     /// Start a background copy loop: `repeat` back-to-back copies of
@@ -360,6 +408,47 @@ impl SimWorld {
         }
     }
 
+    /// Run until *any* of `ids` completes; returns the first found complete
+    /// (in `ids` order among those done at that instant), or `None` if the
+    /// world idles before any of them finishes.
+    pub fn run_until_any(&mut self, ids: &[TransferId]) -> Option<TransferId> {
+        loop {
+            if let Some(&t) = ids
+                .iter()
+                .find(|t| self.transfers[t.0 as usize].completed.is_some())
+            {
+                return Some(t);
+            }
+            if !self.step() {
+                return None;
+            }
+        }
+    }
+
+    /// Run until *all* of `ids` complete; returns the latest completion
+    /// time (or `now` for an empty set). Panics if the world idles first.
+    pub fn run_until_transfers(&mut self, ids: &[TransferId]) -> Time {
+        let mut done = self.now();
+        for &t in ids {
+            done = done.max(self.run_until_transfer(t));
+        }
+        done
+    }
+
+    /// Advance the world until a completion notice is available and return
+    /// it; `None` once the world is idle with no notices left. This is the
+    /// pump external event consumers (the serving engine) are built on.
+    pub fn next_notice(&mut self) -> Option<Notice> {
+        loop {
+            if let Some(n) = self.notices.pop_front() {
+                return Some(n);
+            }
+            if !self.step() {
+                return None;
+            }
+        }
+    }
+
     // ----- internals ---------------------------------------------------
 
     fn step(&mut self) -> bool {
@@ -382,8 +471,11 @@ impl SimWorld {
                 let acts = self.engines[e as usize].on_retire(now, gpu, key, &self.topo);
                 self.apply(now, e, acts);
             }
-            Ev::KernelDone { dev, stream } => {
+            Ev::KernelDone { dev, stream, tag } => {
                 self.gpus.complete_head(dev, stream);
+                if tag != 0 {
+                    self.notices.push_back(Notice::KernelDone(tag));
+                }
                 self.advance_stream(now, dev, stream);
             }
             Ev::SpinRelease { dev, stream, transfer } => {
@@ -418,6 +510,9 @@ impl SimWorld {
                     let (path, bytes, latency) = (lp.path.clone(), lp.bytes, lp.latency);
                     self.fabric.start_flow(now, &path, bytes, latency, t);
                 }
+            }
+            Ev::Timer { token } => {
+                self.notices.push_back(Notice::Timer(token));
             }
         }
         self.arm_fabric();
@@ -454,6 +549,7 @@ impl SimWorld {
                 rec.released = Some(now);
                 rec.state = TransferState::Complete;
                 rec.bytes_direct += rec.desc.bytes;
+                self.notices.push_back(Notice::TransferDone(tid));
                 if let SubmitKind::Async { stream } = rec.kind {
                     let dev = rec.desc.gpu;
                     self.gpus.complete_head(dev, stream);
@@ -500,6 +596,7 @@ impl SimWorld {
                     rec.state = TransferState::Complete;
                     rec.bytes_direct = bytes_direct;
                     rec.bytes_relay = bytes_relay;
+                    self.notices.push_back(Notice::TransferDone(transfer));
                     if let SubmitKind::Async { stream } = rec.kind {
                         let dev = rec.desc.gpu;
                         let rtt = Time::from_ns(self.topo.lat.pcie_rtt_ns);
@@ -525,8 +622,14 @@ impl SimWorld {
         let actions = self.gpus.try_advance(now, dev, stream);
         for a in actions {
             match a {
-                Action::KernelStarted { dev, stream, dur } => {
-                    self.q.schedule_at(now + dur, Ev::KernelDone { dev, stream });
+                Action::KernelStarted {
+                    dev,
+                    stream,
+                    dur,
+                    tag,
+                } => {
+                    self.q
+                        .schedule_at(now + dur, Ev::KernelDone { dev, stream, tag });
                 }
                 Action::CopyReachedHead { transfer, .. } => {
                     self.transfers[transfer.0 as usize].activated = Some(now);
@@ -706,6 +809,49 @@ mod tests {
         let id = w.start_bg_loop(path, 100_000_000, 5, 0);
         w.run_until_idle();
         assert_eq!(w.bg_iters(id).len(), 5);
+    }
+
+    #[test]
+    fn notices_surface_transfers_timers_and_tagged_kernels() {
+        let mut w = world(MmaConfig::native());
+        let s = w.stream(GpuId(0));
+        w.schedule_timer(Time::from_us(5), 42);
+        let t = w.memcpy_async(s, h2d(1_000_000)); // ~19 us at native rate
+        w.enqueue_kernel_tagged(s, Time::from_us(3), "consumer", 7);
+        let mut got = Vec::new();
+        while let Some(n) = w.next_notice() {
+            got.push(n);
+        }
+        assert_eq!(got[0], Notice::Timer(42), "{got:?}");
+        assert!(got.contains(&Notice::TransferDone(t)), "{got:?}");
+        // Stream FIFO: the tagged kernel completes after the copy.
+        assert_eq!(*got.last().unwrap(), Notice::KernelDone(7), "{got:?}");
+    }
+
+    #[test]
+    fn untagged_kernels_do_not_notify() {
+        let mut w = world(MmaConfig::native());
+        let s = w.stream(GpuId(0));
+        w.enqueue_kernel(s, Time::from_us(3), "quiet");
+        assert_eq!(w.next_notice(), None);
+        assert_eq!(w.gpus.stream_completed(GpuId(0), s.id), 1);
+    }
+
+    #[test]
+    fn run_until_any_returns_first_completion() {
+        let mut w = world(MmaConfig::native());
+        let s0 = w.stream(GpuId(0));
+        let s1 = w.stream(GpuId(1));
+        let big = w.memcpy_async(s0, h2d(1_000_000_000));
+        let small = w.memcpy_async(
+            s1,
+            TransferDesc::new(Direction::H2D, GpuId(1), NumaId(0), 1_000_000),
+        );
+        let first = w.run_until_any(&[big, small]).unwrap();
+        assert_eq!(first, small);
+        assert!(w.rec(big).completed.is_none(), "big must still be in flight");
+        let all_done = w.run_until_transfers(&[big, small]);
+        assert_eq!(all_done, w.rec(big).completed.unwrap());
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod sync_engine;
 pub mod task_manager;
 pub mod transfer_task;
 
-pub use driver::SimWorld;
+pub use driver::{Notice, SimWorld, StreamHandle};
 pub use engine::Engine;
 pub use transfer_task::{TransferClass, TransferDesc};
 

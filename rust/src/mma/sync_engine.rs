@@ -103,7 +103,7 @@ mod tests {
         let t = TransferId(9);
         se.install_dummy_task(&mut gpus, dev, s, t);
         // Downstream kernel that must not run before the transfer lands.
-        gpus.enqueue(dev, s, StreamTask::Kernel { dur: Time::from_us(1), label: "down" });
+        gpus.enqueue(dev, s, StreamTask::Kernel { dur: Time::from_us(1), label: "down", tag: 0 });
 
         let actions = gpus.try_advance(Time::ZERO, dev, s);
         // Callback fires (copy point active), then the spin kernel parks.
@@ -150,7 +150,7 @@ mod tests {
         let dev = GpuId(0);
         let s = gpus.create_stream(dev);
         // Upstream kernel delays the stream.
-        gpus.enqueue(dev, s, StreamTask::Kernel { dur: Time::from_ms(1), label: "up" });
+        gpus.enqueue(dev, s, StreamTask::Kernel { dur: Time::from_ms(1), label: "up", tag: 0 });
         let t = TransferId(3);
         se.install_dummy_task(&mut gpus, dev, s, t);
         let a = gpus.try_advance(Time::ZERO, dev, s);

@@ -11,9 +11,9 @@ pub mod prefix_cache;
 pub mod router;
 pub mod scheduler;
 
-pub use engine::{Compute, RequestOutcome, ServingEngine};
+pub use engine::{Compute, FixedCompute, RequestOutcome, ServingEngine};
 pub use kv_cache::{BlockId, KvCacheManager};
-pub use model_registry::{ModelRegistry, ModelState};
+pub use model_registry::{ModelRegistry, ModelState, PendingPhase};
 pub use prefix_cache::{PrefixCache, Tier};
 pub use router::Router;
 pub use scheduler::{Request, RequestId, Scheduler};

@@ -4,7 +4,8 @@
 //! weight transfer as models grow (Fig 3); MMA cuts them 1.12–2.48×
 //! (Fig 13).
 
-use crate::mma::{SimWorld, TransferDesc};
+use crate::gpusim::TransferId;
+use crate::mma::{SimWorld, TransferClass, TransferDesc};
 use crate::models::ModelSpec;
 use crate::sim::Time;
 use crate::topology::{Direction, GpuId, NumaId};
@@ -54,10 +55,45 @@ impl PhaseResult {
     }
 }
 
+/// An in-flight sleep/wake phase: its per-tensor transfers have been
+/// submitted to the world and co-run with whatever else is on the fabric
+/// (live serving fetches, background loops). Await with [`Self::wait`] or
+/// poll with [`Self::result`].
+#[derive(Clone, Debug)]
+pub struct PendingPhase {
+    ids: Vec<TransferId>,
+    started: Time,
+    overhead: Time,
+}
+
+impl PendingPhase {
+    /// The phase outcome, if all transfers completed (poll with
+    /// `result(world).is_some()` to check doneness without blocking).
+    pub fn result(&self, world: &SimWorld) -> Option<PhaseResult> {
+        let mut done = self.started;
+        for t in &self.ids {
+            done = done.max(world.rec(*t).completed?);
+        }
+        Some(PhaseResult {
+            transfer: done.since(self.started),
+            overhead: self.overhead,
+        })
+    }
+
+    /// Run the world until the phase completes and return its outcome.
+    pub fn wait(&self, world: &mut SimWorld) -> PhaseResult {
+        world.run_until_transfers(&self.ids);
+        self.result(world).expect("phase transfers complete")
+    }
+}
+
 /// Registry of model instances sharing one server.
 pub struct ModelRegistry {
     instances: Vec<Instance>,
     host_numa: NumaId,
+    /// Traffic class stamped on weight transfers (per-class bandwidth
+    /// sampling in coexistence figures). Default 1 (foreground).
+    pub transfer_class: TransferClass,
 }
 
 /// Non-transfer sleep/wake overhead: allocator traversal, CUDA bookkeeping,
@@ -74,6 +110,7 @@ impl ModelRegistry {
         ModelRegistry {
             instances: Vec::new(),
             host_numa,
+            transfer_class: 1,
         }
     }
 
@@ -103,62 +140,83 @@ impl ModelRegistry {
         self.instances.is_empty()
     }
 
-    /// Move one instance's weights tensor-by-tensor in `dir` (vLLM walks
-    /// the state dict, issuing one async copy per tensor on each GPU's
-    /// stream). Per-tensor sizes decide which copies multipath helps —
-    /// small tensors fall back to native (§3.2).
-    fn move_weights(&self, world: &mut SimWorld, idx: usize, dir: Direction) -> Time {
+    /// Submit one instance's weight movement tensor-by-tensor in `dir`
+    /// (vLLM walks the state dict, issuing one async copy per tensor on
+    /// each GPU's stream). Per-tensor sizes decide which copies multipath
+    /// helps — small tensors fall back to native (§3.2). Non-blocking: the
+    /// transfers contend with live serving traffic on the shared fabric.
+    fn issue_weight_copies(
+        &self,
+        world: &mut SimWorld,
+        idx: usize,
+        dir: Direction,
+    ) -> Vec<TransferId> {
         let inst = &self.instances[idx];
-        let t0 = world.now();
         let tp = inst.gpus.len() as u64;
-        let mut last = Vec::new();
+        let mut ids = Vec::new();
         for &g in &inst.gpus {
             let s = world.stream(g);
             for tensor in inst.spec.tensor_sizes() {
                 let shard = (tensor / tp).max(1);
-                last.push(world.memcpy_async(
+                ids.push(world.memcpy_async(
                     s,
-                    TransferDesc::new(dir, g, self.host_numa, shard),
+                    TransferDesc {
+                        class: self.transfer_class,
+                        ..TransferDesc::new(dir, g, self.host_numa, shard)
+                    },
                 ));
             }
         }
-        let mut done = t0;
-        for id in last {
-            done = done.max(world.run_until_transfer(id));
-        }
-        world.run_until_idle();
-        done.since(t0)
+        ids
     }
 
-    /// Fall asleep: D2H copy of every weight tensor, then free GPU memory.
-    /// Runs on `world`'s virtual clock.
-    pub fn sleep(&mut self, world: &mut SimWorld, idx: usize) -> PhaseResult {
+    /// Begin falling asleep: submit the D2H copy of every weight tensor
+    /// and return without draining the world, so the phase co-runs with
+    /// anything else on the fabric.
+    pub fn start_sleep(&mut self, world: &mut SimWorld, idx: usize) -> PendingPhase {
         assert_eq!(
             self.instances[idx].state,
             ModelState::Active,
             "sleep on non-active model"
         );
-        let transfer = self.move_weights(world, idx, Direction::D2H);
+        let started = world.now();
+        let ids = self.issue_weight_copies(world, idx, Direction::D2H);
         self.instances[idx].state = ModelState::Asleep;
-        PhaseResult {
-            transfer,
+        PendingPhase {
+            ids,
+            started,
             overhead: phase_overhead(&self.instances[idx].spec),
         }
     }
 
-    /// Wake up: H2D reload of every weight tensor.
-    pub fn wake(&mut self, world: &mut SimWorld, idx: usize) -> PhaseResult {
+    /// Begin waking up: submit the H2D reload of every weight tensor (see
+    /// [`Self::start_sleep`] for the co-running semantics).
+    pub fn start_wake(&mut self, world: &mut SimWorld, idx: usize) -> PendingPhase {
         assert_eq!(
             self.instances[idx].state,
             ModelState::Asleep,
             "wake on non-asleep model"
         );
-        let transfer = self.move_weights(world, idx, Direction::H2D);
+        let started = world.now();
+        let ids = self.issue_weight_copies(world, idx, Direction::H2D);
         self.instances[idx].state = ModelState::Active;
-        PhaseResult {
-            transfer,
+        PendingPhase {
+            ids,
+            started,
             overhead: phase_overhead(&self.instances[idx].spec),
         }
+    }
+
+    /// Fall asleep and block until every tensor landed (virtual time).
+    pub fn sleep(&mut self, world: &mut SimWorld, idx: usize) -> PhaseResult {
+        let p = self.start_sleep(world, idx);
+        p.wait(world)
+    }
+
+    /// Wake up and block until every tensor landed (virtual time).
+    pub fn wake(&mut self, world: &mut SimWorld, idx: usize) -> PhaseResult {
+        let p = self.start_wake(world, idx);
+        p.wait(world)
     }
 
     /// Model switching: put `from` to sleep, then wake `to` on the freed

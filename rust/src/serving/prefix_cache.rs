@@ -163,6 +163,13 @@ impl PrefixCache {
         }
     }
 
+    /// Non-mutating lookup: tokens and tier without the LRU refresh or
+    /// host→GPU promotion of [`Self::lookup`]. Used at admission time to
+    /// resolve the prefill suffix before committing to the fetch.
+    pub fn peek(&self, key: u64) -> Option<(u32, Tier)> {
+        self.entries.get(&key).map(|e| (e.tokens, e.tier))
+    }
+
     /// Look up a prefix. On a hit, refreshes LRU and (for host hits)
     /// promotes it back to the GPU tier — the caller is responsible for
     /// issuing the actual KV fetch transfer of `tokens` worth of KV bytes.

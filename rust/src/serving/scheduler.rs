@@ -56,15 +56,6 @@ pub struct Sequence {
     pub phase: Phase,
 }
 
-/// One scheduling step's work assignment.
-#[derive(Debug, Default)]
-pub struct StepPlan {
-    /// Requests entering prefill this step: (id, suffix tokens).
-    pub prefills: Vec<(RequestId, u32)>,
-    /// Sequences advancing one decode token.
-    pub decodes: Vec<RequestId>,
-}
-
 /// The scheduler.
 pub struct Scheduler {
     cfg: ServingConfig,
@@ -102,44 +93,73 @@ impl Scheduler {
         self.waiting.is_empty() && self.running.is_empty()
     }
 
-    /// Assemble the next step: decodes first (latency-sensitive), then
-    /// admit prefills into the remaining token budget. In PD-disaggregated
-    /// mode prefills don't compete with decodes for the budget (separate
-    /// GPU groups), so prefills are admitted up to the full budget.
-    pub fn plan_step(&mut self) -> StepPlan {
-        let mut plan = StepPlan::default();
-        let mut tokens_used = 0u32;
+    /// Ids of every running decode sequence, in admission order.
+    pub fn running_decodes(&self) -> Vec<RequestId> {
+        self.running
+            .iter()
+            .filter(|s| matches!(s.phase, Phase::Decode { .. }))
+            .map(|s| s.req.id)
+            .collect()
+    }
 
-        // Decodes: one token per running decode sequence.
-        for s in &self.running {
-            if matches!(s.phase, Phase::Decode { .. }) {
-                plan.decodes.push(s.req.id);
-                if !self.cfg.pd_disaggregation {
-                    tokens_used += 1;
-                }
-            }
-        }
+    /// Number of running decode sequences (allocation-free; the event
+    /// loop polls this on every notice).
+    pub fn decode_count(&self) -> usize {
+        self.running
+            .iter()
+            .filter(|s| matches!(s.phase, Phase::Decode { .. }))
+            .count()
+    }
 
-        // Prefill admission.
-        let budget = self.cfg.max_batch_tokens;
+    /// Admit prefills from the FCFS queue. `busy_tokens` is the token
+    /// budget already committed elsewhere (in-flight prefill suffixes,
+    /// plus one token per running decode in aggregated mode). `resolve`
+    /// maps a request to the prefix tokens actually reusable from the
+    /// cache *right now*; the suffix derived from it is the single source
+    /// of truth for both the batch-budget cost and the tokens the engine
+    /// will prefill (no separate engine-side reuse computation). Admission
+    /// stops at the first request that no longer fits (FCFS: no queue
+    /// jumping); a request larger than the whole budget is still admitted
+    /// once nothing else is committed, so oversized prompts cannot stall.
+    pub fn plan_prefills(
+        &mut self,
+        busy_tokens: u32,
+        mut resolve: impl FnMut(&Request) -> u32,
+    ) -> Vec<(RequestId, u32)> {
+        let mut out = Vec::new();
+        let mut tokens_used = busy_tokens;
+        let seq_cap = self.seq_cap();
         while let Some(front) = self.waiting.front() {
-            if self.running.len() >= self.cfg.max_batch_seqs as usize {
+            if self.running.len() >= seq_cap {
                 break;
             }
-            let suffix = front.prompt_tokens - front.cached_prefix_tokens;
+            let reused = resolve(front).min(front.prompt_tokens);
+            let suffix = front.prompt_tokens - reused;
             let cost = suffix.max(1);
-            if tokens_used + cost > budget && tokens_used > 0 {
+            if tokens_used.saturating_add(cost) > self.cfg.max_batch_tokens && tokens_used > 0 {
                 break; // batch full; keep FCFS order
             }
             let req = self.waiting.pop_front().unwrap();
             tokens_used += cost;
-            plan.prefills.push((req.id, suffix));
+            out.push((req.id, suffix));
             self.running.push(Sequence {
                 req,
                 phase: Phase::Prefill { suffix },
             });
         }
-        plan
+        out
+    }
+
+    /// Concurrent-sequence cap: `max_batch_seqs`, additionally bounded by
+    /// the `max_concurrency` admission knob when set (> 0).
+    fn seq_cap(&self) -> usize {
+        let cap = self.cfg.max_batch_seqs;
+        let cap = if self.cfg.max_concurrency > 0 {
+            cap.min(self.cfg.max_concurrency)
+        } else {
+            cap
+        };
+        cap as usize
     }
 
     /// Mark a prefill finished: the sequence moves to decode.
@@ -205,18 +225,22 @@ mod tests {
         }
     }
 
+    /// Admit with the request's own claimed prefix as the resolver (what
+    /// the engine does, with the cache as the source).
+    fn plan(s: &mut Scheduler, busy: u32) -> Vec<(RequestId, u32)> {
+        s.plan_prefills(busy, |r| r.cached_prefix_tokens)
+    }
+
     #[test]
     fn fcfs_admission_under_token_budget() {
         let mut s = Scheduler::new(cfg(1000, 64, true));
         s.submit(req(1, 600, 0, 4));
         s.submit(req(2, 600, 0, 4));
         s.submit(req(3, 100, 0, 4));
-        let plan = s.plan_step();
         // 600 fits; +600 exceeds → stop (FCFS: 3 must not jump the queue).
-        assert_eq!(plan.prefills, vec![(RequestId(1), 600)]);
+        assert_eq!(plan(&mut s, 0), vec![(RequestId(1), 600)]);
         assert_eq!(s.waiting_len(), 2);
-        let plan = s.plan_step();
-        assert_eq!(plan.prefills[0].0, RequestId(2));
+        assert_eq!(plan(&mut s, 0)[0].0, RequestId(2));
     }
 
     #[test]
@@ -224,34 +248,32 @@ mod tests {
         let mut s = Scheduler::new(cfg(1000, 64, true));
         s.submit(req(1, 900, 800, 4)); // suffix 100
         s.submit(req(2, 900, 0, 4)); // suffix 900
-        let plan = s.plan_step();
+        let prefills = plan(&mut s, 0);
         // Both fit: 100 + 900 = 1000.
-        assert_eq!(plan.prefills.len(), 2);
-        assert_eq!(plan.prefills[0], (RequestId(1), 100));
+        assert_eq!(prefills.len(), 2);
+        assert_eq!(prefills[0], (RequestId(1), 100));
     }
 
     #[test]
     fn decode_priority_in_aggregated_mode() {
         let mut s = Scheduler::new(cfg(100, 64, false));
         s.submit(req(1, 50, 0, 2));
-        let p = s.plan_step();
-        assert_eq!(p.prefills.len(), 1);
+        assert_eq!(plan(&mut s, 0).len(), 1);
         s.prefill_done(RequestId(1));
         s.submit(req(2, 100, 0, 2));
-        let p = s.plan_step();
-        // Decode runs; its token counts against the budget, so the
-        // 100-token prefill no longer fits (100 + 1 > 100).
-        assert_eq!(p.decodes, vec![RequestId(1)]);
-        assert!(p.prefills.is_empty());
-        // In PD mode the prefill would be admitted.
+        // Aggregated mode: the running decode's token counts against the
+        // budget, so the 100-token prefill no longer fits (1 + 100 > 100).
+        assert_eq!(s.running_decodes(), vec![RequestId(1)]);
+        let busy = s.decode_count() as u32;
+        assert!(plan(&mut s, busy).is_empty());
+        // In PD mode decodes hold no budget, so the prefill is admitted.
         let mut s2 = Scheduler::new(cfg(100, 64, true));
         s2.submit(req(1, 50, 0, 2));
-        s2.plan_step();
+        plan(&mut s2, 0);
         s2.prefill_done(RequestId(1));
         s2.submit(req(2, 100, 0, 2));
-        let p2 = s2.plan_step();
-        assert_eq!(p2.decodes.len(), 1);
-        assert_eq!(p2.prefills.len(), 1);
+        assert_eq!(s2.decode_count(), 1);
+        assert_eq!(plan(&mut s2, 0).len(), 1);
     }
 
     #[test]
@@ -260,16 +282,51 @@ mod tests {
         for i in 0..5 {
             s.submit(req(i, 10, 0, 2));
         }
-        let p = s.plan_step();
-        assert_eq!(p.prefills.len(), 2);
+        assert_eq!(plan(&mut s, 0).len(), 2);
         assert_eq!(s.running_len(), 2);
+    }
+
+    #[test]
+    fn resolver_is_suffix_source_of_truth() {
+        // The cache may hold fewer reusable tokens than the request
+        // claims; the resolved value drives both the budget cost and the
+        // suffix stored on the sequence.
+        let mut s = Scheduler::new(cfg(1000, 64, true));
+        s.submit(req(1, 900, 800, 4)); // claims 800 cached…
+        let plan = s.plan_prefills(0, |_| 100); // …but only 100 are there
+        assert_eq!(plan, vec![(RequestId(1), 800)]);
+        match s.sequence(RequestId(1)).unwrap().phase {
+            Phase::Prefill { suffix } => assert_eq!(suffix, 800),
+            _ => panic!("admitted sequence must be in prefill"),
+        }
+    }
+
+    #[test]
+    fn busy_tokens_and_concurrency_gate_admission() {
+        let mut s = Scheduler::new(cfg(1000, 64, true));
+        s.submit(req(1, 600, 0, 4));
+        assert!(
+            s.plan_prefills(700, |r| r.cached_prefix_tokens).is_empty(),
+            "in-flight work holds the budget"
+        );
+        assert_eq!(s.plan_prefills(0, |r| r.cached_prefix_tokens).len(), 1);
+
+        let mut s2 = Scheduler::new(ServingConfig {
+            max_concurrency: 1,
+            ..cfg(10_000, 64, true)
+        });
+        for i in 0..3 {
+            s2.submit(req(i, 10, 0, 2));
+        }
+        let plan = s2.plan_prefills(0, |r| r.cached_prefix_tokens);
+        assert_eq!(plan.len(), 1, "max_concurrency caps admission");
     }
 
     #[test]
     fn decode_until_retirement() {
         let mut s = Scheduler::new(cfg(1000, 8, true));
         s.submit(req(1, 10, 0, 3));
-        s.plan_step();
+        plan(&mut s, 0);
         s.prefill_done(RequestId(1));
         assert!(!s.decode_tick(RequestId(1)));
         assert!(!s.decode_tick(RequestId(1)));

@@ -147,6 +147,15 @@ mod tests {
     }
 
     #[test]
+    fn float_option_parses() {
+        // The serve concurrency flags ride on the generic typed getter.
+        let a = parse("serve --arrival-rate 2.5 --max-concurrency 8");
+        assert_eq!(a.or::<f64>("arrival-rate", 0.0), 2.5);
+        assert_eq!(a.or::<f64>("missing", 1.5), 1.5);
+        assert_eq!(a.or::<u32>("max-concurrency", 0), 8);
+    }
+
+    #[test]
     fn seed_accepts_decimal_and_hex() {
         assert_eq!(parse("x").seed_or(42), 42);
         assert_eq!(parse("--seed 7 x").seed_or(42), 7);

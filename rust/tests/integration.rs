@@ -1,11 +1,13 @@
 //! Cross-module integration tests: interceptor → engine → fabric → gpusim
 //! under realistic serving scenarios, plus determinism and failure cases.
 
-use mma::config::RunConfig;
+use mma::config::{RunConfig, ServingConfig};
 use mma::mma::{MmaConfig, SimWorld, TransferDesc};
 use mma::models::{qwen3_4b, qwen_7b_chat};
 use mma::policy::PolicySpec;
-use mma::serving::{ModelRegistry, ModelState};
+use mma::serving::{
+    FixedCompute, ModelRegistry, ModelState, Request, RequestId, ServingEngine,
+};
 use mma::sim::Time;
 use mma::topology::{h20x8, single_numa_4gpu, Direction, GpuId, NumaId};
 
@@ -275,4 +277,157 @@ fn numa_aware_policy_profile_differs_from_greedy() {
     let numa = relay_share_numa1(PolicySpec::numa_aware());
     assert_eq!(numa, 0, "numa-aware must keep a small transfer on-socket");
     assert!(greedy > 0, "greedy should have recruited the remote socket");
+}
+
+// ----- event-driven serving layer ------------------------------------
+
+fn serving_engine(cfg: ServingConfig, mma: MmaConfig, prefill_s: f64) -> ServingEngine {
+    let world = SimWorld::new(h20x8(), mma);
+    ServingEngine::new(
+        cfg,
+        qwen_7b_chat(),
+        world,
+        Box::new(FixedCompute {
+            prefill_s,
+            decode_s: 0.001,
+        }),
+        GpuId(0),
+        NumaId(0),
+    )
+}
+
+fn hit_request(id: u64, ctx: u32, key: u64) -> Request {
+    Request {
+        id: RequestId(id),
+        arrival: Time::ZERO,
+        prompt_tokens: ctx + 64,
+        cached_prefix_tokens: ctx,
+        prefix_key: key,
+        output_tokens: 2,
+    }
+}
+
+#[test]
+fn concurrent_host_fetches_contend_in_the_fabric() {
+    // Two concurrent requests' host-tier KV fetches share gpu0's direct
+    // PCIe path under the native policy: each must run slower than a solo
+    // fetch (max-min sharing), while aggregate bytes are conserved.
+    let ctx = 16_384u32;
+    let solo = {
+        let mut e = serving_engine(ServingConfig::default(), MmaConfig::native(), 0.05);
+        e.seed_host_prefix(1, ctx);
+        let out = e.run(vec![hit_request(1, ctx, 1)]);
+        out[0].ttft.fetch_s
+    };
+    let mut e = serving_engine(ServingConfig::default(), MmaConfig::native(), 0.05);
+    e.seed_host_prefix(1, ctx);
+    e.seed_host_prefix(2, ctx);
+    let out = e.run(vec![hit_request(1, ctx, 1), hit_request(2, ctx, 2)]);
+    for o in &out {
+        assert!(
+            o.ttft.fetch_s > 1.5 * solo,
+            "contended fetch {} vs solo {solo}",
+            o.ttft.fetch_s
+        );
+        assert!(
+            o.ttft.fetch_s < 2.5 * solo,
+            "fair sharing bound: {} vs solo {solo}",
+            o.ttft.fetch_s
+        );
+    }
+    // Byte conservation across every transfer the run submitted.
+    let fetch_bytes = qwen_7b_chat().kv_bytes(ctx as u64);
+    let mut fetched = 0u64;
+    for rec in &e.world.transfers {
+        assert!(rec.completed.is_some(), "{:?} incomplete", rec.id);
+        assert_eq!(
+            rec.bytes_direct + rec.bytes_relay,
+            rec.desc.bytes,
+            "{:?}: bytes not conserved",
+            rec.id
+        );
+        if rec.desc.bytes == fetch_bytes {
+            fetched += rec.desc.bytes;
+        }
+    }
+    assert_eq!(fetched, 2 * fetch_bytes, "both fetches moved in full");
+}
+
+#[test]
+fn overlapped_fetch_and_prefill_beat_the_serialized_sum() {
+    // Request A is a cold prefill; request B is a host-tier hit. Event-
+    // driven serving overlaps B's fetch with A's compute, so B's TTFT is
+    // well below the serialized sum the old lock-step engine would pay.
+    let mut e = serving_engine(ServingConfig::default(), MmaConfig::native(), 0.3);
+    e.seed_host_prefix(9, 65_536);
+    let cold = Request {
+        id: RequestId(1),
+        arrival: Time::ZERO,
+        prompt_tokens: 8000,
+        cached_prefix_tokens: 0,
+        prefix_key: 0,
+        output_tokens: 2,
+    };
+    let out = e.run(vec![cold, hit_request(2, 65_536, 9)]);
+    let (a, b) = (&out[0], &out[1]);
+    assert!(b.ttft.fetch_s > 0.2, "B must fetch from host: {}", b.ttft.fetch_s);
+    let serialized = a.ttft.prefill_s + b.ttft.fetch_s + b.ttft.prefill_s;
+    assert!(
+        b.ttft_s() < 0.8 * serialized,
+        "overlap must beat serialization: {} vs {serialized}",
+        b.ttft_s()
+    );
+}
+
+#[test]
+fn chunked_fetch_overlaps_within_one_request() {
+    // fetch_chunks > 1: prefill compute starts after the first chunk
+    // lands, so a single request's TTFT drops below fetch + prefill.
+    let cfg = ServingConfig {
+        fetch_chunks: 8,
+        ..Default::default()
+    };
+    let mut e = serving_engine(cfg, MmaConfig::native(), 0.2);
+    e.seed_host_prefix(3, 65_536);
+    let out = e.run(vec![hit_request(1, 65_536, 3)]);
+    let o = &out[0];
+    assert!(
+        o.ttft_s() < 0.9 * (o.ttft.fetch_s + o.ttft.prefill_s),
+        "pipelined ttft {} vs serialized {}",
+        o.ttft_s(),
+        o.ttft.fetch_s + o.ttft.prefill_s
+    );
+}
+
+#[test]
+fn model_wake_coruns_with_serving_traffic() {
+    // A registry wake-up targeting the serving GPU shares its direct PCIe
+    // path with a live KV fetch: both complete on the one event loop, and
+    // the fetch visibly slows versus an idle fabric (the end-to-end
+    // generalization of the Fig 9 coexistence scenario).
+    let ctx = 16_384u32;
+    let solo = {
+        let mut e = serving_engine(ServingConfig::default(), MmaConfig::native(), 0.05);
+        e.seed_host_prefix(1, ctx);
+        e.run(vec![hit_request(1, ctx, 1)])[0].ttft.fetch_s
+    };
+    let mut e = serving_engine(ServingConfig::default(), MmaConfig::native(), 0.05);
+    let mut reg = ModelRegistry::new(NumaId(0));
+    let m = reg.register(qwen3_4b(), vec![GpuId(0)]);
+    reg.sleep(&mut e.world, m);
+    e.seed_host_prefix(1, ctx);
+    let arrival = e.world.now();
+    let wake = reg.start_wake(&mut e.world, m);
+    let out = e.run(vec![Request {
+        arrival,
+        ..hit_request(1, ctx, 1)
+    }]);
+    assert_eq!(reg.instance(m).state, ModelState::Active);
+    let phase = wake.wait(&mut e.world);
+    assert!(phase.transfer > Time::ZERO);
+    assert!(
+        out[0].ttft.fetch_s > 1.3 * solo,
+        "wake traffic must slow the fetch: {} vs solo {solo}",
+        out[0].ttft.fetch_s
+    );
 }
