@@ -1,0 +1,17 @@
+//! TTFT vs fleet size with peer-NVLink prefix fetches on/off, on the
+//! multi-GPU serving fleet (Poisson arrivals, one SimWorld clock).
+//!
+//! `--fast` (or `cargo bench -- --fast`) shrinks the sweep for smoke runs;
+//! `--seed N` pins the arrival/workload generator.
+
+use mma::figures::{fleet_scaling, DEFAULT_SEED};
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let seed = args.seed_or(DEFAULT_SEED);
+    println!("=== Fleet scaling: TTFT vs fleet size, peer-NVLink fetch on/off ===");
+    let t = fleet_scaling(fast, seed);
+    t.print();
+}

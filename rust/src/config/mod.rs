@@ -10,6 +10,7 @@ pub use toml_lite::{parse as parse_toml, TomlValue};
 
 use crate::mma::MmaConfig;
 use crate::policy::PolicySpec;
+use crate::serving::router::RoutePolicy;
 use crate::topology::{GpuId, Preset, Topology};
 use std::collections::BTreeMap;
 
@@ -60,6 +61,34 @@ impl Default for ServingConfig {
     }
 }
 
+/// Fleet-layer knobs: how many per-GPU serving instances run under the
+/// event-driven router, and how requests are placed on them.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Serving instances (one per GPU, on GPUs `0..gpus`).
+    pub gpus: u32,
+    /// Placement policy across instances.
+    pub router: RoutePolicy,
+    /// Fetch prefixes resident in a sibling GPU's HBM peer-to-peer over
+    /// the NVLink fabric instead of from the host tier over PCIe (the
+    /// transfer policy's `prefer_peer_fetch` surface decides per request).
+    pub peer_fetch: bool,
+    /// Route a prefix hit back to the instance already holding the prefix
+    /// GPU-resident, overriding the placement policy.
+    pub prefix_affinity: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            gpus: 1,
+            router: RoutePolicy::RoundRobin,
+            peer_fetch: true,
+            prefix_affinity: false,
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -69,6 +98,8 @@ pub struct RunConfig {
     pub mma: MmaConfig,
     /// Serving knobs.
     pub serving: ServingConfig,
+    /// Fleet knobs.
+    pub fleet: FleetConfig,
 }
 
 impl Default for RunConfig {
@@ -77,6 +108,7 @@ impl Default for RunConfig {
             preset: Preset::H20x8,
             mma: MmaConfig::default(),
             serving: ServingConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -97,6 +129,7 @@ impl RunConfig {
                 "mma" => apply_mma(&mut cfg.mma, table)?,
                 "policy" => apply_policy(&mut cfg.mma, table)?,
                 "serving" => apply_serving(&mut cfg.serving, table)?,
+                "fleet" => apply_fleet(&mut cfg.fleet, table)?,
                 other => return Err(format!("unknown section [{other}]")),
             }
         }
@@ -108,6 +141,12 @@ impl RunConfig {
             .policy
             .validate(gpu_count)
             .map_err(|e| format!("[policy] {e}"))?;
+        if cfg.fleet.gpus as usize > gpu_count {
+            return Err(format!(
+                "[fleet] gpus = {} exceeds the preset's {gpu_count} GPUs",
+                cfg.fleet.gpus
+            ));
+        }
         Ok(cfg)
     }
 
@@ -323,6 +362,38 @@ fn apply_policy(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Resul
     Ok(())
 }
 
+/// `[fleet]` section: per-GPU serving instances under the event-driven
+/// router.
+///
+/// ```text
+/// [fleet]
+/// gpus = 4                  # serving instances (one per GPU)
+/// router = "least-loaded"   # round-robin | least-loaded
+/// peer_fetch = true         # NVLink peer prefix fetches
+/// prefix_affinity = false   # route prefix hits back to the holder
+/// ```
+fn apply_fleet(f: &mut FleetConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("gpus", TomlValue::Int(i)) => {
+                if !(1..=255).contains(i) {
+                    return Err(format!("[fleet] gpus = {i} out of range (1..=255)"));
+                }
+                f.gpus = *i as u32;
+            }
+            ("router", TomlValue::Str(s)) => {
+                f.router = RoutePolicy::parse(s)
+                    .ok_or_else(|| format!("unknown router {s:?} (round-robin | least-loaded)"))?;
+            }
+            ("router", _) => return bad(k, "string"),
+            ("peer_fetch", TomlValue::Bool(b)) => f.peer_fetch = *b,
+            ("prefix_affinity", TomlValue::Bool(b)) => f.prefix_affinity = *b,
+            _ => return Err(format!("unknown or mistyped key {k:?} in [fleet]")),
+        }
+    }
+    Ok(())
+}
+
 fn apply_serving(s: &mut ServingConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
     for (k, v) in table {
         match (k.as_str(), v) {
@@ -392,6 +463,35 @@ mod tests {
     }
 
     #[test]
+    fn fleet_section_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [fleet]
+            gpus = 4
+            router = "least-loaded"
+            peer_fetch = false
+            prefix_affinity = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet.gpus, 4);
+        assert_eq!(cfg.fleet.router, RoutePolicy::LeastLoaded);
+        assert!(!cfg.fleet.peer_fetch);
+        assert!(cfg.fleet.prefix_affinity);
+        // Defaults: one instance, round-robin, peer fetches on.
+        let d = RunConfig::default().fleet;
+        assert_eq!(d.gpus, 1);
+        assert_eq!(d.router, RoutePolicy::RoundRobin);
+        assert!(d.peer_fetch);
+        // Rejections: bad router, out-of-range sizes, unknown keys, and a
+        // fleet larger than the preset.
+        assert!(RunConfig::from_toml("[fleet]\nrouter = \"nope\"").is_err());
+        assert!(RunConfig::from_toml("[fleet]\ngpus = 0").is_err());
+        assert!(RunConfig::from_toml("[fleet]\ngpus = 9").is_err());
+        assert!(RunConfig::from_toml("[fleet]\nnope = 1").is_err());
+    }
+
+    #[test]
     fn policy_section_selects_and_parameterizes() {
         let cfg = RunConfig::from_toml(
             r#"
@@ -428,7 +528,9 @@ mod tests {
             ])
         );
 
-        let cfg = RunConfig::from_toml("[policy]\nname = \"numa-aware\"\nmin_remote_bytes = 1000000").unwrap();
+        let cfg =
+            RunConfig::from_toml("[policy]\nname = \"numa-aware\"\nmin_remote_bytes = 1000000")
+                .unwrap();
         assert_eq!(
             cfg.mma.policy,
             PolicySpec::NumaAware {

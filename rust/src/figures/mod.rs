@@ -2,13 +2,18 @@
 //! the paper reports; `rust/benches/*` and the `mma figure <id>` CLI both
 //! print them. See DESIGN.md §5 for the experiment index.
 
+pub mod fleet_scaling;
 pub mod micro;
 pub mod policy_sweep;
 pub mod robust;
 pub mod serve_concurrency;
 pub mod serving_figs;
 
-pub use micro::{fig14_tp_sweep, fig15_sensitivity, fig16_fallback, fig7_bw_vs_size, fig8_bw_vs_paths, table2_direct_priority};
+pub use fleet_scaling::fleet_scaling;
+pub use micro::{
+    fig14_tp_sweep, fig15_sensitivity, fig16_fallback, fig7_bw_vs_size, fig8_bw_vs_paths,
+    table2_direct_priority,
+};
 pub use policy_sweep::policy_sweep;
 pub use robust::{fig10_static_split, fig11_cpu_overhead, fig9_coexistence};
 pub use serve_concurrency::serve_concurrency;
@@ -53,17 +58,18 @@ pub fn run_by_name(id: &str, fast: bool, seed: u64) -> Option<String> {
         "table2" => table2_direct_priority().render(),
         "policy" | "policy_sweep" => policy_sweep(fast).render(),
         "concurrency" | "serve_concurrency" => serve_concurrency(fast, seed).render(),
+        "fleet" | "fleet_scaling" => fleet_scaling(fast, seed).render(),
         _ => return None,
     };
     Some(s)
 }
 
-/// All figure ids, in paper order (the policy sweep and the serving
-/// concurrency sweep are this repo's own).
+/// All figure ids, in paper order (the policy sweep, the serving
+/// concurrency sweep, and the fleet-scaling sweep are this repo's own).
 pub fn all_ids() -> &'static [&'static str] {
     &[
         "table1", "2", "3", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "table2",
-        "policy", "concurrency",
+        "policy", "concurrency", "fleet",
     ]
 }
 

@@ -105,7 +105,7 @@ pub fn fig9_coexistence() -> Table {
             NumaId(0),
         );
         eng.seed_host_prefix(11, 65_536);
-        let wake = reg.start_wake(&mut eng.world, m);
+        let wake = reg.start_wake(eng.world_mut(), m);
         eng.run(vec![Request {
             id: RequestId(1),
             arrival: t0,
@@ -114,9 +114,9 @@ pub fn fig9_coexistence() -> Table {
             prefix_key: 11,
             output_tokens: 4,
         }]);
-        wake.wait(&mut eng.world);
-        eng.world.run_until_idle(); // flush the remaining sampling window
-        for smp in eng.world.samples.iter() {
+        wake.wait(eng.world_mut());
+        eng.world_mut().run_until_idle(); // flush the remaining sampling window
+        for smp in eng.world().samples.iter() {
             t.row([
                 format!("{:.0}", smp.at.since(t0).as_ms_f64()),
                 "c:serve+wake".to_string(),

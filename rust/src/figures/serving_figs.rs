@@ -53,7 +53,11 @@ pub fn qa_ttft(
         eng.seed_host_prefix(s.key, s.context_tokens);
         // Wide spacing: each turn runs on an otherwise idle engine, as in
         // the paper's per-request TTFT measurement.
-        let mut reqs = s.requests(id, Time::from_secs_f64(2000.0 * i as f64), Time::from_secs_f64(200.0));
+        let mut reqs = s.requests(
+            id,
+            Time::from_secs_f64(2000.0 * i as f64),
+            Time::from_secs_f64(200.0),
+        );
         id += reqs.len() as u64;
         // Drop turn 1 later: mark by remembering ids.
         requests.append(&mut reqs);

@@ -25,8 +25,11 @@
 //!   [`policy::TransferPolicy`] trait, with the paper's greedy selector,
 //!   the native and static-split baselines, and adaptive strategies
 //!   (congestion feedback, NUMA-aware) as interchangeable implementations.
-//! * [`serving`] — vLLM-like serving layer (paged KV cache, prefix cache,
-//!   sleep/wake model registry, continuous batching, PD scheduling).
+//! * [`serving`] — vLLM-like serving layer: a fleet of per-GPU serving
+//!   instances (paged KV cache, GPU prefix tier, continuous batching, PD
+//!   scheduling) under an event-driven router, over a fleet-shared host
+//!   prefix tier with peer-NVLink fetches, plus the sleep/wake model
+//!   registry.
 //! * [`runtime`] — PJRT client: loads AOT-compiled JAX/Pallas artifacts and
 //!   executes the real model on the serving path (stubbed without the
 //!   `pjrt` feature).

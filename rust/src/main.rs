@@ -6,6 +6,8 @@
 //! mma figure <id|all> [--fast] [--seed N] regenerate a paper table/figure
 //! mma serve [--model qwen-7b] [--ctx 65536] [--docs 4] [--policy <name>]
 //!           [--arrival-rate R] [--max-concurrency N] [--fetch-chunks C]
+//!           [--gpus N] [--router round-robin|least-loaded]
+//!           [--peer-fetch true|false] [--prefix-affinity]
 //! mma switch [--model qwen3-32b] [--policy <name>]
 //! mma config-check <file.toml>            validate a config file
 //! ```
@@ -20,12 +22,18 @@
 //! through the event-driven engine (KV fetches from concurrent requests
 //! contend in the fabric); `--max-concurrency` caps admission and
 //! `--fetch-chunks` pipelines each fetch with prefill compute.
+//!
+//! `mma serve --gpus N` (N > 1) runs a serving *fleet*: N per-GPU
+//! instances under the event-driven router, all on one SimWorld clock
+//! (`[fleet]` TOML section sets the same knobs). `--turns T` repeats each
+//! document so later turns exercise peer-NVLink prefix fetches.
 
 use mma::config::RunConfig;
 use mma::figures;
 use mma::mma::{MmaConfig, SimWorld, TransferDesc};
 use mma::models;
 use mma::policy::PolicySpec;
+use mma::serving::RoutePolicy;
 use mma::topology::{Direction, GpuId, NumaId, Preset};
 use mma::util::cli::Args;
 use mma::util::fmt;
@@ -135,7 +143,78 @@ fn main() {
             let mcfg = mma_cfg(&args);
             let policy = mcfg.policy.name();
             let rate: f64 = args.or("arrival-rate", cfg.serving.arrival_rate_rps);
-            if rate > 0.0 {
+            let gpus: u32 = args.or("gpus", cfg.fleet.gpus);
+            if gpus > 1 {
+                // Fleet mode: N per-GPU instances under the event-driven
+                // router, one SimWorld clock, shared host prefix tier.
+                let router = match args.get("router") {
+                    Some(r) => RoutePolicy::parse(r).unwrap_or_else(|| {
+                        eprintln!("unknown router {r:?}; round-robin | least-loaded");
+                        std::process::exit(2);
+                    }),
+                    None => cfg.fleet.router,
+                };
+                let peer_fetch = match args.get("peer-fetch") {
+                    Some(v) => matches!(v, "true" | "1" | "yes"),
+                    None => cfg.fleet.peer_fetch,
+                };
+                let fleet = mma::config::FleetConfig {
+                    gpus,
+                    router,
+                    peer_fetch,
+                    prefix_affinity: args.flag("prefix-affinity") || cfg.fleet.prefix_affinity,
+                };
+                let turns: u32 = args.or("turns", 3);
+                let rate = if rate > 0.0 {
+                    rate
+                } else {
+                    // Fleet mode is open-loop only; make the fallback loud
+                    // rather than silently overriding a configured 0.
+                    eprintln!("fleet mode is open-loop: defaulting to 2 req/s \
+                               (set --arrival-rate R to change)");
+                    2.0
+                };
+                // Same base as the single-GPU open-loop branch: the run
+                // config's [serving] section is honored (tp, PD mode,
+                // batch/seq knobs); only the pools and batch budget are
+                // widened so admission, not capacity, governs concurrency.
+                // NB: peer-NVLink fetches show up in aggregated mode
+                // ([serving] pd_disaggregation = false) — PD mode offloads
+                // prefill KV to host right away, leaving no GPU-resident
+                // copy for siblings to pull.
+                let serving = mma::config::ServingConfig {
+                    arrival_rate_rps: rate,
+                    max_concurrency: args.or("max-concurrency", cfg.serving.max_concurrency),
+                    fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
+                    gpu_kv_blocks: 1 << 20,
+                    host_kv_blocks: 1 << 22,
+                    max_batch_tokens: 512 * 1024,
+                    ..cfg.serving.clone()
+                };
+                let r = figures::fleet_scaling::fleet_run(
+                    &model,
+                    ctx,
+                    mcfg,
+                    serving,
+                    fleet,
+                    docs.max(1),
+                    turns.max(1),
+                    seed,
+                );
+                println!(
+                    "{} ctx={}k gpus={gpus} router={} peer-fetch={peer_fetch} rate={rate}/s \
+                     policy={policy}: mean TTFT {}, p99 {} \
+                     (fetches: {} host, {} peer; per-instance {:?})",
+                    model.name,
+                    ctx / 1024,
+                    router.name(),
+                    fmt::secs(r.mean_ttft),
+                    fmt::secs(r.p99_ttft),
+                    r.host_fetches,
+                    r.peer_fetches,
+                    r.per_instance,
+                );
+            } else if rate > 0.0 {
                 // Open-loop mode: Poisson arrivals of host-tier prefix
                 // hits on the event-driven engine (fetches contend).
                 // Base = the run config's serving section (tp, PD mode,
@@ -210,7 +289,9 @@ fn main() {
         }
         _ => {
             println!("mma — Multipath Memory Access (paper reproduction)");
-            println!("subcommands: topo | microbench | figure <id|all> | serve | switch | config-check");
+            println!(
+                "subcommands: topo | microbench | figure <id|all> | serve | switch | config-check"
+            );
             println!("figures: {:?}", figures::all_ids());
             println!(
                 "policies (--policy): native | static-split | static:<gpu>:<w>[,...] | \

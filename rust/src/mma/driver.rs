@@ -247,7 +247,10 @@ impl SimWorld {
             }
             Route::Native => {
                 rec.engine = None;
-                self.engines[engine_idx].stats.fallback_transfers += 1;
+                if desc.peer.is_none() {
+                    // Peer copies are categorically native, not fallbacks.
+                    self.engines[engine_idx].stats.fallback_transfers += 1;
+                }
                 self.gpus
                     .enqueue(s.dev, s.id, StreamTask::Memcpy { transfer: tid });
             }
@@ -255,6 +258,21 @@ impl SimWorld {
         self.transfers.push(rec);
         self.advance_stream(now, s.dev, s.id);
         tid
+    }
+
+    /// `cudaMemcpyPeerAsync`: copy `bytes` from `src`'s HBM into the
+    /// stream's device over the NVLink fabric. Never intercepted (§3.2);
+    /// completion surfaces as a [`Notice::TransferDone`] like any copy.
+    pub fn p2p_async(&mut self, s: StreamHandle, src: GpuId, bytes: u64) -> TransferId {
+        self.memcpy_async(s, TransferDesc::p2p(src, s.dev, bytes))
+    }
+
+    /// Serving-layer fetch-path decision surface: should a prefix resident
+    /// in sibling `src`'s HBM be fetched peer-to-peer over NVLink instead
+    /// of from the host tier? Delegates to the configured
+    /// [`crate::policy::TransferPolicy`] of process 0's H2D engine.
+    pub fn prefer_peer_fetch(&self, src: GpuId, dst: GpuId, bytes: u64) -> bool {
+        self.engines[0].policy().prefer_peer_fetch(&self.topo, src, dst, bytes)
     }
 
     /// `cudaMemcpy` (synchronous): starts immediately, bypassing streams.
@@ -292,7 +310,9 @@ impl SimWorld {
             }
             Route::Native => {
                 rec.engine = None;
-                self.engines[engine_idx].stats.fallback_transfers += 1;
+                if desc.peer.is_none() {
+                    self.engines[engine_idx].stats.fallback_transfers += 1;
+                }
                 self.transfers.push(rec);
                 self.start_native_flow(now, tid);
             }
@@ -651,15 +671,24 @@ impl SimWorld {
         }
     }
 
-    /// Launch the single direct-path DMA of a native (non-engine) copy.
+    /// Launch the single direct-path DMA of a native (non-engine) copy:
+    /// the host↔GPU direct path, or the NVLink P2P path for peer copies.
     fn start_native_flow(&mut self, now: Time, tid: TransferId) {
         let rec = &self.transfers[tid.0 as usize];
         let desc = rec.desc;
-        let path = match desc.dir {
-            Direction::H2D => self.topo.h2d_direct(desc.host_numa, desc.gpu),
-            Direction::D2H => self.topo.d2h_direct(desc.gpu, desc.host_numa),
+        let (path, latency) = match desc.peer {
+            Some(src) => (
+                self.topo.p2p(src, desc.gpu),
+                Time::from_ns(self.topo.lat.p2p_setup_ns),
+            ),
+            None => {
+                let p = match desc.dir {
+                    Direction::H2D => self.topo.h2d_direct(desc.host_numa, desc.gpu),
+                    Direction::D2H => self.topo.d2h_direct(desc.gpu, desc.host_numa),
+                };
+                (p, Time::from_ns(self.topo.lat.dma_setup_ns))
+            }
         };
-        let latency = Time::from_ns(self.topo.lat.dma_setup_ns);
         let t = tag::pack(desc.class, tag::KIND_NATIVE, 0, tid.0);
         self.fabric.start_flow(now, &path, desc.bytes, latency, t);
     }
@@ -741,6 +770,39 @@ mod tests {
         assert_eq!(rec.bytes_relay, 0);
         assert_eq!(rec.bytes_direct, 1_000_000);
         assert_eq!(w.engine(0, Direction::H2D).stats.fallback_transfers, 1);
+    }
+
+    #[test]
+    fn p2p_async_copy_runs_at_nvlink_rate() {
+        // A peer copy rides the NVSwitch fabric: far above PCIe rates,
+        // uncontended by host-path traffic, and it notifies on completion.
+        let mut w = world(MmaConfig::default());
+        let s1 = w.stream(GpuId(1));
+        let t = w.p2p_async(s1, GpuId(0), 1 << 30);
+        let done = w.run_until_transfer(t);
+        let bw = w.rec(t).bandwidth().unwrap();
+        assert!(bw > 300e9, "p2p bw {bw}");
+        assert!(done.as_ms_f64() < 10.0);
+        let rec = w.rec(t);
+        assert_eq!(rec.bytes_direct, 1 << 30);
+        assert_eq!(rec.bytes_relay, 0);
+        // Never counted as an engine fallback (it is not a host copy).
+        assert_eq!(w.engine(0, Direction::H2D).stats.fallback_transfers, 0);
+        let mut got = Vec::new();
+        while let Some(n) = w.next_notice() {
+            got.push(n);
+        }
+        assert!(got.contains(&Notice::TransferDone(t)), "{got:?}");
+    }
+
+    #[test]
+    fn prefer_peer_fetch_defaults_to_nvlink_on_h20() {
+        // NVLink (368 GB/s) beats the PCIe lane (53.6 GB/s) on every
+        // policy's default decision surface.
+        for cfg in [MmaConfig::native(), MmaConfig::default()] {
+            let w = world(cfg);
+            assert!(w.prefer_peer_fetch(GpuId(0), GpuId(1), 1 << 30));
+        }
     }
 
     #[test]

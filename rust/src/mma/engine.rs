@@ -179,6 +179,13 @@ impl Engine {
         self.tm.is_empty() && self.inflight.is_empty()
     }
 
+    /// The live placement policy (read-only: decision surfaces that sit
+    /// outside the chunk→path hot loop, e.g. the serving layer's
+    /// host-vs-peer fetch choice).
+    pub fn policy(&self) -> &dyn TransferPolicy {
+        &*self.policy
+    }
+
     /// Number of live transfers.
     pub fn active_transfers(&self) -> usize {
         self.transfers.len()
@@ -382,7 +389,13 @@ impl Engine {
 
     /// A lane's active copy finished: hand the lane to the next queued
     /// descriptor (warm turnaround).
-    fn lane_release(&mut self, gpu: GpuId, lane: LaneKind, key: u64, topo: &Topology) -> Option<EngineAction> {
+    fn lane_release(
+        &mut self,
+        gpu: GpuId,
+        lane: LaneKind,
+        key: u64,
+        topo: &Topology,
+    ) -> Option<EngineAction> {
         let li = lane as usize;
         let lanes = &mut self.lanes[gpu.0 as usize];
         debug_assert_eq!(lanes.active[li], Some(key), "lane released by non-owner");
@@ -469,7 +482,13 @@ impl Engine {
 
     /// Sync-thread retirement of a chunk: free the slot, detect contention,
     /// account transfer progress, and pull more work.
-    pub fn on_retire(&mut self, now: Time, gpu: GpuId, key: u64, topo: &Topology) -> Vec<EngineAction> {
+    pub fn on_retire(
+        &mut self,
+        now: Time,
+        gpu: GpuId,
+        key: u64,
+        topo: &Topology,
+    ) -> Vec<EngineAction> {
         let inf = self.inflight.remove(&key).expect("retire unknown chunk");
         debug_assert_eq!(inf.path_gpu, gpu);
         let gi = gpu.0 as usize;
@@ -565,7 +584,11 @@ mod tests {
 
     /// Tiny sequential executor: runs the engine's action graph to
     /// quiescence with synthetic 1 us flow times. Returns completion info.
-    fn drain(e: &mut Engine, topo: &Topology, init: Vec<EngineAction>) -> Vec<(TransferId, u64, u64)> {
+    fn drain(
+        e: &mut Engine,
+        topo: &Topology,
+        init: Vec<EngineAction>,
+    ) -> Vec<(TransferId, u64, u64)> {
         let mut pending: std::collections::VecDeque<EngineAction> = init.into();
         let mut now = Time::ZERO;
         let mut completes = Vec::new();

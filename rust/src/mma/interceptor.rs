@@ -30,7 +30,11 @@ pub enum Route {
 
 /// Decide how to route an intercepted host↔device copy.
 pub fn route(cfg: &MmaConfig, desc: &TransferDesc) -> Route {
-    if !cfg.policy.engine_eligible() || desc.bytes < cfg.fallback_threshold {
+    if desc.peer.is_some() {
+        // GPU↔GPU copies are never intercepted (§3.2): they ride the
+        // NVSwitch fabric as native P2P DMA regardless of size or policy.
+        Route::Native
+    } else if !cfg.policy.engine_eligible() || desc.bytes < cfg.fallback_threshold {
         Route::Native
     } else {
         Route::Engine
@@ -66,6 +70,15 @@ mod tests {
     fn no_fallback_sends_everything_to_engine() {
         let cfg = MmaConfig::default().no_fallback();
         assert_eq!(route(&cfg, &desc(1)), Route::Engine);
+    }
+
+    #[test]
+    fn peer_copies_are_never_intercepted() {
+        // GPU↔GPU traffic has its own path (§3.2): even a huge peer copy
+        // under an engine-eligible policy stays native.
+        let cfg = MmaConfig::default().no_fallback();
+        let d = TransferDesc::p2p(GpuId(0), GpuId(1), 8 << 30);
+        assert_eq!(route(&cfg, &d), Route::Native);
     }
 
     #[test]

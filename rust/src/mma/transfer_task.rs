@@ -8,23 +8,28 @@ use crate::topology::{Direction, GpuId, NumaId};
 /// per-class bandwidth over time (Fig 9). Class 0 is "background".
 pub type TransferClass = u8;
 
-/// Description of one logical host↔GPU copy as submitted by the app.
+/// Description of one logical copy as submitted by the app: host↔GPU, or
+/// (when [`Self::peer`] is set) GPU→GPU over the NVLink fabric.
 #[derive(Clone, Copy, Debug)]
 pub struct TransferDesc {
-    /// Copy direction.
+    /// Copy direction (for peer copies, always H2D "into `gpu`").
     pub dir: Direction,
     /// The target (H2D) or source (D2H) GPU.
     pub gpu: GpuId,
-    /// NUMA node holding the pinned host buffer.
+    /// NUMA node holding the pinned host buffer (unused for peer copies).
     pub host_numa: NumaId,
     /// Payload size in bytes.
     pub bytes: u64,
     /// Traffic class for reporting.
     pub class: TransferClass,
+    /// Peer source GPU for a GPU→GPU copy (`cudaMemcpyPeerAsync`). Peer
+    /// copies ride the NVSwitch fabric as one native P2P DMA and are never
+    /// intercepted by the engine (§3.2: GPU↔GPU traffic has its own path).
+    pub peer: Option<GpuId>,
 }
 
 impl TransferDesc {
-    /// Convenience constructor for class-1 (foreground) traffic.
+    /// Convenience constructor for class-1 (foreground) host↔GPU traffic.
     pub fn new(dir: Direction, gpu: GpuId, host_numa: NumaId, bytes: u64) -> TransferDesc {
         TransferDesc {
             dir,
@@ -32,6 +37,20 @@ impl TransferDesc {
             host_numa,
             bytes,
             class: 1,
+            peer: None,
+        }
+    }
+
+    /// GPU→GPU peer copy: `src`'s HBM → `dst`'s HBM over the NVLink
+    /// fabric (class 1). `host_numa` is irrelevant for the peer path.
+    pub fn p2p(src: GpuId, dst: GpuId, bytes: u64) -> TransferDesc {
+        TransferDesc {
+            dir: Direction::H2D,
+            gpu: dst,
+            host_numa: NumaId(0),
+            bytes,
+            class: 1,
+            peer: Some(src),
         }
     }
 }

@@ -41,7 +41,7 @@ pub use static_split::StaticSplit;
 use crate::mma::task_manager::{Chunk, TaskManager};
 use crate::mma::MmaConfig;
 use crate::sim::Time;
-use crate::topology::{Direction, GpuId, Topology};
+use crate::topology::{Direction, GpuId, LinkKind, Topology};
 
 /// Default EWMA smoothing factor of [`CongestionFeedback`].
 pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
@@ -275,6 +275,22 @@ pub trait TransferPolicy {
         expected_s: f64,
     ) {
         let _ = (path_gpu, bytes, relay, observed_s, expected_s);
+    }
+
+    /// Serving-layer fetch-path decision surface: a prefix needed on `dst`
+    /// is resident both in the fleet's shared host tier and in sibling
+    /// `src`'s HBM. Returning `true` routes the fetch peer-to-peer over
+    /// the NVLink fabric; `false` keeps it on the host→GPU path this
+    /// policy would otherwise place (multipath or native). The default
+    /// compares the NVLink pair bandwidth against the destination's PCIe
+    /// lane; policies with a better model of their own host-path
+    /// throughput can override.
+    fn prefer_peer_fetch(&self, topo: &Topology, src: GpuId, dst: GpuId, bytes: u64) -> bool {
+        let _ = bytes;
+        let nv = topo
+            .capacity(topo.link(LinkKind::NvOut(src)))
+            .min(topo.capacity(topo.link(LinkKind::NvIn(dst))));
+        nv > topo.pcie_capacity(dst, Direction::H2D)
     }
 }
 
@@ -530,6 +546,27 @@ mod tests {
         // relay_ok=false: falls back to own work even without priority.
         let p = greedy_pull(&mut tm, GpuId(0), false, false, |_, r| Some(r as f64)).unwrap();
         assert!(!p.is_relay());
+    }
+
+    #[test]
+    fn every_policy_prefers_nvlink_peer_fetch_on_h20() {
+        // Default decision surface: NVLink (368 GB/s) > PCIe lane (53.6).
+        let topo = crate::topology::h20x8();
+        let cfg = MmaConfig::default();
+        for spec in [
+            PolicySpec::MmaGreedy,
+            PolicySpec::Native,
+            PolicySpec::Static(vec![(GpuId(0), 1.0)]),
+            PolicySpec::congestion_feedback(),
+            PolicySpec::numa_aware(),
+        ] {
+            let p = spec.build(&cfg);
+            assert!(
+                p.prefer_peer_fetch(&topo, GpuId(0), GpuId(1), 1 << 30),
+                "{} must prefer the NVLink peer path on h20x8",
+                p.name()
+            );
+        }
     }
 
     #[test]

@@ -1,184 +1,31 @@
-//! The serving engine: ties the scheduler, prefix cache, paged KV, the
-//! transfer fabric and the GPU execution model into one *event-driven*
-//! serving loop running inside the [`SimWorld`] discrete-event simulation.
+//! The single-GPU serving engine: exactly the N=1 case of the
+//! [`ServingFleet`].
 //!
-//! There is a single virtual clock — [`SimWorld::now`]. Request arrivals
-//! are world timers, prefix-cache KV fetches are `memcpy_async` transfers
-//! whose completions surface as [`Notice::TransferDone`], and prefill /
-//! decode compute are gpusim kernels (durations from a [`Compute`] model)
-//! whose completions surface as [`Notice::KernelDone`]. The scheduler is
-//! driven by these event callbacks, so in-flight fetches from concurrent
-//! requests genuinely contend for max-min fabric bandwidth, fetches
-//! overlap compute across requests (and within one request when
-//! `fetch_chunks > 1`), and model-registry sleep/wake traffic co-runs with
-//! live serving on the same fabric.
+//! Everything the engine used to implement directly — the event-driven
+//! loop on the one [`SimWorld`] clock, arrivals as world timers, prefix
+//! KV fetches as contending `memcpy_async` transfers, tagged
+//! prefill/decode kernels, chunked fetch/compute pipelining, same-key
+//! fetch joining — now lives in [`ServingInstance`] + [`ServingFleet`];
+//! this type pins one instance to one GPU and keeps the historical
+//! construction surface for tests, figures, and the closed-loop
+//! `mma serve` path.
 //!
 //! TTFT decomposes as the paper measures it: queueing + prefix-cache KV
 //! fetch (H2D) + prefill compute, every timestamp read off the world
 //! clock.
 
-use super::kv_cache::{KvCacheManager, SeqId};
-use super::prefix_cache::{PrefixCache, Tier};
-use super::scheduler::{Phase, Request, RequestId, Scheduler};
-use crate::config::ServingConfig;
-use crate::metrics::TtftBreakdown;
-use crate::mma::{Notice, SimWorld, StreamHandle, TransferDesc};
+use super::fleet::ServingFleet;
+use super::instance::{Compute, RequestOutcome};
+use super::scheduler::Request;
+use crate::config::{FleetConfig, ServingConfig};
+use crate::mma::SimWorld;
 use crate::models::ModelSpec;
-use crate::roofline::GpuRoofline;
 use crate::sim::Time;
-use crate::topology::{Direction, GpuId, NumaId};
-use std::collections::{HashMap, VecDeque};
+use crate::topology::{GpuId, NumaId};
 
-/// Compute-time provider: roofline for paper-scale models, real PJRT for
-/// the live tiny model, fixed for unit tests.
-pub trait Compute {
-    /// Prefill `new_tokens` with `context` total attended tokens.
-    fn prefill_secs(&mut self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64;
-    /// One decode step at `context`.
-    fn decode_secs(&mut self, m: &ModelSpec, context: u64, tp: u32) -> f64;
-}
-
-impl Compute for GpuRoofline {
-    fn prefill_secs(&mut self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64 {
-        GpuRoofline::prefill_secs(self, m, new_tokens, context, tp)
-    }
-    fn decode_secs(&mut self, m: &ModelSpec, context: u64, tp: u32) -> f64 {
-        GpuRoofline::decode_secs_per_token(self, m, context, tp)
-    }
-}
-
-/// Fixed per-call compute times (tests).
-pub struct FixedCompute {
-    /// Prefill seconds per call.
-    pub prefill_s: f64,
-    /// Decode seconds per step.
-    pub decode_s: f64,
-}
-
-impl Compute for FixedCompute {
-    fn prefill_secs(&mut self, _: &ModelSpec, _: u64, _: u64, _: u32) -> f64 {
-        self.prefill_s
-    }
-    fn decode_secs(&mut self, _: &ModelSpec, _: u64, _: u32) -> f64 {
-        self.decode_s
-    }
-}
-
-/// Final per-request record.
-#[derive(Clone, Debug)]
-pub struct RequestOutcome {
-    /// Request id.
-    pub id: RequestId,
-    /// Arrival time.
-    pub arrival: Time,
-    /// TTFT decomposition (queue / fetch / prefill component times). With
-    /// `fetch_chunks > 1` fetch and prefill overlap, so the components can
-    /// sum to more than [`Self::ttft_s`]; without chunking they sum
-    /// exactly.
-    pub ttft: TtftBreakdown,
-    /// First token time (absolute, world clock).
-    pub first_token_at: Time,
-    /// All output tokens done (absolute, world clock).
-    pub finished_at: Option<Time>,
-}
-
-impl RequestOutcome {
-    /// End-to-end latency if finished.
-    pub fn e2e(&self) -> Option<Time> {
-        self.finished_at.map(|f| f.since(self.arrival))
-    }
-
-    /// Wall-clock time to first token (arrival → first token), seconds.
-    pub fn ttft_s(&self) -> f64 {
-        self.first_token_at.since(self.arrival).as_secs_f64()
-    }
-}
-
-/// Kernel-tag kinds (top byte of the gpusim kernel tag). Distinctive
-/// bytes rather than 1/2 so tags from other consumers of the shared world
-/// are unlikely to land in the engine's namespace; unknown kinds are
-/// ignored, and both arms additionally tolerate tags that merely collide.
-const TAG_PREFILL: u64 = 0xE5 << 56;
-const TAG_DECODE_STEP: u64 = 0xE6 << 56;
-const TAG_PAYLOAD: u64 = (1 << 56) - 1;
-
-/// Namespace for this engine's arrival-timer tokens, so timers scheduled
-/// by other consumers of the shared world are ignored instead of being
-/// misread as arrivals ("SRVE" tag in the top half).
-const ARRIVAL_TOKEN_BASE: u64 = 0x5352_5645 << 32;
-
-/// Per-admitted-prefill bookkeeping, all timestamps off the world clock.
-#[derive(Debug)]
-struct PrefillJob {
-    /// Tokens to prefill (scheduler suffix — the single source of truth).
-    suffix: u32,
-    /// Prefix tokens reused from the cache.
-    reused: u32,
-    /// Admission time (end of arrival queueing).
-    sched_at: Time,
-    /// First fetch chunk issued.
-    fetch_started: Option<Time>,
-    /// Last fetch chunk landed.
-    fetch_done: Option<Time>,
-    /// Outstanding fetch chunks.
-    chunks_left: u32,
-    /// Compute was released (pushed to the ready queue) already.
-    compute_released: bool,
-    /// When the job entered the ready queue.
-    ready_at: Option<Time>,
-    /// Prefill kernel start.
-    kernel_start: Option<Time>,
-    /// Prefill kernel completion.
-    kernel_done: Option<Time>,
-    /// Prefill kernel duration, seconds.
-    prefill_s: f64,
-    /// Stream carrying this job's fetch chunks (returned to the pool when
-    /// the last chunk lands).
-    fetch_stream: Option<StreamHandle>,
-    /// Prefix key this job's own fetch is moving (primary fetcher only).
-    fetch_key: Option<u64>,
-}
-
-/// The event-driven serving engine for one model on one GPU group.
+/// A one-instance [`ServingFleet`] pinned to a specific GPU.
 pub struct ServingEngine {
-    /// Serving knobs.
-    pub cfg: ServingConfig,
-    model: ModelSpec,
-    sched: Scheduler,
-    /// Prefix store (pre-populate for cache-hit experiments).
-    pub prefix: PrefixCache,
-    /// Paged GPU KV pool.
-    pub kv: KvCacheManager,
-    /// The shared world: fabric, GPUs, and the one virtual clock.
-    pub world: SimWorld,
-    compute: Box<dyn Compute>,
-    prefill_gpu: GpuId,
-    host_numa: NumaId,
-    outcomes: HashMap<u64, RequestOutcome>,
-    next_seq: u64,
-    // --- event-loop state ---
-    prefill_stream: StreamHandle,
-    decode_stream: StreamHandle,
-    arrivals: Vec<Request>,
-    /// In-flight fetch chunk → owning request.
-    inflight_fetch: HashMap<u32, RequestId>,
-    jobs: HashMap<u64, PrefillJob>,
-    /// Fetched (or pipeline-released) prefills waiting for the compute lane.
-    ready_prefills: VecDeque<RequestId>,
-    /// Idle fetch streams, recycled across requests (`StreamId` is a u16:
-    /// creating one stream per request would wrap and alias stream 0).
-    fetch_streams: Vec<StreamHandle>,
-    /// Host-tier fetches in flight, by prefix key. A concurrent request
-    /// hitting the same key *joins* the in-flight fetch (value = joiners)
-    /// instead of seeing a prematurely-promoted GPU tier or re-fetching.
-    inflight_prefix: HashMap<u64, Vec<RequestId>>,
-    /// Suffix tokens of admitted-but-unfinished prefills (budget hold).
-    inflight_prefill_tokens: u32,
-    prefill_busy: bool,
-    decode_busy: bool,
-    /// Aggregated mode: alternate decode/prefill so neither lane starves.
-    decode_ran_last: bool,
-    decode_inflight: Vec<RequestId>,
+    fleet: ServingFleet,
 }
 
 impl ServingEngine {
@@ -186,68 +33,60 @@ impl ServingEngine {
     pub fn new(
         cfg: ServingConfig,
         model: ModelSpec,
-        mut world: SimWorld,
+        world: SimWorld,
         compute: Box<dyn Compute>,
         prefill_gpu: GpuId,
         host_numa: NumaId,
     ) -> ServingEngine {
-        let kv = KvCacheManager::new(cfg.gpu_kv_blocks, cfg.kv_block_tokens);
-        let prefix = PrefixCache::new(
-            cfg.kv_block_tokens,
-            cfg.gpu_kv_blocks as u64 * cfg.kv_block_tokens as u64,
-            cfg.host_kv_blocks as u64 * cfg.kv_block_tokens as u64,
-        );
-        let prefill_stream = world.stream(prefill_gpu);
-        let decode_stream = world.stream(prefill_gpu);
-        ServingEngine {
-            sched: Scheduler::new(cfg.clone()),
-            kv,
-            prefix,
-            model: model.clone(),
-            world,
-            compute,
-            prefill_gpu,
-            host_numa,
-            outcomes: HashMap::new(),
-            next_seq: 0,
-            prefill_stream,
-            decode_stream,
-            arrivals: Vec::new(),
-            inflight_fetch: HashMap::new(),
-            jobs: HashMap::new(),
-            ready_prefills: VecDeque::new(),
-            fetch_streams: Vec::new(),
-            inflight_prefix: HashMap::new(),
-            inflight_prefill_tokens: 0,
-            prefill_busy: false,
-            decode_busy: false,
-            decode_ran_last: false,
-            decode_inflight: Vec::new(),
+        let fleet = ServingFleet::on_gpus(
+            FleetConfig::default(),
             cfg,
-        }
+            model,
+            world,
+            vec![compute],
+            vec![prefill_gpu],
+            host_numa,
+        );
+        ServingEngine { fleet }
     }
 
-    /// Pre-populate the prefix cache with a host-tier prefix (the state
-    /// after a previous turn's KV was offloaded — §5.2.1 setup).
+    /// Pre-populate the host prefix tier (the state after a previous
+    /// turn's KV was offloaded — §5.2.1 setup). Byte-accounted through
+    /// the fleet's shared [`crate::serving::HostPrefixPool`].
     pub fn seed_host_prefix(&mut self, key: u64, tokens: u32) {
-        self.prefix.insert(key, tokens);
-        self.prefix.offload(key);
+        self.fleet.seed_host_prefix(key, tokens);
     }
 
     /// Current virtual time — the one shared [`SimWorld`] clock.
     pub fn now(&self) -> Time {
-        self.world.now()
+        self.fleet.now()
     }
 
     /// The model served.
     pub fn model(&self) -> &ModelSpec {
-        &self.model
+        self.fleet.model()
     }
 
-    /// Name of the transfer policy every KV fetch / offload in this engine
-    /// runs under (from the [`SimWorld`]'s engine configuration).
+    /// Name of the transfer policy every KV fetch / offload in this
+    /// engine runs under.
     pub fn policy_name(&self) -> &'static str {
-        self.world.policy_name()
+        self.fleet.policy_name()
+    }
+
+    /// The shared world: fabric, GPUs, and the one virtual clock.
+    pub fn world(&self) -> &SimWorld {
+        &self.fleet.world
+    }
+
+    /// Mutable access to the shared world (co-running registry phases,
+    /// background loops, sampling).
+    pub fn world_mut(&mut self) -> &mut SimWorld {
+        &mut self.fleet.world
+    }
+
+    /// The underlying one-instance fleet.
+    pub fn fleet(&self) -> &ServingFleet {
+        &self.fleet
     }
 
     /// Run `requests` to completion; returns outcomes in request order.
@@ -255,396 +94,17 @@ impl ServingEngine {
     /// on the same world (background loops, model sleep/wake transfers)
     /// co-runs with the serving traffic on the shared fabric.
     pub fn run(&mut self, requests: Vec<Request>) -> Vec<RequestOutcome> {
-        // Outcomes are returned in the caller's submission order.
-        let ids: Vec<RequestId> = requests.iter().map(|r| r.id).collect();
-        let mut sorted = requests;
-        sorted.sort_by_key(|r| (r.arrival, r.id.0));
-        let mut pending_arrivals = sorted.len();
-        for r in sorted {
-            let token = ARRIVAL_TOKEN_BASE | self.arrivals.len() as u64;
-            self.world.schedule_timer(r.arrival, token);
-            self.arrivals.push(r);
-        }
-        while !(pending_arrivals == 0 && self.sched.is_idle() && self.jobs.is_empty()) {
-            let Some(notice) = self.world.next_notice() else {
-                panic!("serving engine stalled: world idle with work pending");
-            };
-            match notice {
-                Notice::Timer(token) => {
-                    let idx = (token ^ ARRIVAL_TOKEN_BASE) as usize;
-                    if (token & ARRIVAL_TOKEN_BASE) != ARRIVAL_TOKEN_BASE
-                        || idx >= self.arrivals.len()
-                    {
-                        continue; // someone else's timer on the shared world
-                    }
-                    pending_arrivals -= 1;
-                    let req = self.arrivals[idx].clone();
-                    self.sched.submit(req);
-                    self.pump();
-                }
-                Notice::TransferDone(tid) => self.on_fetch_chunk_done(tid.0),
-                Notice::KernelDone(tag) => self.on_kernel_done(tag),
-            }
-        }
-        ids.iter()
-            .map(|id| self.outcomes.get(&id.0).expect("missing outcome").clone())
-            .collect()
-    }
-
-    /// Event-loop heartbeat: admit what fits, then fill idle compute lanes.
-    fn pump(&mut self) {
-        self.admit();
-        if self.cfg.pd_disaggregation {
-            // Separate GPU groups: both lanes advance independently.
-            if !self.decode_busy {
-                self.start_decode_step();
-            }
-            if !self.prefill_busy {
-                self.start_next_prefill();
-            }
-        } else {
-            // One GPU group: decodes and prefills serialize; alternate so
-            // decodes keep priority without starving admitted prefills.
-            if self.prefill_busy || self.decode_busy {
-                return;
-            }
-            let has_decode = self.sched.decode_count() > 0;
-            let has_prefill = !self.ready_prefills.is_empty();
-            match (has_decode, has_prefill) {
-                (true, true) => {
-                    if self.decode_ran_last {
-                        self.start_next_prefill();
-                    } else {
-                        self.start_decode_step();
-                    }
-                }
-                (true, false) => self.start_decode_step(),
-                (false, true) => self.start_next_prefill(),
-                (false, false) => {}
-            }
-        }
-    }
-
-    /// Admit waiting requests under the in-flight token budget; resolve
-    /// each suffix against the prefix cache (single source of truth) and
-    /// issue host-tier KV fetches as async transfers.
-    fn admit(&mut self) {
-        let now = self.world.now();
-        let decode_hold = if self.cfg.pd_disaggregation {
-            0
-        } else {
-            self.sched.decode_count() as u32
-        };
-        let busy = self.inflight_prefill_tokens + decode_hold;
-        let prefix = &self.prefix;
-        let plan = self.sched.plan_prefills(busy, |r| {
-            if r.prefix_key == 0 || r.cached_prefix_tokens == 0 {
-                return 0;
-            }
-            prefix
-                .peek(r.prefix_key)
-                .map(|(tokens, _)| tokens.min(r.cached_prefix_tokens))
-                .unwrap_or(0)
-        });
-        for (rid, suffix) in plan {
-            let req = self.sched.sequence(rid).expect("admitted seq").req.clone();
-            let reused = req.prompt_tokens - suffix;
-            self.inflight_prefill_tokens += suffix.max(1);
-            // KV blocks for the full sequence (best-effort, as the pool
-            // model has no eviction path yet).
-            let sid = SeqId(self.next_seq);
-            self.next_seq += 1;
-            let _ = self.kv.alloc_seq(sid, req.prompt_tokens + req.output_tokens);
-
-            let mut job = PrefillJob {
-                suffix,
-                reused,
-                sched_at: now,
-                fetch_started: None,
-                fetch_done: None,
-                chunks_left: 0,
-                compute_released: false,
-                ready_at: None,
-                kernel_start: None,
-                kernel_done: None,
-                prefill_s: 0.0,
-                fetch_stream: None,
-                fetch_key: None,
-            };
-            // Tier decision via the non-mutating peek: host→GPU promotion
-            // is deferred to fetch *completion* so a concurrent same-key
-            // request cannot observe a GPU tier whose bytes are still in
-            // flight.
-            let tier = if reused > 0 {
-                self.prefix.peek(req.prefix_key).map(|(_, t)| t)
-            } else {
-                None
-            };
-            match tier {
-                Some(Tier::Host) => {
-                    if let Some(waiters) = self.inflight_prefix.get_mut(&req.prefix_key) {
-                        // Same prefix already being fetched: join it and
-                        // pay only the remaining wait.
-                        waiters.push(rid);
-                        job.fetch_started = Some(now);
-                    } else {
-                        // Primary fetcher: move KV pages host → GPU,
-                        // chunked so later chunks can pipeline with
-                        // prefill compute. A dedicated stream per fetch
-                        // keeps concurrent requests' DMAs contending in
-                        // the fabric instead of serializing on one queue.
-                        self.inflight_prefix.insert(req.prefix_key, Vec::new());
-                        let bytes = self.model.kv_bytes(reused as u64).max(1);
-                        let chunks = (self.cfg.fetch_chunks.max(1) as u64).min(bytes) as u32;
-                        let per = bytes / chunks as u64;
-                        let fetch_stream = match self.fetch_streams.pop() {
-                            Some(s) => s,
-                            None => self.world.stream(self.prefill_gpu),
-                        };
-                        job.fetch_stream = Some(fetch_stream);
-                        job.fetch_key = Some(req.prefix_key);
-                        job.fetch_started = Some(now);
-                        job.chunks_left = chunks;
-                        for i in 0..chunks {
-                            let sz = if i == chunks - 1 {
-                                bytes - per * (chunks as u64 - 1)
-                            } else {
-                                per
-                            };
-                            let tid = self.world.memcpy_async(
-                                fetch_stream,
-                                TransferDesc::new(
-                                    Direction::H2D,
-                                    self.prefill_gpu,
-                                    self.host_numa,
-                                    sz,
-                                ),
-                            );
-                            self.inflight_fetch.insert(tid.0, rid);
-                        }
-                    }
-                }
-                Some(Tier::Gpu) => {
-                    // Resident hit: refresh LRU (no promotion involved).
-                    self.prefix.lookup(req.prefix_key);
-                    job.compute_released = true;
-                    job.ready_at = Some(now);
-                    self.ready_prefills.push_back(rid);
-                }
-                None => {
-                    job.compute_released = true;
-                    job.ready_at = Some(now);
-                    self.ready_prefills.push_back(rid);
-                }
-            }
-            self.jobs.insert(rid.0, job);
-        }
-    }
-
-    /// A fetch chunk landed (ours or not — foreign transfers are ignored).
-    fn on_fetch_chunk_done(&mut self, tid: u32) {
-        let Some(rid) = self.inflight_fetch.remove(&tid) else {
-            return; // not a serving fetch (registry / background traffic)
-        };
-        let now = self.world.now();
-        let pipelined = self.cfg.fetch_chunks > 1;
-        let (all_landed, done_key) = {
-            let job = self.jobs.get_mut(&rid.0).expect("fetch for retired job");
-            job.chunks_left -= 1;
-            let all_landed = job.chunks_left == 0;
-            let mut done_key = None;
-            if all_landed {
-                job.fetch_done = Some(now);
-                done_key = job.fetch_key.take();
-                if let Some(s) = job.fetch_stream.take() {
-                    self.fetch_streams.push(s);
-                }
-            }
-            // Release compute on the first chunk when pipelining, else
-            // only once the whole prefix has landed.
-            if !job.compute_released && (all_landed || pipelined) {
-                job.compute_released = true;
-                job.ready_at = Some(now);
-                self.ready_prefills.push_back(rid);
-            }
-            (all_landed, done_key)
-        };
-        if let Some(key) = done_key {
-            // The prefix KV is actually resident now: promote host → GPU
-            // and release every same-key joiner that was waiting on this
-            // in-flight fetch.
-            self.prefix.lookup(key);
-            if let Some(waiters) = self.inflight_prefix.remove(&key) {
-                for w in waiters {
-                    if let Some(job) = self.jobs.get_mut(&w.0) {
-                        job.fetch_done = Some(now);
-                        job.compute_released = true;
-                        job.ready_at = Some(now);
-                        self.ready_prefills.push_back(w);
-                    }
-                }
-            }
-        }
-        if all_landed
-            && self
-                .jobs
-                .get(&rid.0)
-                .map_or(false, |j| j.kernel_done.is_some())
-        {
-            self.finish_prefill(rid);
-        }
-        self.pump();
-    }
-
-    /// A tagged serving kernel finished.
-    fn on_kernel_done(&mut self, tag: u64) {
-        match tag & !TAG_PAYLOAD {
-            TAG_PREFILL => {
-                let rid = RequestId(tag & TAG_PAYLOAD);
-                let now = self.world.now();
-                let Some(job) = self.jobs.get_mut(&rid.0) else {
-                    return; // foreign kernel tag colliding with our kind byte
-                };
-                self.prefill_busy = false;
-                job.kernel_done = Some(now);
-                if job.chunks_left == 0 {
-                    self.finish_prefill(rid);
-                }
-                self.pump();
-            }
-            TAG_DECODE_STEP => {
-                if tag != TAG_DECODE_STEP || !self.decode_busy {
-                    return; // not the decode step this engine launched
-                }
-                self.decode_busy = false;
-                let now = self.world.now();
-                let batch = std::mem::take(&mut self.decode_inflight);
-                for id in batch {
-                    if self.sched.decode_tick(id) {
-                        if let Some(o) = self.outcomes.get_mut(&id.0) {
-                            o.finished_at = Some(now);
-                        }
-                    }
-                }
-                self.pump();
-            }
-            _ => {}
-        }
-    }
-
-    /// Launch the next ready prefill as a kernel on the prefill stream.
-    fn start_next_prefill(&mut self) {
-        let Some(rid) = self.ready_prefills.pop_front() else {
-            return;
-        };
-        let now = self.world.now();
-        let prompt = self
-            .sched
-            .sequence(rid)
-            .expect("ready seq")
-            .req
-            .prompt_tokens;
-        let job = self.jobs.get_mut(&rid.0).expect("ready job");
-        let prefill_s = self.compute.prefill_secs(
-            &self.model,
-            job.suffix.max(1) as u64,
-            prompt as u64,
-            self.cfg.tp,
-        );
-        job.kernel_start = Some(now);
-        job.prefill_s = prefill_s;
-        self.world.enqueue_kernel_tagged(
-            self.prefill_stream,
-            Time::from_secs_f64(prefill_s),
-            "prefill",
-            TAG_PREFILL | rid.0,
-        );
-        self.prefill_busy = true;
-        self.decode_ran_last = false;
-    }
-
-    /// Launch one batched decode step for every running decode sequence.
-    fn start_decode_step(&mut self) {
-        let decodes = self.sched.running_decodes();
-        if decodes.is_empty() {
-            return;
-        }
-        // Context grows as sequences generate: prompt + produced so far.
-        let max_ctx = decodes
-            .iter()
-            .filter_map(|id| self.sched.sequence(*id))
-            .map(|s| {
-                let produced = match s.phase {
-                    Phase::Decode { produced } => produced,
-                    _ => 0,
-                };
-                s.req.prompt_tokens as u64 + produced as u64
-            })
-            .max()
-            .unwrap_or(1);
-        let decode_s = self.compute.decode_secs(&self.model, max_ctx.max(1), self.cfg.tp);
-        self.world.enqueue_kernel_tagged(
-            self.decode_stream,
-            Time::from_secs_f64(decode_s),
-            "decode",
-            TAG_DECODE_STEP,
-        );
-        self.decode_busy = true;
-        self.decode_inflight = decodes;
-        self.decode_ran_last = true;
-    }
-
-    /// Both the KV fetch and the prefill kernel are done: the first token
-    /// exists *now*; record the outcome and move the sequence to decode.
-    fn finish_prefill(&mut self, rid: RequestId) {
-        let now = self.world.now();
-        let job = self.jobs.remove(&rid.0).expect("finishing retired job");
-        let req = self.sched.sequence(rid).expect("finished seq").req.clone();
-        let fetch_s = match (job.fetch_started, job.fetch_done) {
-            (Some(a), Some(b)) => b.since(a).as_secs_f64(),
-            _ => 0.0,
-        };
-        // Queueing = arrival → admission, plus waiting for the compute
-        // lane after the fetch released this job.
-        let lane_wait = match (job.ready_at, job.kernel_start) {
-            (Some(a), Some(b)) => b.since(a).as_secs_f64(),
-            _ => 0.0,
-        };
-        let queue_s = job.sched_at.since(req.arrival).as_secs_f64() + lane_wait;
-        self.outcomes.insert(
-            rid.0,
-            RequestOutcome {
-                id: rid,
-                arrival: req.arrival,
-                ttft: TtftBreakdown {
-                    queue_s,
-                    fetch_s,
-                    prefill_s: job.prefill_s,
-                },
-                first_token_at: now,
-                finished_at: None,
-            },
-        );
-        self.inflight_prefill_tokens -= job.suffix.max(1);
-        // Cache the full prompt for future turns. Under prefill/decode
-        // disaggregation (the paper's LMCache setup), the prefill node's
-        // KV is offloaded to the host store right away — every later hit
-        // pays the H2D fetch.
-        if req.prefix_key != 0 {
-            self.prefix.insert(req.prefix_key, req.prompt_tokens);
-            if self.cfg.pd_disaggregation {
-                self.prefix.offload(req.prefix_key);
-            }
-        }
-        self.sched.prefill_done(rid);
+        self.fleet.run(requests)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::instance::FixedCompute;
     use super::*;
     use crate::mma::MmaConfig;
-    use crate::models::qwen_7b_chat;
+    use crate::models::{qwen_7b_chat, ModelSpec};
+    use crate::serving::scheduler::RequestId;
     use crate::topology::h20x8;
 
     fn engine(mma: MmaConfig, compute: Box<dyn Compute>) -> ServingEngine {
@@ -789,8 +249,8 @@ mod tests {
             }),
         );
         let out = e.run(vec![req(1, 7, 500, 0, 0)]);
-        assert_eq!(e.now(), e.world.now());
-        assert_eq!(out[0].finished_at.unwrap(), e.world.now());
+        assert_eq!(e.now(), e.world().now());
+        assert_eq!(out[0].finished_at.unwrap(), e.world().now());
         // arrival(7ms) + prefill(0.1) + 2 decode steps(0.05 each)
         let want = 0.007 + 0.1 + 2.0 * 0.05;
         assert!((e.now().as_secs_f64() - want).abs() < 1e-9, "{:?}", e.now());
@@ -843,7 +303,7 @@ mod tests {
         // prematurely promoted GPU tier or issuing a duplicate fetch.
         let fetch_bytes = qwen_7b_chat().kv_bytes(32768);
         let n_fetches = e
-            .world
+            .world()
             .transfers
             .iter()
             .filter(|r| r.desc.bytes == fetch_bytes)
@@ -893,5 +353,33 @@ mod tests {
             (decode_total - want).abs() < 1e-9,
             "decode {decode_total} vs {want}"
         );
+    }
+
+    #[test]
+    fn seeding_beyond_host_capacity_drops_lru() {
+        // The host tier is byte-accounted: over-seeding cannot exceed the
+        // configured capacity (satellite: no more allocator bypass).
+        let mut e = engine_cfg(
+            ServingConfig {
+                host_kv_blocks: 2048, // 32768 tokens of host tier
+                ..Default::default()
+            },
+            MmaConfig::native(),
+            Box::new(FixedCompute {
+                prefill_s: 0.01,
+                decode_s: 0.001,
+            }),
+        );
+        let cap_bytes = qwen_7b_chat().kv_bytes(2048 * 16);
+        for key in 1..=8u64 {
+            e.seed_host_prefix(key, 16384); // 8 × 16k tokens ≫ capacity
+            assert!(
+                e.fleet().host_tier().used_bytes() <= cap_bytes,
+                "host tier exceeded configured capacity"
+            );
+        }
+        assert_eq!(e.fleet().host_tier().len(), 2, "LRU seeds dropped");
+        assert_eq!(e.fleet().host_tier().peek(8), Some(16384));
+        assert_eq!(e.fleet().host_tier().peek(1), None);
     }
 }

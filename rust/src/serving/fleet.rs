@@ -1,0 +1,580 @@
+//! The serving fleet: N per-GPU [`ServingInstance`]s under one
+//! event-driven [`Router`], all inside a single [`SimWorld`] event loop.
+//!
+//! One virtual clock. The fleet schedules request arrivals as world
+//! timers; when a timer fires, the router places the request on an
+//! instance (round-robin / least-loaded / prefix-affinity) — waking a
+//! sleeping instance on demand without blocking (the wake's weight
+//! transfers co-run with live serving traffic). Transfer and kernel
+//! completion notices are dispatched to the owning instance, whose
+//! scheduler advances mid-simulation. The single-GPU
+//! [`crate::serving::ServingEngine`] is exactly the N=1 case of this
+//! loop.
+//!
+//! The host prefix tier is fleet-shared ([`HostPrefixPool`], byte-
+//! accounted through [`crate::memory::HostPool`]): a prefix one instance
+//! fetched and promoted into its HBM can be fetched by a sibling
+//! peer-to-peer over the NVLink fabric instead of from host over PCIe —
+//! the `[fleet] peer_fetch` switch plus the transfer policy's
+//! `prefer_peer_fetch` surface decide per request.
+
+use super::instance::{split_peers, Compute, FleetShared, RequestOutcome, ServingInstance};
+use super::model_registry::{ModelRegistry, PendingPhase, PhaseResult};
+use super::prefix_cache::HostPrefixPool;
+use super::router::Router;
+use super::scheduler::{Request, RequestId};
+use crate::config::{FleetConfig, ServingConfig};
+use crate::memory::HbmAllocator;
+use crate::mma::{Notice, SimWorld};
+use crate::models::ModelSpec;
+use crate::sim::Time;
+use crate::topology::{GpuId, NumaId};
+use std::collections::HashMap;
+
+/// Namespace for the fleet's arrival-timer tokens, so timers scheduled by
+/// other consumers of the shared world are ignored instead of being
+/// misread as arrivals ("SRVE" tag in the top half).
+const ARRIVAL_TOKEN_BASE: u64 = 0x5352_5645 << 32;
+
+/// N serving instances on one [`SimWorld`] clock.
+pub struct ServingFleet {
+    /// The shared world: fabric, GPUs, and the one virtual clock.
+    pub world: SimWorld,
+    /// Fleet knobs (`[fleet]` section / `mma serve --gpus`).
+    pub cfg: FleetConfig,
+    model: ModelSpec,
+    instances: Vec<ServingInstance>,
+    shared: FleetShared,
+    router: Router,
+    registry: ModelRegistry,
+    pending_wakes: Vec<(usize, PendingPhase)>,
+    /// Completed on-demand wakes: `(instance, phase cost)`.
+    pub wake_costs: Vec<(usize, PhaseResult)>,
+    hbm: HbmAllocator,
+    arrivals: Vec<Request>,
+    assignments: HashMap<u64, usize>,
+}
+
+impl ServingFleet {
+    /// Assemble a fleet on GPUs `0..cfg.gpus`, one compute provider per
+    /// instance. `world` carries the MMA/native transfer configuration.
+    pub fn new(
+        cfg: FleetConfig,
+        serving: ServingConfig,
+        model: ModelSpec,
+        world: SimWorld,
+        computes: Vec<Box<dyn Compute>>,
+        host_numa: NumaId,
+    ) -> ServingFleet {
+        let gpus: Vec<GpuId> = (0..cfg.gpus).map(|i| GpuId(i as u8)).collect();
+        ServingFleet::on_gpus(cfg, serving, model, world, computes, gpus, host_numa)
+    }
+
+    /// Assemble a fleet with explicit instance→GPU placement.
+    pub fn on_gpus(
+        mut cfg: FleetConfig,
+        serving: ServingConfig,
+        model: ModelSpec,
+        mut world: SimWorld,
+        computes: Vec<Box<dyn Compute>>,
+        gpus: Vec<GpuId>,
+        host_numa: NumaId,
+    ) -> ServingFleet {
+        assert!(!gpus.is_empty(), "a fleet needs at least one instance");
+        assert_eq!(
+            computes.len(),
+            gpus.len(),
+            "one compute provider per instance"
+        );
+        assert!(
+            gpus.len() <= world.topo.gpu_count(),
+            "fleet of {} on a {}-GPU server",
+            gpus.len(),
+            world.topo.gpu_count()
+        );
+        cfg.gpus = gpus.len() as u32;
+        // Every instance's weights + KV pool carve from the same
+        // per-GPU HBM accounting (satellite: no more bypass).
+        let mut hbm = HbmAllocator::new(world.topo.gpu_count(), world.topo.hbm_bytes);
+        let mut registry = ModelRegistry::new(host_numa);
+        let mut instances = Vec::with_capacity(gpus.len());
+        for (i, (gpu, compute)) in gpus.into_iter().zip(computes).enumerate() {
+            registry.register(model.clone(), vec![gpu]);
+            instances.push(ServingInstance::new(
+                i as u8,
+                serving.clone(),
+                model.clone(),
+                &mut world,
+                &mut hbm,
+                compute,
+                gpu,
+                host_numa,
+            ));
+        }
+        let shared = FleetShared {
+            host: HostPrefixPool::new(
+                serving.kv_block_tokens,
+                serving.host_kv_blocks as u64 * serving.kv_block_tokens as u64,
+                model.kv_bytes_per_token().max(1),
+                world.topo.numa_count,
+                host_numa,
+            ),
+            peer_fetch: cfg.peer_fetch,
+        };
+        let router = Router::new(cfg.router, instances.len());
+        ServingFleet {
+            world,
+            model,
+            instances,
+            shared,
+            router,
+            registry,
+            pending_wakes: Vec::new(),
+            wake_costs: Vec::new(),
+            hbm,
+            arrivals: Vec::new(),
+            assignments: HashMap::new(),
+            cfg,
+        }
+    }
+
+    /// Current virtual time — the one shared [`SimWorld`] clock.
+    pub fn now(&self) -> Time {
+        self.world.now()
+    }
+
+    /// The model served.
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    /// Name of the transfer policy every KV fetch / offload in this fleet
+    /// runs under (from the [`SimWorld`]'s engine configuration).
+    pub fn policy_name(&self) -> &'static str {
+        self.world.policy_name()
+    }
+
+    /// Number of serving instances.
+    pub fn instance_count(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// One instance, by fleet slot.
+    pub fn instance(&self, i: usize) -> &ServingInstance {
+        &self.instances[i]
+    }
+
+    /// The router (placement state, wake-event accounting).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// The fleet-shared host prefix tier.
+    pub fn host_tier(&self) -> &HostPrefixPool {
+        &self.shared.host
+    }
+
+    /// Per-GPU HBM bytes in use (weights + clamped KV pools).
+    pub fn hbm_used(&self, gpu: GpuId) -> u64 {
+        self.hbm.used(gpu)
+    }
+
+    /// Which instance a routed request was placed on.
+    pub fn assignment(&self, id: RequestId) -> Option<usize> {
+        self.assignments.get(&id.0).copied()
+    }
+
+    /// Requests routed to each instance so far.
+    pub fn per_instance_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.instances.len()];
+        for &i in self.assignments.values() {
+            counts[i] += 1;
+        }
+        counts
+    }
+
+    /// `(host, peer)` prefix fetches issued across the fleet.
+    pub fn fetch_counts(&self) -> (u64, u64) {
+        self.instances
+            .iter()
+            .fold((0, 0), |(h, p), i| (h + i.host_fetches, p + i.peer_fetches))
+    }
+
+    /// Pre-populate the shared host tier with a prefix (the state after a
+    /// previous turn's KV was offloaded — §5.2.1 setup). Byte-accounted:
+    /// over-seeding drops LRU entries instead of exceeding capacity.
+    pub fn seed_host_prefix(&mut self, key: u64, tokens: u32) {
+        self.shared.host.insert(key, tokens);
+    }
+
+    /// Put an instance to sleep before a run (vLLM Sleep Mode Level 1):
+    /// weights move D2H on the shared fabric; the next request routed to
+    /// it triggers an on-demand, non-blocking wake.
+    pub fn sleep_instance(&mut self, i: usize) {
+        let phase = self.registry.start_sleep(&mut self.world, i);
+        phase.wait(&mut self.world);
+        self.instances[i].set_awake(false);
+    }
+
+    /// Run `requests` to completion; returns outcomes in request order.
+    /// Arrivals are scheduled as world timers and routed when they fire,
+    /// so placement, on-demand wakes, and every instance's fetch/compute
+    /// genuinely interleave on the shared fabric and clock.
+    pub fn run(&mut self, requests: Vec<Request>) -> Vec<RequestOutcome> {
+        let ids: Vec<RequestId> = requests.iter().map(|r| r.id).collect();
+        let mut sorted = requests;
+        sorted.sort_by_key(|r| (r.arrival, r.id.0));
+        let mut pending_arrivals = sorted.len();
+        for r in sorted {
+            let token = ARRIVAL_TOKEN_BASE | self.arrivals.len() as u64;
+            self.world.schedule_timer(r.arrival, token);
+            self.arrivals.push(r);
+        }
+        while !(pending_arrivals == 0 && self.instances.iter().all(|i| i.is_idle())) {
+            let Some(notice) = self.world.next_notice() else {
+                panic!("serving fleet stalled: world idle with work pending");
+            };
+            match notice {
+                Notice::Timer(token) => {
+                    let idx = (token ^ ARRIVAL_TOKEN_BASE) as usize;
+                    if (token & ARRIVAL_TOKEN_BASE) != ARRIVAL_TOKEN_BASE
+                        || idx >= self.arrivals.len()
+                    {
+                        continue; // someone else's timer on the shared world
+                    }
+                    pending_arrivals -= 1;
+                    let req = self.arrivals[idx].clone();
+                    self.on_arrival(req);
+                }
+                Notice::TransferDone(tid) => {
+                    self.poll_wakes();
+                    self.dispatch_transfer(tid.0);
+                }
+                Notice::KernelDone(tag) => self.dispatch_kernel(tag),
+            }
+            self.drain_finished();
+        }
+        ids.iter()
+            .map(|id| self.outcome(*id).expect("missing outcome").clone())
+            .collect()
+    }
+
+    /// Outcome of a request served by whichever instance it was routed to.
+    pub fn outcome(&self, id: RequestId) -> Option<&RequestOutcome> {
+        let i = *self.assignments.get(&id.0)?;
+        self.instances[i].outcome(id)
+    }
+
+    // ----- event handlers ----------------------------------------------
+
+    /// An arrival timer fired: route mid-simulation and pump the target.
+    fn on_arrival(&mut self, req: Request) {
+        let affinity = if self.cfg.prefix_affinity && req.prefix_key != 0 {
+            self.instances
+                .iter()
+                .position(|inst| inst.gpu_tier().peek(req.prefix_key).is_some())
+        } else {
+            None
+        };
+        let awake: Vec<bool> = self.instances.iter().map(|i| i.awake()).collect();
+        let (chosen, needs_wake) = self.router.route(affinity, &awake);
+        self.assignments.insert(req.id.0, chosen);
+        if needs_wake && !self.pending_wakes.iter().any(|(i, _)| *i == chosen) {
+            // Non-blocking: the H2D weight reload contends with live
+            // serving traffic; the request queues until the wake lands.
+            // (A second request landing on an already-waking instance
+            // just queues behind the in-flight wake.)
+            let phase = self.registry.start_wake(&mut self.world, chosen);
+            self.pending_wakes.push((chosen, phase));
+        }
+        self.instances[chosen].submit(req);
+        self.pump_instance(chosen);
+    }
+
+    fn pump_instance(&mut self, i: usize) {
+        let (inst, peers) = split_peers(&mut self.instances, i);
+        inst.pump(&mut self.world, &mut self.shared, &peers);
+    }
+
+    fn dispatch_transfer(&mut self, tid: u32) {
+        for i in 0..self.instances.len() {
+            let (inst, peers) = split_peers(&mut self.instances, i);
+            if inst.on_transfer_done(&mut self.world, &mut self.shared, &peers, tid) {
+                return;
+            }
+        }
+        // Not a serving fetch (registry / background traffic): ignored.
+    }
+
+    fn dispatch_kernel(&mut self, tag: u64) {
+        for i in 0..self.instances.len() {
+            let (inst, peers) = split_peers(&mut self.instances, i);
+            if inst.on_kernel_done(&mut self.world, &mut self.shared, &peers, tag) {
+                return;
+            }
+        }
+    }
+
+    /// Check in-flight wake phases; a completed wake marks its instance
+    /// serving-ready and pumps it (queued arrivals admit immediately).
+    fn poll_wakes(&mut self) {
+        let mut i = 0;
+        while i < self.pending_wakes.len() {
+            if let Some(res) = self.pending_wakes[i].1.result(&self.world) {
+                let (inst, _) = self.pending_wakes.swap_remove(i);
+                self.wake_costs.push((inst, res));
+                self.instances[inst].set_awake(true);
+                self.pump_instance(inst);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Feed request completions back into the router's load accounting.
+    fn drain_finished(&mut self) {
+        for i in 0..self.instances.len() {
+            for _rid in self.instances[i].take_finished() {
+                self.router.done(i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FleetConfig;
+    use crate::mma::MmaConfig;
+    use crate::models::qwen_7b_chat;
+    use crate::serving::instance::FixedCompute;
+    use crate::serving::router::RoutePolicy;
+    use crate::topology::h20x8;
+
+    fn computes(n: usize) -> Vec<Box<dyn Compute>> {
+        (0..n)
+            .map(|_| {
+                Box::new(FixedCompute {
+                    prefill_s: 0.05,
+                    decode_s: 0.001,
+                }) as Box<dyn Compute>
+            })
+            .collect()
+    }
+
+    fn fleet(n: u32, peer: bool, mma: MmaConfig) -> ServingFleet {
+        let cfg = FleetConfig {
+            gpus: n,
+            router: RoutePolicy::RoundRobin,
+            peer_fetch: peer,
+            prefix_affinity: false,
+        };
+        let serving = ServingConfig {
+            pd_disaggregation: false,
+            ..Default::default()
+        };
+        let world = SimWorld::new(h20x8(), mma);
+        ServingFleet::new(
+            cfg,
+            serving,
+            qwen_7b_chat(),
+            world,
+            computes(n as usize),
+            NumaId(0),
+        )
+    }
+
+    fn hit(id: u64, arrival_ms: u64, ctx: u32, key: u64) -> Request {
+        Request {
+            id: RequestId(id),
+            arrival: Time::from_ms(arrival_ms),
+            prompt_tokens: ctx + 64,
+            cached_prefix_tokens: ctx,
+            prefix_key: key,
+            output_tokens: 2,
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_across_instances() {
+        let mut f = fleet(4, false, MmaConfig::native());
+        let reqs: Vec<Request> = (0..8).map(|i| hit(i, i, 1000, 0)).collect();
+        let reqs = reqs
+            .into_iter()
+            .map(|mut r| {
+                r.cached_prefix_tokens = 0;
+                r
+            })
+            .collect();
+        let out = f.run(reqs);
+        assert_eq!(out.len(), 8);
+        assert_eq!(f.per_instance_counts(), vec![2, 2, 2, 2]);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(f.assignment(o.id), Some(i % 4), "arrival-order rotation");
+            assert!(o.finished_at.is_some());
+        }
+    }
+
+    #[test]
+    fn parallel_instances_cut_queueing_versus_one() {
+        // Four same-time cold prefills: one instance serializes them, four
+        // instances run them concurrently on separate GPUs.
+        let run = |n: u32| {
+            let mut f = fleet(n, false, MmaConfig::native());
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| Request {
+                    cached_prefix_tokens: 0,
+                    prefix_key: 0,
+                    ..hit(i, 0, 8000, 0)
+                })
+                .collect();
+            let out = f.run(reqs);
+            out.iter().map(|o| o.ttft_s()).sum::<f64>() / out.len() as f64
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(
+            four < 0.5 * one,
+            "fleet must parallelize prefills: n=1 {one} vs n=4 {four}"
+        );
+    }
+
+    #[test]
+    fn peer_nvlink_fetch_beats_host_fetch() {
+        // Request 1 promotes the prefix into gpu0's HBM; request 2 lands
+        // on instance 1 and fetches it over NVLink (368 GB/s) instead of
+        // host PCIe (53.6 GB/s) when peer fetching is on.
+        let ctx = 32_768u32;
+        let run = |peer: bool| {
+            let mut f = fleet(2, peer, MmaConfig::native());
+            f.seed_host_prefix(7, ctx);
+            let out = f.run(vec![hit(1, 0, ctx, 7), hit(2, 3000, ctx, 7)]);
+            let (host, peer_n) = f.fetch_counts();
+            (out[1].ttft.fetch_s, host, peer_n)
+        };
+        let (host_fetch, h0, p0) = run(false);
+        let (peer_fetch, h1, p1) = run(true);
+        assert_eq!((h0, p0), (2, 0), "peer off: both turns fetch from host");
+        assert_eq!((h1, p1), (1, 1), "peer on: second turn rides NVLink");
+        assert!(
+            peer_fetch < 0.25 * host_fetch,
+            "NVLink fetch {peer_fetch} vs host fetch {host_fetch}"
+        );
+    }
+
+    #[test]
+    fn routed_request_wakes_sleeping_instance_mid_simulation() {
+        let mut f = fleet(2, false, MmaConfig::native());
+        f.sleep_instance(0);
+        f.sleep_instance(1);
+        let t0 = f.now();
+        let out = f.run(vec![Request {
+            arrival: t0,
+            ..hit(1, 0, 1000, 0)
+        }]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].finished_at.is_some());
+        assert_eq!(f.router().wake_events, vec![0], "on-demand wake recorded");
+        assert_eq!(f.wake_costs.len(), 1);
+        let (inst, cost) = &f.wake_costs[0];
+        assert_eq!(*inst, 0);
+        assert!(cost.total() > Time::ZERO);
+        // The wake delayed the first token past the pure compute time.
+        assert!(
+            out[0].ttft_s() > cost.transfer.as_secs_f64(),
+            "TTFT {} must cover the wake transfer {}",
+            out[0].ttft_s(),
+            cost.transfer.as_secs_f64()
+        );
+        // Only the routed instance woke; the sibling stayed asleep.
+        assert!(f.instance(0).awake());
+        assert!(!f.instance(1).awake());
+    }
+
+    #[test]
+    fn second_request_queues_behind_inflight_wake() {
+        // Both requests land on the sleeping instance before its wake
+        // completes: one physical wake, two wake-routed events, and both
+        // requests finish once the weights are back.
+        let mut f = fleet(1, false, MmaConfig::native());
+        f.sleep_instance(0);
+        let t0 = f.now();
+        let out = f.run(vec![
+            Request {
+                arrival: t0,
+                ..hit(1, 0, 1000, 0)
+            },
+            Request {
+                arrival: t0,
+                ..hit(2, 0, 1000, 0)
+            },
+        ]);
+        assert!(out.iter().all(|o| o.finished_at.is_some()));
+        assert_eq!(f.router().wake_events, vec![0, 0]);
+        assert_eq!(f.wake_costs.len(), 1, "a single physical wake");
+    }
+
+    #[test]
+    fn hbm_accounting_clamps_kv_pools() {
+        // An absurd KV-pool request is clamped to what HBM holds next to
+        // the weights, and the accounting shows both allocations.
+        let serving = ServingConfig {
+            gpu_kv_blocks: u32::MAX,
+            ..Default::default()
+        };
+        let world = SimWorld::new(h20x8(), MmaConfig::native());
+        let f = ServingFleet::new(
+            FleetConfig::default(),
+            serving,
+            qwen_7b_chat(),
+            world,
+            computes(1),
+            NumaId(0),
+        );
+        let model = qwen_7b_chat();
+        let blocks = f.instance(0).kv_pool_blocks();
+        assert!(blocks < u32::MAX, "pool clamped");
+        let block_bytes = model.kv_bytes(16);
+        let used = f.hbm_used(GpuId(0));
+        assert_eq!(
+            used,
+            model.weight_bytes() + blocks as u64 * block_bytes,
+            "weights + KV pool accounted"
+        );
+        assert!(used <= f.world.topo.hbm_bytes, "within HBM capacity");
+        // The pool fills the GPU: one more block would not fit.
+        assert!(used + block_bytes > f.world.topo.hbm_bytes);
+    }
+
+    #[test]
+    fn prefix_affinity_routes_to_the_holder() {
+        let mk = |affinity: bool| {
+            let cfg = FleetConfig {
+                gpus: 2,
+                router: RoutePolicy::RoundRobin,
+                peer_fetch: false,
+                prefix_affinity: affinity,
+            };
+            let serving = ServingConfig {
+                pd_disaggregation: false,
+                ..Default::default()
+            };
+            let world = SimWorld::new(h20x8(), MmaConfig::native());
+            let mut f = ServingFleet::new(
+                cfg,
+                serving,
+                qwen_7b_chat(),
+                world,
+                computes(2),
+                NumaId(0),
+            );
+            f.seed_host_prefix(9, 8192);
+            f.run(vec![hit(1, 0, 8192, 9), hit(2, 2000, 8192, 9)]);
+            (f.assignment(RequestId(1)), f.assignment(RequestId(2)))
+        };
+        let (a, b) = mk(false);
+        assert_ne!(a, b, "round-robin alternates without affinity");
+        let (a, b) = mk(true);
+        assert_eq!(a, b, "affinity returns the turn to the prefix holder");
+    }
+}

@@ -1,0 +1,798 @@
+//! One per-GPU serving instance: its own KV pool, GPU prefix tier,
+//! streams, scheduler, and tagged kernels — the unit a
+//! [`crate::serving::ServingFleet`] replicates across GPUs.
+//!
+//! An instance never owns the clock: every handler takes the shared
+//! [`SimWorld`] plus the fleet-shared state ([`FleetShared`]: the host
+//! prefix tier) and a read-only view of its sibling instances
+//! ([`Peers`]). Request arrivals, transfer completions, and kernel
+//! completions are dispatched to it by the fleet's event loop, so N
+//! instances' KV fetches genuinely contend for max-min fabric bandwidth
+//! on one virtual clock.
+//!
+//! A prefix miss in the local GPU tier resolves against two further
+//! sources: the fleet's shared host tier (fetched host→GPU, the path MMA
+//! multipaths) and a *sibling GPU's HBM* (fetched peer-to-peer over the
+//! NVLink fabric). Which of the two carries the fetch is a
+//! [`crate::policy::TransferPolicy::prefer_peer_fetch`] decision.
+
+use super::kv_cache::{KvCacheManager, SeqId};
+use super::prefix_cache::{GpuPrefixTier, HostPrefixPool};
+use super::scheduler::{Phase, Request, RequestId, Scheduler};
+use crate::config::ServingConfig;
+use crate::memory::HbmAllocator;
+use crate::metrics::TtftBreakdown;
+use crate::mma::{SimWorld, StreamHandle, TransferDesc};
+use crate::models::ModelSpec;
+use crate::roofline::GpuRoofline;
+use crate::sim::Time;
+use crate::topology::{Direction, GpuId, NumaId};
+use std::collections::{HashMap, VecDeque};
+
+/// Compute-time provider: roofline for paper-scale models, real PJRT for
+/// the live tiny model, fixed for unit tests.
+pub trait Compute {
+    /// Prefill `new_tokens` with `context` total attended tokens.
+    fn prefill_secs(&mut self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64;
+    /// One decode step at `context`.
+    fn decode_secs(&mut self, m: &ModelSpec, context: u64, tp: u32) -> f64;
+}
+
+impl Compute for GpuRoofline {
+    fn prefill_secs(&mut self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64 {
+        GpuRoofline::prefill_secs(self, m, new_tokens, context, tp)
+    }
+    fn decode_secs(&mut self, m: &ModelSpec, context: u64, tp: u32) -> f64 {
+        GpuRoofline::decode_secs_per_token(self, m, context, tp)
+    }
+}
+
+/// Fixed per-call compute times (tests).
+pub struct FixedCompute {
+    /// Prefill seconds per call.
+    pub prefill_s: f64,
+    /// Decode seconds per step.
+    pub decode_s: f64,
+}
+
+impl Compute for FixedCompute {
+    fn prefill_secs(&mut self, _: &ModelSpec, _: u64, _: u64, _: u32) -> f64 {
+        self.prefill_s
+    }
+    fn decode_secs(&mut self, _: &ModelSpec, _: u64, _: u32) -> f64 {
+        self.decode_s
+    }
+}
+
+/// Final per-request record.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// Request id.
+    pub id: RequestId,
+    /// Arrival time.
+    pub arrival: Time,
+    /// TTFT decomposition (queue / fetch / prefill component times). With
+    /// `fetch_chunks > 1` fetch and prefill overlap, so the components can
+    /// sum to more than [`Self::ttft_s`]; without chunking they sum
+    /// exactly.
+    pub ttft: TtftBreakdown,
+    /// First token time (absolute, world clock).
+    pub first_token_at: Time,
+    /// All output tokens done (absolute, world clock).
+    pub finished_at: Option<Time>,
+}
+
+impl RequestOutcome {
+    /// End-to-end latency if finished.
+    pub fn e2e(&self) -> Option<Time> {
+        self.finished_at.map(|f| f.since(self.arrival))
+    }
+
+    /// Wall-clock time to first token (arrival → first token), seconds.
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_at.since(self.arrival).as_secs_f64()
+    }
+}
+
+/// State every instance shares through the fleet: the pinned-host prefix
+/// tier and the fleet-level fetch-path switch.
+pub struct FleetShared {
+    /// The fleet-shared host prefix tier (byte-accounted).
+    pub host: HostPrefixPool,
+    /// Peer-NVLink prefix fetches enabled (`[fleet] peer_fetch`).
+    pub peer_fetch: bool,
+}
+
+/// Read-only view of an instance's siblings, used to find peer-resident
+/// prefixes during admission without aliasing the instance itself.
+pub struct Peers<'a> {
+    left: &'a [ServingInstance],
+    right: &'a [ServingInstance],
+}
+
+impl<'a> Peers<'a> {
+    /// First sibling holding `key` GPU-resident: `(gpu, tokens)`.
+    pub fn holder(&self, key: u64) -> Option<(GpuId, u32)> {
+        self.left
+            .iter()
+            .chain(self.right.iter())
+            .find_map(|p| p.gpu_tier().peek(key).map(|t| (p.gpu(), t)))
+    }
+}
+
+/// Split `instances` into instance `i` and a [`Peers`] view of the rest.
+pub fn split_peers(
+    instances: &mut [ServingInstance],
+    i: usize,
+) -> (&mut ServingInstance, Peers<'_>) {
+    let (left, rest) = instances.split_at_mut(i);
+    let (me, right) = rest.split_first_mut().expect("instance index in range");
+    (
+        me,
+        Peers {
+            left: &*left,
+            right: &*right,
+        },
+    )
+}
+
+/// Kernel-tag layout: `[kind:8][instance:8][rid:48]`. Distinctive kind
+/// bytes rather than 1/2 so tags from other consumers of the shared world
+/// are unlikely to land in the serving namespace; unknown kinds are
+/// ignored, and both arms additionally tolerate tags that merely collide.
+const TAG_KIND_MASK: u64 = 0xFF << 56;
+const TAG_PREFILL: u64 = 0xE5 << 56;
+const TAG_DECODE_STEP: u64 = 0xE6 << 56;
+const TAG_INST_SHIFT: u32 = 48;
+const TAG_RID_MASK: u64 = (1 << TAG_INST_SHIFT) - 1;
+
+/// Where an admitted prefill's prefix KV is coming from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FetchSource {
+    /// Fleet host tier, over the host→GPU path (multipath-eligible).
+    Host,
+    /// A sibling GPU's HBM, peer-to-peer over NVLink.
+    Peer(GpuId),
+}
+
+/// Per-admitted-prefill bookkeeping, all timestamps off the world clock.
+#[derive(Debug)]
+struct PrefillJob {
+    /// Tokens to prefill (scheduler suffix — the single source of truth).
+    suffix: u32,
+    /// Prefix tokens reused from the cache.
+    reused: u32,
+    /// Admission time (end of arrival queueing).
+    sched_at: Time,
+    /// First fetch chunk issued.
+    fetch_started: Option<Time>,
+    /// Last fetch chunk landed.
+    fetch_done: Option<Time>,
+    /// Outstanding fetch chunks.
+    chunks_left: u32,
+    /// Compute was released (pushed to the ready queue) already.
+    compute_released: bool,
+    /// When the job entered the ready queue.
+    ready_at: Option<Time>,
+    /// Prefill kernel start.
+    kernel_start: Option<Time>,
+    /// Prefill kernel completion.
+    kernel_done: Option<Time>,
+    /// Prefill kernel duration, seconds.
+    prefill_s: f64,
+    /// Stream carrying this job's fetch chunks (returned to the pool when
+    /// the last chunk lands).
+    fetch_stream: Option<StreamHandle>,
+    /// Prefix key this job's own fetch is moving (primary fetcher only).
+    fetch_key: Option<u64>,
+    /// Full token count of the fetched prefix entry (for promotion).
+    fetch_tokens: u32,
+}
+
+/// The event-driven serving state of one GPU (one fleet slot).
+pub struct ServingInstance {
+    idx: u8,
+    /// Serving knobs.
+    pub cfg: ServingConfig,
+    model: ModelSpec,
+    sched: Scheduler,
+    gpu_tier: GpuPrefixTier,
+    /// Paged GPU KV pool (sized against HBM capacity at construction).
+    pub kv: KvCacheManager,
+    compute: Box<dyn Compute>,
+    gpu: GpuId,
+    host_numa: NumaId,
+    outcomes: HashMap<u64, RequestOutcome>,
+    next_seq: u64,
+    awake: bool,
+    prefill_stream: StreamHandle,
+    decode_stream: StreamHandle,
+    /// In-flight fetch chunk → owning request.
+    inflight_fetch: HashMap<u32, RequestId>,
+    jobs: HashMap<u64, PrefillJob>,
+    /// Fetched (or pipeline-released) prefills waiting for the compute lane.
+    ready_prefills: VecDeque<RequestId>,
+    /// Idle fetch streams, recycled across requests (`StreamId` is a u16:
+    /// creating one stream per request would wrap and alias stream 0).
+    fetch_streams: Vec<StreamHandle>,
+    /// Fetches in flight, by prefix key. A concurrent request hitting the
+    /// same key *joins* the in-flight fetch (value = joiners) instead of
+    /// seeing a prematurely-promoted GPU tier or re-fetching.
+    inflight_prefix: HashMap<u64, Vec<RequestId>>,
+    /// Suffix tokens of admitted-but-unfinished prefills (budget hold).
+    inflight_prefill_tokens: u32,
+    prefill_busy: bool,
+    decode_busy: bool,
+    /// Aggregated mode: alternate decode/prefill so neither lane starves.
+    decode_ran_last: bool,
+    decode_inflight: Vec<RequestId>,
+    /// Requests fully finished since the fleet last drained (router load).
+    finished: Vec<RequestId>,
+    /// Host-tier fetches issued (joiners excluded).
+    pub host_fetches: u64,
+    /// Peer-NVLink fetches issued (joiners excluded).
+    pub peer_fetches: u64,
+    kv_pool_blocks: u32,
+}
+
+impl ServingInstance {
+    /// Assemble one instance on `gpu`, carving its weights and KV pool out
+    /// of `hbm`. The configured `gpu_kv_blocks` is clamped to what the
+    /// GPU's HBM can actually hold next to the (TP-sharded) weights, so
+    /// pool sizing can no longer bypass capacity accounting.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        idx: u8,
+        cfg: ServingConfig,
+        model: ModelSpec,
+        world: &mut SimWorld,
+        hbm: &mut HbmAllocator,
+        compute: Box<dyn Compute>,
+        gpu: GpuId,
+        host_numa: NumaId,
+    ) -> ServingInstance {
+        let weight = (model.weight_bytes() / cfg.tp.max(1) as u64).max(1);
+        hbm.alloc(gpu, weight).unwrap_or_else(|| {
+            panic!(
+                "model {} weights ({weight} B/gpu) exceed {:?} HBM",
+                model.name, gpu
+            )
+        });
+        let block_bytes = model.kv_bytes(cfg.kv_block_tokens as u64).max(1);
+        let fit = (hbm.available(gpu) / block_bytes).min(u32::MAX as u64) as u32;
+        let blocks = cfg.gpu_kv_blocks.min(fit);
+        hbm.alloc(gpu, blocks as u64 * block_bytes)
+            .expect("clamped KV pool fits by construction");
+        let gpu_tier = GpuPrefixTier::new(
+            cfg.kv_block_tokens,
+            blocks as u64 * cfg.kv_block_tokens as u64,
+        );
+        let prefill_stream = world.stream(gpu);
+        let decode_stream = world.stream(gpu);
+        ServingInstance {
+            idx,
+            sched: Scheduler::new(cfg.clone()),
+            kv: KvCacheManager::new(blocks, cfg.kv_block_tokens),
+            gpu_tier,
+            model,
+            compute,
+            gpu,
+            host_numa,
+            outcomes: HashMap::new(),
+            next_seq: 0,
+            awake: true,
+            prefill_stream,
+            decode_stream,
+            inflight_fetch: HashMap::new(),
+            jobs: HashMap::new(),
+            ready_prefills: VecDeque::new(),
+            fetch_streams: Vec::new(),
+            inflight_prefix: HashMap::new(),
+            inflight_prefill_tokens: 0,
+            prefill_busy: false,
+            decode_busy: false,
+            decode_ran_last: false,
+            decode_inflight: Vec::new(),
+            finished: Vec::new(),
+            host_fetches: 0,
+            peer_fetches: 0,
+            kv_pool_blocks: blocks,
+            cfg,
+        }
+    }
+
+    /// The GPU this instance serves on.
+    pub fn gpu(&self) -> GpuId {
+        self.gpu
+    }
+
+    /// This instance's GPU-resident prefix tier (peers peek through it).
+    pub fn gpu_tier(&self) -> &GpuPrefixTier {
+        &self.gpu_tier
+    }
+
+    /// KV pool size after HBM clamping, in blocks.
+    pub fn kv_pool_blocks(&self) -> u32 {
+        self.kv_pool_blocks
+    }
+
+    /// Weights resident and serving-ready?
+    pub fn awake(&self) -> bool {
+        self.awake
+    }
+
+    /// Flip residency (the fleet drives this off registry sleep/wake).
+    pub fn set_awake(&mut self, awake: bool) {
+        self.awake = awake;
+    }
+
+    /// No queued, running, or in-flight work left?
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle() && self.jobs.is_empty()
+    }
+
+    /// Outcome of a request served here.
+    pub fn outcome(&self, id: RequestId) -> Option<&RequestOutcome> {
+        self.outcomes.get(&id.0)
+    }
+
+    /// Requests fully finished since the last drain (router accounting).
+    pub fn take_finished(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Enqueue a routed arrival. The fleet pumps afterwards.
+    pub fn submit(&mut self, req: Request) {
+        self.sched.submit(req);
+    }
+
+    /// Event-loop heartbeat: admit what fits, then fill idle compute
+    /// lanes. A sleeping instance queues arrivals but does nothing until
+    /// its wake completes.
+    pub fn pump(&mut self, world: &mut SimWorld, shared: &mut FleetShared, peers: &Peers) {
+        if !self.awake {
+            return;
+        }
+        self.admit(world, shared, peers);
+        if self.cfg.pd_disaggregation {
+            // Separate GPU groups: both lanes advance independently.
+            if !self.decode_busy {
+                self.start_decode_step(world);
+            }
+            if !self.prefill_busy {
+                self.start_next_prefill(world);
+            }
+        } else {
+            // One GPU group: decodes and prefills serialize; alternate so
+            // decodes keep priority without starving admitted prefills.
+            if self.prefill_busy || self.decode_busy {
+                return;
+            }
+            let has_decode = self.sched.decode_count() > 0;
+            let has_prefill = !self.ready_prefills.is_empty();
+            match (has_decode, has_prefill) {
+                (true, true) => {
+                    if self.decode_ran_last {
+                        self.start_next_prefill(world);
+                    } else {
+                        self.start_decode_step(world);
+                    }
+                }
+                (true, false) => self.start_decode_step(world),
+                (false, true) => self.start_next_prefill(world),
+                (false, false) => {}
+            }
+        }
+    }
+
+    /// Admit waiting requests under the in-flight token budget; resolve
+    /// each suffix against the prefix tiers (local GPU, then the fleet's
+    /// shared host tier, then a sibling GPU's HBM) and issue the KV fetch
+    /// as async transfers — host→GPU or peer NVLink per the transfer
+    /// policy's [`prefer_peer_fetch`] decision.
+    ///
+    /// [`prefer_peer_fetch`]: crate::policy::TransferPolicy::prefer_peer_fetch
+    fn admit(&mut self, world: &mut SimWorld, shared: &mut FleetShared, peers: &Peers) {
+        let now = world.now();
+        let decode_hold = if self.cfg.pd_disaggregation {
+            0
+        } else {
+            self.sched.decode_count() as u32
+        };
+        let busy = self.inflight_prefill_tokens + decode_hold;
+        let gpu_tier = &self.gpu_tier;
+        let host = &shared.host;
+        let peer_ok = shared.peer_fetch;
+        let plan = self.sched.plan_prefills(busy, |r| {
+            if r.prefix_key == 0 || r.cached_prefix_tokens == 0 {
+                return 0;
+            }
+            gpu_tier
+                .peek(r.prefix_key)
+                .or_else(|| host.peek(r.prefix_key))
+                .or_else(|| {
+                    if peer_ok {
+                        peers.holder(r.prefix_key).map(|(_, t)| t)
+                    } else {
+                        None
+                    }
+                })
+                .map(|tokens| tokens.min(r.cached_prefix_tokens))
+                .unwrap_or(0)
+        });
+        for (rid, suffix) in plan {
+            let req = self.sched.sequence(rid).expect("admitted seq").req.clone();
+            let reused = req.prompt_tokens - suffix;
+            self.inflight_prefill_tokens += suffix.max(1);
+            // KV blocks for the full sequence (best-effort, as the pool
+            // model has no eviction path yet).
+            let sid = SeqId(self.next_seq);
+            self.next_seq += 1;
+            let _ = self.kv.alloc_seq(sid, req.prompt_tokens + req.output_tokens);
+
+            let mut job = PrefillJob {
+                suffix,
+                reused,
+                sched_at: now,
+                fetch_started: None,
+                fetch_done: None,
+                chunks_left: 0,
+                compute_released: false,
+                ready_at: None,
+                kernel_start: None,
+                kernel_done: None,
+                prefill_s: 0.0,
+                fetch_stream: None,
+                fetch_key: None,
+                fetch_tokens: 0,
+            };
+            // Source resolution via non-mutating peeks: local-GPU
+            // promotion is deferred to fetch *completion* so a concurrent
+            // same-key request cannot observe a GPU tier whose bytes are
+            // still in flight.
+            let source = if reused == 0 || self.gpu_tier.peek(req.prefix_key).is_some() {
+                None // cold, or a zero-copy local-GPU hit
+            } else {
+                let bytes = self.model.kv_bytes(reused as u64).max(1);
+                let peer = if shared.peer_fetch {
+                    peers.holder(req.prefix_key)
+                } else {
+                    None
+                };
+                let host_tokens = shared.host.peek(req.prefix_key);
+                match (peer, host_tokens) {
+                    // Both copies exist: the transfer policy decides
+                    // host-multipath vs peer-NVLink.
+                    (Some((pg, pt)), Some(ht)) => {
+                        if world.prefer_peer_fetch(pg, self.gpu, bytes) {
+                            Some((FetchSource::Peer(pg), pt))
+                        } else {
+                            Some((FetchSource::Host, ht))
+                        }
+                    }
+                    (Some((pg, pt)), None) => Some((FetchSource::Peer(pg), pt)),
+                    (None, Some(ht)) => Some((FetchSource::Host, ht)),
+                    (None, None) => None,
+                }
+            };
+            match source {
+                Some((src, entry_tokens)) => {
+                    if let Some(waiters) = self.inflight_prefix.get_mut(&req.prefix_key) {
+                        // Same prefix already being fetched: join it and
+                        // pay only the remaining wait.
+                        waiters.push(rid);
+                        job.fetch_started = Some(now);
+                    } else {
+                        // Primary fetcher: move the KV pages, chunked so
+                        // later chunks can pipeline with prefill compute.
+                        // A dedicated stream per fetch keeps concurrent
+                        // requests' DMAs contending in the fabric instead
+                        // of serializing on one queue.
+                        self.inflight_prefix.insert(req.prefix_key, Vec::new());
+                        if src == FetchSource::Host {
+                            shared.host.touch(req.prefix_key);
+                            self.host_fetches += 1;
+                        } else {
+                            self.peer_fetches += 1;
+                        }
+                        let bytes = self.model.kv_bytes(reused as u64).max(1);
+                        let chunks = (self.cfg.fetch_chunks.max(1) as u64).min(bytes) as u32;
+                        let per = bytes / chunks as u64;
+                        let fetch_stream = match self.fetch_streams.pop() {
+                            Some(s) => s,
+                            None => world.stream(self.gpu),
+                        };
+                        job.fetch_stream = Some(fetch_stream);
+                        job.fetch_key = Some(req.prefix_key);
+                        job.fetch_tokens = entry_tokens;
+                        job.fetch_started = Some(now);
+                        job.chunks_left = chunks;
+                        for i in 0..chunks {
+                            let sz = if i == chunks - 1 {
+                                bytes - per * (chunks as u64 - 1)
+                            } else {
+                                per
+                            };
+                            let tid = match src {
+                                FetchSource::Host => world.memcpy_async(
+                                    fetch_stream,
+                                    TransferDesc::new(
+                                        Direction::H2D,
+                                        self.gpu,
+                                        self.host_numa,
+                                        sz,
+                                    ),
+                                ),
+                                FetchSource::Peer(pg) => {
+                                    world.p2p_async(fetch_stream, pg, sz)
+                                }
+                            };
+                            self.inflight_fetch.insert(tid.0, rid);
+                        }
+                    }
+                }
+                None => {
+                    // Cold prefill, or a resident local hit (refresh LRU,
+                    // no bytes move): compute can start right away.
+                    if reused > 0 {
+                        self.gpu_tier.touch(req.prefix_key);
+                    }
+                    job.compute_released = true;
+                    job.ready_at = Some(now);
+                    self.ready_prefills.push_back(rid);
+                }
+            }
+            self.jobs.insert(rid.0, job);
+        }
+    }
+
+    /// A fetch chunk landed. Returns false for transfers this instance
+    /// does not own (sibling fetches, registry / background traffic).
+    pub fn on_transfer_done(
+        &mut self,
+        world: &mut SimWorld,
+        shared: &mut FleetShared,
+        peers: &Peers,
+        tid: u32,
+    ) -> bool {
+        let Some(rid) = self.inflight_fetch.remove(&tid) else {
+            return false;
+        };
+        let now = world.now();
+        let pipelined = self.cfg.fetch_chunks > 1;
+        let (all_landed, done_key, entry_tokens) = {
+            let job = self.jobs.get_mut(&rid.0).expect("fetch for retired job");
+            job.chunks_left -= 1;
+            let all_landed = job.chunks_left == 0;
+            let mut done_key = None;
+            if all_landed {
+                job.fetch_done = Some(now);
+                done_key = job.fetch_key.take();
+                if let Some(s) = job.fetch_stream.take() {
+                    self.fetch_streams.push(s);
+                }
+            }
+            // Release compute on the first chunk when pipelining, else
+            // only once the whole prefix has landed.
+            if !job.compute_released && (all_landed || pipelined) {
+                job.compute_released = true;
+                job.ready_at = Some(now);
+                self.ready_prefills.push_back(rid);
+            }
+            (all_landed, done_key, job.fetch_tokens)
+        };
+        if let Some(key) = done_key {
+            // The prefix KV is actually resident now: promote into the
+            // local GPU tier (the shared host copy stays — siblings may
+            // still host- or peer-fetch it) and release every same-key
+            // joiner that was waiting on this in-flight fetch.
+            self.promote(shared, key, entry_tokens);
+            if let Some(waiters) = self.inflight_prefix.remove(&key) {
+                for w in waiters {
+                    if let Some(job) = self.jobs.get_mut(&w.0) {
+                        job.fetch_done = Some(now);
+                        job.compute_released = true;
+                        job.ready_at = Some(now);
+                        self.ready_prefills.push_back(w);
+                    }
+                }
+            }
+        }
+        if all_landed
+            && self
+                .jobs
+                .get(&rid.0)
+                .is_some_and(|j| j.kernel_done.is_some())
+        {
+            self.finish_prefill(world, shared, rid);
+        }
+        self.pump(world, shared, peers);
+        true
+    }
+
+    /// A tagged kernel finished. Returns false for kernels this instance
+    /// did not launch (siblings' lanes, foreign consumers of the world).
+    pub fn on_kernel_done(
+        &mut self,
+        world: &mut SimWorld,
+        shared: &mut FleetShared,
+        peers: &Peers,
+        tag: u64,
+    ) -> bool {
+        match tag & TAG_KIND_MASK {
+            TAG_PREFILL => {
+                if ((tag >> TAG_INST_SHIFT) & 0xFF) as u8 != self.idx {
+                    return false;
+                }
+                let rid = RequestId(tag & TAG_RID_MASK);
+                let now = world.now();
+                let Some(job) = self.jobs.get_mut(&rid.0) else {
+                    return false; // foreign tag colliding with our namespace
+                };
+                self.prefill_busy = false;
+                job.kernel_done = Some(now);
+                if job.chunks_left == 0 {
+                    self.finish_prefill(world, shared, rid);
+                }
+                self.pump(world, shared, peers);
+                true
+            }
+            TAG_DECODE_STEP => {
+                if tag != self.decode_tag() || !self.decode_busy {
+                    return false;
+                }
+                self.decode_busy = false;
+                let now = world.now();
+                let batch = std::mem::take(&mut self.decode_inflight);
+                for id in batch {
+                    if self.sched.decode_tick(id) {
+                        if let Some(o) = self.outcomes.get_mut(&id.0) {
+                            o.finished_at = Some(now);
+                        }
+                        self.finished.push(id);
+                    }
+                }
+                self.pump(world, shared, peers);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn prefill_tag(&self, rid: RequestId) -> u64 {
+        TAG_PREFILL | ((self.idx as u64) << TAG_INST_SHIFT) | (rid.0 & TAG_RID_MASK)
+    }
+
+    fn decode_tag(&self) -> u64 {
+        TAG_DECODE_STEP | ((self.idx as u64) << TAG_INST_SHIFT)
+    }
+
+    /// Insert a prefix into the local GPU tier, demoting evicted LRU
+    /// entries to the shared host tier. Returns false when the prefix is
+    /// larger than the whole tier and was not inserted (it simply stays
+    /// host/peer-resident — for a fetch, the bytes still moved).
+    fn promote(&mut self, shared: &mut FleetShared, key: u64, tokens: u32) -> bool {
+        let out = self.gpu_tier.insert(key, tokens);
+        for (ek, et) in out.evicted {
+            shared.host.insert(ek, et);
+        }
+        out.inserted
+    }
+
+    /// Launch the next ready prefill as a kernel on the prefill stream.
+    fn start_next_prefill(&mut self, world: &mut SimWorld) {
+        let Some(rid) = self.ready_prefills.pop_front() else {
+            return;
+        };
+        let now = world.now();
+        let prompt = self
+            .sched
+            .sequence(rid)
+            .expect("ready seq")
+            .req
+            .prompt_tokens;
+        let job = self.jobs.get_mut(&rid.0).expect("ready job");
+        let prefill_s = self.compute.prefill_secs(
+            &self.model,
+            job.suffix.max(1) as u64,
+            prompt as u64,
+            self.cfg.tp,
+        );
+        job.kernel_start = Some(now);
+        job.prefill_s = prefill_s;
+        world.enqueue_kernel_tagged(
+            self.prefill_stream,
+            Time::from_secs_f64(prefill_s),
+            "prefill",
+            self.prefill_tag(rid),
+        );
+        self.prefill_busy = true;
+        self.decode_ran_last = false;
+    }
+
+    /// Launch one batched decode step for every running decode sequence.
+    fn start_decode_step(&mut self, world: &mut SimWorld) {
+        let decodes = self.sched.running_decodes();
+        if decodes.is_empty() {
+            return;
+        }
+        // Context grows as sequences generate: prompt + produced so far.
+        let max_ctx = decodes
+            .iter()
+            .filter_map(|id| self.sched.sequence(*id))
+            .map(|s| {
+                let produced = match s.phase {
+                    Phase::Decode { produced } => produced,
+                    _ => 0,
+                };
+                s.req.prompt_tokens as u64 + produced as u64
+            })
+            .max()
+            .unwrap_or(1);
+        let decode_s = self
+            .compute
+            .decode_secs(&self.model, max_ctx.max(1), self.cfg.tp);
+        world.enqueue_kernel_tagged(
+            self.decode_stream,
+            Time::from_secs_f64(decode_s),
+            "decode",
+            self.decode_tag(),
+        );
+        self.decode_busy = true;
+        self.decode_inflight = decodes;
+        self.decode_ran_last = true;
+    }
+
+    /// Both the KV fetch and the prefill kernel are done: the first token
+    /// exists *now*; record the outcome and move the sequence to decode.
+    fn finish_prefill(&mut self, world: &mut SimWorld, shared: &mut FleetShared, rid: RequestId) {
+        let now = world.now();
+        let job = self.jobs.remove(&rid.0).expect("finishing retired job");
+        let req = self.sched.sequence(rid).expect("finished seq").req.clone();
+        let fetch_s = match (job.fetch_started, job.fetch_done) {
+            (Some(a), Some(b)) => b.since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        // Queueing = arrival → admission, plus waiting for the compute
+        // lane after the fetch released this job.
+        let lane_wait = match (job.ready_at, job.kernel_start) {
+            (Some(a), Some(b)) => b.since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        let queue_s = job.sched_at.since(req.arrival).as_secs_f64() + lane_wait;
+        self.outcomes.insert(
+            rid.0,
+            RequestOutcome {
+                id: rid,
+                arrival: req.arrival,
+                ttft: TtftBreakdown {
+                    queue_s,
+                    fetch_s,
+                    prefill_s: job.prefill_s,
+                },
+                first_token_at: now,
+                finished_at: None,
+            },
+        );
+        self.inflight_prefill_tokens -= job.suffix.max(1);
+        // Cache the full prompt for future turns (a resident entry only
+        // refreshes — inserts never move or resize entries). Under
+        // prefill/decode disaggregation (the paper's LMCache setup), the
+        // prefill node's KV is offloaded to the shared host tier right
+        // away — every later hit pays the fetch.
+        if req.prefix_key != 0 {
+            if self.gpu_tier.touch(req.prefix_key) || shared.host.touch(req.prefix_key) {
+                // Already cached somewhere: refreshed in place.
+            } else if !self.promote(shared, req.prefix_key, req.prompt_tokens) {
+                // Larger than the GPU tier: cache it host-side instead.
+                shared.host.insert(req.prefix_key, req.prompt_tokens);
+            }
+            if self.cfg.pd_disaggregation {
+                if let Some(tokens) = self.gpu_tier.remove(req.prefix_key) {
+                    shared.host.insert(req.prefix_key, tokens);
+                }
+            }
+        }
+        self.sched.prefill_done(rid);
+    }
+}

@@ -1,19 +1,26 @@
 //! vLLM-like serving layer: the host system whose transfer paths MMA
-//! accelerates. Provides paged KV caching with a host offload tier and
-//! prefix reuse (LMCache-style), a sleep/wake model registry (vLLM Sleep
-//! Mode Level 1), a continuous-batching prefill/decode scheduler, and a
-//! request router — everything §5.2's end-to-end experiments exercise.
+//! accelerates. A fleet of per-GPU serving instances — each with paged KV
+//! caching, a GPU prefix tier, and a continuous-batching prefill/decode
+//! scheduler — runs under an event-driven request router on one
+//! [`crate::mma::SimWorld`] clock, over a fleet-shared pinned-host prefix
+//! tier (LMCache-style) and a sleep/wake model registry (vLLM Sleep Mode
+//! Level 1) — everything §5.2's end-to-end experiments exercise, scaled
+//! across the whole server.
 
 pub mod engine;
+pub mod fleet;
+pub mod instance;
 pub mod kv_cache;
 pub mod model_registry;
 pub mod prefix_cache;
 pub mod router;
 pub mod scheduler;
 
-pub use engine::{Compute, FixedCompute, RequestOutcome, ServingEngine};
+pub use engine::ServingEngine;
+pub use fleet::ServingFleet;
+pub use instance::{Compute, FixedCompute, RequestOutcome, ServingInstance};
 pub use kv_cache::{BlockId, KvCacheManager};
 pub use model_registry::{ModelRegistry, ModelState, PendingPhase};
-pub use prefix_cache::{PrefixCache, Tier};
-pub use router::Router;
+pub use prefix_cache::{GpuPrefixTier, HostPrefixPool};
+pub use router::{RoutePolicy, Router};
 pub use scheduler::{Request, RequestId, Scheduler};

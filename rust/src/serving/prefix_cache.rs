@@ -1,40 +1,23 @@
-//! Prefix cache with a host offload tier (LMCache-style).
+//! Prefix-cache tiers (LMCache-style), split for the fleet architecture.
 //!
-//! Prefixes are indexed by a rolling content hash over token blocks. Hot
-//! prefixes live in GPU KV blocks; evicted ones move to pinned host memory
-//! and are *fetched back* on a hit — the H2D transfer that dominates TTFT
-//! in Fig 2 and that MMA accelerates in Fig 12.
+//! Prefixes are indexed by a rolling content hash over token blocks. Each
+//! [`crate::serving::ServingInstance`] owns a [`GpuPrefixTier`] — the
+//! prefixes resident in *its* GPU's KV blocks — while the whole fleet
+//! shares one [`HostPrefixPool`]: the pinned-host offload tier every
+//! instance fetches from (the H2D transfer that dominates TTFT in Fig 2
+//! and that MMA accelerates in Fig 12). Because the host tier is shared,
+//! promoting a prefix into one instance's HBM *copies* rather than moves:
+//! siblings can still host-fetch it, or fetch it peer-to-peer over NVLink
+//! from the holder's HBM.
+//!
+//! The host tier's occupancy is enforced in bytes through
+//! [`crate::memory::HostPool`], so seeding and offloads can never exceed
+//! the configured pinned-host capacity — over-pressure drops LRU entries.
 
+use crate::memory::{HostAlloc, HostPool};
+use crate::topology::NumaId;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
-
-/// Where a cached prefix currently resides.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Tier {
-    /// Resident in GPU KV blocks (hit = zero-copy block sharing).
-    Gpu,
-    /// Offloaded to pinned host DRAM (hit = H2D fetch of the KV bytes).
-    Host,
-}
-
-#[derive(Clone, Debug)]
-struct Entry {
-    tokens: u32,
-    tier: Tier,
-    last_use: u64,
-}
-
-/// Content-addressed prefix store with two tiers and LRU demotion.
-#[derive(Debug)]
-pub struct PrefixCache {
-    block_tokens: u32,
-    gpu_capacity_tokens: u64,
-    host_capacity_tokens: u64,
-    gpu_used: u64,
-    host_used: u64,
-    entries: HashMap<u64, Entry>,
-    clock: u64,
-}
 
 /// Rolling hash of a token prefix (block-aligned chain hash, as LMCache
 /// keys chunks by content).
@@ -47,15 +30,34 @@ pub fn prefix_hash(tokens: &[u32]) -> u64 {
     h
 }
 
-impl PrefixCache {
-    /// Capacities are in tokens (block-aligned internally).
-    pub fn new(block_tokens: u32, gpu_capacity_tokens: u64, host_capacity_tokens: u64) -> Self {
-        PrefixCache {
-            block_tokens,
-            gpu_capacity_tokens,
-            host_capacity_tokens,
-            gpu_used: 0,
-            host_used: 0,
+/// Outcome of a [`GpuPrefixTier::insert`].
+#[derive(Debug, Default)]
+pub struct GpuInsert {
+    /// The new entry is resident (false: larger than the whole tier).
+    pub inserted: bool,
+    /// LRU entries demoted to make room, as `(key, tokens)` — the caller
+    /// offloads them to the shared host tier.
+    pub evicted: Vec<(u64, u32)>,
+}
+
+/// Prefixes resident in one GPU's KV blocks (per serving instance).
+/// Token-capacity LRU; a hit is zero-copy block sharing.
+#[derive(Debug)]
+pub struct GpuPrefixTier {
+    block_tokens: u32,
+    capacity_tokens: u64,
+    used: u64,
+    entries: HashMap<u64, (u32, u64)>, // key → (tokens, last_use)
+    clock: u64,
+}
+
+impl GpuPrefixTier {
+    /// Tier of `capacity_tokens` (block-aligned internally).
+    pub fn new(block_tokens: u32, capacity_tokens: u64) -> GpuPrefixTier {
+        GpuPrefixTier {
+            block_tokens: block_tokens.max(1),
+            capacity_tokens,
+            used: 0,
             entries: HashMap::new(),
             clock: 0,
         }
@@ -71,154 +73,215 @@ impl PrefixCache {
         (tokens as u64).div_ceil(self.block_tokens as u64) * self.block_tokens as u64
     }
 
-    /// Insert (or refresh) a prefix of `tokens` under `key`, initially on
-    /// GPU. May demote LRU entries to host, and drop LRU host entries.
-    pub fn insert(&mut self, key: u64, tokens: u32) {
+    /// Tokens of a resident prefix, without touching LRU state.
+    pub fn peek(&self, key: u64) -> Option<u32> {
+        self.entries.get(&key).map(|(t, _)| *t)
+    }
+
+    /// Refresh a resident prefix's LRU position; false if absent.
+    pub fn touch(&mut self, key: u64) -> bool {
         let now = self.tick();
-        let size = self.rounded(tokens);
-        if let Some(e) = self.entries.get_mut(&key) {
-            e.last_use = now;
-            return;
-        }
-        // Make room on GPU.
-        while self.gpu_used + size > self.gpu_capacity_tokens {
-            if !self.demote_lru_gpu() {
-                break;
-            }
-        }
-        if self.gpu_used + size > self.gpu_capacity_tokens {
-            // Doesn't fit on GPU at all: insert directly into host tier.
-            self.host_insert(key, tokens, now);
-            return;
-        }
-        self.gpu_used += size;
-        self.entries.insert(
-            key,
-            Entry {
-                tokens,
-                tier: Tier::Gpu,
-                last_use: now,
-            },
-        );
-    }
-
-    fn host_insert(&mut self, key: u64, tokens: u32, now: u64) {
-        let size = self.rounded(tokens);
-        while self.host_used + size > self.host_capacity_tokens {
-            if !self.drop_lru_host() {
-                return; // larger than the whole tier: skip caching
-            }
-        }
-        self.host_used += size;
-        self.entries.insert(
-            key,
-            Entry {
-                tokens,
-                tier: Tier::Host,
-                last_use: now,
-            },
-        );
-    }
-
-    fn lru_in_tier(&self, tier: Tier) -> Option<u64> {
-        self.entries
-            .iter()
-            .filter(|(_, e)| e.tier == tier)
-            .min_by_key(|(_, e)| e.last_use)
-            .map(|(k, _)| *k)
-    }
-
-    /// Demote the LRU GPU entry to host. Returns false if none.
-    fn demote_lru_gpu(&mut self) -> bool {
-        let Some(k) = self.lru_in_tier(Tier::Gpu) else {
-            return false;
-        };
-        let e = self.entries.remove(&k).unwrap();
-        let size = self.rounded(e.tokens);
-        self.gpu_used -= size;
-        self.host_insert(k, e.tokens, e.last_use);
-        true
-    }
-
-    fn drop_lru_host(&mut self) -> bool {
-        let Some(k) = self.lru_in_tier(Tier::Host) else {
-            return false;
-        };
-        let e = self.entries.remove(&k).unwrap();
-        self.host_used -= self.rounded(e.tokens);
-        true
-    }
-
-    /// Force-offload a specific prefix to host (explicit eviction path,
-    /// e.g. when the serving engine reclaims GPU KV blocks).
-    pub fn offload(&mut self, key: u64) -> bool {
-        match self.entries.get(&key) {
-            Some(e) if e.tier == Tier::Gpu => {
-                let e = self.entries.remove(&key).unwrap();
-                self.gpu_used -= self.rounded(e.tokens);
-                self.host_insert(key, e.tokens, e.last_use);
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.1 = now;
                 true
             }
-            _ => false,
+            None => false,
         }
     }
 
-    /// Non-mutating lookup: tokens and tier without the LRU refresh or
-    /// host→GPU promotion of [`Self::lookup`]. Used at admission time to
-    /// resolve the prefill suffix before committing to the fetch.
-    pub fn peek(&self, key: u64) -> Option<(u32, Tier)> {
-        self.entries.get(&key).map(|e| (e.tokens, e.tier))
-    }
-
-    /// Look up a prefix. On a hit, refreshes LRU and (for host hits)
-    /// promotes it back to the GPU tier — the caller is responsible for
-    /// issuing the actual KV fetch transfer of `tokens` worth of KV bytes.
-    pub fn lookup(&mut self, key: u64) -> Option<(u32, Tier)> {
+    /// Insert (or refresh) a prefix. Existing entries only refresh — an
+    /// insert never resizes or moves an entry. May demote LRU entries to
+    /// make room (returned for host offload); a prefix larger than the
+    /// whole tier is not inserted (`inserted == false`, nothing evicted).
+    pub fn insert(&mut self, key: u64, tokens: u32) -> GpuInsert {
         let now = self.tick();
-        let (tokens, tier) = {
-            let e = self.entries.get_mut(&key)?;
-            e.last_use = now;
-            (e.tokens, e.tier)
-        };
-        if tier == Tier::Host {
-            // Promote: host → GPU (caller performs the H2D fetch).
-            let size = self.rounded(tokens);
-            self.host_used -= size;
-            self.entries.remove(&key);
-            while self.gpu_used + size > self.gpu_capacity_tokens {
-                if !self.demote_lru_gpu() {
-                    break;
-                }
-            }
-            if self.gpu_used + size <= self.gpu_capacity_tokens {
-                self.gpu_used += size;
-                self.entries.insert(
-                    key,
-                    Entry {
-                        tokens,
-                        tier: Tier::Gpu,
-                        last_use: now,
-                    },
-                );
-            } else {
-                // Could not promote (GPU tier too small): stays on host.
-                self.host_used += size;
-                self.entries.insert(
-                    key,
-                    Entry {
-                        tokens,
-                        tier: Tier::Host,
-                        last_use: now,
-                    },
-                );
-            }
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.1 = now;
+            return GpuInsert {
+                inserted: true,
+                evicted: Vec::new(),
+            };
         }
-        Some((tokens, tier))
+        let size = self.rounded(tokens);
+        if size > self.capacity_tokens {
+            return GpuInsert::default();
+        }
+        let mut evicted = Vec::new();
+        while self.used + size > self.capacity_tokens {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, at))| *at)
+                .map(|(k, _)| *k)
+                .expect("used > 0 implies a resident entry");
+            let (t, _) = self.entries.remove(&lru).unwrap();
+            self.used -= self.rounded(t);
+            evicted.push((lru, t));
+        }
+        self.used += size;
+        self.entries.insert(key, (tokens, now));
+        GpuInsert {
+            inserted: true,
+            evicted,
+        }
     }
 
-    /// Tokens resident per tier (GPU, host).
-    pub fn usage(&self) -> (u64, u64) {
-        (self.gpu_used, self.host_used)
+    /// Remove a prefix (explicit offload); returns its tokens.
+    pub fn remove(&mut self, key: u64) -> Option<u32> {
+        let (tokens, _) = self.entries.remove(&key)?;
+        self.used -= self.rounded(tokens);
+        Some(tokens)
+    }
+
+    /// Tokens resident (block-aligned accounting).
+    pub fn used_tokens(&self) -> u64 {
+        self.used
+    }
+
+    /// Configured capacity in tokens.
+    pub fn capacity_tokens(&self) -> u64 {
+        self.capacity_tokens
+    }
+
+    /// Number of resident prefixes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[derive(Debug)]
+struct HostEntry {
+    tokens: u32,
+    alloc: HostAlloc,
+    last_use: u64,
+}
+
+/// The fleet-shared pinned-host prefix tier. Every byte is accounted
+/// through a [`HostPool`], so occupancy cannot exceed the configured
+/// capacity: inserts under pressure drop LRU entries, and an entry larger
+/// than the whole tier is skipped rather than cached.
+#[derive(Debug)]
+pub struct HostPrefixPool {
+    block_tokens: u32,
+    bytes_per_token: u64,
+    numa: NumaId,
+    pool: HostPool,
+    entries: HashMap<u64, HostEntry>,
+    clock: u64,
+}
+
+impl HostPrefixPool {
+    /// Pool of `capacity_tokens` (block-aligned) on `numa`, with bytes
+    /// accounted at `bytes_per_token` (the model's per-token KV size).
+    pub fn new(
+        block_tokens: u32,
+        capacity_tokens: u64,
+        bytes_per_token: u64,
+        numa_count: u8,
+        numa: NumaId,
+    ) -> HostPrefixPool {
+        let bpt = bytes_per_token.max(1);
+        HostPrefixPool {
+            block_tokens: block_tokens.max(1),
+            bytes_per_token: bpt,
+            numa,
+            pool: HostPool::new(numa_count.max(1), capacity_tokens.saturating_mul(bpt)),
+            entries: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn bytes_for(&self, tokens: u32) -> u64 {
+        let rounded =
+            (tokens as u64).div_ceil(self.block_tokens as u64) * self.block_tokens as u64;
+        (rounded * self.bytes_per_token).max(1)
+    }
+
+    fn drop_lru(&mut self) -> bool {
+        let Some(k) = self
+            .entries
+            .iter()
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(k, _)| *k)
+        else {
+            return false;
+        };
+        let e = self.entries.remove(&k).unwrap();
+        self.pool.free(e.alloc);
+        true
+    }
+
+    /// Insert (or refresh) a prefix. Allocates its KV bytes from the
+    /// backing [`HostPool`], dropping LRU entries under pressure; returns
+    /// false when the prefix cannot fit even in an empty tier.
+    pub fn insert(&mut self, key: u64, tokens: u32) -> bool {
+        let now = self.tick();
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = now;
+            return true;
+        }
+        let bytes = self.bytes_for(tokens);
+        loop {
+            if let Some(alloc) = self.pool.alloc(self.numa, bytes) {
+                self.entries.insert(
+                    key,
+                    HostEntry {
+                        tokens,
+                        alloc,
+                        last_use: now,
+                    },
+                );
+                return true;
+            }
+            if !self.drop_lru() {
+                return false; // larger than the whole tier: skip caching
+            }
+        }
+    }
+
+    /// Tokens of a host-resident prefix, without touching LRU state.
+    pub fn peek(&self, key: u64) -> Option<u32> {
+        self.entries.get(&key).map(|e| e.tokens)
+    }
+
+    /// Refresh a host entry's LRU position; false if absent.
+    pub fn touch(&mut self, key: u64) -> bool {
+        let now = self.tick();
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_use = now;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a prefix, freeing its bytes; returns its tokens.
+    pub fn remove(&mut self, key: u64) -> Option<u32> {
+        let e = self.entries.remove(&key)?;
+        self.pool.free(e.alloc);
+        Some(e.tokens)
+    }
+
+    /// Bytes currently pinned (from the backing [`HostPool`] accounting).
+    pub fn used_bytes(&self) -> u64 {
+        self.pool.used(self.numa)
+    }
+
+    /// Bytes still available under the configured capacity.
+    pub fn available_bytes(&self) -> u64 {
+        self.pool.available(self.numa)
     }
 
     /// Number of cached prefixes.
@@ -247,6 +310,11 @@ impl PrefixCache {
 mod tests {
     use super::*;
 
+    fn host(capacity_tokens: u64) -> HostPrefixPool {
+        // 1 byte per token keeps the arithmetic transparent in tests.
+        HostPrefixPool::new(16, capacity_tokens, 1, 1, NumaId(0))
+    }
+
     #[test]
     fn hash_is_prefix_sensitive() {
         let a = prefix_hash(&[1, 2, 3]);
@@ -257,52 +325,105 @@ mod tests {
     }
 
     #[test]
-    fn insert_then_gpu_hit() {
-        let mut pc = PrefixCache::new(16, 1 << 20, 1 << 24);
-        pc.insert(42, 1000);
-        assert_eq!(pc.lookup(42), Some((1000, Tier::Gpu)));
-        assert_eq!(pc.lookup(43), None);
+    fn gpu_tier_insert_then_hit() {
+        let mut g = GpuPrefixTier::new(16, 1 << 20);
+        assert!(g.insert(42, 1000).inserted);
+        assert_eq!(g.peek(42), Some(1000));
+        assert_eq!(g.peek(43), None);
+        assert!(g.touch(42));
+        assert!(!g.touch(43));
     }
 
     #[test]
-    fn gpu_pressure_demotes_to_host_and_hit_promotes() {
-        // GPU holds 2x1024 tokens; third insert demotes the LRU.
-        let mut pc = PrefixCache::new(16, 2048, 1 << 20);
-        pc.insert(1, 1024);
-        pc.insert(2, 1024);
-        pc.insert(3, 1024); // demotes key 1
-        assert_eq!(pc.lookup(1).unwrap().1, Tier::Host, "LRU went to host");
-        // That lookup promoted key 1 back to GPU (demoting key 2).
-        assert_eq!(pc.lookup(1).unwrap().1, Tier::Gpu);
-        assert_eq!(pc.lookup(2).unwrap().1, Tier::Host);
+    fn gpu_tier_demotes_lru_under_pressure() {
+        // 2×1024 tokens fit; the third insert evicts the LRU entry.
+        let mut g = GpuPrefixTier::new(16, 2048);
+        g.insert(1, 1024);
+        g.insert(2, 1024);
+        g.touch(1); // 2 is now LRU
+        let out = g.insert(3, 1024);
+        assert!(out.inserted);
+        assert_eq!(out.evicted, vec![(2, 1024)]);
+        assert_eq!(g.peek(2), None);
+        assert_eq!(g.peek(1), Some(1024));
     }
 
     #[test]
-    fn host_tier_drops_lru_when_full() {
-        let mut pc = PrefixCache::new(16, 1024, 2048);
-        pc.insert(1, 1024);
-        pc.insert(2, 1024); // 1 → host
-        pc.insert(3, 1024); // 2 → host
-        pc.insert(4, 1024); // 3 → host, host full → drop LRU (1)
-        assert_eq!(pc.lookup(1), None, "oldest host entry dropped");
-        assert_eq!(pc.len(), 3);
+    fn gpu_tier_oversized_entry_not_inserted() {
+        let mut g = GpuPrefixTier::new(16, 1024);
+        g.insert(1, 512);
+        let out = g.insert(2, 4096);
+        assert!(!out.inserted);
+        assert!(out.evicted.is_empty(), "no pointless evictions");
+        assert_eq!(g.peek(1), Some(512), "resident entry untouched");
     }
 
     #[test]
-    fn explicit_offload() {
-        let mut pc = PrefixCache::new(16, 1 << 20, 1 << 20);
-        pc.insert(7, 512);
-        assert!(pc.offload(7));
-        assert_eq!(pc.lookup(7).unwrap().1, Tier::Host);
-        assert!(!pc.offload(999));
+    fn gpu_tier_accounting_block_aligned() {
+        let mut g = GpuPrefixTier::new(16, 1 << 20);
+        g.insert(1, 17); // rounds to 32
+        assert_eq!(g.used_tokens(), 32);
+        assert_eq!(g.remove(1), Some(17));
+        assert_eq!(g.used_tokens(), 0);
     }
 
     #[test]
-    fn usage_accounting_block_aligned() {
-        let mut pc = PrefixCache::new(16, 1 << 20, 1 << 20);
-        pc.insert(1, 17); // rounds to 32
-        assert_eq!(pc.usage(), (32, 0));
-        pc.offload(1);
-        assert_eq!(pc.usage(), (0, 32));
+    fn gpu_tier_reinsert_refreshes_without_resizing() {
+        let mut g = GpuPrefixTier::new(16, 1 << 20);
+        g.insert(1, 1000);
+        let out = g.insert(1, 5000); // existing key: refresh only
+        assert!(out.inserted);
+        assert_eq!(g.peek(1), Some(1000), "insert never resizes an entry");
+        assert_eq!(g.used_tokens(), 1008);
+    }
+
+    #[test]
+    fn host_pool_enforces_byte_capacity() {
+        // Capacity 2048 tokens × 1 B/token: the third 1024-token prefix
+        // drops the LRU, and occupancy never exceeds the HostPool cap.
+        let mut h = host(2048);
+        assert!(h.insert(1, 1024));
+        assert!(h.insert(2, 1024));
+        assert_eq!(h.used_bytes(), 2048);
+        assert!(h.insert(3, 1024)); // drops key 1 (LRU)
+        assert_eq!(h.peek(1), None);
+        assert_eq!(h.len(), 2);
+        assert!(h.used_bytes() <= 2048, "over capacity: {}", h.used_bytes());
+    }
+
+    #[test]
+    fn host_pool_skips_oversized_entries() {
+        let mut h = host(1024);
+        assert!(h.insert(1, 512));
+        assert!(!h.insert(2, 4096), "larger than the whole tier");
+        assert_eq!(h.peek(1), Some(512), "resident entries survive");
+    }
+
+    #[test]
+    fn host_pool_remove_frees_bytes() {
+        let mut h = host(1 << 20);
+        h.insert(7, 512);
+        assert_eq!(h.used_bytes(), 512);
+        assert_eq!(h.remove(7), Some(512));
+        assert_eq!(h.used_bytes(), 0);
+        assert_eq!(h.remove(7), None);
+    }
+
+    #[test]
+    fn host_pool_refresh_keeps_one_allocation() {
+        let mut h = host(1 << 20);
+        h.insert(7, 512);
+        assert!(h.insert(7, 9999), "refresh, not re-alloc");
+        assert_eq!(h.used_bytes(), 512);
+        assert_eq!(h.peek(7), Some(512));
+    }
+
+    #[test]
+    fn populate_seeds_n_entries() {
+        let mut h = host(1 << 20);
+        let mut rng = Rng::seed_from_u64(3);
+        let keys = h.populate(&mut rng, 8, 100);
+        assert_eq!(keys.len(), 8);
+        assert_eq!(h.len(), 8);
     }
 }

@@ -1,32 +1,56 @@
-//! Request router / frontend: maps incoming requests to model instances,
-//! waking sleeping models on demand (the vLLM-router-style control plane
-//! whose switch latency Fig 13 measures).
+//! Request router / frontend: maps incoming requests to serving instances.
+//!
+//! Event-driven: the router holds no clock and never blocks. The
+//! [`crate::serving::ServingFleet`] calls [`Router::route`] when an
+//! arrival timer fires and [`Router::done`] when a completion notice
+//! retires a request, so every placement decision happens mid-simulation
+//! on the one [`crate::mma::SimWorld`] event loop. Routing to a sleeping
+//! instance does not wait for the wake: the router reports `needs_wake`
+//! and the fleet starts a non-blocking wake whose weight transfers co-run
+//! with live serving traffic (the control plane whose switch latency
+//! Fig 13 measures).
 
-use super::model_registry::{ModelRegistry, ModelState, PhaseResult};
-use crate::mma::SimWorld;
-use crate::sim::Time;
-
-/// Routing policy across replicas of the same model.
+/// Placement policy across the instances of a fleet.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Policy {
-    /// Rotate across ready instances.
+pub enum RoutePolicy {
+    /// Rotate across awake instances.
     RoundRobin,
-    /// Pick the instance with the fewest in-flight requests.
+    /// Pick the awake instance with the fewest in-flight requests.
     LeastLoaded,
 }
 
-/// Router over the instances of a [`ModelRegistry`].
+impl RoutePolicy {
+    /// Canonical name (the spelling `parse` accepts and reports print).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least-loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+}
+
+/// Router over a fleet's serving instances.
 pub struct Router {
-    policy: Policy,
+    policy: RoutePolicy,
     inflight: Vec<u32>,
     rr_next: usize,
-    /// Wake latency paid per on-demand wake, recorded for reporting.
-    pub wake_events: Vec<(usize, PhaseResult)>,
+    /// Instances that received a request while asleep (on-demand wake
+    /// triggers), in routing order.
+    pub wake_events: Vec<usize>,
 }
 
 impl Router {
-    /// Router for `instances` model slots.
-    pub fn new(policy: Policy, instances: usize) -> Router {
+    /// Router for `instances` serving slots.
+    pub fn new(policy: RoutePolicy, instances: usize) -> Router {
         Router {
             policy,
             inflight: vec![0; instances],
@@ -35,43 +59,44 @@ impl Router {
         }
     }
 
-    /// Route a request for model instance-set `candidates` (replica ids).
-    /// If every candidate is asleep, the first is woken on demand (cost
-    /// recorded and returned). Returns `(instance, wake_cost)`.
-    pub fn route(
-        &mut self,
-        world: &mut SimWorld,
-        registry: &mut ModelRegistry,
-        candidates: &[usize],
-    ) -> (usize, Option<Time>) {
-        assert!(!candidates.is_empty());
-        let ready: Vec<usize> = candidates
-            .iter()
-            .copied()
-            .filter(|&i| registry.instance(i).state == ModelState::Active)
-            .collect();
-        let (chosen, wake) = if ready.is_empty() {
-            // Cold hit: wake on demand.
-            let target = candidates[0];
-            let phase = registry.wake(world, target);
-            self.wake_events.push((target, phase));
-            (target, Some(phase.total()))
-        } else {
-            let pick = match self.policy {
-                Policy::RoundRobin => {
-                    let i = ready[self.rr_next % ready.len()];
-                    self.rr_next += 1;
-                    i
+    /// Route one request. `awake[i]` is instance `i`'s residency;
+    /// `affinity` is the instance already holding the request's prefix
+    /// GPU-resident (prefix-affinity routing), honored when awake.
+    /// If every instance is asleep the pick falls back to the placement
+    /// policy over all instances and `needs_wake` is true — the caller
+    /// starts a non-blocking wake and the request queues behind it.
+    /// Returns `(instance, needs_wake)`.
+    pub fn route(&mut self, affinity: Option<usize>, awake: &[bool]) -> (usize, bool) {
+        assert_eq!(awake.len(), self.inflight.len());
+        assert!(!awake.is_empty());
+        let chosen = match affinity.filter(|&a| awake[a]) {
+            Some(a) => a,
+            None => {
+                let ready: Vec<usize> = (0..awake.len()).filter(|&i| awake[i]).collect();
+                let pool = if ready.is_empty() {
+                    (0..awake.len()).collect()
+                } else {
+                    ready
+                };
+                match self.policy {
+                    RoutePolicy::RoundRobin => {
+                        let i = pool[self.rr_next % pool.len()];
+                        self.rr_next += 1;
+                        i
+                    }
+                    RoutePolicy::LeastLoaded => *pool
+                        .iter()
+                        .min_by_key(|&&i| (self.inflight[i], i))
+                        .unwrap(),
                 }
-                Policy::LeastLoaded => *ready
-                    .iter()
-                    .min_by_key(|&&i| self.inflight[i])
-                    .unwrap(),
-            };
-            (pick, None)
+            }
         };
+        let needs_wake = !awake[chosen];
+        if needs_wake {
+            self.wake_events.push(chosen);
+        }
         self.inflight[chosen] += 1;
-        (chosen, wake)
+        (chosen, needs_wake)
     }
 
     /// A request finished on `instance`.
@@ -89,53 +114,82 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mma::MmaConfig;
-    use crate::models::qwen3_0_6b;
-    use crate::topology::{h20x8, GpuId, NumaId};
 
-    fn setup() -> (SimWorld, ModelRegistry) {
-        let world = SimWorld::new(h20x8(), MmaConfig::default());
-        let mut reg = ModelRegistry::new(NumaId(0));
-        reg.register(qwen3_0_6b(), vec![GpuId(0)]);
-        reg.register(qwen3_0_6b(), vec![GpuId(1)]);
-        (world, reg)
+    fn all_awake(n: usize) -> Vec<bool> {
+        vec![true; n]
     }
 
     #[test]
-    fn round_robin_rotates() {
-        let (mut w, mut reg) = setup();
-        let mut r = Router::new(Policy::RoundRobin, 2);
-        let (a, _) = r.route(&mut w, &mut reg, &[0, 1]);
-        let (b, _) = r.route(&mut w, &mut reg, &[0, 1]);
-        assert_ne!(a, b);
+    fn round_robin_rotation_order() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        let awake = all_awake(3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(None, &awake).0).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2], "strict rotation");
     }
 
     #[test]
-    fn least_loaded_prefers_idle() {
-        let (mut w, mut reg) = setup();
-        let mut r = Router::new(Policy::LeastLoaded, 2);
-        let (a, _) = r.route(&mut w, &mut reg, &[0, 1]);
-        let (b, _) = r.route(&mut w, &mut reg, &[0, 1]);
-        assert_ne!(a, b, "second request must go to the idle replica");
-        r.done(a);
-        let (c, _) = r.route(&mut w, &mut reg, &[0, 1]);
-        assert_eq!(c, a);
+    fn round_robin_skips_sleeping_instances() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        let awake = vec![true, false, true];
+        let picks: Vec<usize> = (0..4).map(|_| r.route(None, &awake).0).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "rotation over awake only");
+        assert!(r.wake_events.is_empty());
     }
 
     #[test]
-    fn wake_on_demand_pays_switch_latency() {
-        let (mut w, mut reg) = setup();
-        reg.sleep(&mut w, 0);
-        reg.sleep(&mut w, 1);
-        let mut r = Router::new(Policy::RoundRobin, 2);
-        let (i, wake) = r.route(&mut w, &mut reg, &[0, 1]);
-        assert_eq!(i, 0);
-        let wake = wake.expect("must report wake cost");
-        assert!(wake > Time::ZERO);
-        assert_eq!(reg.instance(0).state, ModelState::Active);
+    fn least_loaded_prefers_idle_and_breaks_ties_low() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 3);
+        let awake = all_awake(3);
+        // Equal loads: the tie breaks toward the lowest index.
+        assert_eq!(r.route(None, &awake).0, 0);
+        assert_eq!(r.route(None, &awake).0, 1, "0 is now loaded");
+        assert_eq!(r.route(None, &awake).0, 2);
+        // 1 drains first: it becomes the unique minimum.
+        r.done(1);
+        assert_eq!(r.route(None, &awake).0, 1);
+        // All tied again at load 1 → lowest index wins the tie.
+        r.done(0);
+        r.done(1);
+        r.done(2);
+        assert_eq!(r.load(0), 0);
+        assert_eq!(r.route(None, &awake).0, 0);
+    }
+
+    #[test]
+    fn wake_events_account_sleeping_routes() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 2);
+        let asleep = vec![false, false];
+        let (i, wake) = r.route(None, &asleep);
+        assert_eq!(i, 0, "policy pick over all instances when none awake");
+        assert!(wake, "landing on a sleeping instance needs a wake");
+        assert_eq!(r.wake_events, vec![0]);
+        // A later route to an awake instance records nothing.
+        let (j, wake2) = r.route(None, &[true, false]);
+        assert_eq!(j, 0);
+        assert!(!wake2);
         assert_eq!(r.wake_events.len(), 1);
-        // Next request routes without waking.
-        let (_, wake2) = r.route(&mut w, &mut reg, &[0, 1]);
-        assert!(wake2.is_none());
+        assert_eq!(r.load(0), 2);
+    }
+
+    #[test]
+    fn prefix_affinity_overrides_rotation() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        let awake = all_awake(3);
+        assert_eq!(r.route(Some(2), &awake).0, 2, "affinity wins");
+        assert_eq!(r.route(Some(2), &awake).0, 2, "and keeps winning");
+        // A sleeping affinity target falls back to the policy.
+        let (i, wake) = r.route(Some(1), &[true, false, true]);
+        assert_ne!(i, 1);
+        assert!(!wake);
+    }
+
+    #[test]
+    fn route_policy_parse_roundtrips() {
+        for p in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("ll"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("nope"), None);
     }
 }

@@ -160,6 +160,8 @@ pub struct Topology {
     pub links: Vec<LinkSpec>,
     /// Platform latency constants.
     pub lat: LatencySpec,
+    /// HBM capacity per GPU in bytes (what weights + KV pools carve from).
+    pub hbm_bytes: u64,
     index: HashMap<LinkKind, LinkId>,
 }
 
@@ -172,6 +174,7 @@ impl Topology {
         gpus: Vec<GpuSpec>,
         links: Vec<LinkSpec>,
         lat: LatencySpec,
+        hbm_bytes: u64,
     ) -> Topology {
         let mut index = HashMap::new();
         for (i, l) in links.iter().enumerate() {
@@ -185,6 +188,7 @@ impl Topology {
             gpus,
             links,
             lat,
+            hbm_bytes,
             index,
         }
     }

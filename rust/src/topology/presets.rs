@@ -48,6 +48,7 @@ struct Caps {
     xgmi_lane: f64,
     hbm: f64,
     relay_d2h: f64,
+    hbm_bytes: u64,
 }
 
 fn build(
@@ -116,7 +117,15 @@ fn build(
             }
         }
     }
-    Topology::new(name, numa_count, switch_count, gpus, links, lat)
+    Topology::new(
+        name,
+        numa_count,
+        switch_count,
+        gpus,
+        links,
+        lat,
+        caps.hbm_bytes,
+    )
 }
 
 fn default_lat() -> LatencySpec {
@@ -160,6 +169,7 @@ pub fn h20x8() -> Topology {
             xgmi_lane: gb(28.0),
             hbm: gb(400.0),
             relay_d2h: gb(38.0),
+            hbm_bytes: 96_000_000_000, // H20: 96 GB HBM3 per GPU
         },
         default_lat(),
     )
@@ -183,6 +193,7 @@ pub fn a100x8() -> Topology {
             xgmi_lane: gb(22.0),
             hbm: gb(360.0),
             relay_d2h: gb(18.0),
+            hbm_bytes: 80_000_000_000, // A100 80 GB
         },
         default_lat(),
     )
@@ -206,6 +217,7 @@ pub fn single_numa_4gpu() -> Topology {
             xgmi_lane: gb(28.0),
             hbm: gb(400.0),
             relay_d2h: gb(38.0),
+            hbm_bytes: 96_000_000_000,
         },
         default_lat(),
     )
