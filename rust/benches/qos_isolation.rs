@@ -1,0 +1,17 @@
+//! TTFT under a co-running bulk model wake, QoS transfer classes off vs
+//! on (weighted max-min fabric + class-aware engine issue order).
+//!
+//! `--fast` (or `MMA_FAST_BENCH=1`) shrinks the run for smoke checks;
+//! `--seed N` pins the arrival jitter.
+
+use mma::figures::{qos_isolation, DEFAULT_SEED};
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let seed = args.seed_or(DEFAULT_SEED);
+    println!("=== QoS isolation: serving TTFT vs a co-running model wake ===");
+    let t = qos_isolation(fast, seed);
+    t.print();
+}

@@ -8,7 +8,7 @@ mod toml_lite;
 
 pub use toml_lite::{parse as parse_toml, TomlValue};
 
-use crate::mma::MmaConfig;
+use crate::mma::{MmaConfig, TransferClass};
 use crate::policy::PolicySpec;
 use crate::serving::router::RoutePolicy;
 use crate::topology::{GpuId, Preset, Topology};
@@ -128,6 +128,7 @@ impl RunConfig {
                 "" | "run" => apply_run(&mut cfg, table)?,
                 "mma" => apply_mma(&mut cfg.mma, table)?,
                 "policy" => apply_policy(&mut cfg.mma, table)?,
+                "qos" => apply_qos(&mut cfg.mma, table)?,
                 "serving" => apply_serving(&mut cfg.serving, table)?,
                 "fleet" => apply_fleet(&mut cfg.fleet, table)?,
                 other => return Err(format!("unknown section [{other}]")),
@@ -141,6 +142,7 @@ impl RunConfig {
             .policy
             .validate(gpu_count)
             .map_err(|e| format!("[policy] {e}"))?;
+        cfg.mma.qos.validate().map_err(|e| format!("[qos] {e}"))?;
         if cfg.fleet.gpus as usize > gpu_count {
             return Err(format!(
                 "[fleet] gpus = {} exceeds the preset's {gpu_count} GPUs",
@@ -153,7 +155,8 @@ impl RunConfig {
     /// Apply the paper's environment-variable overrides
     /// (`MMA_CHUNK_SIZE`, `MMA_RELAY_GPUS`, `MMA_THRESHOLD`,
     /// `MMA_FLOW_CONTROL`, `MMA_DISABLE`), plus `MMA_POLICY` naming a
-    /// transfer policy (see [`PolicySpec::parse`]).
+    /// transfer policy (see [`PolicySpec::parse`]) and `MMA_QOS`
+    /// (`on`/`off`) toggling the QoS transfer classes.
     pub fn apply_env(&mut self) {
         let get = |k: &str| std::env::var(k).ok();
         if let Some(v) = get("MMA_CHUNK_SIZE") {
@@ -180,6 +183,15 @@ impl RunConfig {
         if let Some(v) = get("MMA_POLICY") {
             if let Some(spec) = PolicySpec::parse(&v) {
                 self.mma.set_policy(spec);
+            }
+        }
+        if let Some(v) = get("MMA_QOS") {
+            // Same stance as MMA_POLICY: an unparseable value changes
+            // nothing rather than silently disabling QoS.
+            match v.to_ascii_lowercase().as_str() {
+                "on" | "1" | "true" | "yes" => self.mma.qos.enabled = true,
+                "off" | "0" | "false" | "no" => self.mma.qos.enabled = false,
+                _ => {}
             }
         }
         if get("MMA_DISABLE").is_some() {
@@ -359,6 +371,57 @@ fn apply_policy(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Resul
         }
     }
     m.set_policy(spec);
+    Ok(())
+}
+
+/// `[qos]` section: QoS transfer-class weights and the bulk throttle.
+///
+/// ```text
+/// [qos]
+/// enabled = true            # off = degenerate unweighted/FIFO behavior
+/// latency_critical = 8.0    # per-class share weights (> 0)
+/// interactive = 4.0
+/// bulk = 1.0
+/// background = 0.5
+/// bulk_cap_gbps = 0.0       # per-flow rate cap on bulk-band DMA
+///                           # (0 = uncapped)
+/// ```
+fn apply_qos(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    let float = |v: &TomlValue| match v {
+        TomlValue::Float(f) => Some(*f),
+        TomlValue::Int(i) => Some(*i as f64),
+        _ => None,
+    };
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("enabled", TomlValue::Bool(b)) => m.qos.enabled = *b,
+            ("enabled", _) => return bad(k, "bool"),
+            ("latency_critical", v) => {
+                let w = float(v).ok_or("latency_critical: number")?;
+                m.qos.weights[TransferClass::LatencyCritical as usize] = w;
+            }
+            ("interactive", v) => {
+                let w = float(v).ok_or("interactive: number")?;
+                m.qos.weights[TransferClass::Interactive as usize] = w;
+            }
+            ("bulk", v) => {
+                let w = float(v).ok_or("bulk: number")?;
+                m.qos.weights[TransferClass::Bulk as usize] = w;
+            }
+            ("background", v) => {
+                let w = float(v).ok_or("background: number")?;
+                m.qos.weights[TransferClass::Background as usize] = w;
+            }
+            ("bulk_cap_gbps", v) => {
+                let g = float(v).ok_or("bulk_cap_gbps: number")?;
+                if g < 0.0 || !g.is_finite() {
+                    return Err(format!("bulk_cap_gbps {g} must be >= 0"));
+                }
+                m.qos.bulk_cap_bps = if g == 0.0 { f64::INFINITY } else { g * 1e9 };
+            }
+            _ => return Err(format!("unknown or mistyped key {k:?} in [qos]")),
+        }
+    }
     Ok(())
 }
 
@@ -607,6 +670,63 @@ mod tests {
             "[policy]\nname = \"static-split\"\nsplit_gpus = [0, 1]"
         )
         .is_err());
+    }
+
+    #[test]
+    fn qos_section_parses_weights_and_cap() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [qos]
+            enabled = true
+            latency_critical = 10
+            interactive = 5.0
+            bulk = 2
+            background = 1
+            bulk_cap_gbps = 20.0
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.mma.qos.enabled);
+        assert_eq!(cfg.mma.qos.weights, [10.0, 5.0, 2.0, 1.0]);
+        assert_eq!(cfg.mma.qos.bulk_cap_bps, 20e9);
+        // Defaults: disabled, standard weights, uncapped.
+        let d = RunConfig::default().mma.qos;
+        assert!(!d.enabled);
+        assert_eq!(d.weights, crate::mma::DEFAULT_QOS_WEIGHTS);
+        assert!(d.bulk_cap_bps.is_infinite());
+        // bulk_cap_gbps = 0 means uncapped.
+        let cfg = RunConfig::from_toml("[qos]\nenabled = true\nbulk_cap_gbps = 0").unwrap();
+        assert!(cfg.mma.qos.bulk_cap_bps.is_infinite());
+    }
+
+    #[test]
+    fn qos_section_rejects_bad_values() {
+        assert!(RunConfig::from_toml("[qos]\nlatency_critical = 0").is_err());
+        assert!(RunConfig::from_toml("[qos]\nbulk = -1.0").is_err());
+        assert!(RunConfig::from_toml("[qos]\nbulk_cap_gbps = -5").is_err());
+        assert!(RunConfig::from_toml("[qos]\nnope = 1").is_err());
+        assert!(RunConfig::from_toml("[qos]\nenabled = 3").is_err());
+    }
+
+    #[test]
+    fn qos_weight_helpers_degenerate_when_disabled() {
+        use crate::mma::QosConfig;
+        let off = QosConfig::off();
+        let on = QosConfig::on();
+        for c in TransferClass::ALL {
+            assert_eq!(off.weight(c), 1.0, "disabled → unweighted");
+            assert!(off.cap(c).is_infinite());
+            assert!(on.weight(c) > 0.0);
+        }
+        assert!(on.weight(TransferClass::LatencyCritical) > on.weight(TransferClass::Bulk));
+        // Caps apply to the bulk band only.
+        let capped = QosConfig {
+            bulk_cap_bps: 5e9,
+            ..QosConfig::on()
+        };
+        assert_eq!(capped.cap(TransferClass::Bulk), 5e9);
+        assert_eq!(capped.cap(TransferClass::Background), 5e9);
+        assert!(capped.cap(TransferClass::LatencyCritical).is_infinite());
     }
 
     #[test]

@@ -1,52 +1,105 @@
-//! Max-min fair rate allocation (progressive filling / water-filling).
+//! Max-min fair rate allocation (progressive filling / water-filling),
+//! generalized to *weighted* max-min with optional per-flow rate caps.
 //!
 //! Given link capacities and one path (set of link indices) per flow,
-//! compute the unique max-min fair rate vector: repeatedly find the most
-//! constrained link (minimum fair share `cap/active`), freeze its flows at
-//! that share, subtract, and continue.
+//! compute the unique weighted max-min fair rate vector: repeatedly find
+//! the most constrained link (minimum fair share per unit weight,
+//! `cap/weight_sum`), freeze its flows at `weight * share`, subtract, and
+//! continue. A flow whose rate cap binds before the link share is frozen
+//! at its cap instead (QoS bulk throttling). With all weights equal and no
+//! caps this degenerates to classic unweighted max-min — bit-identical to
+//! the historical allocator, which is what keeps every pre-QoS figure and
+//! bench reproducible.
 
 use crate::topology::LinkId;
 
-/// Compute max-min fair rates. `capacity[l]` is bytes/sec of link `l`;
-/// `paths[f]` lists the links flow `f` traverses (duplicates allowed but
-/// wasteful). Returns one rate per flow. O(L·F) per bottleneck round,
-/// O(L·F·min(L,F)) worst case — tiny for the fleet sizes simulated here.
+/// Compute unweighted max-min fair rates: the degenerate case of
+/// [`max_min_rates_weighted`] with every weight 1 and no caps.
 pub fn max_min_rates(capacity: &[f64], paths: &[&[LinkId]]) -> Vec<f64> {
+    let ones = vec![1.0; paths.len()];
+    let caps = vec![f64::INFINITY; paths.len()];
+    max_min_rates_weighted(capacity, paths, &ones, &caps)
+}
+
+/// Compute weighted max-min fair rates. `capacity[l]` is bytes/sec of link
+/// `l`; `paths[f]` lists the links flow `f` traverses (duplicates allowed
+/// but wasteful); `weights[f]` is flow `f`'s share weight (> 0) and
+/// `caps[f]` an absolute rate ceiling (`f64::INFINITY` = uncapped).
+/// Returns one rate per flow. O(L·F) per bottleneck round,
+/// O(L·F·min(L,F)) worst case — tiny for the fleet sizes simulated here.
+pub fn max_min_rates_weighted(
+    capacity: &[f64],
+    paths: &[&[LinkId]],
+    weights: &[f64],
+    caps: &[f64],
+) -> Vec<f64> {
     let nf = paths.len();
+    assert_eq!(weights.len(), nf, "one weight per flow");
+    assert_eq!(caps.len(), nf, "one rate cap per flow");
     if nf == 0 {
         return Vec::new();
     }
+    debug_assert!(weights.iter().all(|w| *w > 0.0 && w.is_finite()));
+    debug_assert!(caps.iter().all(|c| *c > 0.0));
     let nl = capacity.len();
     let mut cap: Vec<f64> = capacity.to_vec();
+    // Exact integer count of unassigned flows per link alongside the
+    // float weight sum: the count decides whether a link is still a
+    // bottleneck candidate, so float residue in `wsum` (non-dyadic
+    // weights) can never keep a fully-drained link in play and stall the
+    // filling loop.
     let mut active: Vec<u32> = vec![0; nl];
+    let mut wsum: Vec<f64> = vec![0.0; nl];
     // Only consider links actually used: iterate a dense used-link list
     // instead of every link in the topology (~4x fewer candidates per
     // bottleneck round at fleet scale — see EXPERIMENTS.md §Perf).
     let mut used: Vec<u32> = Vec::with_capacity(nf * 4);
-    for p in paths {
+    for (f, p) in paths.iter().enumerate() {
         for &l in *p {
             if active[l.0 as usize] == 0 {
                 used.push(l.0 as u32);
             }
             active[l.0 as usize] += 1;
+            wsum[l.0 as usize] += weights[f];
         }
     }
     let mut rate = vec![f64::INFINITY; nf];
     let mut unassigned = nf;
 
     while unassigned > 0 {
-        // Bottleneck link: min cap/active over links with active flows.
+        // Bottleneck link: min cap per unit weight over links still
+        // carrying unassigned flows.
         let mut best_link = usize::MAX;
         let mut best_share = f64::INFINITY;
         for &lu in &used {
             let l = lu as usize;
             if active[l] > 0 {
-                let share = cap[l].max(0.0) / active[l] as f64;
+                let share = cap[l].max(0.0) / wsum[l].max(1e-300);
                 if share < best_share {
                     best_share = share;
                     best_link = l;
                 }
             }
+        }
+        // Rate caps that bind before the link share: freeze those flows at
+        // their cap and redistribute the freed bandwidth next round.
+        let mut any_capped = false;
+        for (f, p) in paths.iter().enumerate() {
+            if rate[f].is_finite() || caps[f] >= best_share * weights[f] {
+                continue;
+            }
+            rate[f] = caps[f];
+            unassigned -= 1;
+            any_capped = true;
+            for &l in *p {
+                let li = l.0 as usize;
+                cap[li] -= caps[f];
+                active[li] -= 1;
+                wsum[li] -= weights[f];
+            }
+        }
+        if any_capped {
+            continue;
         }
         if best_link == usize::MAX {
             // No constrained links left (shouldn't happen with finite caps).
@@ -63,12 +116,14 @@ pub fn max_min_rates(capacity: &[f64], paths: &[&[LinkId]]) -> Vec<f64> {
                 continue;
             }
             if p.iter().any(|&l| l.0 as usize == best_link) {
-                rate[f] = best_share;
+                let r = best_share * weights[f];
+                rate[f] = r;
                 unassigned -= 1;
                 for &l in *p {
                     let li = l.0 as usize;
-                    cap[li] -= best_share;
+                    cap[li] -= r;
                     active[li] -= 1;
+                    wsum[li] -= weights[f];
                 }
             }
         }
@@ -277,6 +332,139 @@ mod tests {
                     "flow {f} (rate {}) has no saturated link it dominates",
                     rates[f]
                 );
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_split_is_weight_proportional_on_shared_bottleneck() {
+        // One link of 90 shared by weights 8:1 → 80 and 10.
+        let caps = [90.0];
+        let p: &[LinkId] = &[l(0)];
+        let w = [8.0, 1.0];
+        let rc = [f64::INFINITY; 2];
+        let r = max_min_rates_weighted(&caps, &[p, p], &w, &rc);
+        assert!((r[0] - 80.0).abs() < 1e-9, "{r:?}");
+        assert!((r[1] - 10.0).abs() < 1e-9, "{r:?}");
+        // Three-way 2:1:1 on the same link.
+        let w = [2.0, 1.0, 1.0];
+        let rc = [f64::INFINITY; 3];
+        let r = max_min_rates_weighted(&caps, &[p, p, p], &w, &rc);
+        assert!((r[0] - 45.0).abs() < 1e-9, "{r:?}");
+        assert!((r[1] - 22.5).abs() < 1e-9, "{r:?}");
+        assert!((r[2] - 22.5).abs() < 1e-9, "{r:?}");
+    }
+
+    #[test]
+    fn weighted_flow_still_bounded_by_private_bottleneck() {
+        // High weight cannot push a flow past its own narrow link: f1 (w=8)
+        // is clamped to link1's 4; f0 (w=1) then takes the rest of link0.
+        let caps = [10.0, 4.0];
+        let p0: &[LinkId] = &[l(0)];
+        let p1: &[LinkId] = &[l(0), l(1)];
+        let w = [1.0, 8.0];
+        let rc = [f64::INFINITY; 2];
+        let r = max_min_rates_weighted(&caps, &[p0, p1], &w, &rc);
+        assert!((r[1] - 4.0).abs() < 1e-9, "{r:?}");
+        assert!((r[0] - 6.0).abs() < 1e-9, "{r:?}");
+    }
+
+    #[test]
+    fn rate_cap_binds_before_fair_share() {
+        // Equal weights on a 100-link, but f0 is capped at 10: it freezes
+        // at the cap and f1 absorbs the remainder.
+        let caps = [100.0];
+        let p: &[LinkId] = &[l(0)];
+        let w = [1.0, 1.0];
+        let rc = [10.0, f64::INFINITY];
+        let r = max_min_rates_weighted(&caps, &[p, p], &w, &rc);
+        assert!((r[0] - 10.0).abs() < 1e-9, "{r:?}");
+        assert!((r[1] - 90.0).abs() < 1e-9, "{r:?}");
+        // A cap above the fair share changes nothing.
+        let rc = [60.0, f64::INFINITY];
+        let r = max_min_rates_weighted(&caps, &[p, p], &w, &rc);
+        assert_eq!(r, vec![50.0, 50.0]);
+    }
+
+    #[test]
+    fn property_equal_weights_match_unweighted_exactly() {
+        // The acceptance gate of the QoS refactor: with all weights equal
+        // and no caps, the weighted allocator IS the old unweighted one —
+        // bit-identical rates on random instances.
+        testkit::check("maxmin-equal-weights-degenerate", |rng| {
+            let nl = rng.range_usize(1, 10);
+            let nf = rng.range_usize(1, 20);
+            let caps: Vec<f64> = (0..nl).map(|_| rng.range_f64(1.0, 500.0)).collect();
+            let paths: Vec<Vec<LinkId>> = (0..nf)
+                .map(|_| {
+                    let len = rng.range_usize(1, (nl + 1).min(4));
+                    let mut links: Vec<u16> = (0..nl as u16).collect();
+                    rng.shuffle(&mut links);
+                    links.truncate(len);
+                    links.into_iter().map(LinkId).collect()
+                })
+                .collect();
+            let refs: Vec<&[LinkId]> = paths.iter().map(|p| p.as_slice()).collect();
+            let unweighted = max_min_rates(&caps, &refs);
+            let w = vec![3.0; nf]; // equal but ≠ 1: only ratios matter
+            let rc = vec![f64::INFINITY; nf];
+            let weighted = max_min_rates_weighted(&caps, &refs, &w, &rc);
+            for (a, b) in unweighted.iter().zip(&weighted) {
+                assert!(
+                    (a - b).abs() <= a.abs() * 1e-9 + 1e-9,
+                    "equal-weight allocation diverged: {unweighted:?} vs {weighted:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn property_weighted_conservation_and_feasibility() {
+        // Weighted allocations conserve bytes: no link oversubscribed, no
+        // flow past its cap, and every flow hits a saturated link or its
+        // own rate cap (the weighted max-min optimality witness).
+        testkit::check("maxmin-weighted-conservation", |rng| {
+            let nl = rng.range_usize(1, 10);
+            let nf = rng.range_usize(1, 20);
+            let caps: Vec<f64> = (0..nl).map(|_| rng.range_f64(1.0, 500.0)).collect();
+            let paths: Vec<Vec<LinkId>> = (0..nf)
+                .map(|_| {
+                    let len = rng.range_usize(1, (nl + 1).min(4));
+                    let mut links: Vec<u16> = (0..nl as u16).collect();
+                    rng.shuffle(&mut links);
+                    links.truncate(len);
+                    links.into_iter().map(LinkId).collect()
+                })
+                .collect();
+            let refs: Vec<&[LinkId]> = paths.iter().map(|p| p.as_slice()).collect();
+            let w: Vec<f64> = (0..nf).map(|_| rng.range_f64(0.5, 8.0)).collect();
+            let rc: Vec<f64> = (0..nf)
+                .map(|_| {
+                    if rng.bool(0.3) {
+                        rng.range_f64(1.0, 100.0)
+                    } else {
+                        f64::INFINITY
+                    }
+                })
+                .collect();
+            let rates = max_min_rates_weighted(&caps, &refs, &w, &rc);
+            for li in 0..nl {
+                let load = link_load(&paths, &rates, li);
+                assert!(
+                    load <= caps[li] * (1.0 + 1e-9) + 1e-9,
+                    "link {li} overloaded: {load} > {}",
+                    caps[li]
+                );
+            }
+            for (f, r) in rates.iter().enumerate() {
+                assert!(*r > 0.0, "starved flow with positive caps");
+                assert!(*r <= rc[f] * (1.0 + 1e-9), "flow {f} beyond cap");
+                let capped = rc[f].is_finite() && *r >= rc[f] * (1.0 - 1e-9);
+                let has_tight = paths[f].iter().any(|&x| {
+                    let li = x.0 as usize;
+                    link_load(&paths, &rates, li) >= caps[li] * (1.0 - 1e-9) - 1e-9
+                });
+                assert!(capped || has_tight, "flow {f} ({r}) neither capped nor tight");
             }
         });
     }

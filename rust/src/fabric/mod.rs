@@ -14,7 +14,7 @@
 
 mod maxmin;
 
-pub use maxmin::max_min_rates;
+pub use maxmin::{max_min_rates, max_min_rates_weighted};
 
 use crate::sim::Time;
 use crate::topology::{LinkId, Topology};
@@ -43,6 +43,11 @@ struct Flow {
     remaining: f64, // bytes
     total: u64,     // original payload size
     rate: f64,      // bytes/sec, valid while Active
+    /// QoS share weight: rate allocation is weighted max-min (1.0 = the
+    /// classic unweighted share).
+    weight: f64,
+    /// Absolute rate ceiling (QoS bulk throttle); `INFINITY` = uncapped.
+    cap: f64,
     phase: Phase,
     tag: FlowTag,
     started: Time,
@@ -101,8 +106,9 @@ impl Fabric {
     }
 
     /// Start a flow of `bytes` over `path` with a setup `latency` before it
-    /// occupies any bandwidth. Returns its id. Call `poll(now)` afterwards
-    /// (mutations are lazy).
+    /// occupies any bandwidth, at the default QoS parameters (weight 1,
+    /// uncapped). Returns its id. Call `poll(now)` afterwards (mutations
+    /// are lazy).
     pub fn start_flow(
         &mut self,
         now: Time,
@@ -111,13 +117,36 @@ impl Fabric {
         latency: Time,
         tag: FlowTag,
     ) -> FlowId {
+        self.start_flow_qos(now, path, bytes, latency, tag, 1.0, f64::INFINITY)
+    }
+
+    /// Start a flow carrying explicit QoS parameters: `weight` is its
+    /// weighted max-min share weight (> 0), `cap` an absolute rate ceiling
+    /// in bytes/sec (`f64::INFINITY` = uncapped). With every live flow at
+    /// weight 1 / uncapped, allocation is identical to classic unweighted
+    /// max-min.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_flow_qos(
+        &mut self,
+        now: Time,
+        path: &[LinkId],
+        bytes: u64,
+        latency: Time,
+        tag: FlowTag,
+        weight: f64,
+        cap: f64,
+    ) -> FlowId {
         debug_assert!(!path.is_empty());
+        debug_assert!(weight > 0.0 && weight.is_finite(), "flow weight {weight}");
+        debug_assert!(cap > 0.0, "flow cap {cap}");
         self.advance_to(now);
         let flow = Flow {
             path: path.to_vec(),
             remaining: bytes.max(1) as f64,
             total: bytes.max(1),
             rate: 0.0,
+            weight,
+            cap,
             phase: Phase::Pending {
                 active_at: now + latency,
             },
@@ -323,7 +352,15 @@ impl Fabric {
             .iter()
             .map(|&i| self.flows[i as usize].path.as_slice())
             .collect();
-        let rates = max_min_rates(&self.capacity, &paths);
+        let weights: Vec<f64> = actives
+            .iter()
+            .map(|&i| self.flows[i as usize].weight)
+            .collect();
+        let caps: Vec<f64> = actives
+            .iter()
+            .map(|&i| self.flows[i as usize].cap)
+            .collect();
+        let rates = max_min_rates_weighted(&self.capacity, &paths, &weights, &caps);
         for (k, &i) in actives.iter().enumerate() {
             self.flows[i as usize].rate = rates[k];
         }
@@ -489,6 +526,57 @@ mod tests {
         let done = run_to_completion(&mut f, Time::ZERO);
         let bw = b as f64 / done[&1].as_secs_f64() / 1e9;
         assert!((bw - 368.0).abs() < 2.0, "p2p alone bw {bw}");
+    }
+
+    #[test]
+    fn weighted_flows_split_a_shared_lane_by_weight() {
+        // The QoS regression anchor: a Bulk wake (weight 1) co-running with
+        // a LatencyCritical fetch (weight 8) on one PCIe lane leaves the
+        // fetch ≥ its 8/9 weighted share while both are live.
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let cap = t.pcie_capacity(GpuId(0), Direction::H2D);
+        f.start_flow_qos(Time::ZERO, &path, 1 << 30, Time::ZERO, 1, 8.0, f64::INFINITY);
+        f.start_flow_qos(Time::ZERO, &path, 1 << 30, Time::ZERO, 2, 1.0, f64::INFINITY);
+        f.poll(Time::ZERO);
+        let crit = f.flow_rate(FlowId(0));
+        let bulk = f.flow_rate(FlowId(1));
+        assert!((crit - cap * 8.0 / 9.0).abs() < 1.0, "critical {crit}");
+        assert!((bulk - cap / 9.0).abs() < 1.0, "bulk {bulk}");
+        // Weighting redistributes, never destroys, bandwidth.
+        assert!((crit + bulk - cap).abs() < 1.0);
+    }
+
+    #[test]
+    fn capped_flow_leaves_headroom_even_alone() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let cap_bps = 10e9;
+        f.start_flow_qos(Time::ZERO, &path, 1 << 30, Time::ZERO, 1, 1.0, cap_bps);
+        f.poll(Time::ZERO);
+        let r = f.flow_rate(FlowId(0));
+        assert!((r - cap_bps).abs() < 1.0, "capped solo rate {r}");
+        let done = run_to_completion(&mut f, Time::ZERO);
+        let want = (1u64 << 30) as f64 / cap_bps;
+        let got = done[&1].as_secs_f64();
+        assert!((got - want).abs() / want < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn unit_weight_flows_match_legacy_fair_sharing() {
+        // start_flow (no QoS parameters) must behave exactly as before the
+        // weighted refactor: equal split on a shared lane.
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let cap = t.pcie_capacity(GpuId(0), Direction::H2D);
+        f.start_flow(Time::ZERO, &path, 1 << 30, Time::ZERO, 1);
+        f.start_flow_qos(Time::ZERO, &path, 1 << 30, Time::ZERO, 2, 1.0, f64::INFINITY);
+        f.poll(Time::ZERO);
+        assert!((f.flow_rate(FlowId(0)) - cap / 2.0).abs() < 1.0);
+        assert!((f.flow_rate(FlowId(1)) - cap / 2.0).abs() < 1.0);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Microbenchmark figures: Fig 7/8/14/15/16 and Table 2 (§5.1.1, §5.3, §6).
 
-use crate::mma::{MmaConfig, SimWorld, TransferDesc};
+use crate::mma::{MmaConfig, SimWorld, TransferClass, TransferDesc};
 
 use crate::topology::{h20x8, Direction, GpuId, NumaId};
 use crate::util::table::Table;
@@ -219,7 +219,7 @@ pub fn table2_direct_priority() -> Table {
         let mut w = SimWorld::new(h20x8(), cfg);
         // The probe: repeated 256 MB P2P copies gpu6 → gpu7.
         let p2p_path = w.topo.p2p(GpuId(6), GpuId(7));
-        let probe = w.start_bg_loop(p2p_path, 256 << 20, 24, 3);
+        let probe = w.start_bg_loop(p2p_path, 256 << 20, 24, TransferClass::Background);
         if with_transfers.is_some() {
             for g in 0..8u8 {
                 let s = w.stream(GpuId(g));

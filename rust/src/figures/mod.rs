@@ -5,6 +5,7 @@
 pub mod fleet_scaling;
 pub mod micro;
 pub mod policy_sweep;
+pub mod qos_isolation;
 pub mod robust;
 pub mod serve_concurrency;
 pub mod serving_figs;
@@ -15,6 +16,7 @@ pub use micro::{
     table2_direct_priority,
 };
 pub use policy_sweep::policy_sweep;
+pub use qos_isolation::qos_isolation;
 pub use robust::{fig10_static_split, fig11_cpu_overhead, fig9_coexistence};
 pub use serve_concurrency::serve_concurrency;
 pub use serving_figs::{fig12_ttft, fig13_switching, fig2_ttft_share, fig3_swap_share};
@@ -59,17 +61,19 @@ pub fn run_by_name(id: &str, fast: bool, seed: u64) -> Option<String> {
         "policy" | "policy_sweep" => policy_sweep(fast).render(),
         "concurrency" | "serve_concurrency" => serve_concurrency(fast, seed).render(),
         "fleet" | "fleet_scaling" => fleet_scaling(fast, seed).render(),
+        "qos" | "qos_isolation" => qos_isolation(fast, seed).render(),
         _ => return None,
     };
     Some(s)
 }
 
 /// All figure ids, in paper order (the policy sweep, the serving
-/// concurrency sweep, and the fleet-scaling sweep are this repo's own).
+/// concurrency sweep, the fleet-scaling sweep, and the QoS-isolation
+/// co-run are this repo's own).
 pub fn all_ids() -> &'static [&'static str] {
     &[
         "table1", "2", "3", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "table2",
-        "policy", "concurrency", "fleet",
+        "policy", "concurrency", "fleet", "qos",
     ]
 }
 

@@ -1,0 +1,193 @@
+//! QoS isolation: TTFT under a co-running bulk model wake, with the QoS
+//! transfer classes off vs on — this repo's own figure for the
+//! whole-stack class refactor.
+//!
+//! The scenario generalizes the Fig 9(c) / fleet wake co-run: a serving
+//! instance on gpu0 answers a stream of host-tier prefix hits (each fetch
+//! `LatencyCritical`) while a 32B model parked host-side wakes onto gpu4
+//! (`Bulk`, the registry default). Under the multipath engine the wake's
+//! relay traffic crosses every PCIe lane and the shared DRAM port, so
+//! with QoS off it tramples the fetches. With QoS on, the fetches hold
+//! their weighted share of every shared link, issue first in the engine's
+//! class-aware queues, and bulk backs off to one outstanding slot —
+//! TTFT under the wake approaches the no-wake baseline while the wake
+//! itself only degrades modestly.
+
+use crate::config::ServingConfig;
+use crate::mma::{MmaConfig, SimWorld};
+use crate::models::{qwen3_32b, qwen_7b_chat};
+use crate::serving::{FixedCompute, ModelRegistry, Request, RequestId, ServingEngine};
+use crate::sim::Time;
+use crate::topology::{h20x8, GpuId, NumaId};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// One co-run's aggregate result.
+#[derive(Clone, Copy, Debug)]
+pub struct QosRun {
+    /// Mean TTFT over all requests, seconds.
+    pub mean_ttft: f64,
+    /// Worst TTFT, seconds.
+    pub worst_ttft: f64,
+    /// Wake transfer time, seconds (0 when no wake co-runs).
+    pub wake_s: f64,
+}
+
+/// Serving knobs for the co-run: pools and batch budget wide enough that
+/// admission, not capacity, governs concurrency (same stance as the other
+/// serving sweeps).
+fn serving_cfg() -> ServingConfig {
+    ServingConfig {
+        gpu_kv_blocks: 1 << 20,
+        host_kv_blocks: 1 << 22,
+        max_batch_tokens: 512 * 1024,
+        pd_disaggregation: false,
+        ..Default::default()
+    }
+}
+
+/// Run `n` host-tier prefix hits of `ctx` tokens against a gpu0 serving
+/// instance, optionally co-running a 32B wake onto gpu4, with QoS on or
+/// off. `seed` jitters the arrival spacing so the sweep is not a single
+/// phase-locked alignment.
+pub fn qos_corun(ctx: u32, with_wake: bool, qos_on: bool, n: usize, seed: u64) -> QosRun {
+    let mut mcfg = MmaConfig::default();
+    mcfg.qos.enabled = qos_on;
+    let world = SimWorld::new(h20x8(), mcfg);
+    let mut e = ServingEngine::new(
+        serving_cfg(),
+        qwen_7b_chat(),
+        world,
+        Box::new(FixedCompute {
+            prefill_s: 0.02,
+            decode_s: 0.001,
+        }),
+        GpuId(0),
+        NumaId(0),
+    );
+    let mut rng = Rng::seed_from_u64(seed);
+    // Distinct documents so every request pays a host fetch (no GPU-tier
+    // hits hiding the bandwidth story).
+    let keys: Vec<u64> = (0..n).map(|_| rng.next_u64() | 1).collect();
+    for &k in &keys {
+        e.seed_host_prefix(k, ctx);
+    }
+    // Park the 32B model host-side; its wake starts just before the first
+    // request arrives — the PR 2/3 wake-co-run scenario.
+    let mut reg = ModelRegistry::new(NumaId(1));
+    let m = reg.register(qwen3_32b(), vec![GpuId(4)]);
+    reg.sleep(e.world_mut(), m);
+    let t0 = e.now();
+    let wake = if with_wake {
+        Some(reg.start_wake(e.world_mut(), m))
+    } else {
+        None
+    };
+    let reqs: Vec<Request> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| Request {
+            id: RequestId(i as u64 + 1),
+            arrival: t0 + Time::from_ms(5 + 60 * i as u64 + rng.range_u64(0, 10)),
+            prompt_tokens: ctx + 64,
+            cached_prefix_tokens: ctx,
+            prefix_key: k,
+            output_tokens: 2,
+        })
+        .collect();
+    let out = e.run(reqs);
+    let wake_s = match wake {
+        Some(w) => w.wait(e.world_mut()).transfer.as_secs_f64(),
+        None => 0.0,
+    };
+    let ttfts: Vec<f64> = out.iter().map(|o| o.ttft_s()).collect();
+    QosRun {
+        mean_ttft: ttfts.iter().sum::<f64>() / ttfts.len() as f64,
+        worst_ttft: ttfts.iter().fold(0.0f64, |a, &b| a.max(b)),
+        wake_s,
+    }
+}
+
+/// The figure: no-wake baseline vs wake co-run with QoS off and on.
+pub fn qos_isolation(fast: bool, seed: u64) -> Table {
+    let ctx = if fast { 16_384 } else { 32_768 };
+    let n = if fast { 4 } else { 6 };
+    let base = qos_corun(ctx, false, false, n, seed);
+    let off = qos_corun(ctx, true, false, n, seed);
+    let on = qos_corun(ctx, true, true, n, seed);
+    let mut t = Table::new([
+        "scenario",
+        "mean TTFT (s)",
+        "worst TTFT (s)",
+        "wake transfer (s)",
+    ]);
+    let row = |t: &mut Table, name: &str, r: &QosRun, wake: bool| {
+        t.row([
+            name.to_string(),
+            format!("{:.4}", r.mean_ttft),
+            format!("{:.4}", r.worst_ttft),
+            if wake {
+                format!("{:.3}", r.wake_s)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    };
+    row(&mut t, "no wake (baseline)", &base, false);
+    row(&mut t, "wake co-run, qos off", &off, true);
+    row(&mut t, "wake co-run, qos on", &on, true);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEED: u64 = crate::figures::DEFAULT_SEED;
+
+    #[test]
+    fn qos_protects_ttft_under_corunning_wake() {
+        // The acceptance gate: with QoS on, TTFT under a co-running wake
+        // is strictly better than with QoS off, while the wake itself
+        // degrades only modestly (it still gets residual bandwidth).
+        let base = qos_corun(16_384, false, false, 4, SEED);
+        let off = qos_corun(16_384, true, false, 4, SEED);
+        let on = qos_corun(16_384, true, true, 4, SEED);
+        assert!(
+            off.mean_ttft > base.mean_ttft,
+            "scenario sanity: the wake must hurt without QoS \
+             (base {} vs off {})",
+            base.mean_ttft,
+            off.mean_ttft
+        );
+        assert!(
+            on.mean_ttft < off.mean_ttft,
+            "QoS on must strictly beat QoS off: {} vs {}",
+            on.mean_ttft,
+            off.mean_ttft
+        );
+        assert!(off.wake_s > 0.0 && on.wake_s > 0.0, "wake lands either way");
+        assert!(
+            on.wake_s < 5.0 * off.wake_s,
+            "wake completion must degrade only modestly: {} vs {}",
+            on.wake_s,
+            off.wake_s
+        );
+    }
+
+    #[test]
+    fn qos_corun_is_seed_reproducible() {
+        let a = qos_corun(16_384, true, true, 3, SEED);
+        let b = qos_corun(16_384, true, true, 3, SEED);
+        assert_eq!(a.mean_ttft, b.mean_ttft);
+        assert_eq!(a.wake_s, b.wake_s);
+    }
+
+    #[test]
+    fn figure_renders_three_scenarios() {
+        let s = qos_isolation(true, SEED).render();
+        for needle in ["no wake", "qos off", "qos on"] {
+            assert!(s.contains(needle), "missing {needle:?}:\n{s}");
+        }
+    }
+}

@@ -5,7 +5,7 @@
 //! co-run on the same fabric under one clock.
 
 use crate::config::ServingConfig;
-use crate::mma::{MmaConfig, SimWorld, TransferDesc};
+use crate::mma::{MmaConfig, SimWorld, TransferClass, TransferDesc};
 use crate::models::{qwen3_32b, qwen_7b_chat};
 use crate::policy;
 use crate::roofline::h20;
@@ -21,32 +21,34 @@ use crate::util::table::Table;
 pub fn fig9_coexistence() -> Table {
     let mut t = Table::new(["t (ms)", "scenario", "MMA-A GB/s", "other GB/s"]);
 
-    // (a) MMA + native background on gpu2's PCIe link.
+    // (a) MMA + native background on gpu2's PCIe link. The background
+    // loop is Bulk-class third-party traffic; QoS is off here, so the
+    // class is a sampling label only.
     {
         let mut w = SimWorld::new(h20x8(), MmaConfig::default());
         w.enable_sampling(Time::from_ms(10), Time::from_ms(120));
         let bg_path = w.topo.h2d_direct(NumaId(0), GpuId(2));
-        w.start_bg_loop(bg_path, 128 << 20, 45, 2); // class 2 = native bg
+        w.start_bg_loop(bg_path, 128 << 20, 45, TransferClass::Bulk);
         let s = w.stream(GpuId(0));
         w.memcpy_async(
             s,
-            TransferDesc {
-                class: 1,
-                ..TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30)
-            },
+            TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30)
+                .with_class(TransferClass::Interactive),
         );
         w.run_until_idle();
         for smp in w.samples.iter() {
             t.row([
                 format!("{:.0}", smp.at.as_ms_f64()),
                 "a:mma+native".to_string(),
-                format!("{:.1}", smp.rates[1].abs() / 1e9),
-                format!("{:.1}", smp.rates[2].abs() / 1e9),
+                format!("{:.1}", smp.rates[TransferClass::Interactive as usize].abs() / 1e9),
+                format!("{:.1}", smp.rates[TransferClass::Bulk as usize].abs() / 1e9),
             ]);
         }
     }
 
-    // (b) two concurrent MMA flows (separate processes/queues).
+    // (b) two concurrent MMA flows (separate processes/queues), sampled
+    // on distinct class channels (Interactive vs Bulk; equal weights with
+    // QoS off, so the split stays the unweighted fair one).
     {
         let mut w = SimWorld::new(h20x8(), MmaConfig::default());
         let p1 = w.add_process(MmaConfig::default());
@@ -56,37 +58,32 @@ pub fn fig9_coexistence() -> Table {
         w.memcpy_async_on(
             0,
             s0,
-            TransferDesc {
-                class: 1,
-                ..TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 6 << 30)
-            },
+            TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 6 << 30)
+                .with_class(TransferClass::Interactive),
         );
         w.memcpy_async_on(
             p1,
             s4,
-            TransferDesc {
-                class: 4,
-                ..TransferDesc::new(Direction::H2D, GpuId(4), NumaId(1), 6 << 30)
-            },
+            TransferDesc::new(Direction::H2D, GpuId(4), NumaId(1), 6 << 30)
+                .with_class(TransferClass::Bulk),
         );
         w.run_until_idle();
         for smp in w.samples.iter() {
             t.row([
                 format!("{:.0}", smp.at.as_ms_f64()),
                 "b:mma+mma".to_string(),
-                format!("{:.1}", smp.rates[1].abs() / 1e9),
-                format!("{:.1}", smp.rates[4].abs() / 1e9),
+                format!("{:.1}", smp.rates[TransferClass::Interactive as usize].abs() / 1e9),
+                format!("{:.1}", smp.rates[TransferClass::Bulk as usize].abs() / 1e9),
             ]);
         }
     }
 
-    // (c) end-to-end: a serving KV fetch (class 1) and a 32B model wake
-    // (class 3) co-run on the one event loop — the generalization the
-    // unified serving layer enables.
+    // (c) end-to-end: a serving KV fetch (LatencyCritical) and a 32B
+    // model wake (Bulk, the registry default) co-run on the one event
+    // loop — the generalization the unified serving layer enables.
     {
         let mut w = SimWorld::new(h20x8(), MmaConfig::default());
         let mut reg = ModelRegistry::new(NumaId(1));
-        reg.transfer_class = 3;
         let m = reg.register(qwen3_32b(), vec![GpuId(4)]);
         reg.sleep(&mut w, m); // park the weights host-side first
         let t0 = w.now();
@@ -120,8 +117,11 @@ pub fn fig9_coexistence() -> Table {
             t.row([
                 format!("{:.0}", smp.at.since(t0).as_ms_f64()),
                 "c:serve+wake".to_string(),
-                format!("{:.1}", smp.rates[1].abs() / 1e9),
-                format!("{:.1}", smp.rates[3].abs() / 1e9),
+                format!(
+                    "{:.1}",
+                    smp.rates[TransferClass::LatencyCritical as usize].abs() / 1e9
+                ),
+                format!("{:.1}", smp.rates[TransferClass::Bulk as usize].abs() / 1e9),
             ]);
         }
     }
@@ -137,7 +137,7 @@ fn fig10_cell(cfg: MmaConfig, background: bool) -> f64 {
         // Third-party native traffic pinning gpu0's direct PCIe link for
         // the whole experiment window.
         let bg = w.topo.h2d_direct(NumaId(0), GpuId(0));
-        w.start_bg_loop(bg, 256 << 20, 40, 2);
+        w.start_bg_loop(bg, 256 << 20, 40, TransferClass::Bulk);
     }
     let s = w.stream(GpuId(0));
     let id = w.memcpy_async(
@@ -208,20 +208,20 @@ mod tests {
         let mut w = SimWorld::new(h20x8(), MmaConfig::default());
         w.enable_sampling(Time::from_ms(1), Time::from_ms(200));
         let bg_path = w.topo.h2d_direct(NumaId(0), GpuId(2));
-        w.start_bg_loop(bg_path, 512 << 20, 10, 2);
+        w.start_bg_loop(bg_path, 512 << 20, 10, TransferClass::Bulk);
         let s = w.stream(GpuId(0));
         w.memcpy_async(
             s,
-            TransferDesc {
-                class: 1,
-                ..TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30)
-            },
+            TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30)
+                .with_class(TransferClass::Interactive),
         );
         w.run_until_idle();
         // During contention, MMA still gets far above single-link rate and
         // the native stream still makes progress.
-        let peak_mma = w.samples.iter().map(|s| s.rates[1]).fold(0.0, f64::max);
-        let peak_bg = w.samples.iter().map(|s| s.rates[2]).fold(0.0, f64::max);
+        let mma_ch = TransferClass::Interactive as usize;
+        let bg_ch = TransferClass::Bulk as usize;
+        let peak_mma = w.samples.iter().map(|s| s.rates[mma_ch]).fold(0.0, f64::max);
+        let peak_bg = w.samples.iter().map(|s| s.rates[bg_ch]).fold(0.0, f64::max);
         assert!(peak_mma > 150e9, "mma peak {peak_mma}");
         assert!(peak_bg > 20e9, "bg starved: {peak_bg}");
     }

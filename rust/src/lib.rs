@@ -13,14 +13,19 @@
 //!
 //! * [`sim`] — discrete-event simulation core (virtual nanosecond clock).
 //! * [`topology`] — intra-server interconnect model (PCIe/NVLink/xGMI/DRAM).
-//! * [`fabric`] — flow-level bandwidth simulator (max-min fair sharing).
+//! * [`fabric`] — flow-level bandwidth simulator (weighted max-min fair
+//!   sharing with per-flow QoS weights and rate caps; all weights equal
+//!   degenerates to the classic unweighted allocation).
 //! * [`gpusim`] — CUDA-semantics execution model (streams/events/kernels).
 //!
 //! and the paper's system on top:
 //!
 //! * [`mma`] — Transfer Task Interceptor, Sync Engine, Multipath Transfer
 //!   Engine (Task Manager / Task Launcher); placement is delegated to a
-//!   policy.
+//!   policy. Every transfer carries a QoS [`mma::TransferClass`]
+//!   (latency-critical / interactive / bulk / background) honored by the
+//!   fabric weights, the engine's class-aware issue order, and the
+//!   serving layer's tagging (`[qos]` config section).
 //! * [`policy`] — the pluggable transfer-policy layer: one
 //!   [`policy::TransferPolicy`] trait, with the paper's greedy selector,
 //!   the native and static-split baselines, and adaptive strategies

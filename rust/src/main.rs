@@ -7,8 +7,8 @@
 //! mma serve [--model qwen-7b] [--ctx 65536] [--docs 4] [--policy <name>]
 //!           [--arrival-rate R] [--max-concurrency N] [--fetch-chunks C]
 //!           [--gpus N] [--router round-robin|least-loaded]
-//!           [--peer-fetch true|false] [--prefix-affinity]
-//! mma switch [--model qwen3-32b] [--policy <name>]
+//!           [--peer-fetch true|false] [--prefix-affinity] [--qos on|off]
+//! mma switch [--model qwen3-32b] [--policy <name>] [--qos on|off]
 //! mma config-check <file.toml>            validate a config file
 //! ```
 //!
@@ -27,6 +27,12 @@
 //! instances under the event-driven router, all on one SimWorld clock
 //! (`[fleet]` TOML section sets the same knobs). `--turns T` repeats each
 //! document so later turns exercise peer-NVLink prefix fetches.
+//!
+//! `--qos on|off` (any run; also the `[qos]` TOML section / `MMA_QOS`)
+//! enables the QoS transfer classes: latency-critical prefix fetches
+//! outweigh bulk model wakes on every shared link (weighted max-min
+//! fabric + class-aware engine issue order). `mma figure qos` reproduces
+//! the wake-co-run isolation experiment.
 
 use mma::config::RunConfig;
 use mma::figures;
@@ -65,6 +71,16 @@ fn mma_cfg(args: &Args) -> MmaConfig {
                 .take(r)
                 .collect(),
         );
+    }
+    if let Some(q) = args.get("qos") {
+        cfg.qos.enabled = match q.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" | "yes" => true,
+            "off" | "false" | "0" | "no" => false,
+            other => {
+                eprintln!("--qos: expected on|off, got {other:?}");
+                std::process::exit(2);
+            }
+        };
     }
     cfg.chunk_bytes = args.size_or("chunk", cfg.chunk_bytes);
     cfg.outstanding_depth = args.or("depth", cfg.outstanding_depth);
@@ -297,6 +313,7 @@ fn main() {
                 "policies (--policy): native | static-split | static:<gpu>:<w>[,...] | \
                  mma-greedy | congestion-feedback | numa-aware"
             );
+            println!("qos (--qos on|off): weighted transfer classes (see `figure qos`)");
         }
     }
 }

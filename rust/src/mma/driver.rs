@@ -6,15 +6,18 @@
 use super::engine::{Engine, EngineAction};
 use super::interceptor::{self, Route};
 use super::sync_engine::SyncEngine;
-use super::transfer_task::{SubmitKind, TransferDesc, TransferRec, TransferState};
-use super::MmaConfig;
+use super::transfer_task::{
+    SubmitKind, TransferClass, TransferDesc, TransferRec, TransferState, NUM_CLASSES,
+};
+use super::{MmaConfig, QosConfig};
 use crate::fabric::{Fabric, FlowDone};
 use crate::gpusim::{Action, GpuSim, StreamId, StreamTask, TransferId};
 use crate::sim::{EventQueue, Time};
 use crate::topology::{Direction, GpuId, LinkId, Topology};
 use std::collections::VecDeque;
 
-/// Flow-tag layout: `[class:8][kind:8][a:24][b:24]`.
+/// Flow-tag layout: `[class:8][kind:8][a:24][b:24]` (`class` is the
+/// [`TransferClass`] id).
 mod tag {
     pub const KIND_CHUNK: u8 = 0;
     pub const KIND_NATIVE: u8 = 1;
@@ -103,8 +106,8 @@ pub struct StreamHandle {
 pub struct Sample {
     /// Sample time.
     pub at: Time,
-    /// `rates[c]` = aggregate rate of traffic class `c` (0..8).
-    pub rates: [f64; 8],
+    /// `rates[c]` = aggregate delivered rate of [`TransferClass`] id `c`.
+    pub rates: [f64; NUM_CLASSES],
 }
 
 /// A background copy loop: back-to-back DMA on a fixed path (emulating
@@ -113,7 +116,7 @@ struct BgLoop {
     path: Vec<LinkId>,
     bytes: u64,
     remaining: u64,
-    class: u8,
+    class: TransferClass,
     latency: Time,
     /// Completion time of each finished iteration.
     iters: Vec<Time>,
@@ -139,10 +142,16 @@ pub struct SimWorld {
     sample_every: Option<Time>,
     sample_until: Time,
     /// Cumulative payload bytes delivered per class (terminal stages only).
-    class_delivered: [f64; 8],
-    last_sampled: ([f64; 8], Time),
+    class_delivered: [f64; NUM_CLASSES],
+    last_sampled: ([f64; NUM_CLASSES], Time),
     /// Pending completion notices for external consumers.
     notices: VecDeque<Notice>,
+    /// Fabric-level QoS parameters (per-class weights and the bulk cap):
+    /// every flow this world launches — engine chunks, native copies,
+    /// background loops — carries its class's weight onto the fabric.
+    /// Taken from the founding process's [`MmaConfig::qos`]; later
+    /// [`Self::add_process`] calls share the same fabric QoS domain.
+    qos: QosConfig,
 }
 
 impl SimWorld {
@@ -151,6 +160,7 @@ impl SimWorld {
     pub fn new(topo: Topology, cfg: MmaConfig) -> SimWorld {
         let n = topo.gpu_count();
         let fabric = Fabric::new(&topo);
+        let qos = cfg.qos;
         SimWorld {
             fabric,
             gpus: GpuSim::new(n),
@@ -165,16 +175,30 @@ impl SimWorld {
             samples: Vec::new(),
             sample_every: None,
             sample_until: Time::ZERO,
-            class_delivered: [0.0; 8],
-            last_sampled: ([0.0; 8], Time::ZERO),
+            class_delivered: [0.0; NUM_CLASSES],
+            last_sampled: ([0.0; NUM_CLASSES], Time::ZERO),
             notices: VecDeque::new(),
+            qos,
             topo,
         }
     }
 
+    /// The world's fabric-level QoS parameters.
+    pub fn qos(&self) -> &QosConfig {
+        &self.qos
+    }
+
     /// Add another MMA process (its own queues and pull scheduler sharing
     /// the same physical fabric — Fig 9b). Returns the process index.
-    pub fn add_process(&mut self, cfg: MmaConfig) -> u8 {
+    ///
+    /// QoS is a property of the shared fabric, not of one process: the
+    /// world has a single QoS domain (the founding process's
+    /// [`MmaConfig::qos`]), so the added process's `cfg.qos` is replaced
+    /// with the world's. This keeps the fabric weights and the engine's
+    /// class-aware ordering consistent instead of silently half-enabling
+    /// QoS for one process.
+    pub fn add_process(&mut self, mut cfg: MmaConfig) -> u8 {
+        cfg.qos = self.qos;
         let n = self.topo.gpu_count();
         let base = self.engines.len() as u8;
         self.engines
@@ -220,44 +244,7 @@ impl SimWorld {
         s: StreamHandle,
         desc: TransferDesc,
     ) -> TransferId {
-        let now = self.now();
-        let engine_idx = process as usize * 2 + matches!(desc.dir, Direction::D2H) as usize;
-        let tid = TransferId(self.transfers.len() as u32);
-        let route = interceptor::route(&self.engines[engine_idx].cfg, &desc);
-        let mut rec = TransferRec {
-            id: tid,
-            desc,
-            kind: SubmitKind::Async { stream: s.id },
-            engine: Some(engine_idx as u8),
-            flag: None,
-            state: TransferState::Recorded,
-            submitted: now,
-            activated: None,
-            completed: None,
-            released: None,
-            bytes_direct: 0,
-            bytes_relay: 0,
-        };
-        match route {
-            Route::Engine => {
-                let flag = self
-                    .sync
-                    .install_dummy_task(&mut self.gpus, s.dev, s.id, tid);
-                rec.flag = Some(flag);
-            }
-            Route::Native => {
-                rec.engine = None;
-                if desc.peer.is_none() {
-                    // Peer copies are categorically native, not fallbacks.
-                    self.engines[engine_idx].stats.fallback_transfers += 1;
-                }
-                self.gpus
-                    .enqueue(s.dev, s.id, StreamTask::Memcpy { transfer: tid });
-            }
-        }
-        self.transfers.push(rec);
-        self.advance_stream(now, s.dev, s.id);
-        tid
+        self.submit_on(process, Some(s), desc)
     }
 
     /// `cudaMemcpyPeerAsync`: copy `bytes` from `src`'s HBM into the
@@ -270,9 +257,19 @@ impl SimWorld {
     /// Serving-layer fetch-path decision surface: should a prefix resident
     /// in sibling `src`'s HBM be fetched peer-to-peer over NVLink instead
     /// of from the host tier? Delegates to the configured
-    /// [`crate::policy::TransferPolicy`] of process 0's H2D engine.
-    pub fn prefer_peer_fetch(&self, src: GpuId, dst: GpuId, bytes: u64) -> bool {
-        self.engines[0].policy().prefer_peer_fetch(&self.topo, src, dst, bytes)
+    /// [`crate::policy::TransferPolicy`] of process 0's H2D engine;
+    /// `class` lets the policy route bulk traffic off PCIe even where the
+    /// peer path is slower.
+    pub fn prefer_peer_fetch(
+        &self,
+        src: GpuId,
+        dst: GpuId,
+        bytes: u64,
+        class: TransferClass,
+    ) -> bool {
+        self.engines[0]
+            .policy()
+            .prefer_peer_fetch(&self.topo, src, dst, bytes, class)
     }
 
     /// `cudaMemcpy` (synchronous): starts immediately, bypassing streams.
@@ -283,39 +280,76 @@ impl SimWorld {
 
     /// Synchronous copy through a specific process.
     pub fn memcpy_sync_on(&mut self, process: u8, desc: TransferDesc) -> TransferId {
+        self.submit_on(process, None, desc)
+    }
+
+    /// The one submit path every copy takes — async (`stream` set) and
+    /// sync (`stream == None`) share the interceptor route, record
+    /// bookkeeping, fallback stats, and class plumbing, so the two
+    /// submission flavors cannot drift apart.
+    fn submit_on(
+        &mut self,
+        process: u8,
+        stream: Option<StreamHandle>,
+        desc: TransferDesc,
+    ) -> TransferId {
         let now = self.now();
         let engine_idx = process as usize * 2 + matches!(desc.dir, Direction::D2H) as usize;
         let tid = TransferId(self.transfers.len() as u32);
         let route = interceptor::route(&self.engines[engine_idx].cfg, &desc);
+        let (kind, state, activated) = match stream {
+            Some(s) => (SubmitKind::Async { stream: s.id }, TransferState::Recorded, None),
+            None => (SubmitKind::Sync, TransferState::Active, Some(now)),
+        };
         let mut rec = TransferRec {
             id: tid,
             desc,
-            kind: SubmitKind::Sync,
+            kind,
             engine: Some(engine_idx as u8),
             flag: None,
-            state: TransferState::Active,
+            state,
             submitted: now,
-            activated: Some(now),
+            activated,
             completed: None,
             released: None,
             bytes_direct: 0,
             bytes_relay: 0,
         };
-        match route {
-            Route::Engine => {
+        if route == Route::Native {
+            rec.engine = None;
+            if desc.peer.is_none() {
+                // Peer copies are categorically native, not fallbacks.
+                self.engines[engine_idx].stats.fallback_transfers += 1;
+            }
+        }
+        match (route, stream) {
+            (Route::Engine, Some(s)) => {
+                // Async engine copy: a Dummy Task holds the stream; the
+                // engine activates when it reaches its copy point.
+                let flag = self
+                    .sync
+                    .install_dummy_task(&mut self.gpus, s.dev, s.id, tid);
+                rec.flag = Some(flag);
                 self.transfers.push(rec);
-                let acts =
-                    self.engines[engine_idx].activate(now, tid, desc, &self.topo);
+            }
+            (Route::Engine, None) => {
+                // Sync engine copy: the copy point is active immediately.
+                self.transfers.push(rec);
+                let acts = self.engines[engine_idx].activate(now, tid, desc, &self.topo);
                 self.apply(now, engine_idx as u8, acts);
             }
-            Route::Native => {
-                rec.engine = None;
-                if desc.peer.is_none() {
-                    self.engines[engine_idx].stats.fallback_transfers += 1;
-                }
+            (Route::Native, Some(s)) => {
+                self.transfers.push(rec);
+                self.gpus
+                    .enqueue(s.dev, s.id, StreamTask::Memcpy { transfer: tid });
+            }
+            (Route::Native, None) => {
                 self.transfers.push(rec);
                 self.start_native_flow(now, tid);
             }
+        }
+        if let Some(s) = stream {
+            self.advance_stream(now, s.dev, s.id);
         }
         tid
     }
@@ -354,7 +388,7 @@ impl SimWorld {
         path: Vec<LinkId>,
         bytes: u64,
         repeat: u64,
-        class: u8,
+        class: TransferClass,
     ) -> u32 {
         let id = self.bg.len() as u32;
         let latency = Time::from_ns(self.topo.lat.dma_setup_ns);
@@ -510,8 +544,8 @@ impl SimWorld {
                 // stages and flicker with micro-burst drains.)
                 let (ref last, last_t) = self.last_sampled;
                 let dt = now.since(last_t).as_secs_f64().max(1e-12);
-                let mut rates = [0.0f64; 8];
-                for c in 0..8 {
+                let mut rates = [0.0f64; NUM_CLASSES];
+                for c in 0..NUM_CLASSES {
                     rates[c] = (self.class_delivered[c] - last[c]) / dt;
                 }
                 self.last_sampled = (self.class_delivered, now);
@@ -526,9 +560,11 @@ impl SimWorld {
                 let lp = &mut self.bg[id as usize];
                 if lp.remaining > 0 && !lp.stopped {
                     lp.remaining -= 1;
-                    let t = tag::pack(lp.class, tag::KIND_BG, 0, id);
+                    let class = lp.class;
+                    let t = tag::pack(class.id(), tag::KIND_BG, 0, id);
                     let (path, bytes, latency) = (lp.path.clone(), lp.bytes, lp.latency);
-                    self.fabric.start_flow(now, &path, bytes, latency, t);
+                    let (w, cap) = (self.qos.weight(class), self.qos.cap(class));
+                    self.fabric.start_flow_qos(now, &path, bytes, latency, t, w, cap);
                 }
             }
             Ev::Timer { token } => {
@@ -553,7 +589,7 @@ impl SimWorld {
     fn route_flow_done(&mut self, now: Time, d: FlowDone) {
         if tag::kind(d.tag) != tag::KIND_CHUNK_MID {
             // Terminal stages only: relayed bytes count once.
-            self.class_delivered[tag::class(d.tag) as usize % 8] += d.bytes as f64;
+            self.class_delivered[tag::class(d.tag) as usize % NUM_CLASSES] += d.bytes as f64;
         }
         match tag::kind(d.tag) {
             tag::KIND_CHUNK | tag::KIND_CHUNK_MID => {
@@ -597,8 +633,9 @@ impl SimWorld {
                     terminal,
                 } => {
                     let kind = if terminal { tag::KIND_CHUNK } else { tag::KIND_CHUNK_MID };
-                    let t = tag::pack(class, kind, e as u32, key as u32);
-                    self.fabric.start_flow(now, &path, bytes, latency, t);
+                    let t = tag::pack(class.id(), kind, e as u32, key as u32);
+                    let (w, cap) = (self.qos.weight(class), self.qos.cap(class));
+                    self.fabric.start_flow_qos(now, &path, bytes, latency, t, w, cap);
                 }
                 EngineAction::WakeAt { gpu, at } => {
                     self.q.schedule_at(at, Ev::EngineWake { e, gpu });
@@ -689,8 +726,9 @@ impl SimWorld {
                 (p, Time::from_ns(self.topo.lat.dma_setup_ns))
             }
         };
-        let t = tag::pack(desc.class, tag::KIND_NATIVE, 0, tid.0);
-        self.fabric.start_flow(now, &path, desc.bytes, latency, t);
+        let t = tag::pack(desc.class.id(), tag::KIND_NATIVE, 0, tid.0);
+        let (w, cap) = (self.qos.weight(desc.class), self.qos.cap(desc.class));
+        self.fabric.start_flow_qos(now, &path, desc.bytes, latency, t, w, cap);
     }
 }
 
@@ -798,10 +836,12 @@ mod tests {
     #[test]
     fn prefer_peer_fetch_defaults_to_nvlink_on_h20() {
         // NVLink (368 GB/s) beats the PCIe lane (53.6 GB/s) on every
-        // policy's default decision surface.
+        // policy's default decision surface, for every traffic class.
         for cfg in [MmaConfig::native(), MmaConfig::default()] {
             let w = world(cfg);
-            assert!(w.prefer_peer_fetch(GpuId(0), GpuId(1), 1 << 30));
+            for class in TransferClass::ALL {
+                assert!(w.prefer_peer_fetch(GpuId(0), GpuId(1), 1 << 30, class));
+            }
         }
     }
 
@@ -865,10 +905,23 @@ mod tests {
     }
 
     #[test]
+    fn added_process_joins_the_worlds_qos_domain() {
+        // QoS is fabric-global: a process added with a mismatched cfg.qos
+        // is normalized onto the founding process's domain.
+        let mut base = MmaConfig::default();
+        base.qos.enabled = true;
+        let mut w = world(base);
+        let p = w.add_process(MmaConfig::default()); // its own qos is off
+        assert!(w.qos().enabled);
+        assert!(w.engine(p, Direction::H2D).cfg.qos.enabled);
+        assert!(w.engine(p, Direction::D2H).cfg.qos.enabled);
+    }
+
+    #[test]
     fn bg_loop_iterates_and_stops() {
         let mut w = world(MmaConfig::native());
         let path = w.topo.h2d_direct(NumaId(0), GpuId(2));
-        let id = w.start_bg_loop(path, 100_000_000, 5, 0);
+        let id = w.start_bg_loop(path, 100_000_000, 5, TransferClass::Background);
         w.run_until_idle();
         assert_eq!(w.bg_iters(id).len(), 5);
     }
@@ -914,6 +967,102 @@ mod tests {
         assert!(w.rec(big).completed.is_none(), "big must still be in flight");
         let all_done = w.run_until_transfers(&[big, small]);
         assert_eq!(all_done, w.rec(big).completed.unwrap());
+    }
+
+    #[test]
+    fn qos_weights_protect_critical_native_flows() {
+        // Two native copies share gpu0's PCIe lane: with QoS on, the
+        // latency-critical one holds its 8/9 weighted share instead of the
+        // unweighted half — the driver-level form of the bulk-wake vs
+        // critical-fetch regression.
+        let mut cfg = MmaConfig::native();
+        cfg.qos.enabled = true;
+        let mut w = world(cfg);
+        let s0 = w.stream(GpuId(0));
+        let s1 = w.stream(GpuId(0));
+        let crit = w.memcpy_async(
+            s0,
+            h2d(1_000_000_000).with_class(TransferClass::LatencyCritical),
+        );
+        let bulk = w.memcpy_async(s1, h2d(1_000_000_000).with_class(TransferClass::Bulk));
+        w.run_until_idle();
+        let lane = w.topo.pcie_capacity(GpuId(0), Direction::H2D);
+        let crit_bw = w.rec(crit).bandwidth().unwrap();
+        let bulk_bw = w.rec(bulk).bandwidth().unwrap();
+        // Weighted share 8/9 ≈ 47.6 GB/s until the critical copy lands.
+        assert!(crit_bw > 0.8 * lane, "critical bw {crit_bw} vs lane {lane}");
+        assert!(bulk_bw < 0.65 * lane, "bulk must yield: {bulk_bw}");
+        assert!(w.rec(bulk).completed.is_some(), "bulk still completes");
+    }
+
+    #[test]
+    fn qos_disabled_shares_the_lane_evenly_regardless_of_class() {
+        // The degenerate case: with QoS off, class tags are labels only —
+        // both copies get the unweighted fair half.
+        let mut w = world(MmaConfig::native());
+        let s0 = w.stream(GpuId(0));
+        let s1 = w.stream(GpuId(0));
+        let crit = w.memcpy_async(
+            s0,
+            h2d(1_000_000_000).with_class(TransferClass::LatencyCritical),
+        );
+        let bulk = w.memcpy_async(s1, h2d(1_000_000_000).with_class(TransferClass::Bulk));
+        w.run_until_idle();
+        let a = w.rec(crit).bandwidth().unwrap();
+        let b = w.rec(bulk).bandwidth().unwrap();
+        assert!((a - b).abs() < 0.02 * a, "equal halves expected: {a} vs {b}");
+    }
+
+    #[test]
+    fn qos_bulk_cap_throttles_even_an_idle_fabric() {
+        let mut cfg = MmaConfig::native();
+        cfg.qos.enabled = true;
+        cfg.qos.bulk_cap_bps = 10e9;
+        let mut w = world(cfg);
+        let s = w.stream(GpuId(0));
+        let bulk = w.memcpy_async(s, h2d(1_000_000_000).with_class(TransferClass::Bulk));
+        w.run_until_transfer(bulk);
+        let bw = w.rec(bulk).bandwidth().unwrap();
+        assert!(bw < 10.1e9, "capped bulk bw {bw}");
+        // Critical traffic is never capped.
+        let s2 = w.stream(GpuId(0));
+        let crit = w.memcpy_async(
+            s2,
+            h2d(1_000_000_000).with_class(TransferClass::LatencyCritical),
+        );
+        w.run_until_transfer(crit);
+        assert!(w.rec(crit).bandwidth().unwrap() > 50e9);
+    }
+
+    #[test]
+    fn qos_engine_corun_favors_critical_transfer() {
+        // Through the full multipath engine: equal-size critical and bulk
+        // transfers to the same GPU submitted bulk-first. QoS on must
+        // complete the critical transfer sooner than bulk; and sooner than
+        // the critical one finishes under QoS off.
+        let finish = |qos_on: bool| {
+            let mut cfg = MmaConfig::default();
+            cfg.qos.enabled = qos_on;
+            let mut w = world(cfg);
+            let bulk = w.memcpy_sync(h2d(400_000_000).with_class(TransferClass::Bulk));
+            let crit =
+                w.memcpy_sync(h2d(400_000_000).with_class(TransferClass::LatencyCritical));
+            w.run_until_idle();
+            (
+                w.rec(crit).completed.unwrap(),
+                w.rec(bulk).completed.unwrap(),
+            )
+        };
+        let (crit_on, bulk_on) = finish(true);
+        let (crit_off, _) = finish(false);
+        assert!(
+            crit_on < bulk_on,
+            "critical must land first under QoS: {crit_on:?} vs {bulk_on:?}"
+        );
+        assert!(
+            crit_on < crit_off,
+            "QoS must speed up the critical transfer: {crit_on:?} vs {crit_off:?}"
+        );
     }
 
     #[test]

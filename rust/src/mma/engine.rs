@@ -13,8 +13,8 @@
 //! [`super::stats::EngineStats`].
 
 use super::stats::EngineStats;
-use super::task_manager::{Chunk, TaskManager};
-use super::transfer_task::TransferDesc;
+use super::task_manager::{Chunk, PullClassPolicy, TaskManager};
+use super::transfer_task::{TransferClass, TransferDesc};
 use super::MmaConfig;
 use crate::gpusim::TransferId;
 use crate::policy::{OutstandingQueue, PolicyView, Pulled, TransferPolicy};
@@ -35,8 +35,8 @@ pub enum EngineAction {
         bytes: u64,
         /// Setup latency before the flow occupies bandwidth.
         latency: Time,
-        /// Traffic class (for per-class bandwidth sampling).
-        class: u8,
+        /// QoS traffic class (fabric share weight + sampling channel).
+        class: TransferClass,
         /// True when this stage delivers the chunk to its destination
         /// (direct, or the relay's forwarding hop). Bandwidth sampling
         /// counts only terminal stages, so relayed bytes aren't counted
@@ -88,6 +88,9 @@ struct InFlight {
     host_numa: NumaId,
     dispatched: Time,
     stage: u8,
+    /// QoS class of the parent transfer (carried by the chunk; cached so
+    /// retirement can update per-class queue counts without a lookup).
+    class: TransferClass,
     /// Uncontended expected service time (for contention inference),
     /// accounting for chunks queued ahead on the same lane at dispatch.
     expected_s: f64,
@@ -111,7 +114,7 @@ struct QueuedFlow {
     key: u64,
     path: Vec<LinkId>,
     bytes: u64,
-    class: u8,
+    class: TransferClass,
     terminal: bool,
 }
 
@@ -200,7 +203,8 @@ impl Engine {
         desc: TransferDesc,
         topo: &Topology,
     ) -> Vec<EngineAction> {
-        let chunks = TaskManager::split(transfer, desc.gpu, desc.bytes, self.cfg.chunk_bytes);
+        let chunks =
+            TaskManager::split(transfer, desc.gpu, desc.bytes, self.cfg.chunk_bytes, desc.class);
         let total = chunks.len() as u32;
         self.transfers.insert(
             transfer.0,
@@ -217,6 +221,11 @@ impl Engine {
             dir: self.dir,
             queues: &self.queues,
             now,
+            class_pull: PullClassPolicy {
+                by_class: self.cfg.qos.enabled,
+                ..Default::default()
+            },
+            class_pending: self.tm.pending_by_class(),
         };
         self.policy.admit(&chunks, &mut self.tm, &view);
         // Wake every worker after the fixed activation overhead; workers
@@ -250,6 +259,8 @@ impl Engine {
                     dir: self.dir,
                     queues: &self.queues,
                     now,
+                    class_pull: self.class_pull(gi),
+                    class_pending: self.tm.pending_by_class(),
                 };
                 self.policy.pull(&mut self.tm, gpu, &view)
             };
@@ -257,6 +268,30 @@ impl Engine {
             actions.extend(self.dispatch(now, gpu, pulled, topo));
         }
         actions
+    }
+
+    /// QoS class policy for one of `gpu`'s pull rounds. All-false while
+    /// QoS is disabled (legacy FIFO). Enabled:
+    ///
+    /// * pops are class-prioritized (`by_class`);
+    /// * a queue already holding a bulk-band chunk in flight pulls only
+    ///   critical-band work while critical flows are live anywhere — the
+    ///   outstanding-depth throttle that caps bulk at one slot under
+    ///   contention with latency-critical traffic (`critical_only`);
+    /// * a queue with an in-flight critical chunk refuses to steal
+    ///   bulk-band work onto its path (`no_bulk_steal`; the guard itself
+    ///   lives in [`TaskManager::pop_steal_scored`]).
+    fn class_pull(&self, gi: usize) -> PullClassPolicy {
+        if !self.cfg.qos.enabled {
+            return PullClassPolicy::default();
+        }
+        let critical_live = self.tm.critical_pending() > 0
+            || self.queues.iter().any(|q| q.critical_inflight > 0);
+        PullClassPolicy {
+            by_class: true,
+            critical_only: critical_live && self.queues[gi].bulk_inflight > 0,
+            no_bulk_steal: self.queues[gi].critical_inflight > 0,
+        }
     }
 
     /// Dispatch one pulled micro-task through the Task Launcher.
@@ -275,11 +310,7 @@ impl Engine {
             .get(&chunk.transfer.0)
             .map(|t| t.desc.host_numa)
             .expect("chunk for unknown transfer");
-        let class = self
-            .transfers
-            .get(&chunk.transfer.0)
-            .map(|t| t.desc.class)
-            .unwrap_or(1);
+        let class = chunk.class;
 
         // Transfer-thread dispatch serialization: the (per-GPU or central)
         // worker burns `dispatch_cpu_ns` per micro-task.
@@ -298,7 +329,7 @@ impl Engine {
         if self.queues[gi].slots.is_empty() {
             self.stats.queue_busy(gpu, now);
         }
-        self.queues[gi].occupy(key);
+        self.queues[gi].occupy(key, class);
         if relay {
             self.relay_inflight[gi] += 1;
         }
@@ -340,6 +371,7 @@ impl Engine {
                 host_numa,
                 dispatched: now,
                 stage: 1,
+                class,
                 expected_s,
             },
         );
@@ -361,7 +393,9 @@ impl Engine {
 
     /// Submit a stage's flow to a serializing DMA lane. If the lane is
     /// busy, the descriptor queues behind the active copy and launches
-    /// back-to-back when it finishes (returns no action yet).
+    /// back-to-back when it finishes (returns no action yet). Under QoS,
+    /// waiting descriptors are ordered by class priority (FIFO within a
+    /// class): a latency-critical chunk issues before queued bulk ones.
     fn lane_submit(
         &mut self,
         gpu: GpuId,
@@ -369,6 +403,7 @@ impl Engine {
         flow: QueuedFlow,
         cold_latency: Time,
     ) -> Option<EngineAction> {
+        let by_class = self.cfg.qos.enabled;
         let li = lane as usize;
         let lanes = &mut self.lanes[gpu.0 as usize];
         if lanes.active[li].is_none() {
@@ -382,7 +417,13 @@ impl Engine {
                 terminal: flow.terminal,
             })
         } else {
-            lanes.waiting[li].push_back(flow);
+            let w = &mut lanes.waiting[li];
+            let pos = if by_class {
+                w.iter().position(|q| q.class > flow.class).unwrap_or(w.len())
+            } else {
+                w.len()
+            };
+            w.insert(pos, flow);
             None
         }
     }
@@ -450,11 +491,6 @@ impl Engine {
                     LaneKind::Pcie,
                 ),
             };
-            let class = self
-                .transfers
-                .get(&inf.chunk.transfer.0)
-                .map(|t| t.desc.class)
-                .unwrap_or(1);
             self.inflight.get_mut(&key).unwrap().stage = 2;
             actions.extend(self.lane_submit(
                 inf.path_gpu,
@@ -463,7 +499,7 @@ impl Engine {
                     key,
                     path,
                     bytes: inf.chunk.bytes,
-                    class,
+                    class: inf.class,
                     terminal: true,
                 },
                 Time::from_ns(setup),
@@ -492,7 +528,7 @@ impl Engine {
         let inf = self.inflight.remove(&key).expect("retire unknown chunk");
         debug_assert_eq!(inf.path_gpu, gpu);
         let gi = gpu.0 as usize;
-        let retired = self.queues[gi].retire(key);
+        let retired = self.queues[gi].retire(key, inf.class);
         debug_assert!(retired);
         if inf.relay {
             self.relay_inflight[gi] -= 1;
@@ -801,6 +837,132 @@ mod tests {
         assert_eq!(e.stats.chunks_dispatched[1], 4);
         assert_eq!(completes[0].1, 10_000_000); // direct bytes
         assert_eq!(completes[0].2, 20_000_000); // relay bytes
+    }
+
+    #[test]
+    fn qos_critical_chunks_issue_before_earlier_bulk_ones() {
+        // Same destination, bulk transfer activated first: with QoS on the
+        // later latency-critical transfer's chunks pull first and it
+        // completes first; with QoS off, FIFO lets the bulk one win.
+        let topo = h20x8();
+        let run = |qos_on: bool| {
+            let mut cfg = MmaConfig {
+                relay_gpus: Some(vec![]), // direct-only: one queue, clear ordering
+                ..Default::default()
+            };
+            cfg.qos.enabled = qos_on;
+            let mut e = Engine::new(0, Direction::H2D, cfg, 8);
+            let bulk = desc(30_000_000).with_class(super::TransferClass::Bulk);
+            let crit = desc(30_000_000).with_class(super::TransferClass::LatencyCritical);
+            let mut init = e.activate(Time::ZERO, TransferId(0), bulk, &topo);
+            init.extend(e.activate(Time::ZERO, TransferId(1), crit, &topo));
+            let completes = drain(&mut e, &topo, init);
+            assert_eq!(completes.len(), 2);
+            completes[0].0 // first transfer to finish
+        };
+        assert_eq!(run(false), TransferId(0), "FIFO: earlier bulk transfer first");
+        assert_eq!(run(true), TransferId(1), "QoS: critical transfer leapfrogs");
+    }
+
+    #[test]
+    fn qos_throttles_bulk_to_one_outstanding_slot_while_critical_live() {
+        let topo = h20x8();
+        let mut cfg = MmaConfig {
+            relay_gpus: Some(vec![]),
+            ..Default::default()
+        };
+        cfg.qos.enabled = true;
+        let mut e = Engine::new(0, Direction::H2D, cfg, 8);
+        // Bulk work for gpu0, critical work pending for gpu1: gpu0's queue
+        // takes one bulk chunk and then stops (depth throttle) instead of
+        // filling both slots.
+        e.activate(
+            Time::ZERO,
+            TransferId(0),
+            desc(40_000_000).with_class(super::TransferClass::Bulk),
+            &topo,
+        );
+        e.activate(
+            Time::ZERO,
+            TransferId(1),
+            TransferDesc::new(Direction::H2D, GpuId(1), NumaId(0), 40_000_000)
+                .with_class(super::TransferClass::LatencyCritical),
+            &topo,
+        );
+        e.on_wake(Time::ZERO, GpuId(0), &topo);
+        assert_eq!(
+            e.queues[0].slots.len(),
+            1,
+            "bulk capped at one slot while critical work is live"
+        );
+        // Without live critical work the same wake fills the full depth.
+        let mut cfg2 = MmaConfig {
+            relay_gpus: Some(vec![]),
+            ..Default::default()
+        };
+        cfg2.qos.enabled = true;
+        let mut e2 = Engine::new(0, Direction::H2D, cfg2, 8);
+        e2.activate(
+            Time::ZERO,
+            TransferId(0),
+            desc(40_000_000).with_class(super::TransferClass::Bulk),
+            &topo,
+        );
+        e2.on_wake(Time::ZERO, GpuId(0), &topo);
+        assert_eq!(e2.queues[0].slots.len(), 2, "no critical work → full depth");
+    }
+
+    #[test]
+    fn qos_lane_queue_reorders_waiting_flows_by_class() {
+        // Force two waiting descriptors behind an active copy on gpu0's
+        // PCIe lane; under QoS the critical one must launch first when the
+        // lane frees even though the bulk one queued earlier.
+        let topo = h20x8();
+        let mut cfg = MmaConfig {
+            relay_gpus: Some(vec![]),
+            outstanding_depth: 3,
+            ..Default::default()
+        };
+        cfg.qos.enabled = true;
+        let mut e = Engine::new(0, Direction::H2D, cfg, 8);
+        // One critical chunk (launches, occupies the lane), then a bulk
+        // and another critical transfer whose chunks queue behind it.
+        e.activate(
+            Time::ZERO,
+            TransferId(0),
+            desc(5_000_000).with_class(super::TransferClass::LatencyCritical),
+            &topo,
+        );
+        let acts = e.on_wake(Time::ZERO, GpuId(0), &topo);
+        let first = flow_keys(&acts);
+        assert_eq!(first.len(), 1, "one active copy on the lane");
+        e.activate(
+            Time::ZERO,
+            TransferId(1),
+            desc(5_000_000).with_class(super::TransferClass::Bulk),
+            &topo,
+        );
+        e.on_wake(Time::ZERO, GpuId(0), &topo);
+        e.activate(
+            Time::ZERO,
+            TransferId(2),
+            desc(5_000_000).with_class(super::TransferClass::LatencyCritical),
+            &topo,
+        );
+        e.on_wake(Time::ZERO, GpuId(0), &topo);
+        // Lane frees → the *critical* waiter launches, not the bulk one
+        // that queued first.
+        let acts = e.on_flow_done(Time::from_us(200), first[0], &topo);
+        let next = acts
+            .iter()
+            .find_map(|a| match a {
+                EngineAction::StartFlow { key, .. } => Some(*key),
+                _ => None,
+            })
+            .expect("lane hand-off");
+        let nxt = e.inflight[&next];
+        assert_eq!(nxt.class, super::TransferClass::LatencyCritical);
+        assert_eq!(nxt.chunk.transfer, TransferId(2));
     }
 
     #[test]

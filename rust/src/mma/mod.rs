@@ -29,10 +29,94 @@ pub mod transfer_task;
 
 pub use driver::{Notice, SimWorld, StreamHandle};
 pub use engine::Engine;
-pub use transfer_task::{TransferClass, TransferDesc};
+pub use transfer_task::{TransferClass, TransferDesc, NUM_CLASSES};
 
 use crate::policy::PolicySpec;
 use crate::topology::GpuId;
+
+/// Default per-class share weights applied when QoS is enabled, indexed by
+/// [`TransferClass::id`]: latency-critical 8, interactive 4, bulk 1,
+/// background 0.5.
+pub const DEFAULT_QOS_WEIGHTS: [f64; NUM_CLASSES] = [8.0, 4.0, 1.0, 0.5];
+
+/// QoS transfer-class configuration (the `[qos]` TOML section /
+/// `mma serve --qos on|off`).
+///
+/// Disabled (the default), every class weighs 1.0 and nothing is capped —
+/// the fabric degenerates to classic unweighted max-min and the engine to
+/// FIFO issue order, reproducing pre-QoS behavior exactly. Enabled, each
+/// [`TransferClass`] carries its share weight on every link it crosses,
+/// bulk-band flows may additionally be rate-capped, and the engine issues
+/// latency-critical chunks ahead of bulk ones.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosConfig {
+    /// Master switch. Off = the degenerate unweighted/FIFO case.
+    pub enabled: bool,
+    /// Per-class share weights, indexed by [`TransferClass::id`].
+    pub weights: [f64; NUM_CLASSES],
+    /// Per-flow rate ceiling (bytes/sec) applied to bulk-band classes
+    /// (`Bulk`, `Background`) while QoS is on; `INFINITY` = uncapped.
+    pub bulk_cap_bps: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            enabled: false,
+            weights: DEFAULT_QOS_WEIGHTS,
+            bulk_cap_bps: f64::INFINITY,
+        }
+    }
+}
+
+impl QosConfig {
+    /// QoS enabled at the default weights, no bulk cap.
+    pub fn on() -> QosConfig {
+        QosConfig {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+
+    /// QoS disabled (the degenerate unweighted case).
+    pub fn off() -> QosConfig {
+        QosConfig::default()
+    }
+
+    /// Fabric share weight for a class (1.0 while disabled).
+    pub fn weight(&self, class: TransferClass) -> f64 {
+        if self.enabled {
+            self.weights[class as usize]
+        } else {
+            1.0
+        }
+    }
+
+    /// Per-flow rate cap for a class (`INFINITY` unless QoS is on and the
+    /// class sits in the bulk band).
+    pub fn cap(&self, class: TransferClass) -> f64 {
+        if self.enabled && class.is_bulk_band() {
+            self.bulk_cap_bps
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Validate at config-load time (same stance as
+    /// [`PolicySpec::validate`]: a section that parses must not panic when
+    /// the world is built).
+    pub fn validate(&self) -> Result<(), String> {
+        for (c, w) in TransferClass::ALL.iter().zip(self.weights) {
+            if !(w.is_finite() && w > 0.0) {
+                return Err(format!("{} weight {w} must be positive and finite", c.name()));
+            }
+        }
+        if !(self.bulk_cap_bps > 0.0) {
+            return Err(format!("bulk cap {} must be positive", self.bulk_cap_bps));
+        }
+        Ok(())
+    }
+}
 
 /// Runtime tunables of MMA (all exposed as env vars in the paper's
 /// implementation; here via [`crate::config`] / CLI).
@@ -64,6 +148,9 @@ pub struct MmaConfig {
     pub activation_ns: u64,
     /// Observed/expected service-time ratio that marks a path contended.
     pub contention_beta: f64,
+    /// QoS transfer-class weights/caps and the class-aware engine
+    /// behavior switch (off by default: the degenerate unweighted case).
+    pub qos: QosConfig,
 }
 
 impl Default for MmaConfig {
@@ -81,6 +168,7 @@ impl Default for MmaConfig {
             centralized_dispatch: false,
             activation_ns: 15_000,
             contention_beta: 2.5,
+            qos: QosConfig::default(),
         }
     }
 }

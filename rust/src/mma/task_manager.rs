@@ -1,6 +1,12 @@
 //! Task Manager (§3.4.1): splits each transfer into fixed-size micro-tasks
-//! and maintains the destination-tagged micro-task queue of Figure 5.
+//! and maintains the destination-tagged micro-task queue of Figure 5 —
+//! now class-aware: every chunk carries its transfer's
+//! [`TransferClass`], and under QoS the queues issue latency-critical
+//! chunks ahead of bulk ones and refuse to steal bulk work onto paths
+//! with queued critical chunks (the steal guard lives in exactly one
+//! place: [`TaskManager::pop_steal_scored`]).
 
+use super::transfer_task::{TransferClass, NUM_CLASSES};
 use crate::gpusim::TransferId;
 use crate::topology::GpuId;
 use std::collections::VecDeque;
@@ -16,17 +22,45 @@ pub struct Chunk {
     pub bytes: u64,
     /// Destination (H2D) or source (D2H) GPU — the "color" in Figure 5.
     pub dest: GpuId,
+    /// The parent transfer's QoS class (issue priority + fabric weight).
+    pub class: TransferClass,
 }
 
-/// Destination-tagged micro-task queue. Chunks of the same destination keep
-/// FIFO order; `remaining_bytes` per destination drives the
+/// How a pull round may treat transfer classes. The engine derives one per
+/// worker wake-up from its QoS config and queue state; the all-false
+/// default reproduces the pre-QoS FIFO behavior exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PullClassPolicy {
+    /// Pop by class priority (latency-critical first, FIFO within a
+    /// class) instead of strict FIFO. Set when QoS is enabled.
+    pub by_class: bool,
+    /// This round may only pull critical-band chunks — the bulk depth
+    /// throttle: a queue already holding a bulk chunk in flight stops
+    /// taking more bulk work while critical flows are live anywhere.
+    pub critical_only: bool,
+    /// This path holds an in-flight critical chunk: bulk-band chunks may
+    /// not be *stolen* onto it (they would queue behind / contend with the
+    /// critical work on the same lane).
+    pub no_bulk_steal: bool,
+}
+
+/// Destination-tagged micro-task queue. Chunks of the same destination and
+/// class keep FIFO order; `remaining_bytes` per destination drives the
 /// longest-remaining-destination relay-stealing policy (§3.4.2).
 pub struct TaskManager {
     pending: Vec<VecDeque<Chunk>>,
+    /// Pending bytes per destination, all classes.
     remaining: Vec<u64>,
-    /// Statically pre-assigned chunks per path GPU (static-split baseline).
+    /// Pending bytes per destination in the critical band
+    /// (`LatencyCritical` + `Interactive`).
+    remaining_crit: Vec<u64>,
+    /// Statically pre-assigned chunks per path GPU (static-split baseline;
+    /// not class-reordered — static splitting has no adaptive machinery).
     assigned: Vec<VecDeque<Chunk>>,
     total_pending: usize,
+    /// Pending chunks per class across all destinations (the class-mix
+    /// surface policies see through `PolicyView`).
+    class_chunks: [u64; NUM_CLASSES],
 }
 
 impl TaskManager {
@@ -35,18 +69,21 @@ impl TaskManager {
         TaskManager {
             pending: (0..gpu_count).map(|_| VecDeque::new()).collect(),
             remaining: vec![0; gpu_count],
+            remaining_crit: vec![0; gpu_count],
             assigned: (0..gpu_count).map(|_| VecDeque::new()).collect(),
             total_pending: 0,
+            class_chunks: [0; NUM_CLASSES],
         }
     }
 
-    /// Split `bytes` into `chunk_bytes`-sized micro-tasks. The tail chunk
-    /// carries the remainder (never zero-sized).
+    /// Split `bytes` into `chunk_bytes`-sized micro-tasks of `class`. The
+    /// tail chunk carries the remainder (never zero-sized).
     pub fn split(
         transfer: TransferId,
         dest: GpuId,
         bytes: u64,
         chunk_bytes: u64,
+        class: TransferClass,
     ) -> Vec<Chunk> {
         assert!(bytes > 0, "empty transfer");
         let cb = chunk_bytes.max(1);
@@ -59,6 +96,7 @@ impl TaskManager {
                     index: i as u32,
                     bytes: (bytes - off).min(cb),
                     dest,
+                    class,
                 }
             })
             .collect()
@@ -68,8 +106,7 @@ impl TaskManager {
     pub fn push_pending(&mut self, chunks: &[Chunk]) {
         for c in chunks {
             self.pending[c.dest.0 as usize].push_back(*c);
-            self.remaining[c.dest.0 as usize] += c.bytes;
-            self.total_pending += 1;
+            self.book_push(c);
         }
     }
 
@@ -80,11 +117,13 @@ impl TaskManager {
         self.total_pending += 1;
     }
 
-    /// Pop the next direct micro-task for `gpu` (dest == gpu).
-    pub fn pop_direct(&mut self, gpu: GpuId) -> Option<Chunk> {
-        let c = self.pending[gpu.0 as usize].pop_front()?;
-        self.remaining[gpu.0 as usize] -= c.bytes;
-        self.total_pending -= 1;
+    /// Pop the next direct micro-task for `gpu` (dest == gpu). Under
+    /// `cp.by_class` the highest-priority class pops first (FIFO within a
+    /// class); `cp.critical_only` skips bulk-band chunks entirely.
+    pub fn pop_direct(&mut self, gpu: GpuId, cp: PullClassPolicy) -> Option<Chunk> {
+        let pos = self.select_pos(gpu, cp.by_class, cp.critical_only)?;
+        let c = self.pending[gpu.0 as usize].remove(pos).expect("selected pos in range");
+        self.book_pop(&c);
         Some(c)
     }
 
@@ -95,41 +134,40 @@ impl TaskManager {
         Some(c)
     }
 
-    /// Pop a relay micro-task for `gpu`: steals from the destination with
-    /// the most remaining pending bytes (§3.4.2, longest-remaining policy).
-    /// `eligible` filters candidate destinations (NUMA restrictions etc.).
-    pub fn pop_steal(
-        &mut self,
-        gpu: GpuId,
-        mut eligible: impl FnMut(GpuId) -> bool,
-    ) -> Option<Chunk> {
-        self.pop_steal_scored(gpu, |dest, remaining| {
-            if eligible(dest) {
-                Some(remaining as f64)
-            } else {
-                None
-            }
-        })
-    }
-
     /// Pop a relay micro-task for `gpu` from the destination with the
-    /// highest `score(dest, remaining_bytes)`; `None` scores mark a
+    /// highest `score(dest, stealable_bytes)`; `None` scores mark a
     /// destination ineligible, ties keep the lowest GPU index. This is the
-    /// generalized steal that [`crate::policy`] implementations rank with
-    /// (NUMA discounts, backlog thresholds, ...).
+    /// single scored steal every pull policy ranks with (longest-remaining
+    /// is `|_, rem| Some(rem as f64)`; NUMA discounts and backlog
+    /// thresholds layer on top) — and the one place the class-aware steal
+    /// guard lives: when QoS is on and this path has queued or in-flight
+    /// critical work (`cp.no_bulk_steal` / own pending critical direct
+    /// chunks), or the round is `critical_only`, bulk-band chunks are not
+    /// stealable and `stealable_bytes` counts only the critical band.
     pub fn pop_steal_scored(
         &mut self,
         gpu: GpuId,
+        cp: PullClassPolicy,
         mut score: impl FnMut(GpuId, u64) -> Option<f64>,
     ) -> Option<Chunk> {
+        let block_bulk = cp.by_class
+            && (cp.critical_only || cp.no_bulk_steal || self.has_critical_direct(gpu));
         let mut best: Option<GpuId> = None;
         let mut best_score = 0.0f64;
         for d in 0..self.pending.len() {
             let dest = GpuId(d as u8);
-            if dest == gpu || self.remaining[d] == 0 {
+            if dest == gpu {
                 continue;
             }
-            let Some(s) = score(dest, self.remaining[d]) else {
+            let stealable = if block_bulk {
+                self.remaining_crit[d]
+            } else {
+                self.remaining[d]
+            };
+            if stealable == 0 {
+                continue;
+            }
+            let Some(s) = score(dest, stealable) else {
                 continue;
             };
             if s > best_score {
@@ -138,9 +176,11 @@ impl TaskManager {
             }
         }
         let dest = best?;
-        let c = self.pending[dest.0 as usize].pop_front()?;
-        self.remaining[dest.0 as usize] -= c.bytes;
-        self.total_pending -= 1;
+        let pos = self
+            .select_pos(dest, cp.by_class, block_bulk)
+            .expect("stealable bytes imply an eligible chunk");
+        let c = self.pending[dest.0 as usize].remove(pos).expect("selected pos in range");
+        self.book_pop(&c);
         Some(c)
     }
 
@@ -152,6 +192,24 @@ impl TaskManager {
     /// Pending direct work available for `gpu`?
     pub fn has_direct(&self, gpu: GpuId) -> bool {
         !self.pending[gpu.0 as usize].is_empty()
+    }
+
+    /// Pending critical-band direct work for `gpu`?
+    pub fn has_critical_direct(&self, gpu: GpuId) -> bool {
+        self.remaining_crit[gpu.0 as usize] > 0
+    }
+
+    /// Pending critical-band chunks anywhere (the "critical flows are
+    /// live" half of the engine's bulk depth throttle).
+    pub fn critical_pending(&self) -> u64 {
+        self.class_chunks[TransferClass::LatencyCritical as usize]
+            + self.class_chunks[TransferClass::Interactive as usize]
+    }
+
+    /// Pending pull-mode chunks per class (the `PolicyView` class mix;
+    /// statically-assigned chunks are excluded — they are already placed).
+    pub fn pending_by_class(&self) -> [u64; NUM_CLASSES] {
+        self.class_chunks
     }
 
     /// Any statically-assigned work for `gpu`?
@@ -168,6 +226,53 @@ impl TaskManager {
     pub fn is_empty(&self) -> bool {
         self.total_pending == 0
     }
+
+    // ----- internals ---------------------------------------------------
+
+    /// Position of the next chunk to pop from `dest`'s pending queue:
+    /// front (FIFO) unless `by_class`, then the first occurrence of the
+    /// most urgent class present; `critical_only` restricts candidates to
+    /// the critical band. `None` when nothing is eligible.
+    fn select_pos(&self, dest: GpuId, by_class: bool, critical_only: bool) -> Option<usize> {
+        let q = &self.pending[dest.0 as usize];
+        if !by_class {
+            return if q.is_empty() { None } else { Some(0) };
+        }
+        let mut best: Option<(usize, TransferClass)> = None;
+        for (i, c) in q.iter().enumerate() {
+            if critical_only && c.class.is_bulk_band() {
+                continue;
+            }
+            match best {
+                Some((_, bc)) if bc <= c.class => {}
+                _ => best = Some((i, c.class)),
+            }
+            if c.class == TransferClass::LatencyCritical {
+                break; // nothing outranks it
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn book_push(&mut self, c: &Chunk) {
+        let d = c.dest.0 as usize;
+        self.remaining[d] += c.bytes;
+        if !c.class.is_bulk_band() {
+            self.remaining_crit[d] += c.bytes;
+        }
+        self.class_chunks[c.class as usize] += 1;
+        self.total_pending += 1;
+    }
+
+    fn book_pop(&mut self, c: &Chunk) {
+        let d = c.dest.0 as usize;
+        self.remaining[d] -= c.bytes;
+        if !c.class.is_bulk_band() {
+            self.remaining_crit[d] -= c.bytes;
+        }
+        self.class_chunks[c.class as usize] -= 1;
+        self.total_pending -= 1;
+    }
 }
 
 #[cfg(test)]
@@ -179,9 +284,39 @@ mod tests {
         TransferId(i)
     }
 
+    fn split(t: u32, dest: GpuId, bytes: u64, chunk: u64) -> Vec<Chunk> {
+        TaskManager::split(tid(t), dest, bytes, chunk, TransferClass::Interactive)
+    }
+
+    fn split_class(
+        t: u32,
+        dest: GpuId,
+        bytes: u64,
+        chunk: u64,
+        class: TransferClass,
+    ) -> Vec<Chunk> {
+        TaskManager::split(tid(t), dest, bytes, chunk, class)
+    }
+
+    const LEGACY: PullClassPolicy = PullClassPolicy {
+        by_class: false,
+        critical_only: false,
+        no_bulk_steal: false,
+    };
+
+    const QOS: PullClassPolicy = PullClassPolicy {
+        by_class: true,
+        critical_only: false,
+        no_bulk_steal: false,
+    };
+
+    fn steal_longest(tm: &mut TaskManager, gpu: GpuId, cp: PullClassPolicy) -> Option<Chunk> {
+        tm.pop_steal_scored(gpu, cp, |_, rem| Some(rem as f64))
+    }
+
     #[test]
     fn split_covers_all_bytes_exactly() {
-        let chunks = TaskManager::split(tid(1), GpuId(0), 12_000_000, 5_000_000);
+        let chunks = split(1, GpuId(0), 12_000_000, 5_000_000);
         assert_eq!(chunks.len(), 3);
         assert_eq!(chunks[0].bytes, 5_000_000);
         assert_eq!(chunks[1].bytes, 5_000_000);
@@ -189,6 +324,7 @@ mod tests {
         assert_eq!(chunks.iter().map(|c| c.bytes).sum::<u64>(), 12_000_000);
         for (i, c) in chunks.iter().enumerate() {
             assert_eq!(c.index, i as u32);
+            assert_eq!(c.class, TransferClass::Interactive);
         }
     }
 
@@ -197,7 +333,7 @@ mod tests {
         testkit::check("split-total", |rng| {
             let bytes = rng.range_u64(1, 1 << 34);
             let chunk = rng.range_u64(1, 64 << 20);
-            let chunks = TaskManager::split(tid(0), GpuId(1), bytes, chunk);
+            let chunks = split(0, GpuId(1), bytes, chunk);
             assert_eq!(chunks.iter().map(|c| c.bytes).sum::<u64>(), bytes);
             for c in &chunks[..chunks.len() - 1] {
                 assert_eq!(c.bytes, chunk);
@@ -210,24 +346,54 @@ mod tests {
     #[test]
     fn direct_pop_fifo_per_destination() {
         let mut tm = TaskManager::new(4);
-        let a = TaskManager::split(tid(1), GpuId(2), 10, 4);
+        let a = split(1, GpuId(2), 10, 4);
         tm.push_pending(&a);
         assert!(tm.has_direct(GpuId(2)));
         assert!(!tm.has_direct(GpuId(0)));
-        assert_eq!(tm.pop_direct(GpuId(2)).unwrap().index, 0);
-        assert_eq!(tm.pop_direct(GpuId(2)).unwrap().index, 1);
-        assert_eq!(tm.pop_direct(GpuId(2)).unwrap().index, 2);
-        assert!(tm.pop_direct(GpuId(2)).is_none());
+        assert_eq!(tm.pop_direct(GpuId(2), LEGACY).unwrap().index, 0);
+        assert_eq!(tm.pop_direct(GpuId(2), LEGACY).unwrap().index, 1);
+        assert_eq!(tm.pop_direct(GpuId(2), LEGACY).unwrap().index, 2);
+        assert!(tm.pop_direct(GpuId(2), LEGACY).is_none());
         assert!(tm.is_empty());
+    }
+
+    #[test]
+    fn class_priority_pop_reorders_only_under_qos() {
+        let mut tm = TaskManager::new(2);
+        tm.push_pending(&split_class(1, GpuId(0), 8, 4, TransferClass::Bulk));
+        tm.push_pending(&split_class(2, GpuId(0), 4, 4, TransferClass::LatencyCritical));
+        // Legacy FIFO: the earlier bulk chunk pops first.
+        assert_eq!(tm.pop_direct(GpuId(0), LEGACY).unwrap().class, TransferClass::Bulk);
+        // QoS: the critical chunk leapfrogs the remaining bulk one.
+        let c = tm.pop_direct(GpuId(0), QOS).unwrap();
+        assert_eq!(c.class, TransferClass::LatencyCritical);
+        assert_eq!(tm.pop_direct(GpuId(0), QOS).unwrap().class, TransferClass::Bulk);
+        assert!(tm.is_empty());
+    }
+
+    #[test]
+    fn critical_only_round_skips_bulk_band() {
+        let mut tm = TaskManager::new(2);
+        tm.push_pending(&split_class(1, GpuId(0), 4, 4, TransferClass::Background));
+        let throttled = PullClassPolicy {
+            critical_only: true,
+            ..QOS
+        };
+        assert!(tm.pop_direct(GpuId(0), throttled).is_none(), "bulk band throttled");
+        tm.push_pending(&split_class(2, GpuId(0), 4, 4, TransferClass::Interactive));
+        let c = tm.pop_direct(GpuId(0), throttled).unwrap();
+        assert_eq!(c.class, TransferClass::Interactive);
+        // The background chunk is still there for an unthrottled round.
+        assert_eq!(tm.pop_direct(GpuId(0), QOS).unwrap().class, TransferClass::Background);
     }
 
     #[test]
     fn steal_prefers_longest_remaining_destination() {
         let mut tm = TaskManager::new(4);
-        tm.push_pending(&TaskManager::split(tid(1), GpuId(1), 10_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(tid(2), GpuId(2), 30_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(1), 10_000_000, 5_000_000));
+        tm.push_pending(&split(2, GpuId(2), 30_000_000, 5_000_000));
         // GPU 0 steals: destination 2 has more remaining.
-        let c = tm.pop_steal(GpuId(0), |_| true).unwrap();
+        let c = steal_longest(&mut tm, GpuId(0), LEGACY).unwrap();
         assert_eq!(c.dest, GpuId(2));
         assert_eq!(tm.remaining_for(GpuId(2)), 25_000_000);
     }
@@ -235,40 +401,104 @@ mod tests {
     #[test]
     fn steal_never_takes_own_destination_or_ineligible() {
         let mut tm = TaskManager::new(4);
-        tm.push_pending(&TaskManager::split(tid(1), GpuId(0), 50_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(tid(2), GpuId(3), 10_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 50_000_000, 5_000_000));
+        tm.push_pending(&split(2, GpuId(3), 10_000_000, 5_000_000));
         // GPU 0's own work is not "relay" work.
-        let c = tm.pop_steal(GpuId(0), |_| true).unwrap();
+        let c = steal_longest(&mut tm, GpuId(0), LEGACY).unwrap();
         assert_eq!(c.dest, GpuId(3));
         // With destination 3 filtered out, nothing remains stealable.
-        assert!(tm.pop_steal(GpuId(0), |d| d != GpuId(3)).is_none());
+        let none = tm.pop_steal_scored(GpuId(0), LEGACY, |d, rem| {
+            (d != GpuId(3)).then_some(rem as f64)
+        });
+        assert!(none.is_none());
     }
 
     #[test]
     fn scored_steal_ranks_and_filters() {
         let mut tm = TaskManager::new(4);
-        tm.push_pending(&TaskManager::split(tid(1), GpuId(1), 10_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(tid(2), GpuId(2), 30_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(1), 10_000_000, 5_000_000));
+        tm.push_pending(&split(2, GpuId(2), 30_000_000, 5_000_000));
         // Inverted scoring: the *smaller* backlog wins.
         let c = tm
-            .pop_steal_scored(GpuId(0), |_, rem| Some(1.0 / rem as f64))
+            .pop_steal_scored(GpuId(0), LEGACY, |_, rem| Some(1.0 / rem as f64))
             .unwrap();
         assert_eq!(c.dest, GpuId(1));
         // None scores exclude destinations entirely.
         let c = tm
-            .pop_steal_scored(GpuId(0), |d, rem| {
+            .pop_steal_scored(GpuId(0), LEGACY, |d, rem| {
                 (d != GpuId(2)).then_some(rem as f64)
             })
             .unwrap();
         assert_eq!(c.dest, GpuId(1));
         // Zero scores never win (nothing stealable).
-        assert!(tm.pop_steal_scored(GpuId(0), |_, _| Some(0.0)).is_none());
+        assert!(tm.pop_steal_scored(GpuId(0), LEGACY, |_, _| Some(0.0)).is_none());
+    }
+
+    #[test]
+    fn steal_guard_blocks_bulk_onto_critical_paths() {
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&split_class(1, GpuId(2), 20_000_000, 5_000_000, TransferClass::Bulk));
+        // A path with an in-flight critical chunk refuses bulk steals...
+        let guarded = PullClassPolicy {
+            no_bulk_steal: true,
+            ..QOS
+        };
+        assert!(steal_longest(&mut tm, GpuId(0), guarded).is_none());
+        // ...but critical-band work may still be stolen onto it.
+        tm.push_pending(&split_class(
+            2,
+            GpuId(3),
+            5_000_000,
+            5_000_000,
+            TransferClass::LatencyCritical,
+        ));
+        let c = steal_longest(&mut tm, GpuId(0), guarded).unwrap();
+        assert_eq!(c.dest, GpuId(3));
+        assert_eq!(c.class, TransferClass::LatencyCritical);
+        // Without the guard (and without QoS at all) bulk steals freely.
+        let c = steal_longest(&mut tm, GpuId(0), LEGACY).unwrap();
+        assert_eq!(c.class, TransferClass::Bulk);
+    }
+
+    #[test]
+    fn pending_critical_direct_work_also_blocks_bulk_steals() {
+        // The guard's second trigger: the stealing GPU itself has queued
+        // critical direct chunks — taking bulk relay work would delay them.
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&split_class(
+            1,
+            GpuId(0),
+            5_000_000,
+            5_000_000,
+            TransferClass::LatencyCritical,
+        ));
+        tm.push_pending(&split_class(2, GpuId(2), 50_000_000, 5_000_000, TransferClass::Bulk));
+        assert!(tm.has_critical_direct(GpuId(0)));
+        assert!(
+            steal_longest(&mut tm, GpuId(0), QOS).is_none(),
+            "bulk steal must wait for the critical direct backlog"
+        );
+        // Another GPU with no critical work steals the bulk chunk fine.
+        assert!(steal_longest(&mut tm, GpuId(1), QOS).is_some());
+    }
+
+    #[test]
+    fn class_mix_surface_counts_pending_chunks() {
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&split_class(1, GpuId(0), 10, 4, TransferClass::LatencyCritical));
+        tm.push_pending(&split_class(2, GpuId(1), 4, 4, TransferClass::Bulk));
+        let mix = tm.pending_by_class();
+        assert_eq!(mix[TransferClass::LatencyCritical as usize], 3);
+        assert_eq!(mix[TransferClass::Bulk as usize], 1);
+        assert_eq!(tm.critical_pending(), 3);
+        tm.pop_direct(GpuId(0), QOS).unwrap();
+        assert_eq!(tm.critical_pending(), 2);
     }
 
     #[test]
     fn assigned_queue_is_per_path_gpu() {
         let mut tm = TaskManager::new(2);
-        let chunks = TaskManager::split(tid(1), GpuId(0), 9, 3);
+        let chunks = split(1, GpuId(0), 9, 3);
         tm.push_assigned(GpuId(0), chunks[0]);
         tm.push_assigned(GpuId(1), chunks[1]);
         tm.push_assigned(GpuId(1), chunks[2]);
@@ -284,22 +514,33 @@ mod tests {
         testkit::check("remaining-invariant", |rng| {
             let mut tm = TaskManager::new(4);
             let mut expect = [0u64; 4];
+            let mut expect_crit = [0u64; 4];
             for t in 0..rng.range_u64(1, 6) {
                 let dest = GpuId(rng.range_u64(0, 4) as u8);
                 let bytes = rng.range_u64(1, 40_000_000);
-                tm.push_pending(&TaskManager::split(tid(t as u32), dest, bytes, 5_000_000));
+                let class = TransferClass::from_id(rng.range_u64(0, 4) as u8);
+                tm.push_pending(&split_class(t as u32, dest, bytes, 5_000_000, class));
                 expect[dest.0 as usize] += bytes;
+                if !class.is_bulk_band() {
+                    expect_crit[dest.0 as usize] += bytes;
+                }
             }
-            // Drain randomly via direct and steal pops.
+            // Drain randomly via direct and steal pops, legacy and QoS.
             loop {
                 let g = GpuId(rng.range_u64(0, 4) as u8);
+                let cp = if rng.bool(0.5) { LEGACY } else { QOS };
                 let c = if rng.bool(0.5) {
-                    tm.pop_direct(g)
+                    tm.pop_direct(g, cp)
                 } else {
-                    tm.pop_steal(g, |_| true)
+                    steal_longest(&mut tm, g, cp)
                 };
                 match c {
-                    Some(c) => expect[c.dest.0 as usize] -= c.bytes,
+                    Some(c) => {
+                        expect[c.dest.0 as usize] -= c.bytes;
+                        if !c.class.is_bulk_band() {
+                            expect_crit[c.dest.0 as usize] -= c.bytes;
+                        }
+                    }
                     None => {
                         if tm.is_empty() {
                             break;
@@ -308,9 +549,11 @@ mod tests {
                 }
                 for d in 0..4 {
                     assert_eq!(tm.remaining_for(GpuId(d as u8)), expect[d]);
+                    assert_eq!(tm.has_critical_direct(GpuId(d as u8)), expect_crit[d] > 0);
                 }
             }
             assert_eq!(expect, [0, 0, 0, 0]);
+            assert_eq!(expect_crit, [0, 0, 0, 0]);
         });
     }
 }

@@ -4,9 +4,70 @@ use crate::gpusim::{FlagId, StreamId, TransferId};
 use crate::sim::Time;
 use crate::topology::{Direction, GpuId, NumaId};
 
-/// Caller-assigned traffic class, used by the figure harnesses to plot
-/// per-class bandwidth over time (Fig 9). Class 0 is "background".
-pub type TransferClass = u8;
+/// Number of QoS traffic classes (the [`TransferClass`] variants).
+pub const NUM_CLASSES: usize = 4;
+
+/// First-class QoS traffic class carried by every transfer, end to end:
+/// the fabric turns it into a weighted max-min share weight (plus an
+/// optional bulk rate cap), the engine into class-aware issue ordering and
+/// bulk depth throttling, and the serving layer tags its traffic with it.
+/// The discriminant doubles as the class's priority (lower = more urgent)
+/// and as its per-class bandwidth-sampling channel (Fig 9 time series).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TransferClass {
+    /// TTFT-critical traffic: prefix/KV fetches feeding a waiting request.
+    LatencyCritical = 0,
+    /// Request/decode-path traffic that users notice but that is not on
+    /// the first-token critical path. The default for untagged copies.
+    Interactive = 1,
+    /// Large throughput-bound movement: model sleep/wake weight reloads,
+    /// bulk KV offload sweeps.
+    Bulk = 2,
+    /// Best-effort background churn (prefetchers, co-running native apps).
+    Background = 3,
+}
+
+impl TransferClass {
+    /// Every class, in priority order (most urgent first).
+    pub const ALL: [TransferClass; NUM_CLASSES] = [
+        TransferClass::LatencyCritical,
+        TransferClass::Interactive,
+        TransferClass::Bulk,
+        TransferClass::Background,
+    ];
+
+    /// Stable wire id (flow-tag byte / sampling channel).
+    pub fn id(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Self::id`]; out-of-range ids clamp to `Background`.
+    pub fn from_id(id: u8) -> TransferClass {
+        match id {
+            0 => TransferClass::LatencyCritical,
+            1 => TransferClass::Interactive,
+            2 => TransferClass::Bulk,
+            _ => TransferClass::Background,
+        }
+    }
+
+    /// Is this one of the throughput-bound classes the QoS layer throttles
+    /// in favor of latency-critical traffic?
+    pub fn is_bulk_band(self) -> bool {
+        matches!(self, TransferClass::Bulk | TransferClass::Background)
+    }
+
+    /// Canonical lowercase name (config/CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferClass::LatencyCritical => "latency-critical",
+            TransferClass::Interactive => "interactive",
+            TransferClass::Bulk => "bulk",
+            TransferClass::Background => "background",
+        }
+    }
+}
 
 /// Description of one logical copy as submitted by the app: host↔GPU, or
 /// (when [`Self::peer`] is set) GPU→GPU over the NVLink fabric.
@@ -20,7 +81,7 @@ pub struct TransferDesc {
     pub host_numa: NumaId,
     /// Payload size in bytes.
     pub bytes: u64,
-    /// Traffic class for reporting.
+    /// QoS traffic class (weighted fabric share + engine issue priority).
     pub class: TransferClass,
     /// Peer source GPU for a GPU→GPU copy (`cudaMemcpyPeerAsync`). Peer
     /// copies ride the NVSwitch fabric as one native P2P DMA and are never
@@ -29,29 +90,37 @@ pub struct TransferDesc {
 }
 
 impl TransferDesc {
-    /// Convenience constructor for class-1 (foreground) host↔GPU traffic.
+    /// Convenience constructor for `Interactive`-class host↔GPU traffic
+    /// (the default for untagged copies).
     pub fn new(dir: Direction, gpu: GpuId, host_numa: NumaId, bytes: u64) -> TransferDesc {
         TransferDesc {
             dir,
             gpu,
             host_numa,
             bytes,
-            class: 1,
+            class: TransferClass::Interactive,
             peer: None,
         }
     }
 
     /// GPU→GPU peer copy: `src`'s HBM → `dst`'s HBM over the NVLink
-    /// fabric (class 1). `host_numa` is irrelevant for the peer path.
+    /// fabric (`Interactive` class). `host_numa` is irrelevant for the
+    /// peer path.
     pub fn p2p(src: GpuId, dst: GpuId, bytes: u64) -> TransferDesc {
         TransferDesc {
             dir: Direction::H2D,
             gpu: dst,
             host_numa: NumaId(0),
             bytes,
-            class: 1,
+            class: TransferClass::Interactive,
             peer: Some(src),
         }
+    }
+
+    /// Same descriptor re-tagged with a QoS class (builder style).
+    pub fn with_class(mut self, class: TransferClass) -> TransferDesc {
+        self.class = class;
+        self
     }
 }
 
@@ -184,6 +253,31 @@ mod tests {
         assert!((bw - 50e9).abs() < 1e6);
         // Host-visible bandwidth is lower because of the 5 ms queue wait.
         assert!(r.bandwidth().unwrap() < bw);
+    }
+
+    #[test]
+    fn class_ids_roundtrip_and_order_by_urgency() {
+        for c in TransferClass::ALL {
+            assert_eq!(TransferClass::from_id(c.id()), c);
+        }
+        assert_eq!(TransferClass::from_id(200), TransferClass::Background);
+        // Priority order: lower id = more urgent (Ord matches).
+        assert!(TransferClass::LatencyCritical < TransferClass::Interactive);
+        assert!(TransferClass::Interactive < TransferClass::Bulk);
+        assert!(TransferClass::Bulk < TransferClass::Background);
+        assert!(!TransferClass::Interactive.is_bulk_band());
+        assert!(TransferClass::Background.is_bulk_band());
+    }
+
+    #[test]
+    fn descriptors_default_interactive_and_retag() {
+        let d = TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 10);
+        assert_eq!(d.class, TransferClass::Interactive);
+        let d = d.with_class(TransferClass::LatencyCritical);
+        assert_eq!(d.class, TransferClass::LatencyCritical);
+        let p = TransferDesc::p2p(GpuId(0), GpuId(1), 10).with_class(TransferClass::Bulk);
+        assert_eq!(p.class, TransferClass::Bulk);
+        assert_eq!(p.peer, Some(GpuId(0)));
     }
 
     #[test]

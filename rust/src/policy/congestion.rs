@@ -85,7 +85,8 @@ impl TransferPolicy for CongestionFeedback {
         let numa_local_only = self.numa_local_only;
         // Greedy, with the EWMA gate layered onto relay eligibility.
         let relay_ok = super::in_relay_set(&self.relay_gpus, gpu) && self.share_ok(gpu);
-        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, |dest, remaining| {
+        let cp = view.class_pull;
+        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, cp, |dest, remaining| {
             if !numa_local_only || topo.numa_of(dest) == topo.numa_of(gpu) {
                 Some(remaining as f64)
             } else {
@@ -127,7 +128,19 @@ mod tests {
             dir: Direction::H2D,
             queues: &[],
             now: Time::ZERO,
+            class_pull: Default::default(),
+            class_pending: [0; crate::mma::NUM_CLASSES],
         }
+    }
+
+    fn split(t: u32, dest: GpuId, bytes: u64) -> Vec<crate::mma::task_manager::Chunk> {
+        TaskManager::split(
+            TransferId(t),
+            dest,
+            bytes,
+            5_000_000,
+            crate::mma::TransferClass::Interactive,
+        )
     }
 
     fn policy() -> CongestionFeedback {
@@ -159,7 +172,7 @@ mod tests {
         assert!(!p.share_ok(GpuId(1)));
 
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 50_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 50_000_000));
         // The degraded path declines relay work; the healthy one takes it.
         assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_none());
         assert!(p.pull(&mut tm, GpuId(2), &view(&topo)).unwrap().is_relay());
@@ -180,7 +193,7 @@ mod tests {
         p.on_completion(GpuId(0), 5_000_000, false, 2.5e-3, 80e-6);
         assert!(!p.share_ok(GpuId(0)));
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 10_000_000));
         // gpu0's own destination traffic is never gated.
         assert!(!p.pull(&mut tm, GpuId(0), &view(&topo)).unwrap().is_relay());
     }

@@ -51,7 +51,8 @@ impl TransferPolicy for MmaGreedy {
         let topo = view.topo;
         let numa_local_only = self.numa_local_only;
         let relay_ok = super::in_relay_set(&self.relay_gpus, gpu);
-        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, |dest, remaining| {
+        let cp = view.class_pull;
+        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, cp, |dest, remaining| {
             if !numa_local_only || topo.numa_of(dest) == topo.numa_of(gpu) {
                 Some(remaining as f64)
             } else {
@@ -65,7 +66,8 @@ impl TransferPolicy for MmaGreedy {
 mod tests {
     use super::*;
     use crate::gpusim::TransferId;
-    use crate::mma::task_manager::Chunk;
+    use crate::mma::task_manager::{Chunk, PullClassPolicy};
+    use crate::mma::TransferClass;
     use crate::sim::Time;
     use crate::topology::{h20x8, Direction, Topology};
 
@@ -75,12 +77,18 @@ mod tests {
             dir: Direction::H2D,
             queues: &[],
             now: Time::ZERO,
+            class_pull: PullClassPolicy::default(),
+            class_pending: [0; crate::mma::NUM_CLASSES],
         }
+    }
+
+    fn split(t: u32, dest: GpuId, bytes: u64) -> Vec<Chunk> {
+        TaskManager::split(TransferId(t), dest, bytes, 5_000_000, TransferClass::Interactive)
     }
 
     fn mgr_with(dest: GpuId, bytes: u64) -> TaskManager {
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), dest, bytes, 5_000_000));
+        tm.push_pending(&split(1, dest, bytes));
         tm
     }
 
@@ -89,8 +97,8 @@ mod tests {
         let topo = h20x8();
         let mut p = MmaGreedy::from_cfg(&MmaConfig::default());
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 10_000_000));
+        tm.push_pending(&split(2, GpuId(1), 50_000_000));
         // GPU 0 has own work → direct, even though dest 1 has more bytes.
         let got = p.pull(&mut tm, GpuId(0), &view(&topo)).unwrap();
         assert_eq!(
@@ -100,6 +108,7 @@ mod tests {
                 index: 0,
                 bytes: 5_000_000,
                 dest: GpuId(0),
+                class: TransferClass::Interactive,
             })
         );
     }
@@ -112,8 +121,8 @@ mod tests {
             ..MmaGreedy::from_cfg(&MmaConfig::default())
         };
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 10_000_000));
+        tm.push_pending(&split(2, GpuId(1), 50_000_000));
         let got = p.pull(&mut tm, GpuId(0), &view(&topo)).unwrap();
         assert!(got.is_relay(), "{got:?}");
         assert_eq!(got.chunk().dest, GpuId(1));

@@ -38,7 +38,8 @@ pub use native::NativeDirect;
 pub use numa_aware::NumaAware;
 pub use static_split::StaticSplit;
 
-use crate::mma::task_manager::{Chunk, TaskManager};
+use crate::mma::task_manager::{Chunk, PullClassPolicy, TaskManager};
+use crate::mma::transfer_task::{TransferClass, NUM_CLASSES};
 use crate::mma::MmaConfig;
 use crate::sim::Time;
 use crate::topology::{Direction, GpuId, LinkKind, Topology};
@@ -241,6 +242,13 @@ pub struct PolicyView<'a> {
     pub queues: &'a [OutstandingQueue],
     /// Current virtual time.
     pub now: Time,
+    /// How this pull round may treat QoS classes (class-priority pops,
+    /// bulk depth throttle, bulk-steal guard). All-false when QoS is off —
+    /// the legacy FIFO behavior.
+    pub class_pull: PullClassPolicy,
+    /// Pending pull-mode chunks per [`TransferClass`] id — the class mix a
+    /// policy can inspect (e.g. to spare PCIe for critical traffic).
+    pub class_pending: [u64; NUM_CLASSES],
 }
 
 /// A transfer policy: decides chunk→path placement for one engine
@@ -283,13 +291,25 @@ pub trait TransferPolicy {
     /// the NVLink fabric; `false` keeps it on the host→GPU path this
     /// policy would otherwise place (multipath or native). The default
     /// compares the NVLink pair bandwidth against the destination's PCIe
-    /// lane; policies with a better model of their own host-path
-    /// throughput can override.
-    fn prefer_peer_fetch(&self, topo: &Topology, src: GpuId, dst: GpuId, bytes: u64) -> bool {
+    /// lane — except for bulk-band classes, which prefer NVLink whenever a
+    /// peer path exists at all, sparing PCIe for latency-critical fetches.
+    /// Policies with a better model of their own host-path throughput can
+    /// override.
+    fn prefer_peer_fetch(
+        &self,
+        topo: &Topology,
+        src: GpuId,
+        dst: GpuId,
+        bytes: u64,
+        class: TransferClass,
+    ) -> bool {
         let _ = bytes;
         let nv = topo
             .capacity(topo.link(LinkKind::NvOut(src)))
             .min(topo.capacity(topo.link(LinkKind::NvIn(dst))));
+        if class.is_bulk_band() {
+            return nv > 0.0;
+        }
         nv > topo.pcie_capacity(dst, Direction::H2D)
     }
 }
@@ -310,25 +330,29 @@ pub fn in_relay_set(set: &Option<Vec<GpuId>>, gpu: GpuId) -> bool {
 ///    [`TaskManager::pop_steal_scored`]) when `relay_ok`;
 /// 3. own-destination work *after* stealing otherwise (the Table 2
 ///    ablation ordering).
+///
+/// `cp` (usually `view.class_pull`) carries the round's QoS class policy:
+/// class-priority pops, the bulk depth throttle, and the bulk-steal guard.
 pub fn greedy_pull(
     tm: &mut TaskManager,
     gpu: GpuId,
     direct_priority: bool,
     relay_ok: bool,
+    cp: PullClassPolicy,
     score: impl FnMut(GpuId, u64) -> Option<f64>,
 ) -> Option<Pulled> {
     if direct_priority {
-        if let Some(c) = tm.pop_direct(gpu) {
+        if let Some(c) = tm.pop_direct(gpu, cp) {
             return Some(Pulled::Direct(c));
         }
     }
     if relay_ok {
-        if let Some(c) = tm.pop_steal_scored(gpu, score) {
+        if let Some(c) = tm.pop_steal_scored(gpu, cp, score) {
             return Some(Pulled::Relay(c));
         }
     }
     if !direct_priority {
-        if let Some(c) = tm.pop_direct(gpu) {
+        if let Some(c) = tm.pop_direct(gpu, cp) {
             return Some(Pulled::Direct(c));
         }
     }
@@ -367,6 +391,10 @@ pub struct OutstandingQueue {
     pub slots: Vec<u64>,
     /// Depth limit.
     pub depth: usize,
+    /// In-flight critical-band (`LatencyCritical`/`Interactive`) chunks.
+    pub critical_inflight: u32,
+    /// In-flight bulk-band (`Bulk`/`Background`) chunks.
+    pub bulk_inflight: u32,
     /// Contention detected on this path (backoff mode, §3.4.2).
     pub contended: bool,
     /// CPU "transfer thread" is busy dispatching until this time.
@@ -380,6 +408,8 @@ impl OutstandingQueue {
             gpu,
             slots: Vec::with_capacity(depth),
             depth,
+            critical_inflight: 0,
+            bulk_inflight: 0,
             contended: false,
             busy_until: Time::ZERO,
         }
@@ -400,16 +430,26 @@ impl OutstandingQueue {
         self.slots.len() < self.effective_depth(backoff_enabled)
     }
 
-    /// Occupy a slot with a chunk key.
-    pub fn occupy(&mut self, key: u64) {
+    /// Occupy a slot with a chunk key of the given class.
+    pub fn occupy(&mut self, key: u64, class: TransferClass) {
         debug_assert!(self.slots.len() < self.depth);
         self.slots.push(key);
+        if class.is_bulk_band() {
+            self.bulk_inflight += 1;
+        } else {
+            self.critical_inflight += 1;
+        }
     }
 
     /// Retire a chunk key; returns true if it was present.
-    pub fn retire(&mut self, key: u64) -> bool {
+    pub fn retire(&mut self, key: u64, class: TransferClass) -> bool {
         if let Some(p) = self.slots.iter().position(|&k| k == key) {
             self.slots.swap_remove(p);
+            if class.is_bulk_band() {
+                self.bulk_inflight -= 1;
+            } else {
+                self.critical_inflight -= 1;
+            }
             true
         } else {
             false
@@ -534,18 +574,56 @@ mod tests {
     #[test]
     fn greedy_pull_skeleton_ordering() {
         use crate::gpusim::TransferId;
+        let cp = PullClassPolicy::default();
+        let cls = TransferClass::Interactive;
         let mut tm = TaskManager::new(4);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000, cls));
+        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(1), 50_000_000, 5_000_000, cls));
         // direct_priority: own work wins.
-        let p = greedy_pull(&mut tm, GpuId(0), true, true, |_, r| Some(r as f64)).unwrap();
+        let p = greedy_pull(&mut tm, GpuId(0), true, true, cp, |_, r| Some(r as f64)).unwrap();
         assert!(!p.is_relay());
         // without priority: steal first.
-        let p = greedy_pull(&mut tm, GpuId(0), false, true, |_, r| Some(r as f64)).unwrap();
+        let p = greedy_pull(&mut tm, GpuId(0), false, true, cp, |_, r| Some(r as f64)).unwrap();
         assert!(p.is_relay());
         // relay_ok=false: falls back to own work even without priority.
-        let p = greedy_pull(&mut tm, GpuId(0), false, false, |_, r| Some(r as f64)).unwrap();
+        let p = greedy_pull(&mut tm, GpuId(0), false, false, cp, |_, r| Some(r as f64)).unwrap();
         assert!(!p.is_relay());
+    }
+
+    #[test]
+    fn greedy_pull_honors_critical_only_rounds() {
+        use crate::gpusim::TransferId;
+        let mut tm = TaskManager::new(4);
+        tm.push_pending(&TaskManager::split(
+            TransferId(1),
+            GpuId(0),
+            10_000_000,
+            5_000_000,
+            TransferClass::Bulk,
+        ));
+        let throttled = PullClassPolicy {
+            by_class: true,
+            critical_only: true,
+            no_bulk_steal: false,
+        };
+        // A bulk-throttled round leaves bulk-band work queued...
+        assert!(greedy_pull(&mut tm, GpuId(0), true, true, throttled, |_, r| {
+            Some(r as f64)
+        })
+        .is_none());
+        // ...while critical work still flows.
+        tm.push_pending(&TaskManager::split(
+            TransferId(2),
+            GpuId(0),
+            5_000_000,
+            5_000_000,
+            TransferClass::LatencyCritical,
+        ));
+        let p = greedy_pull(&mut tm, GpuId(0), true, true, throttled, |_, r| {
+            Some(r as f64)
+        })
+        .unwrap();
+        assert_eq!(p.chunk().class, TransferClass::LatencyCritical);
     }
 
     #[test]
@@ -561,12 +639,36 @@ mod tests {
             PolicySpec::numa_aware(),
         ] {
             let p = spec.build(&cfg);
-            assert!(
-                p.prefer_peer_fetch(&topo, GpuId(0), GpuId(1), 1 << 30),
-                "{} must prefer the NVLink peer path on h20x8",
-                p.name()
-            );
+            for class in TransferClass::ALL {
+                assert!(
+                    p.prefer_peer_fetch(&topo, GpuId(0), GpuId(1), 1 << 30, class),
+                    "{} must prefer the NVLink peer path on h20x8 for {}",
+                    p.name(),
+                    class.name()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn bulk_band_prefers_any_peer_path_to_spare_pcie() {
+        // On a topology where the peer path is *slower* than the PCIe
+        // lane, latency-critical fetches keep PCIe, but bulk traffic still
+        // routes over NVLink to leave the lane to critical fetches.
+        let mut topo = crate::topology::h20x8();
+        let nv_out = topo.link(LinkKind::NvOut(GpuId(0)));
+        let nv_in = topo.link(LinkKind::NvIn(GpuId(1)));
+        topo.links[nv_out.0 as usize].capacity_bps = 10e9; // << 53.6 GB/s PCIe
+        topo.links[nv_in.0 as usize].capacity_bps = 10e9;
+        let p = PolicySpec::MmaGreedy.build(&MmaConfig::default());
+        assert!(!p.prefer_peer_fetch(
+            &topo,
+            GpuId(0),
+            GpuId(1),
+            1 << 30,
+            TransferClass::LatencyCritical
+        ));
+        assert!(p.prefer_peer_fetch(&topo, GpuId(0), GpuId(1), 1 << 30, TransferClass::Bulk));
     }
 
     #[test]
@@ -587,11 +689,13 @@ mod tests {
     fn outstanding_queue_capacity_and_backoff() {
         let mut q = OutstandingQueue::new(GpuId(0), 2);
         assert!(q.has_capacity(true));
-        q.occupy(1);
-        q.occupy(2);
+        q.occupy(1, TransferClass::LatencyCritical);
+        q.occupy(2, TransferClass::Bulk);
         assert!(!q.has_capacity(true));
-        assert!(q.retire(1));
-        assert!(!q.retire(1));
+        assert_eq!((q.critical_inflight, q.bulk_inflight), (1, 1));
+        assert!(q.retire(1, TransferClass::LatencyCritical));
+        assert!(!q.retire(1, TransferClass::LatencyCritical));
+        assert_eq!((q.critical_inflight, q.bulk_inflight), (0, 1));
         assert!(q.has_capacity(true));
         // Contended queues back off to depth 1.
         q.contended = true;

@@ -20,8 +20,8 @@ impl TransferPolicy for NativeDirect {
         "native"
     }
 
-    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, _view: &PolicyView) -> Option<Pulled> {
-        tm.pop_direct(gpu).map(Pulled::Direct)
+    fn pull(&mut self, tm: &mut TaskManager, gpu: GpuId, view: &PolicyView) -> Option<Pulled> {
+        tm.pop_direct(gpu, view.class_pull).map(Pulled::Direct)
     }
 }
 
@@ -40,10 +40,18 @@ mod tests {
             dir: Direction::H2D,
             queues: &[],
             now: Time::ZERO,
+            class_pull: Default::default(),
+            class_pending: [0; crate::mma::NUM_CLASSES],
         };
         let mut p = NativeDirect;
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 50_000_000, 5_000_000));
+        tm.push_pending(&TaskManager::split(
+            TransferId(1),
+            GpuId(0),
+            50_000_000,
+            5_000_000,
+            crate::mma::TransferClass::Interactive,
+        ));
         // A would-be relay path gets nothing...
         assert!(p.pull(&mut tm, GpuId(1), &view).is_none());
         // ...while the destination drains its own queue.

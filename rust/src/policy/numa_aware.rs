@@ -62,7 +62,8 @@ impl TransferPolicy for NumaAware {
         let min_remote = self.min_remote_bytes;
         let numa_local_only = self.numa_local_only;
         let relay_ok = super::in_relay_set(&self.relay_gpus, gpu);
-        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, |dest, remaining| {
+        let cp = view.class_pull;
+        super::greedy_pull(tm, gpu, self.direct_priority, relay_ok, cp, |dest, remaining| {
             if topo.numa_of(dest) == my_numa {
                 Some(remaining as f64)
             } else if !numa_local_only && penalty > 0.0 && remaining >= min_remote {
@@ -87,7 +88,19 @@ mod tests {
             dir: Direction::H2D,
             queues: &[],
             now: Time::ZERO,
+            class_pull: Default::default(),
+            class_pending: [0; crate::mma::NUM_CLASSES],
         }
+    }
+
+    fn split(t: u32, dest: GpuId, bytes: u64) -> Vec<crate::mma::task_manager::Chunk> {
+        TaskManager::split(
+            TransferId(t),
+            dest,
+            bytes,
+            5_000_000,
+            crate::mma::TransferClass::Interactive,
+        )
     }
 
     fn policy() -> NumaAware {
@@ -100,7 +113,7 @@ mod tests {
         let mut p = policy();
         let mut tm = TaskManager::new(8);
         // 10 MB destined to gpu0 (numa0): below the 32 MB remote bar.
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 10_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 10_000_000));
         // gpu5 (numa1) refuses the cross-socket hop...
         assert!(p.pull(&mut tm, GpuId(5), &view(&topo)).is_none());
         // ...but gpu1 (numa0) relays it.
@@ -112,7 +125,7 @@ mod tests {
         let topo = h20x8();
         let mut p = policy();
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 200_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 200_000_000));
         let got = p.pull(&mut tm, GpuId(5), &view(&topo)).unwrap();
         assert!(got.is_relay());
         assert_eq!(got.chunk().dest, GpuId(0));
@@ -125,15 +138,15 @@ mod tests {
         let mut tm = TaskManager::new(8);
         // gpu6 (numa1): 100 MB local backlog on gpu4 vs 300 MB remote on
         // gpu0. Discounted remote score 75 MB < 100 MB local → helps local.
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 300_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(4), 100_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 300_000_000));
+        tm.push_pending(&split(2, GpuId(4), 100_000_000));
         let got = p.pull(&mut tm, GpuId(6), &view(&topo)).unwrap();
         assert_eq!(got.chunk().dest, GpuId(4));
         // At 4x the local backlog, the remote destination wins even after
         // the 0.25x discount.
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 500_000_000, 5_000_000));
-        tm.push_pending(&TaskManager::split(TransferId(2), GpuId(4), 100_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 500_000_000));
+        tm.push_pending(&split(2, GpuId(4), 100_000_000));
         let got = p.pull(&mut tm, GpuId(6), &view(&topo)).unwrap();
         assert_eq!(got.chunk().dest, GpuId(0));
     }
@@ -149,7 +162,7 @@ mod tests {
         let mut tm = TaskManager::new(8);
         // 500 MB remote backlog, far above the soft threshold — still
         // refused because the shared hard gate is set.
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 500_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 500_000_000));
         assert!(p.pull(&mut tm, GpuId(5), &view(&topo)).is_none());
         assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_some());
     }
@@ -159,7 +172,7 @@ mod tests {
         let topo = h20x8();
         let mut p = NumaAware::new(&MmaConfig::default(), 0.0, 0);
         let mut tm = TaskManager::new(8);
-        tm.push_pending(&TaskManager::split(TransferId(1), GpuId(0), 500_000_000, 5_000_000));
+        tm.push_pending(&split(1, GpuId(0), 500_000_000));
         assert!(p.pull(&mut tm, GpuId(5), &view(&topo)).is_none());
         assert!(p.pull(&mut tm, GpuId(1), &view(&topo)).is_some());
     }

@@ -72,11 +72,19 @@ mod tests {
             dir: Direction::H2D,
             queues: &[],
             now: Time::ZERO,
+            class_pull: Default::default(),
+            class_pending: [0; crate::mma::NUM_CLASSES],
         };
         let mut p = StaticSplit::new(vec![(GpuId(0), 1.0), (GpuId(1), 2.0)]);
         let mut tm = TaskManager::new(8);
         // 30 MB → 6 chunks; 1:2 split → 2 on gpu0 (direct), 4 on gpu1.
-        let chunks = TaskManager::split(TransferId(0), GpuId(0), 30_000_000, 5_000_000);
+        let chunks = TaskManager::split(
+            TransferId(0),
+            GpuId(0),
+            30_000_000,
+            5_000_000,
+            crate::mma::TransferClass::Interactive,
+        );
         p.admit(&chunks, &mut tm, &view);
         let mut direct = 0;
         let mut relay = 0;

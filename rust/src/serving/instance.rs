@@ -15,6 +15,13 @@
 //! multipaths) and a *sibling GPU's HBM* (fetched peer-to-peer over the
 //! NVLink fabric). Which of the two carries the fetch is a
 //! [`crate::policy::TransferPolicy::prefer_peer_fetch`] decision.
+//!
+//! QoS classes: prefix/KV fetches gate a waiting request's first token
+//! and are tagged [`TransferClass::LatencyCritical`]; any other traffic an
+//! instance submits rides the `Interactive` default, while registry
+//! sleep/wake weight movement is `Bulk` and background loops
+//! `Background` — so an on-demand wake routed onto a serving instance can
+//! no longer trample its TTFT-critical fetches when QoS is enabled.
 
 use super::kv_cache::{KvCacheManager, SeqId};
 use super::prefix_cache::{GpuPrefixTier, HostPrefixPool};
@@ -22,7 +29,7 @@ use super::scheduler::{Phase, Request, RequestId, Scheduler};
 use crate::config::ServingConfig;
 use crate::memory::HbmAllocator;
 use crate::metrics::TtftBreakdown;
-use crate::mma::{SimWorld, StreamHandle, TransferDesc};
+use crate::mma::{SimWorld, StreamHandle, TransferClass, TransferDesc};
 use crate::models::ModelSpec;
 use crate::roofline::GpuRoofline;
 use crate::sim::Time;
@@ -462,9 +469,11 @@ impl ServingInstance {
                 let host_tokens = shared.host.peek(req.prefix_key);
                 match (peer, host_tokens) {
                     // Both copies exist: the transfer policy decides
-                    // host-multipath vs peer-NVLink.
+                    // host-multipath vs peer-NVLink. Prefix fetches gate a
+                    // waiting request's first token → LatencyCritical.
                     (Some((pg, pt)), Some(ht)) => {
-                        if world.prefer_peer_fetch(pg, self.gpu, bytes) {
+                        let class = TransferClass::LatencyCritical;
+                        if world.prefer_peer_fetch(pg, self.gpu, bytes, class) {
                             Some((FetchSource::Peer(pg), pt))
                         } else {
                             Some((FetchSource::Host, ht))
@@ -513,6 +522,10 @@ impl ServingInstance {
                             } else {
                                 per
                             };
+                            // Every fetch chunk is tagged LatencyCritical:
+                            // under QoS it outweighs co-running bulk wakes
+                            // on every shared link and issues first in the
+                            // engine's class-aware queues.
                             let tid = match src {
                                 FetchSource::Host => world.memcpy_async(
                                     fetch_stream,
@@ -521,11 +534,14 @@ impl ServingInstance {
                                         self.gpu,
                                         self.host_numa,
                                         sz,
-                                    ),
+                                    )
+                                    .with_class(TransferClass::LatencyCritical),
                                 ),
-                                FetchSource::Peer(pg) => {
-                                    world.p2p_async(fetch_stream, pg, sz)
-                                }
+                                FetchSource::Peer(pg) => world.memcpy_async(
+                                    fetch_stream,
+                                    TransferDesc::p2p(pg, self.gpu, sz)
+                                        .with_class(TransferClass::LatencyCritical),
+                                ),
                             };
                             self.inflight_fetch.insert(tid.0, rid);
                         }

@@ -91,8 +91,11 @@ impl PendingPhase {
 pub struct ModelRegistry {
     instances: Vec<Instance>,
     host_numa: NumaId,
-    /// Traffic class stamped on weight transfers (per-class bandwidth
-    /// sampling in coexistence figures). Default 1 (foreground).
+    /// QoS class stamped on weight transfers. Defaults to
+    /// [`TransferClass::Bulk`]: sleep/wake weight movement is
+    /// throughput-bound, and under QoS it yields shared-link bandwidth to
+    /// latency-critical serving fetches (weighted fabric shares + engine
+    /// issue order) instead of trampling them.
     pub transfer_class: TransferClass,
 }
 
@@ -110,7 +113,7 @@ impl ModelRegistry {
         ModelRegistry {
             instances: Vec::new(),
             host_numa,
-            transfer_class: 1,
+            transfer_class: TransferClass::Bulk,
         }
     }
 

@@ -2,7 +2,7 @@
 //! under realistic serving scenarios, plus determinism and failure cases.
 
 use mma::config::{FleetConfig, RunConfig, ServingConfig};
-use mma::mma::{MmaConfig, SimWorld, TransferDesc};
+use mma::mma::{MmaConfig, SimWorld, TransferClass, TransferDesc};
 use mma::models::{qwen3_4b, qwen_7b_chat};
 use mma::policy::PolicySpec;
 use mma::serving::{
@@ -149,7 +149,7 @@ fn backpressure_shifts_work_off_contended_path() {
     // other switch.
     let mut w = SimWorld::new(h20x8(), MmaConfig::default());
     let bg_path = w.topo.h2d_direct(NumaId(0), GpuId(1));
-    w.start_bg_loop(bg_path, 512 << 20, 30, 2);
+    w.start_bg_loop(bg_path, 512 << 20, 30, TransferClass::Bulk);
     let s = w.stream(GpuId(0));
     w.memcpy_async(s, h2d(0, 4 << 30));
     w.run_until_idle();
@@ -433,6 +433,45 @@ fn model_wake_coruns_with_serving_traffic() {
     );
 }
 
+#[test]
+fn qos_shields_serving_fetch_from_corunning_wake() {
+    // The same wake-co-run scenario, with the multipath engine on both
+    // sides: the 32B wake (Bulk) multipaths across every PCIe lane,
+    // trampling the serving fetch (LatencyCritical) when QoS is off.
+    // With `[qos]` enabled the fetch holds its weighted share of every
+    // shared link and issues first in the engine queues, so its TTFT
+    // fetch component must strictly improve — while the wake still lands.
+    let ctx = 16_384u32;
+    let run = |qos_on: bool| {
+        let mut mcfg = MmaConfig::default();
+        mcfg.qos.enabled = qos_on;
+        let mut e = serving_engine(ServingConfig::default(), mcfg, 0.05);
+        let mut reg = ModelRegistry::new(NumaId(1));
+        let m = reg.register(mma::models::qwen3_32b(), vec![GpuId(4)]);
+        reg.sleep(e.world_mut(), m);
+        e.seed_host_prefix(1, ctx);
+        let arrival = e.world().now();
+        let wake = reg.start_wake(e.world_mut(), m);
+        let out = e.run(vec![Request {
+            arrival,
+            ..hit_request(1, ctx, 1)
+        }]);
+        let phase = wake.wait(e.world_mut());
+        (out[0].ttft.fetch_s, phase.transfer.as_secs_f64())
+    };
+    let (fetch_off, wake_off) = run(false);
+    let (fetch_on, wake_on) = run(true);
+    assert!(
+        fetch_on < fetch_off,
+        "QoS must shield the fetch: on {fetch_on} vs off {fetch_off}"
+    );
+    assert!(wake_on > 0.0 && wake_off > 0.0, "wake completes either way");
+    assert!(
+        wake_on < 5.0 * wake_off,
+        "wake may only degrade modestly: on {wake_on} vs off {wake_off}"
+    );
+}
+
 // ----- multi-GPU serving fleet ---------------------------------------
 
 fn serving_fleet(gpus: u32, peer_fetch: bool, mma: MmaConfig, prefill_s: f64) -> ServingFleet {
@@ -469,7 +508,7 @@ fn peer_nvlink_hit_beats_host_fetch_under_pcie_contention() {
     let run = |peer: bool| {
         let mut f = serving_fleet(2, peer, MmaConfig::native(), 0.05);
         let bg_path = f.world.topo.h2d_direct(NumaId(0), GpuId(1));
-        f.world.start_bg_loop(bg_path, 512 << 20, 500, 2);
+        f.world.start_bg_loop(bg_path, 512 << 20, 500, TransferClass::Bulk);
         f.seed_host_prefix(7, ctx);
         let out = f.run(vec![
             hit_request(1, ctx, 7),
