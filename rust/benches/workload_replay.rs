@@ -1,0 +1,18 @@
+//! Trace-driven workload replay: TTFT mean/p99, prefix-hit rate, and
+//! PCIe utilization per arrival shape (Poisson vs MMPP bursts at equal
+//! mean rate) × transfer policy × QoS.
+//!
+//! `--fast` (or `MMA_FAST_BENCH=1`) shrinks the run for smoke checks;
+//! `--seed N` pins the trace generation.
+
+use mma::figures::{workload_replay, DEFAULT_SEED};
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    let seed = args.seed_or(DEFAULT_SEED);
+    println!("=== Workload replay: TTFT vs arrival burstiness x policy x QoS ===");
+    let t = workload_replay(fast, seed);
+    t.print();
+}

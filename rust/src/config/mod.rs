@@ -89,6 +89,99 @@ impl Default for FleetConfig {
     }
 }
 
+/// Workload-layer knobs: the default trace for `mma replay` and the
+/// generator parameters `mma trace gen` starts from (every key has a CLI
+/// flag override; see `docs/CONFIG.md`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// Trace file replayed when `mma replay` gets no positional path
+    /// (`MMA_TRACE` overrides).
+    pub trace: Option<String>,
+    /// Arrival shape for generation: `poisson` | `bursty` | `diurnal`
+    /// (`MMA_WORKLOAD` overrides).
+    pub arrivals: String,
+    /// Mean offered rate, requests/second.
+    pub rate_rps: f64,
+    /// Burst intensity in `[0, 1)`: MMPP rate swing for `bursty`,
+    /// sinusoidal amplitude for `diurnal`. Ignored by `poisson`.
+    pub burstiness: f64,
+    /// Mean MMPP state dwell, seconds (`bursty` only).
+    pub dwell_s: f64,
+    /// Diurnal cycle length, seconds (`diurnal` only).
+    pub period_s: f64,
+    /// Requests to generate.
+    pub requests: u32,
+    /// Tenants in the mix (1 = the legacy shared namespace).
+    pub tenants: u32,
+    /// Documents per tenant.
+    pub docs_per_tenant: u32,
+    /// Zipf exponent of document popularity (0 = uniform).
+    pub zipf_s: f64,
+    /// Document context length, tokens.
+    pub context_tokens: u32,
+    /// Fresh tokens appended per request.
+    pub suffix_tokens: u32,
+    /// Output tokens per request.
+    pub output_tokens: u32,
+    /// Documents were ingested by a previous session: even a document's
+    /// first touch claims its context as cached prefix, and replay
+    /// pre-seeds the host tier (the §5.2.1 warm-tier setup).
+    pub warm_start: bool,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            trace: None,
+            arrivals: "poisson".to_string(),
+            rate_rps: 8.0,
+            burstiness: 0.8,
+            dwell_s: 2.0,
+            period_s: 60.0,
+            requests: 64,
+            tenants: 2,
+            docs_per_tenant: 6,
+            zipf_s: 1.1,
+            context_tokens: 16_384,
+            suffix_tokens: 64,
+            output_tokens: 16,
+            warm_start: false,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Reject parameter combinations the generators would panic on.
+    pub fn validate(&self) -> Result<(), String> {
+        if !matches!(self.arrivals.as_str(), "poisson" | "bursty" | "mmpp" | "diurnal") {
+            return Err(format!(
+                "unknown arrivals {:?} (poisson | bursty | diurnal)",
+                self.arrivals
+            ));
+        }
+        let rate_ok = self.rate_rps.is_finite() && self.rate_rps > 0.0;
+        if !rate_ok {
+            return Err(format!("rate_rps {} must be > 0", self.rate_rps));
+        }
+        if !(0.0..1.0).contains(&self.burstiness) {
+            return Err(format!("burstiness {} must be in [0, 1)", self.burstiness));
+        }
+        if self.dwell_s <= 0.0 || self.period_s <= 0.0 {
+            return Err("dwell_s and period_s must be > 0".to_string());
+        }
+        if self.requests == 0 || self.tenants == 0 || self.docs_per_tenant == 0 {
+            return Err("requests, tenants, docs_per_tenant must be >= 1".to_string());
+        }
+        if self.zipf_s < 0.0 {
+            return Err(format!("zipf_s {} must be >= 0", self.zipf_s));
+        }
+        if self.context_tokens == 0 || self.output_tokens == 0 {
+            return Err("context_tokens and output_tokens must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -100,6 +193,8 @@ pub struct RunConfig {
     pub serving: ServingConfig,
     /// Fleet knobs.
     pub fleet: FleetConfig,
+    /// Workload knobs.
+    pub workload: WorkloadConfig,
 }
 
 impl Default for RunConfig {
@@ -109,6 +204,7 @@ impl Default for RunConfig {
             mma: MmaConfig::default(),
             serving: ServingConfig::default(),
             fleet: FleetConfig::default(),
+            workload: WorkloadConfig::default(),
         }
     }
 }
@@ -131,6 +227,7 @@ impl RunConfig {
                 "qos" => apply_qos(&mut cfg.mma, table)?,
                 "serving" => apply_serving(&mut cfg.serving, table)?,
                 "fleet" => apply_fleet(&mut cfg.fleet, table)?,
+                "workload" => apply_workload(&mut cfg.workload, table)?,
                 other => return Err(format!("unknown section [{other}]")),
             }
         }
@@ -143,6 +240,9 @@ impl RunConfig {
             .validate(gpu_count)
             .map_err(|e| format!("[policy] {e}"))?;
         cfg.mma.qos.validate().map_err(|e| format!("[qos] {e}"))?;
+        cfg.workload
+            .validate()
+            .map_err(|e| format!("[workload] {e}"))?;
         if cfg.fleet.gpus as usize > gpu_count {
             return Err(format!(
                 "[fleet] gpus = {} exceeds the preset's {gpu_count} GPUs",
@@ -155,8 +255,10 @@ impl RunConfig {
     /// Apply the paper's environment-variable overrides
     /// (`MMA_CHUNK_SIZE`, `MMA_RELAY_GPUS`, `MMA_THRESHOLD`,
     /// `MMA_FLOW_CONTROL`, `MMA_DISABLE`), plus `MMA_POLICY` naming a
-    /// transfer policy (see [`PolicySpec::parse`]) and `MMA_QOS`
-    /// (`on`/`off`) toggling the QoS transfer classes.
+    /// transfer policy (see [`PolicySpec::parse`]), `MMA_QOS`
+    /// (`on`/`off`) toggling the QoS transfer classes, `MMA_TRACE`
+    /// naming the default replay trace, and `MMA_WORKLOAD` naming the
+    /// generator arrival shape (`poisson`/`bursty`/`diurnal`).
     pub fn apply_env(&mut self) {
         let get = |k: &str| std::env::var(k).ok();
         if let Some(v) = get("MMA_CHUNK_SIZE") {
@@ -192,6 +294,18 @@ impl RunConfig {
                 "on" | "1" | "true" | "yes" => self.mma.qos.enabled = true,
                 "off" | "0" | "false" | "no" => self.mma.qos.enabled = false,
                 _ => {}
+            }
+        }
+        if let Some(v) = get("MMA_TRACE") {
+            if !v.is_empty() {
+                self.workload.trace = Some(v);
+            }
+        }
+        if let Some(v) = get("MMA_WORKLOAD") {
+            // Same stance as MMA_POLICY: an unknown shape changes nothing.
+            let v = v.to_ascii_lowercase();
+            if matches!(v.as_str(), "poisson" | "bursty" | "mmpp" | "diurnal") {
+                self.workload.arrivals = v;
             }
         }
         if get("MMA_DISABLE").is_some() {
@@ -452,6 +566,65 @@ fn apply_fleet(f: &mut FleetConfig, table: &BTreeMap<String, TomlValue>) -> Resu
             ("peer_fetch", TomlValue::Bool(b)) => f.peer_fetch = *b,
             ("prefix_affinity", TomlValue::Bool(b)) => f.prefix_affinity = *b,
             _ => return Err(format!("unknown or mistyped key {k:?} in [fleet]")),
+        }
+    }
+    Ok(())
+}
+
+/// `[workload]` section: the default replay trace and the trace-generator
+/// parameters (`mma trace gen` flags override per run).
+///
+/// ```text
+/// [workload]
+/// trace = "examples/sample_trace.jsonl"  # default `mma replay` input
+/// arrivals = "bursty"       # poisson | bursty | diurnal
+/// rate_rps = 8.0            # mean offered rate
+/// burstiness = 0.8          # MMPP swing / diurnal amplitude, [0, 1)
+/// dwell_s = 2.0             # MMPP mean state dwell (bursty)
+/// period_s = 60.0           # diurnal cycle length
+/// requests = 64
+/// tenants = 2               # 1 = legacy shared prefix namespace
+/// docs_per_tenant = 6
+/// zipf_s = 1.1              # document popularity skew (0 = uniform)
+/// context_tokens = 16384
+/// suffix_tokens = 64
+/// output_tokens = 16
+/// warm_start = false        # first doc touches claim a warm host tier
+/// ```
+fn apply_workload(
+    w: &mut WorkloadConfig,
+    table: &BTreeMap<String, TomlValue>,
+) -> Result<(), String> {
+    let float = |v: &TomlValue| match v {
+        TomlValue::Float(f) => Some(*f),
+        TomlValue::Int(i) => Some(*i as f64),
+        _ => None,
+    };
+    // Unlike a bare `as u32`, this refuses negatives and oversizes
+    // instead of silently wrapping them into huge valid-looking values.
+    let u32v = |k: &str, i: i64| -> Result<u32, String> {
+        u32::try_from(i).map_err(|_| format!("key {k:?}: {i} out of range (0..=4294967295)"))
+    };
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("trace", TomlValue::Str(s)) => w.trace = Some(s.clone()),
+            ("trace", _) => return bad(k, "string"),
+            ("arrivals", TomlValue::Str(s)) => w.arrivals = s.clone(),
+            ("arrivals", _) => return bad(k, "string"),
+            ("rate_rps", v) => w.rate_rps = float(v).ok_or("rate_rps: number")?,
+            ("burstiness", v) => w.burstiness = float(v).ok_or("burstiness: number")?,
+            ("dwell_s", v) => w.dwell_s = float(v).ok_or("dwell_s: number")?,
+            ("period_s", v) => w.period_s = float(v).ok_or("period_s: number")?,
+            ("requests", TomlValue::Int(i)) => w.requests = u32v(k, *i)?,
+            ("tenants", TomlValue::Int(i)) => w.tenants = u32v(k, *i)?,
+            ("docs_per_tenant", TomlValue::Int(i)) => w.docs_per_tenant = u32v(k, *i)?,
+            ("zipf_s", v) => w.zipf_s = float(v).ok_or("zipf_s: number")?,
+            ("context_tokens", TomlValue::Int(i)) => w.context_tokens = u32v(k, *i)?,
+            ("suffix_tokens", TomlValue::Int(i)) => w.suffix_tokens = u32v(k, *i)?,
+            ("output_tokens", TomlValue::Int(i)) => w.output_tokens = u32v(k, *i)?,
+            ("warm_start", TomlValue::Bool(b)) => w.warm_start = *b,
+            ("warm_start", _) => return bad(k, "bool"),
+            _ => return Err(format!("unknown or mistyped key {k:?} in [workload]")),
         }
     }
     Ok(())
@@ -727,6 +900,68 @@ mod tests {
         assert_eq!(capped.cap(TransferClass::Bulk), 5e9);
         assert_eq!(capped.cap(TransferClass::Background), 5e9);
         assert!(capped.cap(TransferClass::LatencyCritical).is_infinite());
+    }
+
+    #[test]
+    fn workload_section_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [workload]
+            trace = "examples/sample_trace.jsonl"
+            arrivals = "bursty"
+            rate_rps = 12.5
+            burstiness = 0.9
+            dwell_s = 1.5
+            requests = 32
+            tenants = 3
+            docs_per_tenant = 4
+            zipf_s = 1.3
+            context_tokens = 8192
+            warm_start = true
+            "#,
+        )
+        .unwrap();
+        let w = &cfg.workload;
+        assert!(w.warm_start);
+        assert_eq!(w.trace.as_deref(), Some("examples/sample_trace.jsonl"));
+        assert_eq!(w.arrivals, "bursty");
+        assert_eq!(w.rate_rps, 12.5);
+        assert_eq!(w.burstiness, 0.9);
+        assert_eq!(w.dwell_s, 1.5);
+        assert_eq!((w.requests, w.tenants, w.docs_per_tenant), (32, 3, 4));
+        assert_eq!(w.zipf_s, 1.3);
+        assert_eq!(w.context_tokens, 8192);
+        // Untouched keys keep their defaults.
+        let d = WorkloadConfig::default();
+        assert_eq!(w.period_s, d.period_s);
+        assert_eq!(w.output_tokens, d.output_tokens);
+        assert!(d.validate().is_ok(), "defaults must validate");
+        // Rejections: unknown shape, out-of-range numbers, unknown keys.
+        assert!(RunConfig::from_toml("[workload]\narrivals = \"weibull\"").is_err());
+        assert!(RunConfig::from_toml("[workload]\nrate_rps = 0").is_err());
+        assert!(RunConfig::from_toml("[workload]\nburstiness = 1.5").is_err());
+        assert!(RunConfig::from_toml("[workload]\nrequests = 0").is_err());
+        assert!(RunConfig::from_toml("[workload]\nnope = 1").is_err());
+        assert!(RunConfig::from_toml("[workload]\ntrace = 5").is_err());
+        // Negative / oversized integers error instead of wrapping.
+        assert!(RunConfig::from_toml("[workload]\nrequests = -1").is_err());
+        assert!(RunConfig::from_toml("[workload]\ntenants = 5000000000").is_err());
+    }
+
+    #[test]
+    fn workload_env_overrides() {
+        std::env::set_var("MMA_TRACE", "/tmp/t.jsonl");
+        std::env::set_var("MMA_WORKLOAD", "diurnal");
+        let mut cfg = RunConfig::default();
+        cfg.apply_env();
+        assert_eq!(cfg.workload.trace.as_deref(), Some("/tmp/t.jsonl"));
+        assert_eq!(cfg.workload.arrivals, "diurnal");
+        // Unknown shape names change nothing (MMA_POLICY stance).
+        std::env::set_var("MMA_WORKLOAD", "weibull");
+        cfg.apply_env();
+        assert_eq!(cfg.workload.arrivals, "diurnal");
+        std::env::remove_var("MMA_TRACE");
+        std::env::remove_var("MMA_WORKLOAD");
     }
 
     #[test]

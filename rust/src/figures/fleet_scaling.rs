@@ -98,6 +98,8 @@ pub fn fleet_run(
             cached_prefix_tokens: context,
             prefix_key: keys[i % n_docs],
             output_tokens: 8,
+            tenant: 0,
+            class: None,
         })
         .collect();
     let out = f.run(reqs);

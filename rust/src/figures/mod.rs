@@ -9,6 +9,7 @@ pub mod qos_isolation;
 pub mod robust;
 pub mod serve_concurrency;
 pub mod serving_figs;
+pub mod workload_replay;
 
 pub use fleet_scaling::fleet_scaling;
 pub use micro::{
@@ -20,6 +21,7 @@ pub use qos_isolation::qos_isolation;
 pub use robust::{fig10_static_split, fig11_cpu_overhead, fig9_coexistence};
 pub use serve_concurrency::serve_concurrency;
 pub use serving_figs::{fig12_ttft, fig13_switching, fig2_ttft_share, fig3_swap_share};
+pub use workload_replay::workload_replay;
 
 use crate::topology::h20x8;
 use crate::util::table::Table;
@@ -62,18 +64,19 @@ pub fn run_by_name(id: &str, fast: bool, seed: u64) -> Option<String> {
         "concurrency" | "serve_concurrency" => serve_concurrency(fast, seed).render(),
         "fleet" | "fleet_scaling" => fleet_scaling(fast, seed).render(),
         "qos" | "qos_isolation" => qos_isolation(fast, seed).render(),
+        "replay" | "workload_replay" => workload_replay(fast, seed).render(),
         _ => return None,
     };
     Some(s)
 }
 
 /// All figure ids, in paper order (the policy sweep, the serving
-/// concurrency sweep, the fleet-scaling sweep, and the QoS-isolation
-/// co-run are this repo's own).
+/// concurrency sweep, the fleet-scaling sweep, the QoS-isolation co-run,
+/// and the workload-replay sweep are this repo's own).
 pub fn all_ids() -> &'static [&'static str] {
     &[
         "table1", "2", "3", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "table2",
-        "policy", "concurrency", "fleet", "qos",
+        "policy", "concurrency", "fleet", "qos", "replay",
     ]
 }
 

@@ -93,6 +93,8 @@ pub fn qos_corun(ctx: u32, with_wake: bool, qos_on: bool, n: usize, seed: u64) -
             cached_prefix_tokens: ctx,
             prefix_key: k,
             output_tokens: 2,
+            tenant: 0,
+            class: None,
         })
         .collect();
     let out = e.run(reqs);

@@ -110,6 +110,8 @@ pub fn fig9_coexistence() -> Table {
             cached_prefix_tokens: 65_536,
             prefix_key: 11,
             output_tokens: 4,
+            tenant: 0,
+            class: None,
         }]);
         wake.wait(eng.world_mut());
         eng.world_mut().run_until_idle(); // flush the remaining sampling window

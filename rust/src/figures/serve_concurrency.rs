@@ -68,6 +68,8 @@ pub fn concurrency_run(
             cached_prefix_tokens: context,
             prefix_key: key,
             output_tokens: 8,
+            tenant: 0,
+            class: None,
         });
     }
     let out = eng.run(reqs);

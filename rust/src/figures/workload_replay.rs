@@ -1,0 +1,594 @@
+//! Trace-driven workload replay: feed any [`Trace`] through the serving
+//! fleet deterministically and report TTFT, prefix-hit, and fabric-
+//! utilization metrics — same trace + same configuration ⇒ byte-identical
+//! output.
+//!
+//! The figure compares arrival shapes at *equal mean rate*: Poisson
+//! arrivals (the classic assumption every §5.2-style sweep makes) vs an
+//! MMPP burst process, across transfer policies and QoS on/off. Bursts
+//! expose queueing tails Poisson hides — the reason the workload layer
+//! grew a trace format in the first place.
+//!
+//! Model-switch traces (`workload::model_switch_trace`) additionally
+//! drive [`ModelRegistry`] sleep/wake from the trace's model boundaries:
+//! the outgoing model's D2H sleep and the incoming model's H2D wake are
+//! issued *mid-replay* on sidecar GPUs, so switch weight traffic contends
+//! with live serving fetches on the shared fabric (the paper's sleep-mode
+//! switching scenario under realistic load).
+
+use crate::config::{FleetConfig, ServingConfig};
+use crate::metrics::Summary;
+use crate::mma::{MmaConfig, SimWorld};
+use crate::models::{self, qwen_7b_chat, ModelSpec};
+use crate::roofline::h20;
+use crate::serving::{Compute, ModelRegistry, ModelState, RoutePolicy, ServingFleet};
+use crate::topology::{h20x8, Direction, GpuId, NumaId};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workload::{ArrivalProcess, TenantSpec, Trace, TraceGen};
+
+/// Namespace for replay's model-switch timer tokens ("SWIT" tag), kept
+/// out of the fleet's arrival-token namespace.
+const SWITCH_TOKEN_BASE: u64 = 0x5357_4954 << 32;
+
+/// Replay options beyond the fleet/serving/MMA configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayOptions {
+    /// Start every instance asleep, so the trace's first arrivals drive
+    /// on-demand, non-blocking wakes (cold-start under load).
+    pub sleep_all: bool,
+    /// Follow the trace's model boundaries: at each switch, sleep the
+    /// outgoing model and wake the incoming one on sidecar GPUs,
+    /// co-running with the serving traffic.
+    pub follow_switches: bool,
+    /// Replay only the first N records (0 = all; `mma replay --fast`).
+    pub max_requests: usize,
+}
+
+/// Aggregate result of one replay run. All fields derive from the
+/// deterministic simulation, so [`Self::render`] is byte-stable.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    /// Requests replayed.
+    pub requests: usize,
+    /// Trace span (last arrival), seconds.
+    pub trace_span_s: f64,
+    /// Makespan (last request fully finished), seconds.
+    pub makespan_s: f64,
+    /// Mean TTFT, seconds.
+    pub mean_ttft: f64,
+    /// Median TTFT, seconds.
+    pub p50_ttft: f64,
+    /// p99 TTFT, seconds.
+    pub p99_ttft: f64,
+    /// Admitted prefills that reused a cached prefix.
+    pub prefix_hits: u64,
+    /// Admitted prefills that ran cold.
+    pub prefix_misses: u64,
+    /// Host-tier fetches across the fleet.
+    pub host_fetches: u64,
+    /// Peer-NVLink fetches across the fleet.
+    pub peer_fetches: u64,
+    /// Bytes moved by host-tier fetches.
+    pub host_fetch_bytes: u64,
+    /// Mean host-PCIe utilization of the serving lanes over the makespan
+    /// (host fetch bytes / (makespan × per-lane H2D capacity × lanes)).
+    pub pcie_utilization: f64,
+    /// Requests routed to each instance.
+    pub per_instance: Vec<u32>,
+    /// Per-tenant `(tenant, requests, mean TTFT s)`, ascending tenant.
+    pub per_tenant: Vec<(u32, usize, f64)>,
+    /// On-demand instance wakes (the `sleep_all` path).
+    pub wakes: usize,
+    /// Model switches performed (the `follow_switches` path).
+    pub switches: usize,
+    /// Total switch weight-transfer time, seconds.
+    pub switch_transfer_s: f64,
+}
+
+impl ReplayReport {
+    /// Prefix-hit rate over admitted prefills.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
+    }
+
+    /// The deterministic metrics block `mma replay` prints. Same trace +
+    /// same seed/config ⇒ byte-identical text (the acceptance gate).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests          {}\ntrace span        {:.6} s\nmakespan          {:.6} s\n",
+            self.requests, self.trace_span_s, self.makespan_s
+        ));
+        s.push_str(&format!(
+            "ttft mean/p50/p99 {:.6} / {:.6} / {:.6} s\n",
+            self.mean_ttft, self.p50_ttft, self.p99_ttft
+        ));
+        s.push_str(&format!(
+            "prefix hits       {} / {} ({:.1}%)\n",
+            self.prefix_hits,
+            self.prefix_hits + self.prefix_misses,
+            100.0 * self.hit_rate()
+        ));
+        s.push_str(&format!(
+            "fetches           {} host ({} B), {} peer\n",
+            self.host_fetches, self.host_fetch_bytes, self.peer_fetches
+        ));
+        s.push_str(&format!(
+            "pcie utilization  {:.1}%\nper-instance      {:?}\n",
+            100.0 * self.pcie_utilization,
+            self.per_instance
+        ));
+        for (t, n, ttft) in &self.per_tenant {
+            s.push_str(&format!(
+                "tenant {t:<3} {n:>5} requests, mean ttft {ttft:.6} s\n"
+            ));
+        }
+        if self.wakes > 0 {
+            s.push_str(&format!("on-demand wakes   {}\n", self.wakes));
+        }
+        if self.switches > 0 {
+            s.push_str(&format!(
+                "model switches    {} (transfer {:.6} s total)\n",
+                self.switches, self.switch_transfer_s
+            ));
+        }
+        s
+    }
+}
+
+/// Widen an existing `[serving]` configuration for a replay run: pools
+/// and batch budget grow so admission, not capacity, governs the
+/// measured concurrency; every other knob (tp, block sizes, PD mode,
+/// fetch chunking ...) is honored as configured.
+pub fn replay_serving_from(base: &ServingConfig) -> ServingConfig {
+    ServingConfig {
+        gpu_kv_blocks: 1 << 20, // clamped to HBM by the instance
+        host_kv_blocks: 1 << 22,
+        max_batch_tokens: 512 * 1024,
+        ..base.clone()
+    }
+}
+
+/// Default replay serving config: [`replay_serving_from`] the defaults,
+/// in aggregated (non-PD) mode so promoted prefixes stay GPU-resident
+/// and peer-fetchable (same stance as the other serving sweeps).
+pub fn replay_serving() -> ServingConfig {
+    ServingConfig {
+        pd_disaggregation: false,
+        ..replay_serving_from(&ServingConfig::default())
+    }
+}
+
+/// Replay `trace` through a serving fleet. Deterministic: the trace
+/// fixes arrivals, the simulation fixes everything else.
+pub fn replay(
+    trace: &Trace,
+    model: &ModelSpec,
+    mma: MmaConfig,
+    serving: ServingConfig,
+    fleet_cfg: FleetConfig,
+    opts: &ReplayOptions,
+) -> ReplayReport {
+    let trace = if opts.max_requests > 0 {
+        trace.truncated(opts.max_requests)
+    } else {
+        trace.clone()
+    };
+    let world = SimWorld::new(h20x8(), mma);
+    let computes: Vec<Box<dyn Compute>> = (0..fleet_cfg.gpus)
+        .map(|_| Box::new(h20()) as Box<dyn Compute>)
+        .collect();
+    let mut f = ServingFleet::new(
+        fleet_cfg,
+        serving,
+        model.clone(),
+        world,
+        computes,
+        NumaId(0),
+    );
+    // Warm state the trace claims a previous session left in the host
+    // tier: seed it before the first arrival, tenant-namespaced.
+    for (tenant, key, tokens) in trace.warm_prefixes() {
+        f.seed_tenant_prefix(tenant, key, tokens);
+    }
+    if opts.sleep_all {
+        for i in 0..f.instance_count() {
+            f.sleep_instance(i);
+        }
+    }
+
+    // Model-switch schedule: every boundary where consecutive arrivals
+    // change model becomes a world timer; the hook sleeps the outgoing
+    // model and wakes the incoming one on sidecar GPUs (top of the GPU
+    // range, away from the serving instances when the fleet leaves room).
+    let mut reg = ModelRegistry::new(NumaId(0));
+    let mut boundaries: Vec<(usize, usize)> = Vec::new(); // (from, to) model idx
+    let mut boundary_times: Vec<f64> = Vec::new();
+    let mut phases = Vec::new();
+    if opts.follow_switches {
+        let names = trace.models();
+        if names.len() > 1 {
+            let gpu_count = f.world.topo.gpu_count();
+            for (k, name) in names.iter().enumerate() {
+                let spec = models::by_name(name).unwrap_or_else(|| model.clone());
+                let gpu = GpuId((gpu_count - 1 - (k % gpu_count)) as u8);
+                reg.register(spec, vec![gpu]);
+            }
+            let mut sorted: Vec<&crate::workload::TraceRecord> =
+                trace.records.iter().collect();
+            sorted.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+            // Everything but the first phase's model starts host-side.
+            if let Some(first) = sorted.first() {
+                let first_idx = names.iter().position(|n| *n == first.model).unwrap();
+                for k in 0..names.len() {
+                    if k != first_idx {
+                        reg.sleep(&mut f.world, k);
+                    }
+                }
+            }
+            for w in sorted.windows(2) {
+                if w[1].model != w[0].model {
+                    let from = names.iter().position(|n| *n == w[0].model).unwrap();
+                    let to = names.iter().position(|n| *n == w[1].model).unwrap();
+                    boundaries.push((from, to));
+                    boundary_times.push(w[1].arrival_s);
+                }
+            }
+        }
+    }
+
+    // Setup (initial sleeps) ran on the shared clock, so trace time 0 is
+    // *now*: offset every arrival and switch timer by it, keeping the
+    // trace's relative schedule exact.
+    let t0 = f.now();
+    for (i, &bt) in boundary_times.iter().enumerate() {
+        let token = SWITCH_TOKEN_BASE | i as u64;
+        f.world
+            .schedule_timer(t0 + crate::sim::Time::from_secs_f64(bt), token);
+    }
+    let mut reqs = trace.requests();
+    for r in &mut reqs {
+        r.arrival = t0 + r.arrival;
+    }
+    let mut switches = 0usize;
+    let out = f.run_with(reqs, |world, token| {
+        if (token & SWITCH_TOKEN_BASE) != SWITCH_TOKEN_BASE {
+            return;
+        }
+        let idx = (token ^ SWITCH_TOKEN_BASE) as usize;
+        let Some(&(from, to)) = boundaries.get(idx) else {
+            return;
+        };
+        // The registry flips residency at issue time, so the guards hold
+        // even while an earlier phase's transfers are still in flight
+        // (the flights just contend — that is the point).
+        if reg.instance(from).state == ModelState::Active {
+            phases.push(reg.start_sleep(world, from));
+        }
+        if reg.instance(to).state == ModelState::Asleep {
+            phases.push(reg.start_wake(world, to));
+            switches += 1;
+        }
+    });
+
+    // Drain any switch phases still in flight so their cost is complete.
+    let mut switch_transfer_s = 0.0;
+    for p in &phases {
+        switch_transfer_s += p.wait(&mut f.world).transfer.as_secs_f64();
+    }
+
+    let mut ttft = Summary::new();
+    let mut makespan = 0.0f64;
+    let mut tenant_sums: Vec<(u32, usize, f64)> = Vec::new();
+    for (o, r) in out.iter().zip(&trace.records) {
+        ttft.record(o.ttft_s());
+        if let Some(fin) = o.finished_at {
+            // Relative to trace start (t0), like every other metric.
+            makespan = makespan.max(fin.since(t0).as_secs_f64());
+        }
+        match tenant_sums.iter_mut().find(|(t, _, _)| *t == r.tenant) {
+            Some((_, n, sum)) => {
+                *n += 1;
+                *sum += o.ttft_s();
+            }
+            None => tenant_sums.push((r.tenant, 1, o.ttft_s())),
+        }
+    }
+    tenant_sums.sort_by_key(|(t, _, _)| *t);
+    let per_tenant = tenant_sums
+        .into_iter()
+        .map(|(t, n, sum)| (t, n, sum / n.max(1) as f64))
+        .collect();
+
+    let (prefix_hits, prefix_misses) = f.prefix_hit_counts();
+    let (host_fetches, peer_fetches) = f.fetch_counts();
+    let (host_fetch_bytes, _peer_bytes) = f.fetch_bytes();
+    let lane_bps = f.world.topo.pcie_capacity(GpuId(0), Direction::H2D);
+    let lanes = f.instance_count() as f64;
+    let pcie_utilization = if makespan > 0.0 {
+        host_fetch_bytes as f64 / (makespan * lane_bps * lanes)
+    } else {
+        0.0
+    };
+    ReplayReport {
+        requests: out.len(),
+        trace_span_s: trace.duration_s(),
+        makespan_s: makespan,
+        mean_ttft: ttft.mean(),
+        p50_ttft: ttft.p50(),
+        p99_ttft: ttft.p99(),
+        prefix_hits,
+        prefix_misses,
+        host_fetches,
+        peer_fetches,
+        host_fetch_bytes,
+        pcie_utilization,
+        per_instance: f.per_instance_counts(),
+        per_tenant,
+        wakes: f.wake_costs.len(),
+        switches,
+        switch_transfer_s,
+    }
+}
+
+/// The figure's two-tenant mix: tenant 1 is an interactive chat tenant
+/// (latency-critical fetches), tenant 2 a batch tenant tagged `bulk` —
+/// the class dimension QoS acts on. Warm-start (documents ingested by a
+/// previous session) puts every fetch on the host tier, the
+/// bandwidth-bound regime the paper studies.
+fn figure_tenants(context: u32, docs: usize) -> Vec<TenantSpec> {
+    let mut chat = TenantSpec::interactive(1, docs, context);
+    chat.share = 2.0;
+    chat.warm_start = true;
+    let mut batch = TenantSpec::interactive(2, docs, context);
+    batch.share = 1.0;
+    batch.class = Some(crate::mma::TransferClass::Bulk);
+    batch.warm_start = true;
+    vec![chat, batch]
+}
+
+/// One figure cell: generate the trace for `arrivals` and replay it.
+fn figure_cell(
+    arrivals: ArrivalProcess,
+    context: u32,
+    docs: usize,
+    requests: usize,
+    gpus: u32,
+    mma: MmaConfig,
+    seed: u64,
+) -> ReplayReport {
+    let gen = TraceGen {
+        arrivals,
+        tenants: figure_tenants(context, docs),
+        requests,
+    };
+    let trace = gen.generate(&mut Rng::seed_from_u64(seed));
+    let fleet = FleetConfig {
+        gpus,
+        router: RoutePolicy::RoundRobin,
+        peer_fetch: true,
+        prefix_affinity: false,
+    };
+    replay(
+        &trace,
+        &qwen_7b_chat(),
+        mma,
+        replay_serving(),
+        fleet,
+        &ReplayOptions::default(),
+    )
+}
+
+/// The sweep: TTFT mean/p99 + prefix-hit + PCIe-utilization per arrival
+/// shape × policy × QoS, at *equal mean offered rate* across shapes.
+pub fn workload_replay(fast: bool, seed: u64) -> Table {
+    let context = if fast { 8_192 } else { 16_384 };
+    let docs = if fast { 4 } else { 8 };
+    let requests = if fast { 32 } else { 96 };
+    let gpus = if fast { 2 } else { 4 };
+    let rate = if fast { 24.0 } else { 16.0 };
+    let shapes: [(&str, ArrivalProcess); 2] = [
+        ("poisson", ArrivalProcess::Poisson { rate_rps: rate }),
+        ("bursty", ArrivalProcess::bursty(rate, 0.9, 2.0)),
+    ];
+    let mut t = Table::new([
+        "arrivals",
+        "policy",
+        "qos",
+        "mean TTFT (s)",
+        "p99 TTFT (s)",
+        "hit rate",
+        "pcie util",
+        "host/peer fetches",
+    ]);
+    for (shape_name, shape) in shapes {
+        for (policy_name, mma, qos) in [
+            ("native", MmaConfig::native(), false),
+            ("mma-greedy", MmaConfig::default(), false),
+            ("mma-greedy", MmaConfig::default(), true),
+        ] {
+            let mut mma = mma;
+            mma.qos.enabled = qos;
+            let r = figure_cell(
+                shape.clone(),
+                context,
+                docs,
+                requests,
+                gpus,
+                mma,
+                seed,
+            );
+            t.row([
+                shape_name.to_string(),
+                policy_name.to_string(),
+                if qos { "on" } else { "off" }.to_string(),
+                format!("{:.3}", r.mean_ttft),
+                format!("{:.3}", r.p99_ttft),
+                format!("{:.0}%", 100.0 * r.hit_rate()),
+                format!("{:.0}%", 100.0 * r.pcie_utilization),
+                format!("{}/{}", r.host_fetches, r.peer_fetches),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::model_switch_trace;
+
+    const SEED: u64 = crate::figures::DEFAULT_SEED;
+
+    fn small_cell(shape: ArrivalProcess) -> ReplayReport {
+        figure_cell(shape, 8_192, 4, 40, 2, MmaConfig::native(), SEED)
+    }
+
+    #[test]
+    fn bursty_arrivals_raise_the_tail_at_equal_mean_rate() {
+        // The acceptance gate: same mean offered rate, same service
+        // capacity — the MMPP trace's queueing tail must clearly exceed
+        // the Poisson one.
+        let poisson = small_cell(ArrivalProcess::Poisson { rate_rps: 20.0 });
+        let bursty = small_cell(ArrivalProcess::bursty(20.0, 0.9, 2.0));
+        assert_eq!(poisson.requests, 40);
+        assert!(
+            bursty.p99_ttft > 1.2 * poisson.p99_ttft,
+            "bursts must expose a queueing tail: bursty p99 {} vs poisson p99 {}",
+            bursty.p99_ttft,
+            poisson.p99_ttft
+        );
+        // Both shapes reuse prefixes (the Zipf mix) and move host bytes.
+        assert!(poisson.hit_rate() > 0.2, "hit rate {}", poisson.hit_rate());
+        assert!(poisson.host_fetch_bytes > 0);
+        assert!(poisson.pcie_utilization > 0.0 && poisson.pcie_utilization <= 1.0);
+    }
+
+    #[test]
+    fn replay_is_deterministic_to_the_byte() {
+        let a = small_cell(ArrivalProcess::bursty(20.0, 0.9, 2.0));
+        let b = small_cell(ArrivalProcess::bursty(20.0, 0.9, 2.0));
+        assert_eq!(a.render(), b.render(), "same trace+seed ⇒ identical metrics");
+    }
+
+    #[test]
+    fn sleep_all_records_on_demand_wakes() {
+        let gen = TraceGen {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 10.0 },
+            tenants: vec![TenantSpec::interactive(0, 2, 4_096)],
+            requests: 8,
+        };
+        let trace = gen.generate(&mut Rng::seed_from_u64(SEED));
+        let fleet = FleetConfig {
+            gpus: 2,
+            router: RoutePolicy::RoundRobin,
+            peer_fetch: true,
+            prefix_affinity: false,
+        };
+        let opts = ReplayOptions {
+            sleep_all: true,
+            ..Default::default()
+        };
+        let r = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            fleet,
+            &opts,
+        );
+        assert!(r.wakes >= 1, "cold-start replay must wake instances");
+        assert_eq!(r.requests, 8);
+        assert!(r.render().contains("on-demand wakes"));
+    }
+
+    #[test]
+    fn model_switch_trace_drives_registry_phases() {
+        let models = vec!["qwen-7b-chat".to_string(), "qwen3-4b".to_string()];
+        let trace = model_switch_trace(
+            &mut Rng::seed_from_u64(SEED),
+            &models,
+            6.0,
+            2.0,
+            4_096,
+            36,
+        );
+        let fleet = FleetConfig {
+            gpus: 2,
+            router: RoutePolicy::RoundRobin,
+            peer_fetch: true,
+            prefix_affinity: false,
+        };
+        let opts = ReplayOptions {
+            follow_switches: true,
+            ..Default::default()
+        };
+        let r = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            fleet,
+            &opts,
+        );
+        assert!(r.switches >= 1, "model boundaries must trigger switches");
+        assert!(
+            r.switch_transfer_s > 0.0,
+            "switch weight movement must cost transfer time"
+        );
+        assert!(r.render().contains("model switches"));
+        // Deterministic too.
+        let r2 = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            fleet,
+            &opts,
+        );
+        assert_eq!(r.render(), r2.render());
+    }
+
+    #[test]
+    fn max_requests_truncates() {
+        let gen = TraceGen {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 10.0 },
+            tenants: vec![TenantSpec::interactive(0, 2, 4_096)],
+            requests: 20,
+        };
+        let trace = gen.generate(&mut Rng::seed_from_u64(SEED));
+        let fleet = FleetConfig {
+            gpus: 1,
+            router: RoutePolicy::RoundRobin,
+            peer_fetch: false,
+            prefix_affinity: false,
+        };
+        let opts = ReplayOptions {
+            max_requests: 5,
+            ..Default::default()
+        };
+        let r = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            fleet,
+            &opts,
+        );
+        assert_eq!(r.requests, 5);
+    }
+
+    #[test]
+    fn figure_renders_both_shapes() {
+        let s = workload_replay(true, SEED).render();
+        for needle in ["poisson", "bursty", "native", "mma-greedy"] {
+            assert!(s.contains(needle), "missing {needle}:\n{s}");
+        }
+    }
+}

@@ -38,8 +38,22 @@
 //! * [`runtime`] — PJRT client: loads AOT-compiled JAX/Pallas artifacts and
 //!   executes the real model on the serving path (stubbed without the
 //!   `pjrt` feature).
+//! * [`workload`] — trace-driven and generated request streams: the
+//!   versioned JSONL trace format (`mma replay` / `mma trace gen`),
+//!   Poisson / MMPP-bursty / diurnal arrival processes, multi-tenant
+//!   mixes with Zipf document popularity, and model-switch schedules.
 //! * [`figures`] — one runner per paper table/figure, plus the
-//!   cross-policy `policy_sweep`.
+//!   cross-policy `policy_sweep` and the repo's own serving sweeps
+//!   (`serve_concurrency`, `fleet_scaling`, `qos_isolation`,
+//!   `workload_replay`).
+//!
+//! The docs book under `docs/` maps paper sections to modules
+//! (`docs/PAPER_MAP.md`) and documents every configuration surface
+//! (`docs/CONFIG.md`).
+
+// Every public item carries documentation; the CI lint job enforces it
+// (clippy runs with -D warnings, which promotes this lint).
+#![warn(missing_docs)]
 
 pub mod testkit;
 pub mod util;

@@ -9,8 +9,28 @@
 //!           [--gpus N] [--router round-robin|least-loaded]
 //!           [--peer-fetch true|false] [--prefix-affinity] [--qos on|off]
 //! mma switch [--model qwen3-32b] [--policy <name>] [--qos on|off]
+//! mma replay [trace.jsonl] [--gpus N] [--policy <name>] [--qos on|off]
+//!            [--model qwen-7b] [--sleep-all] [--follow-switches]
+//!            [--max N | --fast] [--router ...] [--peer-fetch ...]
+//! mma trace gen [--out FILE] [--arrivals poisson|bursty|diurnal]
+//!               [--rate R] [--burstiness B] [--dwell S] [--period S]
+//!               [--requests N] [--tenants K] [--docs D] [--zipf S]
+//!               [--ctx T] [--suffix T] [--output-tokens T] [--seed N]
+//!               [--warm-start] [--switch-models m1,m2 --phase S]
 //! mma config-check <file.toml>            validate a config file
 //! ```
+//!
+//! Every subcommand accepts `--config <file.toml>`: the file is parsed
+//! first, then `MMA_*` env vars, then flags — the same precedence the
+//! `[policy]`/`[qos]`/`[workload]` sections document.
+//!
+//! `mma replay` feeds a JSONL trace (see `docs/CONFIG.md` and
+//! `examples/sample_trace.jsonl`) through the serving fleet
+//! deterministically: the same trace and configuration print a
+//! byte-identical metrics block. With no positional path the `[workload]
+//! trace` key (or `MMA_TRACE`) names the input. `mma trace gen`
+//! materializes generator output — bursty/diurnal arrivals, multi-tenant
+//! Zipf mixes, model-switch schedules — to a file or stdout.
 //!
 //! `--policy` selects the transfer policy on any run: `native`,
 //! `static-split` (or `static:<gpu>:<w>,...`), `mma-greedy`,
@@ -36,6 +56,7 @@
 
 use mma::config::RunConfig;
 use mma::figures;
+use mma::figures::workload_replay::{replay, replay_serving_from, ReplayOptions};
 use mma::mma::{MmaConfig, SimWorld, TransferDesc};
 use mma::models;
 use mma::policy::PolicySpec;
@@ -43,11 +64,17 @@ use mma::serving::RoutePolicy;
 use mma::topology::{Direction, GpuId, NumaId, Preset};
 use mma::util::cli::Args;
 use mma::util::fmt;
+use mma::util::rng::Rng;
+use mma::workload::{model_switch_trace, Trace, TraceGen};
 
-fn mma_cfg(args: &Args) -> MmaConfig {
-    let mut cfg = match args.str_or("mode", "mma").as_str() {
-        "native" => MmaConfig::native(),
-        _ => MmaConfig::default(),
+/// Engine config for a run: start from the resolved run config's
+/// `[mma]`/`[policy]`/`[qos]` state (file → env already applied), then
+/// let flags override — the documented precedence.
+fn mma_cfg(args: &Args, base: &MmaConfig) -> MmaConfig {
+    let mut cfg = match args.get("mode") {
+        Some("native") => MmaConfig::native(),
+        Some(_) => MmaConfig::default(),
+        None => base.clone(),
     };
     if let Some(p) = args.get("policy") {
         let spec = PolicySpec::parse(p).unwrap_or_else(|| {
@@ -88,22 +115,50 @@ fn mma_cfg(args: &Args) -> MmaConfig {
 }
 
 fn model_by_name(name: &str) -> models::ModelSpec {
-    match name.to_ascii_lowercase().as_str() {
-        "qwen3-0.6b" | "0.6b" => models::qwen3_0_6b(),
-        "qwen3-4b" | "4b" => models::qwen3_4b(),
-        "qwen-7b" | "qwen-7b-chat" | "7b" => models::qwen_7b_chat(),
-        "qwen3-32b" | "32b" => models::qwen3_32b(),
-        "tiny" => models::tiny_serve(),
-        other => {
-            eprintln!("unknown model {other:?}; using qwen-7b-chat");
-            models::qwen_7b_chat()
-        }
+    models::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown model {name:?}; using qwen-7b-chat");
+        models::qwen_7b_chat()
+    })
+}
+
+/// Fleet config for a run: the resolved `[fleet]` section with the
+/// `--gpus`/`--router`/`--peer-fetch`/`--prefix-affinity` flag overrides
+/// (shared by the serve-fleet and replay arms so the two cannot drift).
+fn fleet_cfg(args: &Args, cfg: &RunConfig) -> mma::config::FleetConfig {
+    let router = match args.get("router") {
+        Some(r) => RoutePolicy::parse(r).unwrap_or_else(|| {
+            eprintln!("unknown router {r:?}; round-robin | least-loaded");
+            std::process::exit(2);
+        }),
+        None => cfg.fleet.router,
+    };
+    let peer_fetch = match args.get("peer-fetch") {
+        Some(v) => matches!(v, "true" | "1" | "yes"),
+        None => cfg.fleet.peer_fetch,
+    };
+    mma::config::FleetConfig {
+        gpus: args.or("gpus", cfg.fleet.gpus).max(1),
+        router,
+        peer_fetch,
+        prefix_affinity: args.flag("prefix-affinity") || cfg.fleet.prefix_affinity,
     }
 }
 
 fn main() {
     let args = Args::from_env();
-    let mut cfg = RunConfig::default();
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("--config {path}: {e}");
+                std::process::exit(2);
+            });
+            RunConfig::from_toml(&text).unwrap_or_else(|e| {
+                eprintln!("--config {path}: {e}");
+                std::process::exit(2);
+            })
+        }
+        None => RunConfig::default(),
+    };
     cfg.apply_env();
     let seed = args.seed_or(figures::DEFAULT_SEED);
     match args.pos(0).unwrap_or("help") {
@@ -117,7 +172,7 @@ fn main() {
                 _ => Direction::H2D,
             };
             let bytes = args.size_or("size", 1 << 30);
-            let mcfg = mma_cfg(&args);
+            let mcfg = mma_cfg(&args, &cfg.mma);
             let policy = mcfg.policy.name();
             let mut w = SimWorld::new(cfg.topology(), mcfg);
             let s = w.stream(GpuId(0));
@@ -156,30 +211,15 @@ fn main() {
             let model = model_by_name(&args.str_or("model", "qwen-7b-chat"));
             let ctx: u32 = args.or("ctx", 65_536);
             let docs: usize = args.or("docs", 4);
-            let mcfg = mma_cfg(&args);
+            let mcfg = mma_cfg(&args, &cfg.mma);
             let policy = mcfg.policy.name();
             let rate: f64 = args.or("arrival-rate", cfg.serving.arrival_rate_rps);
             let gpus: u32 = args.or("gpus", cfg.fleet.gpus);
             if gpus > 1 {
                 // Fleet mode: N per-GPU instances under the event-driven
                 // router, one SimWorld clock, shared host prefix tier.
-                let router = match args.get("router") {
-                    Some(r) => RoutePolicy::parse(r).unwrap_or_else(|| {
-                        eprintln!("unknown router {r:?}; round-robin | least-loaded");
-                        std::process::exit(2);
-                    }),
-                    None => cfg.fleet.router,
-                };
-                let peer_fetch = match args.get("peer-fetch") {
-                    Some(v) => matches!(v, "true" | "1" | "yes"),
-                    None => cfg.fleet.peer_fetch,
-                };
-                let fleet = mma::config::FleetConfig {
-                    gpus,
-                    router,
-                    peer_fetch,
-                    prefix_affinity: args.flag("prefix-affinity") || cfg.fleet.prefix_affinity,
-                };
+                let fleet = fleet_cfg(&args, &cfg);
+                let (router, peer_fetch) = (fleet.router, fleet.peer_fetch);
                 let turns: u32 = args.or("turns", 3);
                 let rate = if rate > 0.0 {
                     rate
@@ -275,7 +315,7 @@ fn main() {
         }
         "switch" => {
             let model = model_by_name(&args.str_or("model", "qwen3-32b"));
-            let mcfg = mma_cfg(&args);
+            let mcfg = mma_cfg(&args, &cfg.mma);
             let policy = mcfg.policy.name();
             let (s, w) = figures::serving_figs::sleep_wake(&model, mcfg);
             println!(
@@ -286,6 +326,113 @@ fn main() {
                 fmt::secs(w.total().as_secs_f64()),
                 w.transfer_fraction() * 100.0,
             );
+        }
+        "replay" => {
+            let path = args
+                .pos(1)
+                .map(str::to_string)
+                .or_else(|| cfg.workload.trace.clone());
+            let Some(path) = path else {
+                eprintln!(
+                    "usage: mma replay <trace.jsonl> (or set [workload] trace / MMA_TRACE)"
+                );
+                std::process::exit(2);
+            };
+            let trace = Trace::load(&path).unwrap_or_else(|e| {
+                eprintln!("invalid trace: {e}");
+                std::process::exit(1);
+            });
+            let mcfg = mma_cfg(&args, &cfg.mma);
+            let policy = mcfg.policy.name();
+            let qos_on = mcfg.qos.enabled;
+            let fleet = fleet_cfg(&args, &cfg);
+            let gpus = fleet.gpus;
+            let model = model_by_name(&args.str_or("model", "qwen-7b-chat"));
+            let opts = ReplayOptions {
+                sleep_all: args.flag("sleep-all"),
+                follow_switches: args.flag("follow-switches"),
+                max_requests: if args.flag("fast") {
+                    64
+                } else {
+                    args.or::<usize>("max", 0)
+                },
+            };
+            // Honor the run config's [serving] section (tp, block sizes,
+            // fetch_chunks, PD mode ...); only the pools and batch
+            // budget are widened so admission, not capacity, governs
+            // concurrency. NB: as with serve, peer-NVLink fetches show
+            // up in aggregated mode ([serving] pd_disaggregation =
+            // false) — PD mode offloads prefill KV to host right away.
+            let serving = mma::config::ServingConfig {
+                fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
+                ..replay_serving_from(&cfg.serving)
+            };
+            let report = replay(&trace, &model, mcfg, serving, fleet, &opts);
+            println!(
+                "replay {path}: {} records, gpus={gpus} policy={policy} qos={}",
+                report.requests,
+                if qos_on { "on" } else { "off" },
+            );
+            print!("{}", report.render());
+        }
+        "trace" => {
+            if args.pos(1) != Some("gen") {
+                eprintln!(
+                    "usage: mma trace gen [--out FILE] [--arrivals poisson|bursty|diurnal] \
+                     [--rate R] [--requests N] [--tenants K] [--docs D] [--zipf S] \
+                     [--ctx T] [--seed N] [--switch-models m1,m2 --phase S]"
+                );
+                std::process::exit(2);
+            }
+            let mut w = cfg.workload.clone();
+            if let Some(v) = args.get("arrivals") {
+                w.arrivals = v.to_string();
+            }
+            w.rate_rps = args.or("rate", w.rate_rps);
+            w.burstiness = args.or("burstiness", w.burstiness);
+            w.dwell_s = args.or("dwell", w.dwell_s);
+            w.period_s = args.or("period", w.period_s);
+            w.requests = args.or("requests", w.requests);
+            w.tenants = args.or("tenants", w.tenants);
+            w.docs_per_tenant = args.or("docs", w.docs_per_tenant);
+            w.zipf_s = args.or("zipf", w.zipf_s);
+            w.context_tokens = args.or("ctx", w.context_tokens);
+            w.suffix_tokens = args.or("suffix", w.suffix_tokens);
+            w.output_tokens = args.or("output-tokens", w.output_tokens);
+            w.warm_start = args.flag("warm-start") || w.warm_start;
+            if let Err(e) = w.validate() {
+                eprintln!("invalid workload parameters: {e}");
+                std::process::exit(2);
+            }
+            let mut rng = Rng::seed_from_u64(seed);
+            let trace = match args.get("switch-models") {
+                Some(_) => {
+                    let names = args.list("switch-models");
+                    if names.is_empty() {
+                        eprintln!("--switch-models: need at least one model name");
+                        std::process::exit(2);
+                    }
+                    model_switch_trace(
+                        &mut rng,
+                        &names,
+                        w.rate_rps,
+                        args.or("phase", 10.0),
+                        w.context_tokens,
+                        w.requests as usize,
+                    )
+                }
+                None => TraceGen::from_config(&w).generate(&mut rng),
+            };
+            match args.get("out") {
+                Some(path) => {
+                    trace.save(path).unwrap_or_else(|e| {
+                        eprintln!("{e}");
+                        std::process::exit(1);
+                    });
+                    eprintln!("wrote {} records to {path}", trace.records.len());
+                }
+                None => print!("{}", trace.render()),
+            }
         }
         "config-check" => {
             let path = args.pos(1).expect("usage: mma config-check <file.toml>");
@@ -306,7 +453,8 @@ fn main() {
         _ => {
             println!("mma — Multipath Memory Access (paper reproduction)");
             println!(
-                "subcommands: topo | microbench | figure <id|all> | serve | switch | config-check"
+                "subcommands: topo | microbench | figure <id|all> | serve | switch | \
+                 replay <trace> | trace gen | config-check"
             );
             println!("figures: {:?}", figures::all_ids());
             println!(
@@ -314,6 +462,12 @@ fn main() {
                  mma-greedy | congestion-feedback | numa-aware"
             );
             println!("qos (--qos on|off): weighted transfer classes (see `figure qos`)");
+            println!(
+                "workloads: `mma trace gen` writes JSONL traces (poisson | bursty | \
+                 diurnal arrivals, multi-tenant Zipf mixes, --switch-models schedules); \
+                 `mma replay <trace>` feeds one through the fleet deterministically"
+            );
+            println!("docs: rust/README.md, docs/PAPER_MAP.md, docs/CONFIG.md");
         }
     }
 }

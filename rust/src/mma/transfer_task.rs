@@ -67,6 +67,18 @@ impl TransferClass {
             TransferClass::Background => "background",
         }
     }
+
+    /// Inverse of [`Self::name`] (the trace / config / CLI spelling).
+    /// `None` for unknown names — callers decide whether that's an error.
+    pub fn parse(s: &str) -> Option<TransferClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency-critical" | "critical" => Some(TransferClass::LatencyCritical),
+            "interactive" => Some(TransferClass::Interactive),
+            "bulk" => Some(TransferClass::Bulk),
+            "background" => Some(TransferClass::Background),
+            _ => None,
+        }
+    }
 }
 
 /// Description of one logical copy as submitted by the app: host↔GPU, or
@@ -267,6 +279,18 @@ mod tests {
         assert!(TransferClass::Bulk < TransferClass::Background);
         assert!(!TransferClass::Interactive.is_bulk_band());
         assert!(TransferClass::Background.is_bulk_band());
+    }
+
+    #[test]
+    fn class_names_roundtrip_through_parse() {
+        for c in TransferClass::ALL {
+            assert_eq!(TransferClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(
+            TransferClass::parse("CRITICAL"),
+            Some(TransferClass::LatencyCritical)
+        );
+        assert_eq!(TransferClass::parse("nope"), None);
     }
 
     #[test]

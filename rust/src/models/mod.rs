@@ -195,6 +195,20 @@ pub fn qwen3_32b() -> ModelSpec {
     }
 }
 
+/// Look up a model preset by its CLI / trace spelling (case-insensitive;
+/// accepts both the full name and the size shorthand). `None` for
+/// unknown names — the CLI and trace replay decide the fallback.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "qwen3-0.6b" | "0.6b" => Some(qwen3_0_6b()),
+        "qwen3-4b" | "4b" => Some(qwen3_4b()),
+        "qwen-7b" | "qwen-7b-chat" | "7b" => Some(qwen_7b_chat()),
+        "qwen3-32b" | "32b" => Some(qwen3_32b()),
+        "tiny" | "tiny-serve" => Some(tiny_serve()),
+        _ => None,
+    }
+}
+
 /// The tiny transformer served live by `examples/kv_offload_serving.rs`
 /// through the real JAX→Pallas→HLO→PJRT pipeline. Must match
 /// `python/compile/model.py::TINY`.

@@ -128,6 +128,8 @@ mod tests {
             cached_prefix_tokens: cached,
             prefix_key: key,
             output_tokens: 2,
+            tenant: 0,
+            class: None,
         }
     }
 

@@ -200,11 +200,36 @@ impl ServingFleet {
             .fold((0, 0), |(h, p), i| (h + i.host_fetches, p + i.peer_fetches))
     }
 
+    /// `(host, peer)` prefix-fetch bytes moved across the fleet.
+    pub fn fetch_bytes(&self) -> (u64, u64) {
+        self.instances.iter().fold((0, 0), |(h, p), i| {
+            (h + i.host_fetch_bytes, p + i.peer_fetch_bytes)
+        })
+    }
+
+    /// `(hits, misses)` of admitted prefills against the prefix tiers
+    /// across the fleet (hits include zero-copy GPU-tier hits and joined
+    /// in-flight fetches).
+    pub fn prefix_hit_counts(&self) -> (u64, u64) {
+        self.instances.iter().fold((0, 0), |(h, m), i| {
+            (h + i.prefix_hits, m + i.prefix_misses)
+        })
+    }
+
     /// Pre-populate the shared host tier with a prefix (the state after a
     /// previous turn's KV was offloaded — §5.2.1 setup). Byte-accounted:
     /// over-seeding drops LRU entries instead of exceeding capacity.
     pub fn seed_host_prefix(&mut self, key: u64, tokens: u32) {
         self.shared.host.insert(key, tokens);
+    }
+
+    /// [`Self::seed_host_prefix`] under a tenant namespace: the entry is
+    /// only visible to requests carrying the same `tenant` (trace replay
+    /// seeds warm multi-tenant prefixes through this).
+    pub fn seed_tenant_prefix(&mut self, tenant: u32, key: u64, tokens: u32) {
+        self.shared
+            .host
+            .insert(super::scheduler::tenant_key(tenant, key), tokens);
     }
 
     /// Put an instance to sleep before a run (vLLM Sleep Mode Level 1):
@@ -221,6 +246,20 @@ impl ServingFleet {
     /// so placement, on-demand wakes, and every instance's fetch/compute
     /// genuinely interleave on the shared fabric and clock.
     pub fn run(&mut self, requests: Vec<Request>) -> Vec<RequestOutcome> {
+        self.run_with(requests, |_, _| {})
+    }
+
+    /// [`Self::run`] with a hook for *foreign* timers: any timer token
+    /// outside the fleet's arrival namespace is handed to `on_timer`
+    /// together with the shared world, instead of being silently skipped.
+    /// This is how an external schedule co-runs with serving traffic on
+    /// the one clock — trace replay schedules model-switch timers up
+    /// front and drives [`ModelRegistry`] `start_wake`/`start_sleep` from
+    /// the hook, so switch weight traffic contends with live fetches.
+    pub fn run_with<F>(&mut self, requests: Vec<Request>, mut on_timer: F) -> Vec<RequestOutcome>
+    where
+        F: FnMut(&mut SimWorld, u64),
+    {
         let ids: Vec<RequestId> = requests.iter().map(|r| r.id).collect();
         let mut sorted = requests;
         sorted.sort_by_key(|r| (r.arrival, r.id.0));
@@ -240,7 +279,10 @@ impl ServingFleet {
                     if (token & ARRIVAL_TOKEN_BASE) != ARRIVAL_TOKEN_BASE
                         || idx >= self.arrivals.len()
                     {
-                        continue; // someone else's timer on the shared world
+                        // Someone else's timer on the shared world: the
+                        // external schedule (if any) owns it.
+                        on_timer(&mut self.world, token);
+                        continue;
                     }
                     pending_arrivals -= 1;
                     let req = self.arrivals[idx].clone();
@@ -270,9 +312,10 @@ impl ServingFleet {
     /// An arrival timer fired: route mid-simulation and pump the target.
     fn on_arrival(&mut self, req: Request) {
         let affinity = if self.cfg.prefix_affinity && req.prefix_key != 0 {
+            let key = req.cache_key();
             self.instances
                 .iter()
-                .position(|inst| inst.gpu_tier().peek(req.prefix_key).is_some())
+                .position(|inst| inst.gpu_tier().peek(key).is_some())
         } else {
             None
         };
@@ -392,6 +435,8 @@ mod tests {
             cached_prefix_tokens: ctx,
             prefix_key: key,
             output_tokens: 2,
+            tenant: 0,
+            class: None,
         }
     }
 
@@ -544,6 +589,50 @@ mod tests {
         assert!(used <= f.world.topo.hbm_bytes, "within HBM capacity");
         // The pool fills the GPU: one more block would not fit.
         assert!(used + block_bytes > f.world.topo.hbm_bytes);
+    }
+
+    #[test]
+    fn tenants_never_share_cached_prefixes() {
+        // Two tenants using the *same* document key: tenant 1's seeded
+        // host-tier prefix is invisible to tenant 2, which prefills cold
+        // (the tenant-tagged cache-key namespace).
+        let mut f = fleet(1, false, MmaConfig::native());
+        f.seed_tenant_prefix(1, 7, 16_384);
+        let mut r1 = hit(1, 0, 16_384, 7);
+        r1.tenant = 1;
+        let mut r2 = hit(2, 5000, 16_384, 7);
+        r2.tenant = 2;
+        let out = f.run(vec![r1, r2]);
+        assert!(out[0].ttft.fetch_s > 0.0, "tenant 1 fetches its prefix");
+        assert_eq!(
+            out[1].ttft.fetch_s, 0.0,
+            "tenant 2 must not hit tenant 1's cache"
+        );
+        assert_eq!(f.prefix_hit_counts(), (1, 1));
+        let (host, peer) = f.fetch_counts();
+        assert_eq!((host, peer), (1, 0));
+        let (hb, pb) = f.fetch_bytes();
+        assert!(hb > 0 && pb == 0, "host bytes accounted: {hb}/{pb}");
+    }
+
+    #[test]
+    fn run_with_hands_foreign_timers_to_the_hook() {
+        // A timer outside the arrival namespace reaches the external
+        // schedule hook (the surface trace replay drives model switches
+        // through) instead of being silently skipped.
+        let mut f = fleet(1, false, MmaConfig::native());
+        f.world.schedule_timer(Time::from_ms(1), 0xBEEF);
+        let mut seen = Vec::new();
+        let out = f.run_with(
+            vec![Request {
+                cached_prefix_tokens: 0,
+                ..hit(1, 2, 1000, 0)
+            }],
+            |_, tok| seen.push(tok),
+        );
+        assert_eq!(out.len(), 1);
+        assert!(out[0].finished_at.is_some());
+        assert_eq!(seen, vec![0xBEEF]);
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //! [`crate::policy::TransferPolicy::prefer_peer_fetch`] decision.
 //!
 //! QoS classes: prefix/KV fetches gate a waiting request's first token
-//! and are tagged [`TransferClass::LatencyCritical`]; any other traffic an
+//! and are tagged [`crate::mma::TransferClass::LatencyCritical`] (unless
+//! the request carries an explicit class); any other traffic an
 //! instance submits rides the `Interactive` default, while registry
 //! sleep/wake weight movement is `Bulk` and background loops
 //! `Background` — so an on-demand wake routed onto a serving instance can
@@ -29,7 +30,7 @@ use super::scheduler::{Phase, Request, RequestId, Scheduler};
 use crate::config::ServingConfig;
 use crate::memory::HbmAllocator;
 use crate::metrics::TtftBreakdown;
-use crate::mma::{SimWorld, StreamHandle, TransferClass, TransferDesc};
+use crate::mma::{SimWorld, StreamHandle, TransferDesc};
 use crate::models::ModelSpec;
 use crate::roofline::GpuRoofline;
 use crate::sim::Time;
@@ -239,6 +240,15 @@ pub struct ServingInstance {
     pub host_fetches: u64,
     /// Peer-NVLink fetches issued (joiners excluded).
     pub peer_fetches: u64,
+    /// Bytes moved by host-tier fetches (the PCIe-crossing traffic).
+    pub host_fetch_bytes: u64,
+    /// Bytes moved by peer-NVLink fetches.
+    pub peer_fetch_bytes: u64,
+    /// Admitted prefills that reused a cached prefix (any tier, including
+    /// zero-copy local-GPU hits and joined in-flight fetches).
+    pub prefix_hits: u64,
+    /// Admitted prefills that prefilled cold (no reusable prefix found).
+    pub prefix_misses: u64,
     kv_pool_blocks: u32,
 }
 
@@ -303,6 +313,10 @@ impl ServingInstance {
             finished: Vec::new(),
             host_fetches: 0,
             peer_fetches: 0,
+            host_fetch_bytes: 0,
+            peer_fetch_bytes: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
             kv_pool_blocks: blocks,
             cfg,
         }
@@ -414,12 +428,15 @@ impl ServingInstance {
             if r.prefix_key == 0 || r.cached_prefix_tokens == 0 {
                 return 0;
             }
+            // Every tier is indexed by the tenant-tagged key, so one
+            // tenant's cached KV is invisible to another's lookups.
+            let key = r.cache_key();
             gpu_tier
-                .peek(r.prefix_key)
-                .or_else(|| host.peek(r.prefix_key))
+                .peek(key)
+                .or_else(|| host.peek(key))
                 .or_else(|| {
                     if peer_ok {
-                        peers.holder(r.prefix_key).map(|(_, t)| t)
+                        peers.holder(key).map(|(_, t)| t)
                     } else {
                         None
                     }
@@ -429,7 +446,13 @@ impl ServingInstance {
         });
         for (rid, suffix) in plan {
             let req = self.sched.sequence(rid).expect("admitted seq").req.clone();
+            let key = req.cache_key();
             let reused = req.prompt_tokens - suffix;
+            if reused > 0 {
+                self.prefix_hits += 1;
+            } else {
+                self.prefix_misses += 1;
+            }
             self.inflight_prefill_tokens += suffix.max(1);
             // KV blocks for the full sequence (best-effort, as the pool
             // model has no eviction path yet).
@@ -457,22 +480,23 @@ impl ServingInstance {
             // promotion is deferred to fetch *completion* so a concurrent
             // same-key request cannot observe a GPU tier whose bytes are
             // still in flight.
-            let source = if reused == 0 || self.gpu_tier.peek(req.prefix_key).is_some() {
+            let source = if reused == 0 || self.gpu_tier.peek(key).is_some() {
                 None // cold, or a zero-copy local-GPU hit
             } else {
                 let bytes = self.model.kv_bytes(reused as u64).max(1);
                 let peer = if shared.peer_fetch {
-                    peers.holder(req.prefix_key)
+                    peers.holder(key)
                 } else {
                     None
                 };
-                let host_tokens = shared.host.peek(req.prefix_key);
+                let host_tokens = shared.host.peek(key);
                 match (peer, host_tokens) {
                     // Both copies exist: the transfer policy decides
                     // host-multipath vs peer-NVLink. Prefix fetches gate a
-                    // waiting request's first token → LatencyCritical.
+                    // waiting request's first token → LatencyCritical by
+                    // default; trace-driven requests can override it.
                     (Some((pg, pt)), Some(ht)) => {
-                        let class = TransferClass::LatencyCritical;
+                        let class = req.fetch_class();
                         if world.prefer_peer_fetch(pg, self.gpu, bytes, class) {
                             Some((FetchSource::Peer(pg), pt))
                         } else {
@@ -486,7 +510,7 @@ impl ServingInstance {
             };
             match source {
                 Some((src, entry_tokens)) => {
-                    if let Some(waiters) = self.inflight_prefix.get_mut(&req.prefix_key) {
+                    if let Some(waiters) = self.inflight_prefix.get_mut(&key) {
                         // Same prefix already being fetched: join it and
                         // pay only the remaining wait.
                         waiters.push(rid);
@@ -497,14 +521,16 @@ impl ServingInstance {
                         // A dedicated stream per fetch keeps concurrent
                         // requests' DMAs contending in the fabric instead
                         // of serializing on one queue.
-                        self.inflight_prefix.insert(req.prefix_key, Vec::new());
+                        self.inflight_prefix.insert(key, Vec::new());
+                        let bytes = self.model.kv_bytes(reused as u64).max(1);
                         if src == FetchSource::Host {
-                            shared.host.touch(req.prefix_key);
+                            shared.host.touch(key);
                             self.host_fetches += 1;
+                            self.host_fetch_bytes += bytes;
                         } else {
                             self.peer_fetches += 1;
+                            self.peer_fetch_bytes += bytes;
                         }
-                        let bytes = self.model.kv_bytes(reused as u64).max(1);
                         let chunks = (self.cfg.fetch_chunks.max(1) as u64).min(bytes) as u32;
                         let per = bytes / chunks as u64;
                         let fetch_stream = match self.fetch_streams.pop() {
@@ -512,7 +538,7 @@ impl ServingInstance {
                             None => world.stream(self.gpu),
                         };
                         job.fetch_stream = Some(fetch_stream);
-                        job.fetch_key = Some(req.prefix_key);
+                        job.fetch_key = Some(key);
                         job.fetch_tokens = entry_tokens;
                         job.fetch_started = Some(now);
                         job.chunks_left = chunks;
@@ -522,10 +548,13 @@ impl ServingInstance {
                             } else {
                                 per
                             };
-                            // Every fetch chunk is tagged LatencyCritical:
-                            // under QoS it outweighs co-running bulk wakes
-                            // on every shared link and issues first in the
-                            // engine's class-aware queues.
+                            // Fetch chunks default to LatencyCritical:
+                            // under QoS they outweigh co-running bulk
+                            // wakes on every shared link and issue first
+                            // in the engine's class-aware queues. Trace
+                            // replay can tag a tenant's requests with a
+                            // different class (e.g. a Bulk batch tenant).
+                            let class = req.fetch_class();
                             let tid = match src {
                                 FetchSource::Host => world.memcpy_async(
                                     fetch_stream,
@@ -535,12 +564,11 @@ impl ServingInstance {
                                         self.host_numa,
                                         sz,
                                     )
-                                    .with_class(TransferClass::LatencyCritical),
+                                    .with_class(class),
                                 ),
                                 FetchSource::Peer(pg) => world.memcpy_async(
                                     fetch_stream,
-                                    TransferDesc::p2p(pg, self.gpu, sz)
-                                        .with_class(TransferClass::LatencyCritical),
+                                    TransferDesc::p2p(pg, self.gpu, sz).with_class(class),
                                 ),
                             };
                             self.inflight_fetch.insert(tid.0, rid);
@@ -551,7 +579,7 @@ impl ServingInstance {
                     // Cold prefill, or a resident local hit (refresh LRU,
                     // no bytes move): compute can start right away.
                     if reused > 0 {
-                        self.gpu_tier.touch(req.prefix_key);
+                        self.gpu_tier.touch(key);
                     }
                     job.compute_released = true;
                     job.ready_at = Some(now);
@@ -797,15 +825,16 @@ impl ServingInstance {
         // prefill node's KV is offloaded to the shared host tier right
         // away — every later hit pays the fetch.
         if req.prefix_key != 0 {
-            if self.gpu_tier.touch(req.prefix_key) || shared.host.touch(req.prefix_key) {
+            let key = req.cache_key();
+            if self.gpu_tier.touch(key) || shared.host.touch(key) {
                 // Already cached somewhere: refreshed in place.
-            } else if !self.promote(shared, req.prefix_key, req.prompt_tokens) {
+            } else if !self.promote(shared, key, req.prompt_tokens) {
                 // Larger than the GPU tier: cache it host-side instead.
-                shared.host.insert(req.prefix_key, req.prompt_tokens);
+                shared.host.insert(key, req.prompt_tokens);
             }
             if self.cfg.pd_disaggregation {
-                if let Some(tokens) = self.gpu_tier.remove(req.prefix_key) {
-                    shared.host.insert(req.prefix_key, tokens);
+                if let Some(tokens) = self.gpu_tier.remove(key) {
+                    shared.host.insert(key, tokens);
                 }
             }
         }

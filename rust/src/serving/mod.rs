@@ -23,4 +23,4 @@ pub use kv_cache::{BlockId, KvCacheManager};
 pub use model_registry::{ModelRegistry, ModelState, PendingPhase};
 pub use prefix_cache::{GpuPrefixTier, HostPrefixPool};
 pub use router::{RoutePolicy, Router};
-pub use scheduler::{Request, RequestId, Scheduler};
+pub use scheduler::{tenant_key, Request, RequestId, Scheduler};

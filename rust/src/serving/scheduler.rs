@@ -8,12 +8,30 @@
 //! fill the remaining token budget.
 
 use crate::config::ServingConfig;
+use crate::mma::TransferClass;
 use crate::sim::Time;
 use std::collections::VecDeque;
 
 /// Request identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct RequestId(pub u64);
+
+/// Namespace a prefix-cache key under a tenant, so two tenants using the
+/// same document key never share (or even observe) each other's cached
+/// KV. Tenant 0 is the default single-tenant namespace and maps keys
+/// through unchanged, which keeps every pre-multi-tenant caller and trace
+/// bit-identical; key 0 stays 0 (no cached prefix) for every tenant.
+pub fn tenant_key(tenant: u32, key: u64) -> u64 {
+    if tenant == 0 || key == 0 {
+        return key;
+    }
+    // splitmix64 finalizer over (tenant, key); | 1 keeps the result
+    // nonzero so a tagged key can never alias the "no prefix" sentinel.
+    let mut z = key ^ (tenant as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)) | 1
+}
 
 /// A serving request.
 #[derive(Clone, Debug)]
@@ -26,10 +44,30 @@ pub struct Request {
     pub prompt_tokens: u32,
     /// Of which a cached prefix of this many tokens may be reused.
     pub cached_prefix_tokens: u32,
-    /// Prefix-cache key (0 = no cached prefix).
+    /// Prefix-cache key (0 = no cached prefix), scoped to `tenant`.
     pub prefix_key: u64,
     /// Output tokens to generate.
     pub output_tokens: u32,
+    /// Tenant the request belongs to (0 = the default namespace). Prefix
+    /// lookups go through [`Request::cache_key`], so tenants never share
+    /// cached KV even when their document keys collide.
+    pub tenant: u32,
+    /// QoS class the request's KV fetch should carry; `None` = the
+    /// serving default ([`TransferClass::LatencyCritical`]).
+    pub class: Option<TransferClass>,
+}
+
+impl Request {
+    /// Tenant-tagged prefix-cache key — the key every prefix tier
+    /// (GPU, host, peer) is actually indexed by.
+    pub fn cache_key(&self) -> u64 {
+        tenant_key(self.tenant, self.prefix_key)
+    }
+
+    /// QoS class of the request's prefix-KV fetch.
+    pub fn fetch_class(&self) -> TransferClass {
+        self.class.unwrap_or(TransferClass::LatencyCritical)
+    }
 }
 
 /// Phase a scheduled sequence is in.
@@ -222,7 +260,44 @@ mod tests {
             cached_prefix_tokens: cached,
             prefix_key: 0,
             output_tokens: out,
+            tenant: 0,
+            class: None,
         }
+    }
+
+    #[test]
+    fn tenant_keys_namespace_without_breaking_the_default() {
+        // Tenant 0 is the identity (pre-multi-tenant behavior), key 0 is
+        // preserved (no-prefix sentinel), and distinct tenants sharing a
+        // document key land on distinct, nonzero cache keys.
+        assert_eq!(tenant_key(0, 7), 7);
+        assert_eq!(tenant_key(0, 0), 0);
+        assert_eq!(tenant_key(3, 0), 0);
+        let a = tenant_key(1, 7);
+        let b = tenant_key(2, 7);
+        assert_ne!(a, 7);
+        assert_ne!(a, b);
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        // Deterministic: same (tenant, key) always maps the same way.
+        assert_eq!(tenant_key(1, 7), a);
+        let r = Request {
+            id: RequestId(1),
+            arrival: Time::ZERO,
+            prompt_tokens: 10,
+            cached_prefix_tokens: 5,
+            prefix_key: 7,
+            output_tokens: 1,
+            tenant: 1,
+            class: None,
+        };
+        assert_eq!(r.cache_key(), a);
+        assert_eq!(r.fetch_class(), crate::mma::TransferClass::LatencyCritical);
+        let bulk = Request {
+            class: Some(crate::mma::TransferClass::Bulk),
+            ..r
+        };
+        assert_eq!(bulk.fetch_class(), crate::mma::TransferClass::Bulk);
     }
 
     /// Admit with the request's own claimed prefix as the resolver (what

@@ -85,6 +85,20 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Comma-separated list option (`--switch-models a,b`): entries
+    /// trimmed, empties dropped; an absent key yields an empty vec (use
+    /// [`Self::get`] to distinguish absent from present-but-empty).
+    pub fn list(&self, key: &str) -> Vec<String> {
+        match self.get(key) {
+            None => Vec::new(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        }
+    }
+
     /// Byte-size option accepting "512MB" style suffixes.
     pub fn size_or(&self, key: &str, default: u64) -> u64 {
         match self.get(key) {
@@ -153,6 +167,15 @@ mod tests {
         assert_eq!(a.or::<f64>("arrival-rate", 0.0), 2.5);
         assert_eq!(a.or::<f64>("missing", 1.5), 1.5);
         assert_eq!(a.or::<u32>("max-concurrency", 0), 8);
+    }
+
+    #[test]
+    fn list_splits_and_trims() {
+        let a = parse("trace gen --switch-models qwen-7b-chat,qwen3-32b");
+        assert_eq!(a.list("switch-models"), vec!["qwen-7b-chat", "qwen3-32b"]);
+        assert!(a.list("missing").is_empty());
+        let b = parse("--models a,,b");
+        assert_eq!(b.list("models"), vec!["a", "b"]);
     }
 
     #[test]

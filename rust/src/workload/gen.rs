@@ -1,0 +1,543 @@
+//! Trace generators: arrival processes (Poisson, 2-state MMPP bursts,
+//! diurnal rate curves), multi-tenant mixes with Zipf-skewed document
+//! popularity, and model-switch schedules — everything `mma trace gen`
+//! materializes into the JSONL [`super::Trace`] format.
+//!
+//! The generators answer the traffic-model critique of the end-to-end
+//! claims: Poisson-only arrivals hide queueing tails that burst-modulated
+//! processes expose at the *same mean rate*, and uniform single-tenant
+//! document pools overstate prefix-hit locality. All randomness flows
+//! through one [`Rng`] seed, so `mma trace gen --seed N` is byte-stable.
+
+use super::trace::{Trace, TraceRecord};
+use crate::config::WorkloadConfig;
+use crate::mma::TransferClass;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// An arrival time process. All variants are parameterized so their
+/// *mean* rate is explicit — the burstiness comparisons in
+/// `figures::workload_replay` hold it fixed across shapes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant rate (the classic baseline).
+    Poisson {
+        /// Mean rate, requests/second.
+        rate_rps: f64,
+    },
+    /// 2-state Markov-modulated Poisson process: the rate alternates
+    /// between a low and a high state with exponentially distributed
+    /// dwell times — bursts at the same long-run mean rate as a Poisson
+    /// process with `(rate_lo + rate_hi) / 2`.
+    Mmpp {
+        /// Rate in the quiet state, requests/second.
+        rate_lo_rps: f64,
+        /// Rate in the burst state, requests/second.
+        rate_hi_rps: f64,
+        /// Mean dwell time in each state, seconds.
+        mean_dwell_s: f64,
+    },
+    /// Sinusoidal rate curve (diurnal load), sampled by thinning:
+    /// `λ(t) = mean · (1 + amplitude · sin(2πt / period))`.
+    Diurnal {
+        /// Mean rate, requests/second.
+        mean_rps: f64,
+        /// Relative swing in `[0, 1)`.
+        amplitude: f64,
+        /// Cycle length, seconds.
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// A bursty MMPP holding the same mean rate as `Poisson { rate_rps }`:
+    /// the rate splits into `rate · (1 ± burstiness)` with equal mean
+    /// dwell in both states. `burstiness = 0` degenerates to Poisson-like
+    /// behavior; values near 1 concentrate almost all arrivals in bursts.
+    pub fn bursty(rate_rps: f64, burstiness: f64, mean_dwell_s: f64) -> ArrivalProcess {
+        ArrivalProcess::Mmpp {
+            rate_lo_rps: rate_rps * (1.0 - burstiness),
+            rate_hi_rps: rate_rps * (1.0 + burstiness),
+            mean_dwell_s,
+        }
+    }
+
+    /// Long-run mean rate, requests/second.
+    pub fn mean_rate_rps(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            // Equal mean dwell in both states → the time-average rate is
+            // the plain average of the two state rates.
+            ArrivalProcess::Mmpp {
+                rate_lo_rps,
+                rate_hi_rps,
+                ..
+            } => 0.5 * (rate_lo_rps + rate_hi_rps),
+            ArrivalProcess::Diurnal { mean_rps, .. } => mean_rps,
+        }
+    }
+
+    /// Sample `n` arrival times (seconds from 0, non-decreasing).
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                assert!(rate_rps > 0.0, "poisson rate must be > 0");
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exp(1.0 / rate_rps);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp {
+                rate_lo_rps,
+                rate_hi_rps,
+                mean_dwell_s,
+            } => {
+                assert!(rate_hi_rps > 0.0, "mmpp burst rate must be > 0");
+                assert!(rate_lo_rps >= 0.0, "mmpp quiet rate must be >= 0");
+                assert!(mean_dwell_s > 0.0, "mmpp dwell must be > 0");
+                let mut t = 0.0;
+                let mut hi = false;
+                let mut state_end = rng.exp(mean_dwell_s);
+                while out.len() < n {
+                    let rate = if hi { rate_hi_rps } else { rate_lo_rps };
+                    // Exponential gaps are memoryless, so discarding the
+                    // partial gap at a state boundary keeps the process
+                    // exact (no bias at switches).
+                    let next = if rate > 0.0 {
+                        t + rng.exp(1.0 / rate)
+                    } else {
+                        f64::INFINITY
+                    };
+                    if next < state_end {
+                        t = next;
+                        out.push(t);
+                    } else {
+                        t = state_end;
+                        state_end = t + rng.exp(mean_dwell_s);
+                        hi = !hi;
+                    }
+                }
+            }
+            ArrivalProcess::Diurnal {
+                mean_rps,
+                amplitude,
+                period_s,
+            } => {
+                assert!(mean_rps > 0.0, "diurnal mean rate must be > 0");
+                assert!((0.0..1.0).contains(&amplitude), "amplitude in [0, 1)");
+                assert!(period_s > 0.0, "period must be > 0");
+                // Lewis–Shedler thinning against the peak rate.
+                let peak = mean_rps * (1.0 + amplitude);
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += rng.exp(1.0 / peak);
+                    let lam = mean_rps
+                        * (1.0
+                            + amplitude
+                                * (2.0 * std::f64::consts::PI * t / period_s).sin());
+                    if rng.f64() < lam / peak {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One tenant's slice of a multi-tenant mix.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Tenant id (nonzero keeps tenants' prefix keys namespaced apart;
+    /// a single tenant 0 reproduces the legacy shared namespace).
+    pub tenant: u32,
+    /// Share of total traffic (relative weight, > 0).
+    pub share: f64,
+    /// Distinct documents in the tenant's pool.
+    pub n_docs: usize,
+    /// Zipf exponent of document popularity (0 = uniform; higher skews
+    /// reuse onto the head documents — prefix-sharing locality).
+    pub zipf_s: f64,
+    /// Document context length, tokens.
+    pub context_tokens: u32,
+    /// Fresh tokens appended per request (the new question).
+    pub suffix_tokens: u32,
+    /// Output tokens per request.
+    pub output_tokens: u32,
+    /// Model id the tenant's requests target (empty = run default).
+    pub model: String,
+    /// QoS class of the tenant's KV fetches (`None` = latency-critical).
+    pub class: Option<TransferClass>,
+    /// Documents were ingested by a previous session: even the first
+    /// touch of a document claims its context as cached prefix, so
+    /// replay pre-seeds the host tier (the §5.2.1 setup, where turn 1 is
+    /// discarded). `false` = cold-start, first touch prefills from
+    /// scratch.
+    pub warm_start: bool,
+}
+
+impl TenantSpec {
+    /// An interactive chat tenant over `n_docs` documents of `context`
+    /// tokens (the defaults most sweeps use).
+    pub fn interactive(tenant: u32, n_docs: usize, context_tokens: u32) -> TenantSpec {
+        TenantSpec {
+            tenant,
+            share: 1.0,
+            n_docs,
+            zipf_s: 1.1,
+            context_tokens,
+            suffix_tokens: 64,
+            output_tokens: 16,
+            model: String::new(),
+            class: None,
+            warm_start: false,
+        }
+    }
+}
+
+/// A full trace generator: an arrival process fanned out over a tenant
+/// mix. The first request touching a document is cold (`cached = 0`);
+/// repeats claim the document context as cached prefix — the multi-turn
+/// QA shape of §5.2.1, generalized.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    /// Arrival time process.
+    pub arrivals: ArrivalProcess,
+    /// Tenant mix (at least one).
+    pub tenants: Vec<TenantSpec>,
+    /// Requests to emit.
+    pub requests: usize,
+}
+
+impl TraceGen {
+    /// Build a generator from the `[workload]` config section.
+    pub fn from_config(cfg: &WorkloadConfig) -> TraceGen {
+        let arrivals = match cfg.arrivals.as_str() {
+            "bursty" | "mmpp" => {
+                ArrivalProcess::bursty(cfg.rate_rps, cfg.burstiness, cfg.dwell_s)
+            }
+            "diurnal" => ArrivalProcess::Diurnal {
+                mean_rps: cfg.rate_rps,
+                amplitude: cfg.burstiness,
+                period_s: cfg.period_s,
+            },
+            _ => ArrivalProcess::Poisson {
+                rate_rps: cfg.rate_rps,
+            },
+        };
+        // Tenant 0 keeps a single-tenant config in the legacy shared
+        // namespace; multi-tenant mixes get ids 1..=N so their keys
+        // never collide.
+        let tenants = (0..cfg.tenants.max(1))
+            .map(|i| TenantSpec {
+                tenant: if cfg.tenants <= 1 { 0 } else { i + 1 },
+                share: 1.0,
+                n_docs: cfg.docs_per_tenant.max(1) as usize,
+                zipf_s: cfg.zipf_s,
+                context_tokens: cfg.context_tokens,
+                suffix_tokens: cfg.suffix_tokens,
+                output_tokens: cfg.output_tokens,
+                model: String::new(),
+                class: None,
+                warm_start: cfg.warm_start,
+            })
+            .collect();
+        TraceGen {
+            arrivals,
+            tenants,
+            requests: cfg.requests as usize,
+        }
+    }
+
+    /// Generate the trace. Deterministic in `rng`'s seed.
+    pub fn generate(&self, rng: &mut Rng) -> Trace {
+        assert!(!self.tenants.is_empty(), "a trace needs at least one tenant");
+        for t in &self.tenants {
+            assert!(t.share > 0.0, "tenant {} share must be > 0", t.tenant);
+            assert!(t.n_docs > 0, "tenant {} needs documents", t.tenant);
+        }
+        // Per-tenant document key pools, drawn up front so the key space
+        // is independent of the arrival ordering.
+        let doc_keys: Vec<Vec<u64>> = self
+            .tenants
+            .iter()
+            .map(|t| (0..t.n_docs).map(|_| rng.next_u64() | 1).collect())
+            .collect();
+        let times = self.arrivals.sample(rng, self.requests);
+        let total_share: f64 = self.tenants.iter().map(|t| t.share).sum();
+        let mut seen: HashMap<(u32, u64), u32> = HashMap::new();
+        let mut records = Vec::with_capacity(times.len());
+        for t in times {
+            // Pick the tenant by share, then the document by Zipf rank.
+            let mut pick = rng.f64() * total_share;
+            let mut ti = 0;
+            for (i, spec) in self.tenants.iter().enumerate() {
+                pick -= spec.share;
+                if pick <= 0.0 {
+                    ti = i;
+                    break;
+                }
+            }
+            let spec = &self.tenants[ti];
+            let rank = rng.zipf(spec.n_docs, spec.zipf_s);
+            let key = doc_keys[ti][rank];
+            let visits = seen.entry((spec.tenant, key)).or_insert(0);
+            *visits += 1;
+            let turn = *visits;
+            let cold = turn == 1 && !spec.warm_start;
+            records.push(TraceRecord {
+                arrival_s: t,
+                prompt_tokens: spec.context_tokens + turn * spec.suffix_tokens,
+                output_tokens: spec.output_tokens,
+                prefix_key: key,
+                cached_prefix_tokens: if cold { 0 } else { spec.context_tokens },
+                tenant: spec.tenant,
+                model: spec.model.clone(),
+                class: spec.class,
+            });
+        }
+        Trace { records }
+    }
+}
+
+/// A model-switch schedule: Poisson traffic whose target model rotates
+/// through `models` every `phase_s` seconds (one tenant per model, so
+/// each phase reuses its own documents). Replayed with
+/// `--follow-switches`, the model boundaries drive
+/// [`crate::serving::ModelRegistry`] sleep/wake co-running with the
+/// serving traffic — the paper's sleep-mode switching scenario under
+/// realistic load.
+pub fn model_switch_trace(
+    rng: &mut Rng,
+    models: &[String],
+    rate_rps: f64,
+    phase_s: f64,
+    context_tokens: u32,
+    requests: usize,
+) -> Trace {
+    assert!(!models.is_empty(), "need at least one model");
+    assert!(phase_s > 0.0, "phase must be > 0");
+    let times = ArrivalProcess::Poisson { rate_rps }.sample(rng, requests);
+    let keys: Vec<u64> = models.iter().map(|_| rng.next_u64() | 1).collect();
+    let mut seen = vec![false; models.len()];
+    let records = times
+        .into_iter()
+        .map(|t| {
+            let phase = (t / phase_s) as usize % models.len();
+            let cold = !seen[phase];
+            seen[phase] = true;
+            TraceRecord {
+                arrival_s: t,
+                prompt_tokens: context_tokens + 64,
+                output_tokens: 8,
+                prefix_key: keys[phase],
+                cached_prefix_tokens: if cold { 0 } else { context_tokens },
+                tenant: phase as u32 + 1,
+                model: models[phase].clone(),
+                class: None,
+            }
+        })
+        .collect();
+    Trace { records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_mean_rate_but_mmpp_is_burstier() {
+        // The generator sanity gate: at the same long-run mean rate, the
+        // MMPP trace's inter-arrival CV must clearly exceed Poisson's
+        // (which sits near 1 by construction).
+        let n = 4000;
+        let mut rng = Rng::seed_from_u64(11);
+        let poisson = ArrivalProcess::Poisson { rate_rps: 20.0 };
+        let bursty = ArrivalProcess::bursty(20.0, 0.9, 2.0);
+        assert!((poisson.mean_rate_rps() - bursty.mean_rate_rps()).abs() < 1e-12);
+        let tp = Trace {
+            records: poisson
+                .sample(&mut rng, n)
+                .into_iter()
+                .map(|t| TraceRecord {
+                    arrival_s: t,
+                    prompt_tokens: 100,
+                    output_tokens: 1,
+                    prefix_key: 0,
+                    cached_prefix_tokens: 0,
+                    tenant: 0,
+                    model: String::new(),
+                    class: None,
+                })
+                .collect(),
+        };
+        let mut rng = Rng::seed_from_u64(11);
+        let tb = Trace {
+            records: bursty
+                .sample(&mut rng, n)
+                .into_iter()
+                .map(|t| TraceRecord {
+                    arrival_s: t,
+                    prompt_tokens: 100,
+                    output_tokens: 1,
+                    prefix_key: 0,
+                    cached_prefix_tokens: 0,
+                    tenant: 0,
+                    model: String::new(),
+                    class: None,
+                })
+                .collect(),
+        };
+        let cv_p = tp.interarrival_cv();
+        let cv_b = tb.interarrival_cv();
+        assert!((0.9..1.1).contains(&cv_p), "poisson CV {cv_p}");
+        assert!(cv_b > 1.5, "mmpp CV {cv_b} not bursty");
+        // Mean rates realized within 15% of the target.
+        assert!((tp.mean_rate_rps() - 20.0).abs() / 20.0 < 0.15);
+        assert!((tb.mean_rate_rps() - 20.0).abs() / 20.0 < 0.15);
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_positive() {
+        let mut rng = Rng::seed_from_u64(3);
+        for p in [
+            ArrivalProcess::Poisson { rate_rps: 5.0 },
+            ArrivalProcess::bursty(5.0, 0.8, 1.0),
+            ArrivalProcess::Diurnal {
+                mean_rps: 5.0,
+                amplitude: 0.6,
+                period_s: 30.0,
+            },
+        ] {
+            let xs = p.sample(&mut rng, 500);
+            assert_eq!(xs.len(), 500);
+            assert!(xs[0] > 0.0);
+            assert!(xs.windows(2).all(|w| w[1] >= w[0]), "{p:?} unsorted");
+        }
+    }
+
+    #[test]
+    fn diurnal_peaks_beat_troughs() {
+        // Arrivals in the rising half-cycle outnumber the falling one.
+        let mut rng = Rng::seed_from_u64(7);
+        let period = 40.0;
+        let p = ArrivalProcess::Diurnal {
+            mean_rps: 10.0,
+            amplitude: 0.8,
+            period_s: period,
+        };
+        let xs = p.sample(&mut rng, 3000);
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for t in xs {
+            if (t % period) < period / 2.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "diurnal skew missing: {peak} vs {trough}"
+        );
+    }
+
+    #[test]
+    fn tenant_mix_respects_shares_and_first_touch_is_cold() {
+        let mut a = TenantSpec::interactive(1, 4, 8192);
+        a.share = 3.0;
+        let mut b = TenantSpec::interactive(2, 4, 8192);
+        b.share = 1.0;
+        b.class = Some(TransferClass::Bulk);
+        let g = TraceGen {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 50.0 },
+            tenants: vec![a, b],
+            requests: 2000,
+        };
+        let mut rng = Rng::seed_from_u64(5);
+        let t = g.generate(&mut rng);
+        assert_eq!(t.records.len(), 2000);
+        let n1 = t.records.iter().filter(|r| r.tenant == 1).count();
+        let n2 = t.records.iter().filter(|r| r.tenant == 2).count();
+        let frac = n1 as f64 / (n1 + n2) as f64;
+        assert!((0.70..0.80).contains(&frac), "3:1 share split, got {frac}");
+        // Tenant classes propagate.
+        assert!(t
+            .records
+            .iter()
+            .filter(|r| r.tenant == 2)
+            .all(|r| r.class == Some(TransferClass::Bulk)));
+        // First touch of every (tenant, key) is cold; repeats are warm.
+        let mut seen = std::collections::HashSet::new();
+        for r in &t.records {
+            if seen.insert((r.tenant, r.prefix_key)) {
+                assert_eq!(r.cached_prefix_tokens, 0, "first touch must be cold");
+            } else {
+                assert_eq!(r.cached_prefix_tokens, 8192);
+            }
+        }
+        // Zipf skew: the most popular doc clearly beats the median one.
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for r in t.records.iter().filter(|r| r.tenant == 1) {
+            *counts.entry(r.prefix_key).or_insert(0) += 1;
+        }
+        let mut cs: Vec<usize> = counts.values().copied().collect();
+        cs.sort_unstable();
+        assert!(cs[cs.len() - 1] > 2 * cs[0], "zipf skew missing: {cs:?}");
+    }
+
+    #[test]
+    fn warm_start_claims_cached_prefixes_from_the_first_touch() {
+        let mut spec = TenantSpec::interactive(1, 3, 8192);
+        spec.warm_start = true;
+        let g = TraceGen {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 20.0 },
+            tenants: vec![spec],
+            requests: 30,
+        };
+        let t = g.generate(&mut Rng::seed_from_u64(8));
+        assert!(t.records.iter().all(|r| r.cached_prefix_tokens == 8192));
+        // Every visited document shows up in the replay pre-seed list.
+        let warm = t.warm_prefixes();
+        let distinct: std::collections::HashSet<u64> =
+            t.records.iter().map(|r| r.prefix_key).collect();
+        assert_eq!(warm.len(), distinct.len());
+        assert!(warm.iter().all(|&(tenant, _, tok)| tenant == 1 && tok == 8192));
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic_and_round_trips() {
+        let g = TraceGen {
+            arrivals: ArrivalProcess::bursty(10.0, 0.8, 2.0),
+            tenants: vec![
+                TenantSpec::interactive(1, 3, 4096),
+                TenantSpec::interactive(2, 3, 4096),
+            ],
+            requests: 64,
+        };
+        let a = g.generate(&mut Rng::seed_from_u64(42));
+        let b = g.generate(&mut Rng::seed_from_u64(42));
+        assert_eq!(a, b, "same seed → identical trace");
+        let c = g.generate(&mut Rng::seed_from_u64(43));
+        assert_ne!(a, c, "different seed → different trace");
+        // Generated traces round-trip through the JSONL format.
+        let back = Trace::parse(&a.render()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn model_switch_phases_rotate_models() {
+        let mut rng = Rng::seed_from_u64(9);
+        let models = vec!["qwen-7b-chat".to_string(), "qwen3-32b".to_string()];
+        let t = model_switch_trace(&mut rng, &models, 4.0, 5.0, 8192, 80);
+        assert_eq!(t.models(), models, "both models appear, in phase order");
+        for r in &t.records {
+            let phase = (r.arrival_s / 5.0) as usize % 2;
+            assert_eq!(r.model, models[phase], "model follows the schedule");
+            assert_eq!(r.tenant, phase as u32 + 1);
+        }
+        // Each phase's documents repeat within the phase → warm turns.
+        assert!(t.records.iter().any(|r| r.cached_prefix_tokens > 0));
+    }
+}

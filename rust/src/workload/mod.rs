@@ -1,6 +1,22 @@
-//! Workload generators: multi-turn QA over long documents (the LongBench
-//! v2-style setup of §5.2.1), Poisson arrivals, and background-traffic
-//! patterns for the robustness experiments (§5.1.2).
+//! The workload subsystem: trace-driven and generated request streams.
+//!
+//! * [`trace`] — the versioned JSONL trace format (`mma replay` input,
+//!   `mma trace gen` output): per-request arrival, prompt/output tokens,
+//!   prefix key + cached-prefix length, tenant/model id, optional QoS
+//!   class.
+//! * [`gen`] — trace generators: Poisson / MMPP-bursty / diurnal
+//!   arrivals, multi-tenant mixes with Zipf document popularity, and
+//!   model-switch schedules.
+//! * this module — the original in-process helpers: multi-turn QA
+//!   sessions over long documents (the LongBench v2-style setup of
+//!   §5.2.1) and raw Poisson arrival times, used by the Fig 2/12
+//!   harnesses.
+
+pub mod gen;
+pub mod trace;
+
+pub use gen::{model_switch_trace, ArrivalProcess, TenantSpec, TraceGen};
+pub use trace::{Trace, TraceRecord, TRACE_VERSION};
 
 use crate::serving::{Request, RequestId};
 use crate::sim::Time;
@@ -33,6 +49,8 @@ impl QaSession {
                     cached_prefix_tokens: cached,
                     prefix_key: self.key,
                     output_tokens: 32,
+                    tenant: 0,
+                    class: None,
                 }
             })
             .collect()

@@ -1,0 +1,633 @@
+//! Versioned JSONL workload traces: the on-disk request format every
+//! generator writes and `mma replay` feeds through the serving fleet.
+//!
+//! A trace is newline-delimited JSON in the spirit of
+//! [`crate::config::toml_lite`]: a zero-dependency, intentionally strict
+//! parser/writer for exactly the subset we need (flat objects, unsigned
+//! integers, floats, strings). The first line is a version header,
+//! `{"mma_trace": 1}`; every following line is one request:
+//!
+//! ```text
+//! {"mma_trace": 1}
+//! {"t": 0.0, "prompt": 16448, "output": 32, "key": 7, "cached": 0}
+//! {"t": 0.41, "prompt": 16448, "output": 32, "key": 7, "cached": 16384, "tenant": 2, "model": "qwen-7b-chat", "class": "latency-critical"}
+//! ```
+//!
+//! `t` is the arrival time in seconds from trace start; `key`/`cached`
+//! carry the prefix-cache key and the cached-prefix length the request
+//! claims; `tenant`, `model`, and `class` are optional (defaults: tenant
+//! 0, the run's model, latency-critical fetches). Keys are scoped per
+//! tenant at replay time through [`Request::cache_key`], so two tenants
+//! reusing the same document key never share KV.
+//!
+//! Integer keys are parsed as exact `u64`s (never through `f64`, which
+//! would corrupt keys above 2^53). Rendering is canonical — stable key
+//! order, shortest-roundtrip floats, defaults omitted — so
+//! `parse(render(t)) == t` and `mma trace gen` output is byte-stable.
+
+use crate::mma::TransferClass;
+use crate::serving::{Request, RequestId};
+use crate::sim::Time;
+
+/// The trace format version this build reads and writes.
+pub const TRACE_VERSION: u32 = 1;
+
+/// One request record in a workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Full prompt length in tokens.
+    pub prompt_tokens: u32,
+    /// Output tokens to generate.
+    pub output_tokens: u32,
+    /// Prefix-cache key (0 = no cached prefix), scoped to `tenant`.
+    pub prefix_key: u64,
+    /// Cached-prefix length the request claims, in tokens.
+    pub cached_prefix_tokens: u32,
+    /// Tenant id (0 = the default namespace).
+    pub tenant: u32,
+    /// Model id the request targets (empty = the run's default model).
+    /// Boundaries where consecutive records change model form the
+    /// sleep/wake switch schedule replay drives through the registry.
+    pub model: String,
+    /// QoS class of the request's KV fetch (`None` = latency-critical).
+    pub class: Option<TransferClass>,
+}
+
+impl TraceRecord {
+    /// Convert to a serving [`Request`] with the given id.
+    pub fn to_request(&self, id: u64) -> Request {
+        Request {
+            id: RequestId(id),
+            arrival: Time::from_secs_f64(self.arrival_s),
+            prompt_tokens: self.prompt_tokens,
+            cached_prefix_tokens: self.cached_prefix_tokens,
+            prefix_key: self.prefix_key,
+            output_tokens: self.output_tokens,
+            tenant: self.tenant,
+            class: self.class,
+        }
+    }
+
+    fn render(&self, out: &mut String) {
+        out.push_str("{\"t\": ");
+        out.push_str(&format_f64(self.arrival_s));
+        out.push_str(&format!(
+            ", \"prompt\": {}, \"output\": {}, \"key\": {}",
+            self.prompt_tokens, self.output_tokens, self.prefix_key
+        ));
+        if self.cached_prefix_tokens != 0 {
+            out.push_str(&format!(", \"cached\": {}", self.cached_prefix_tokens));
+        }
+        if self.tenant != 0 {
+            out.push_str(&format!(", \"tenant\": {}", self.tenant));
+        }
+        if !self.model.is_empty() {
+            out.push_str(", \"model\": ");
+            render_str(&self.model, out);
+        }
+        if let Some(c) = self.class {
+            out.push_str(&format!(", \"class\": \"{}\"", c.name()));
+        }
+        out.push('}');
+    }
+}
+
+/// A parsed workload trace: the version header plus its records.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// The records, in file order (not necessarily sorted by arrival —
+    /// the fleet sorts on ingestion).
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    /// Parse JSONL text. Errors carry 1-based line numbers; a missing or
+    /// mismatched version header is rejected before any record parses.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut records = Vec::new();
+        let mut saw_header = false;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields = parse_object(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            if !saw_header {
+                let version = header_version(&fields)
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                if version != TRACE_VERSION as u64 {
+                    return Err(format!(
+                        "line {}: unsupported trace version {version} \
+                         (this build reads {TRACE_VERSION})",
+                        lineno + 1
+                    ));
+                }
+                saw_header = true;
+                continue;
+            }
+            records.push(
+                record_from_fields(fields).map_err(|e| format!("line {}: {e}", lineno + 1))?,
+            );
+        }
+        if !saw_header {
+            return Err(format!(
+                "missing trace header (expected {{\"mma_trace\": {TRACE_VERSION}}})"
+            ));
+        }
+        Ok(Trace { records })
+    }
+
+    /// Render to canonical JSONL (header + one record per line).
+    pub fn render(&self) -> String {
+        let mut out = format!("{{\"mma_trace\": {TRACE_VERSION}}}\n");
+        for r in &self.records {
+            r.render(&mut out);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Read and parse a trace file.
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+        Trace::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Write the canonical rendering to a file.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.render()).map_err(|e| format!("write {path:?}: {e}"))
+    }
+
+    /// Convert every record to a serving [`Request`] (ids = record index).
+    pub fn requests(&self) -> Vec<Request> {
+        self.records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.to_request(i as u64))
+            .collect()
+    }
+
+    /// A copy truncated to the first `n` records (`mma replay --fast`).
+    pub fn truncated(&self, n: usize) -> Trace {
+        Trace {
+            records: self.records.iter().take(n).cloned().collect(),
+        }
+    }
+
+    /// `(tenant, key, tokens)` for every prefix whose *first* appearance
+    /// already claims a cached prefix — state a previous session left in
+    /// the host tier, which replay must seed before running.
+    pub fn warm_prefixes(&self) -> Vec<(u32, u64, u32)> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        let mut by_time: Vec<&TraceRecord> = self.records.iter().collect();
+        by_time.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        for r in by_time {
+            // `insert` must run for every first appearance (cold ones
+            // too), so it sits in the chain ahead of the cached check.
+            if r.prefix_key != 0
+                && seen.insert((r.tenant, r.prefix_key))
+                && r.cached_prefix_tokens > 0
+            {
+                out.push((r.tenant, r.prefix_key, r.cached_prefix_tokens));
+            }
+        }
+        out
+    }
+
+    /// Distinct model ids in arrival order of first appearance (empty
+    /// string = the default model).
+    pub fn models(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for r in &self.records {
+            if !out.contains(&r.model) {
+                out.push(r.model.clone());
+            }
+        }
+        out
+    }
+
+    /// Trace duration: the last arrival, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.arrival_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean offered rate over the trace span, requests/second.
+    pub fn mean_rate_rps(&self) -> f64 {
+        let d = self.duration_s();
+        if d <= 0.0 {
+            0.0
+        } else {
+            self.records.len() as f64 / d
+        }
+    }
+
+    /// Coefficient of variation of the inter-arrival gaps (1 ≈ Poisson,
+    /// higher = burstier). The burstiness yardstick the generator tests
+    /// and the replay figure report.
+    pub fn interarrival_cv(&self) -> f64 {
+        let mut times: Vec<f64> = self.records.iter().map(|r| r.arrival_s).collect();
+        times.sort_by(f64::total_cmp);
+        if times.len() < 3 {
+            return 0.0;
+        }
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gaps.len() as f64;
+        var.sqrt() / mean
+    }
+}
+
+/// Shortest-roundtrip float rendering (Rust's `{:?}` guarantees the
+/// printed form parses back to the identical bits).
+fn format_f64(x: f64) -> String {
+    format!("{x:?}")
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// One parsed JSON scalar. Integers stay exact (`u64`), never routed
+/// through `f64`.
+#[derive(Debug, Clone, PartialEq)]
+enum JsonValue {
+    /// Unsigned integer (exact).
+    UInt(u64),
+    /// Float.
+    Float(f64),
+    /// String.
+    Str(String),
+}
+
+impl JsonValue {
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::UInt(u) => Some(*u as f64),
+            JsonValue::Float(f) => Some(*f),
+            JsonValue::Str(_) => None,
+        }
+    }
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::UInt(u) => Some(*u),
+            _ => None,
+        }
+    }
+    fn as_u32(&self) -> Option<u32> {
+        self.as_u64().and_then(|u| u32::try_from(u).ok())
+    }
+}
+
+/// Parse one flat JSON object (`{"k": v, ...}`). Strict about everything
+/// the format does not need: no nesting, no arrays, no null, no duplicate
+/// keys, no negative numbers.
+fn parse_object(line: &str) -> Result<Vec<(String, JsonValue)>, String> {
+    let b = line.as_bytes();
+    let mut i = 0usize;
+    let skip_ws = |i: &mut usize| {
+        while *i < b.len() && (b[*i] as char).is_ascii_whitespace() {
+            *i += 1;
+        }
+    };
+    skip_ws(&mut i);
+    if i >= b.len() || b[i] != b'{' {
+        return Err("expected a JSON object".to_string());
+    }
+    i += 1;
+    let mut fields: Vec<(String, JsonValue)> = Vec::new();
+    skip_ws(&mut i);
+    if i < b.len() && b[i] == b'}' {
+        i += 1;
+    } else {
+        loop {
+            skip_ws(&mut i);
+            let key = parse_string(line, &mut i)?;
+            skip_ws(&mut i);
+            if i >= b.len() || b[i] != b':' {
+                return Err(format!("key {key:?}: expected ':'"));
+            }
+            i += 1;
+            skip_ws(&mut i);
+            let value = parse_value(line, &mut i)?;
+            if fields.iter().any(|(k, _)| *k == key) {
+                return Err(format!("duplicate key {key:?}"));
+            }
+            fields.push((key, value));
+            skip_ws(&mut i);
+            match b.get(i) {
+                Some(b',') => i += 1,
+                Some(b'}') => {
+                    i += 1;
+                    break;
+                }
+                _ => return Err("expected ',' or '}'".to_string()),
+            }
+        }
+    }
+    skip_ws(&mut i);
+    if i != b.len() {
+        return Err("trailing garbage after object".to_string());
+    }
+    Ok(fields)
+}
+
+fn parse_string(line: &str, i: &mut usize) -> Result<String, String> {
+    let b = line.as_bytes();
+    if *i >= b.len() || b[*i] != b'"' {
+        return Err("expected a string".to_string());
+    }
+    *i += 1;
+    let mut out = String::new();
+    let chars: Vec<char> = line[*i..].chars().collect();
+    let mut ci = 0usize;
+    while ci < chars.len() {
+        match chars[ci] {
+            '"' => {
+                // Advance the byte cursor past the consumed chars + quote.
+                let consumed: usize = chars[..ci].iter().map(|c| c.len_utf8()).sum();
+                *i += consumed + 1;
+                return Ok(out);
+            }
+            '\\' => {
+                ci += 1;
+                match chars.get(ci) {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    other => return Err(format!("unsupported escape {other:?}")),
+                }
+            }
+            c => out.push(c),
+        }
+        ci += 1;
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_value(line: &str, i: &mut usize) -> Result<JsonValue, String> {
+    let b = line.as_bytes();
+    if *i < b.len() && b[*i] == b'"' {
+        return Ok(JsonValue::Str(parse_string(line, i)?));
+    }
+    let start = *i;
+    while *i < b.len() && matches!(b[*i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+        *i += 1;
+    }
+    let tok = &line[start..*i];
+    if tok.is_empty() {
+        return Err("expected a value".to_string());
+    }
+    if tok.starts_with('-') {
+        return Err(format!("negative value {tok:?} not allowed"));
+    }
+    if tok.contains(['.', 'e', 'E']) {
+        let f: f64 = tok
+            .parse()
+            .map_err(|_| format!("cannot parse number {tok:?}"))?;
+        if !f.is_finite() {
+            return Err(format!("non-finite number {tok:?}"));
+        }
+        Ok(JsonValue::Float(f))
+    } else {
+        let u: u64 = tok
+            .parse()
+            .map_err(|_| format!("cannot parse integer {tok:?}"))?;
+        Ok(JsonValue::UInt(u))
+    }
+}
+
+fn header_version(fields: &[(String, JsonValue)]) -> Result<u64, String> {
+    if fields.len() != 1 || fields[0].0 != "mma_trace" {
+        return Err(format!(
+            "first line must be the header {{\"mma_trace\": {TRACE_VERSION}}}"
+        ));
+    }
+    fields[0]
+        .1
+        .as_u64()
+        .ok_or_else(|| "header version must be an integer".to_string())
+}
+
+fn record_from_fields(fields: Vec<(String, JsonValue)>) -> Result<TraceRecord, String> {
+    let mut r = TraceRecord {
+        arrival_s: f64::NAN,
+        prompt_tokens: 0,
+        output_tokens: 0,
+        prefix_key: 0,
+        cached_prefix_tokens: 0,
+        tenant: 0,
+        model: String::new(),
+        class: None,
+    };
+    let mut saw = [false; 3]; // t, prompt, output — the required fields
+    for (k, v) in fields {
+        match k.as_str() {
+            "t" => {
+                r.arrival_s = v.as_f64().ok_or("\"t\": expected a number")?;
+                saw[0] = true;
+            }
+            "prompt" => {
+                r.prompt_tokens = v.as_u32().ok_or("\"prompt\": expected a u32")?;
+                saw[1] = true;
+            }
+            "output" => {
+                r.output_tokens = v.as_u32().ok_or("\"output\": expected a u32")?;
+                saw[2] = true;
+            }
+            "key" => r.prefix_key = v.as_u64().ok_or("\"key\": expected a u64")?,
+            "cached" => {
+                r.cached_prefix_tokens = v.as_u32().ok_or("\"cached\": expected a u32")?
+            }
+            "tenant" => r.tenant = v.as_u32().ok_or("\"tenant\": expected a u32")?,
+            "model" => match v {
+                JsonValue::Str(s) => r.model = s,
+                _ => return Err("\"model\": expected a string".to_string()),
+            },
+            "class" => match v {
+                JsonValue::Str(s) => {
+                    r.class = Some(TransferClass::parse(&s).ok_or_else(|| {
+                        format!(
+                            "\"class\": unknown class {s:?} (latency-critical | \
+                             interactive | bulk | background)"
+                        )
+                    })?)
+                }
+                _ => return Err("\"class\": expected a string".to_string()),
+            },
+            other => return Err(format!("unknown key {other:?}")),
+        }
+    }
+    for (seen, name) in saw.iter().zip(["t", "prompt", "output"]) {
+        if !seen {
+            return Err(format!("missing required field {name:?}"));
+        }
+    }
+    if !r.arrival_s.is_finite() || r.arrival_s < 0.0 {
+        return Err(format!("\"t\": {} out of range", r.arrival_s));
+    }
+    if r.prompt_tokens == 0 {
+        return Err("\"prompt\": must be >= 1".to_string());
+    }
+    if r.output_tokens == 0 {
+        return Err("\"output\": must be >= 1".to_string());
+    }
+    if r.cached_prefix_tokens > r.prompt_tokens {
+        return Err(format!(
+            "\"cached\": {} exceeds prompt {}",
+            r.cached_prefix_tokens, r.prompt_tokens
+        ));
+    }
+    if r.cached_prefix_tokens > 0 && r.prefix_key == 0 {
+        return Err("\"cached\" > 0 requires a nonzero \"key\"".to_string());
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: f64, key: u64, cached: u32) -> TraceRecord {
+        TraceRecord {
+            arrival_s: t,
+            prompt_tokens: 16_448,
+            output_tokens: 32,
+            prefix_key: key,
+            cached_prefix_tokens: cached,
+            tenant: 0,
+            model: String::new(),
+            class: None,
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let t = Trace {
+            records: vec![
+                rec(0.0, 7, 0),
+                TraceRecord {
+                    arrival_s: 0.125,
+                    tenant: 2,
+                    model: "qwen-7b-chat".to_string(),
+                    class: Some(TransferClass::Bulk),
+                    cached_prefix_tokens: 16_384,
+                    ..rec(0.0, u64::MAX, 0)
+                },
+                rec(3.25e-3, 0, 0),
+            ],
+        };
+        let text = t.render();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back, t, "write → parse must be identity:\n{text}");
+        // Canonical rendering is a fixpoint.
+        assert_eq!(back.render(), text);
+        // u64 keys survive exactly (no f64 round-trip).
+        assert_eq!(back.records[1].prefix_key, u64::MAX);
+    }
+
+    #[test]
+    fn header_is_required_and_versioned() {
+        let good = "{\"mma_trace\": 1}\n";
+        assert!(Trace::parse(good).unwrap().records.is_empty());
+        let e = Trace::parse("").unwrap_err();
+        assert!(e.contains("missing trace header"), "{e}");
+        let e = Trace::parse("{\"mma_trace\": 2}\n").unwrap_err();
+        assert!(e.contains("unsupported trace version 2"), "{e}");
+        // A record line first = not a header.
+        let e =
+            Trace::parse("{\"t\": 0.0, \"prompt\": 10, \"output\": 1}\n").unwrap_err();
+        assert!(e.contains("header"), "{e}");
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_with_line_numbers() {
+        let head = "{\"mma_trace\": 1}\n";
+        for (bad, needle) in [
+            ("{\"t\": 0.0, \"prompt\": 10}", "missing required field \"output\""),
+            ("{\"t\": 0.0, \"prompt\": 10, \"output\": 1, \"nope\": 2}", "unknown key"),
+            ("{\"t\": -1.0, \"prompt\": 10, \"output\": 1}", "negative"),
+            ("{\"t\": 0.0, \"prompt\": 0, \"output\": 1}", "\"prompt\""),
+            ("{\"t\": 0.0, \"prompt\": 10, \"output\": 1, \"cached\": 11, \"key\": 3}", "exceeds prompt"),
+            ("{\"t\": 0.0, \"prompt\": 10, \"output\": 1, \"cached\": 5}", "nonzero \"key\""),
+            ("{\"t\": 0.0, \"prompt\": 10, \"output\": 1, \"class\": \"x\"}", "unknown class"),
+            ("{\"t\": 0.0, \"prompt\": 10, \"output\": 1", "expected ',' or '}'"),
+            ("{\"t\": 0.0, \"t\": 1.0, \"prompt\": 10, \"output\": 1}", "duplicate"),
+            ("not json", "object"),
+            ("{\"t\": 0.0, \"prompt\": 10, \"output\": 1} extra", "trailing garbage"),
+        ] {
+            let e = Trace::parse(&format!("{head}{bad}\n")).unwrap_err();
+            assert!(e.contains("line 2"), "{bad}: {e}");
+            assert!(e.contains(needle), "{bad}: expected {needle:?}, got {e}");
+        }
+    }
+
+    #[test]
+    fn optional_fields_default_and_strings_escape() {
+        let t = Trace::parse(
+            "{\"mma_trace\": 1}\n{\"t\": 1, \"prompt\": 8, \"output\": 2, \
+             \"model\": \"a\\\"b\\\\c\"}\n",
+        )
+        .unwrap();
+        let r = &t.records[0];
+        assert_eq!(r.tenant, 0);
+        assert_eq!(r.prefix_key, 0);
+        assert_eq!(r.cached_prefix_tokens, 0);
+        assert_eq!(r.class, None);
+        assert_eq!(r.model, "a\"b\\c");
+        assert_eq!(r.arrival_s, 1.0, "integer t accepted as seconds");
+        // And the escaped model round-trips.
+        let back = Trace::parse(&t.render()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn requests_and_stats_derive_from_records() {
+        let t = Trace {
+            records: vec![rec(0.0, 9, 0), rec(1.0, 9, 16_384), rec(4.0, 9, 16_384)],
+        };
+        let reqs = t.requests();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[1].id, RequestId(1));
+        assert_eq!(reqs[1].arrival, Time::from_secs_f64(1.0));
+        assert_eq!(reqs[1].cached_prefix_tokens, 16_384);
+        assert_eq!(t.duration_s(), 4.0);
+        assert!((t.mean_rate_rps() - 0.75).abs() < 1e-12);
+        // First appearance of key 9 is cold → nothing to pre-seed.
+        assert!(t.warm_prefixes().is_empty());
+        let warm = Trace {
+            records: vec![rec(0.0, 9, 16_384)],
+        };
+        assert_eq!(warm.warm_prefixes(), vec![(0, 9, 16_384)]);
+    }
+
+    #[test]
+    fn truncated_caps_record_count() {
+        let t = Trace {
+            records: (0..10).map(|i| rec(i as f64, 0, 0)).collect(),
+        };
+        assert_eq!(t.truncated(3).records.len(), 3);
+        assert_eq!(t.truncated(99).records.len(), 10);
+    }
+}

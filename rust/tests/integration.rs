@@ -2,8 +2,10 @@
 //! under realistic serving scenarios, plus determinism and failure cases.
 
 use mma::config::{FleetConfig, RunConfig, ServingConfig};
+use mma::figures::workload_replay::{replay, replay_serving, ReplayOptions};
 use mma::mma::{MmaConfig, SimWorld, TransferClass, TransferDesc};
 use mma::models::{qwen3_4b, qwen_7b_chat};
+use mma::workload::Trace;
 use mma::policy::PolicySpec;
 use mma::serving::{
     Compute, FixedCompute, ModelRegistry, ModelState, Request, RequestId, RoutePolicy,
@@ -305,6 +307,8 @@ fn hit_request(id: u64, ctx: u32, key: u64) -> Request {
         cached_prefix_tokens: ctx,
         prefix_key: key,
         output_tokens: 2,
+        tenant: 0,
+        class: None,
     }
 }
 
@@ -368,6 +372,8 @@ fn overlapped_fetch_and_prefill_beat_the_serialized_sum() {
         cached_prefix_tokens: 0,
         prefix_key: 0,
         output_tokens: 2,
+        tenant: 0,
+        class: None,
     };
     let out = e.run(vec![cold, hit_request(2, 65_536, 9)]);
     let (a, b) = (&out[0], &out[1]);
@@ -605,4 +611,95 @@ fn fleet_config_section_drives_serve_end_to_end() {
     assert!(out.iter().all(|o| o.finished_at.is_some()));
     let (host, peer) = f.fetch_counts();
     assert_eq!((host, peer), (1, 1), "second turn rides NVLink");
+}
+
+#[test]
+fn sample_trace_parses_and_replays_deterministically() {
+    // The shipped example trace is the CI smoke input: it must parse,
+    // round-trip through the canonical rendering, and replay to
+    // byte-identical metrics on repeated runs (the replay acceptance
+    // gate), including its tenant-namespaced warm prefixes.
+    let text = include_str!("../../examples/sample_trace.jsonl");
+    let trace = Trace::parse(text).expect("sample trace parses");
+    assert_eq!(trace.records.len(), 12);
+    assert_eq!(Trace::parse(&trace.render()).unwrap(), trace);
+    // Tenant 2's document arrives warm on its first turn → pre-seeded.
+    assert!(trace
+        .warm_prefixes()
+        .iter()
+        .any(|&(tenant, key, _)| tenant == 2 && key == 201));
+    let fleet = FleetConfig {
+        gpus: 2,
+        router: RoutePolicy::RoundRobin,
+        peer_fetch: true,
+        prefix_affinity: false,
+    };
+    let run = || {
+        replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::default(),
+            replay_serving(),
+            fleet.clone(),
+            &ReplayOptions::default(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.render(),
+        b.render(),
+        "same trace + config must print byte-identical metrics"
+    );
+    assert_eq!(a.requests, 12);
+    assert!(a.prefix_hits > 0, "warm turns must hit the prefix tiers");
+    assert!(a.makespan_s > 0.0);
+    // Per-tenant grouping covers every tenant in the trace.
+    let tenants: Vec<u32> = a.per_tenant.iter().map(|(t, _, _)| *t).collect();
+    assert_eq!(tenants, vec![1, 2, 3]);
+}
+
+#[test]
+fn trace_replay_honors_fleet_and_policy_dimensions() {
+    // A generated bursty trace replayed under two policies: both
+    // complete all requests, fetch accounting responds to the peer
+    // switch, and the [workload]-driven generator is seed-stable.
+    use mma::util::rng::Rng;
+    use mma::workload::{ArrivalProcess, TenantSpec, TraceGen};
+    let mut a = TenantSpec::interactive(1, 3, 8_192);
+    a.warm_start = true; // previous-session documents → host-tier fetches
+    let mut b = TenantSpec::interactive(2, 3, 8_192);
+    b.warm_start = true;
+    let gen = TraceGen {
+        arrivals: ArrivalProcess::bursty(16.0, 0.8, 1.5),
+        tenants: vec![a, b],
+        requests: 24,
+    };
+    let trace = gen.generate(&mut Rng::seed_from_u64(0xF16));
+    assert_eq!(trace, gen.generate(&mut Rng::seed_from_u64(0xF16)));
+    let run = |peer: bool| {
+        let fleet = FleetConfig {
+            gpus: 2,
+            router: RoutePolicy::RoundRobin,
+            peer_fetch: peer,
+            prefix_affinity: false,
+        };
+        replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            fleet,
+            &ReplayOptions::default(),
+        )
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.requests, 24);
+    assert_eq!(off.peer_fetches, 0, "no NVLink fetches with the switch off");
+    assert!(
+        on.peer_fetches > 0,
+        "round-robined repeat hits must ride NVLink when on"
+    );
+    assert!(on.host_fetches < off.host_fetches);
 }

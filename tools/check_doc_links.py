@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""Fail on dangling relative links in the repo's markdown docs.
+
+Scans the maintained docs (docs/, rust/, configs/, examples/) for
+markdown links `[text](target)` and verifies that every relative target
+(optionally with a #fragment) exists on disk. External
+(http/https/mailto) links and pure #anchors are skipped, as are the
+repo-root retrieval artifacts (PAPERS.md etc.), which are generated.
+Zero dependencies; run from the repo root:
+
+    python3 tools/check_doc_links.py
+"""
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files(root):
+    for sub in ("docs", "rust", "configs", "examples"):
+        top = os.path.join(root, sub)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames if d not in ("target", ".git")]
+            for name in sorted(filenames):
+                if name.endswith(".md"):
+                    yield os.path.join(dirpath, name)
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bad = []
+    checked = 0
+    for path in md_files(root):
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                bad.append((os.path.relpath(path, root), target))
+    if bad:
+        print("dangling relative links:")
+        for src, target in bad:
+            print(f"  {src}: {target}")
+        sys.exit(1)
+    print(f"doc links ok ({checked} relative links checked)")
+
+
+if __name__ == "__main__":
+    main()
