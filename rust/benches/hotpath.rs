@@ -1,6 +1,8 @@
 //! Hot-path micro-benchmarks (§Perf, EXPERIMENTS.md): the simulator and
 //! engine inner loops that bound how fast the figure harnesses run, plus
-//! end-to-end transfer simulations per paper table.
+//! end-to-end transfer simulations per paper table, plus the shared
+//! `mma::perf` harness whose JSON feeds `BENCH_0006_hotpath.json`
+//! (see docs/PERF.md). `mma bench hotpath` runs the same harness.
 //!
 //! Criterion is unavailable offline; this uses `mma::util::bench`.
 
@@ -66,4 +68,10 @@ fn main() {
         let t = w.memcpy_async(s, TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), 8 << 30));
         black_box(w.run_until_transfer(t));
     });
+
+    // The shared hotpath harness (same code path as `mma bench hotpath`):
+    // queue churn wheel-vs-heap, fabric flow events/s, and the twin
+    // incremental/reference replay legs with their allocator counters.
+    println!("\n== mma::perf::run_hotpath ==");
+    print!("{}", mma::perf::run_hotpath(false).render());
 }

@@ -343,6 +343,7 @@ fn apply_mma(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Result<(
             ("numa_local_only", TomlValue::Bool(b)) => m.numa_local_only = *b,
             ("dual_pipeline", TomlValue::Bool(b)) => m.dual_pipeline = *b,
             ("centralized_dispatch", TomlValue::Bool(b)) => m.centralized_dispatch = *b,
+            ("incremental_alloc", TomlValue::Bool(b)) => m.incremental_alloc = *b,
             ("activation_ns", TomlValue::Int(i)) => m.activation_ns = *i as u64,
             ("contention_beta", TomlValue::Float(f)) => m.contention_beta = *f,
             ("contention_beta", TomlValue::Int(i)) => m.contention_beta = *i as f64,
@@ -668,6 +669,7 @@ mod tests {
             direct_priority = true
             relay_gpus = [1, 2, 3]
             contention_beta = 2.5
+            incremental_alloc = false
 
             [serving]
             kv_block_tokens = 16
@@ -685,6 +687,7 @@ mod tests {
             cfg.mma.relay_gpus,
             Some(vec![GpuId(1), GpuId(2), GpuId(3)])
         );
+        assert!(!cfg.mma.incremental_alloc);
         assert_eq!(cfg.serving.tp, 4);
         assert!(!cfg.serving.pd_disaggregation);
         assert_eq!(cfg.serving.arrival_rate_rps, 2.5);

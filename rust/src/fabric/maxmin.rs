@@ -7,9 +7,25 @@
 //! `cap/weight_sum`), freeze its flows at `weight * share`, subtract, and
 //! continue. A flow whose rate cap binds before the link share is frozen
 //! at its cap instead (QoS bulk throttling). With all weights equal and no
-//! caps this degenerates to classic unweighted max-min — bit-identical to
-//! the historical allocator, which is what keeps every pre-QoS figure and
-//! bench reproducible.
+//! caps this degenerates to classic unweighted max-min.
+//!
+//! ## Structure
+//!
+//! The allocation problem decomposes exactly over *connected components*
+//! of the links↔flows bipartite graph: flows that share no link (directly
+//! or transitively) cannot influence each other's rates. Both entry
+//! points exploit this:
+//!
+//! * [`max_min_rates_weighted`] — the pure-function reference oracle.
+//!   Decomposes its input into components (ordered by lowest flow index,
+//!   flows in index order within each) and water-fills each one.
+//! * [`ComponentSolver`] — the scratch-buffer solver the fabric uses on
+//!   its hot path. It discovers components via stamped BFS over the
+//!   fabric's live link→flow adjacency and runs the *same*
+//!   [`water_fill`] kernel, so an incremental re-solve of one touched
+//!   component is bit-identical to the slice of a full oracle re-solve —
+//!   the floating-point operation sequence per component is the same in
+//!   both paths by construction.
 
 use crate::topology::LinkId;
 
@@ -25,8 +41,11 @@ pub fn max_min_rates(capacity: &[f64], paths: &[&[LinkId]]) -> Vec<f64> {
 /// `l`; `paths[f]` lists the links flow `f` traverses (duplicates allowed
 /// but wasteful); `weights[f]` is flow `f`'s share weight (> 0) and
 /// `caps[f]` an absolute rate ceiling (`f64::INFINITY` = uncapped).
-/// Returns one rate per flow. O(L·F) per bottleneck round,
-/// O(L·F·min(L,F)) worst case — tiny for the fleet sizes simulated here.
+/// Returns one rate per flow. Solves each connected component of the
+/// links↔flows graph independently: O(L·F·min(L,F)) worst case within a
+/// component, but typical fleet workloads split into many small
+/// components. This is the reference oracle for the fabric's incremental
+/// [`ComponentSolver`]: per-component results are bit-identical.
 pub fn max_min_rates_weighted(
     capacity: &[f64],
     paths: &[&[LinkId]],
@@ -42,39 +61,144 @@ pub fn max_min_rates_weighted(
     debug_assert!(weights.iter().all(|w| *w > 0.0 && w.is_finite()));
     debug_assert!(caps.iter().all(|c| *c > 0.0));
     let nl = capacity.len();
-    let mut cap: Vec<f64> = capacity.to_vec();
+    let mut rate = vec![0.0; nf];
+    let mut lk = LinkScratch::default();
+    lk.ensure(nl);
+
+    // Link→flow adjacency for component discovery.
+    let mut link_users: Vec<Vec<u32>> = vec![Vec::new(); nl];
+    for (f, p) in paths.iter().enumerate() {
+        for &l in *p {
+            link_users[l.0 as usize].push(f as u32);
+        }
+    }
+    let mut flow_seen = vec![false; nf];
+    let mut link_seen = vec![false; nl];
+    let mut stack: Vec<u32> = Vec::new();
+    let mut comp: Vec<u32> = Vec::new();
+    let mut comp_w: Vec<f64> = Vec::new();
+    let mut comp_c: Vec<f64> = Vec::new();
+    let mut comp_r: Vec<f64> = Vec::new();
+    for f0 in 0..nf {
+        if flow_seen[f0] {
+            continue;
+        }
+        comp.clear();
+        flow_seen[f0] = true;
+        stack.push(f0 as u32);
+        while let Some(f) = stack.pop() {
+            comp.push(f);
+            for &l in paths[f as usize] {
+                let li = l.0 as usize;
+                if !link_seen[li] {
+                    link_seen[li] = true;
+                    for &g in &link_users[li] {
+                        if !flow_seen[g as usize] {
+                            flow_seen[g as usize] = true;
+                            stack.push(g);
+                        }
+                    }
+                }
+            }
+        }
+        // Canonical flow order within the component: ascending index.
+        comp.sort_unstable();
+        comp_w.clear();
+        comp_w.extend(comp.iter().map(|&f| weights[f as usize]));
+        comp_c.clear();
+        comp_c.extend(comp.iter().map(|&f| caps[f as usize]));
+        comp_r.clear();
+        comp_r.resize(comp.len(), f64::INFINITY);
+        water_fill(
+            capacity,
+            comp.len(),
+            |i| paths[comp[i] as usize],
+            &comp_w,
+            &comp_c,
+            &mut comp_r,
+            &mut lk,
+        );
+        for (k, &f) in comp.iter().enumerate() {
+            rate[f as usize] = comp_r[k];
+        }
+    }
+    rate
+}
+
+/// Per-link working state for one [`water_fill`] pass, reusable across
+/// components and across solves: only links actually touched by the
+/// current component are initialized (and reset on exit), so a solve
+/// costs O(component), not O(topology).
+#[derive(Default)]
+struct LinkScratch {
+    /// Residual capacity per link (valid only for `used` entries).
+    cap: Vec<f64>,
+    /// Unassigned-flow count per link. Invariant: all zeros between calls.
+    active: Vec<u32>,
+    /// Unassigned weight sum per link. Invariant: all zeros between calls.
+    wsum: Vec<f64>,
+    /// Dense list of links the current component touches.
+    used: Vec<u32>,
+}
+
+impl LinkScratch {
+    fn ensure(&mut self, n_links: usize) {
+        if self.cap.len() < n_links {
+            self.cap.resize(n_links, 0.0);
+            self.active.resize(n_links, 0);
+            self.wsum.resize(n_links, 0.0);
+        }
+    }
+}
+
+/// Progressive filling over one connected component of `n` flows.
+///
+/// Flows are addressed positionally (`0..n`); `path_of(i)` yields flow
+/// `i`'s links, `weights`/`caps` are parallel positional slices, and the
+/// result lands in `rate[..n]` (pre-filled with `INFINITY` by the
+/// caller). This is the single shared kernel behind both the reference
+/// oracle and the fabric's incremental solver — keeping one
+/// floating-point operation sequence is what makes the two bit-identical.
+fn water_fill<'a, P>(
+    capacity: &[f64],
+    n: usize,
+    path_of: P,
+    weights: &[f64],
+    caps: &[f64],
+    rate: &mut [f64],
+    lk: &mut LinkScratch,
+) where
+    P: Fn(usize) -> &'a [LinkId],
+{
     // Exact integer count of unassigned flows per link alongside the
     // float weight sum: the count decides whether a link is still a
     // bottleneck candidate, so float residue in `wsum` (non-dyadic
     // weights) can never keep a fully-drained link in play and stall the
     // filling loop.
-    let mut active: Vec<u32> = vec![0; nl];
-    let mut wsum: Vec<f64> = vec![0.0; nl];
-    // Only consider links actually used: iterate a dense used-link list
-    // instead of every link in the topology (~4x fewer candidates per
-    // bottleneck round at fleet scale — see EXPERIMENTS.md §Perf).
-    let mut used: Vec<u32> = Vec::with_capacity(nf * 4);
-    for (f, p) in paths.iter().enumerate() {
-        for &l in *p {
-            if active[l.0 as usize] == 0 {
-                used.push(l.0 as u32);
+    lk.used.clear();
+    for f in 0..n {
+        for &l in path_of(f) {
+            let li = l.0 as usize;
+            if lk.active[li] == 0 {
+                lk.used.push(li as u32);
+                lk.cap[li] = capacity[li];
+                lk.wsum[li] = 0.0;
             }
-            active[l.0 as usize] += 1;
-            wsum[l.0 as usize] += weights[f];
+            lk.active[li] += 1;
+            lk.wsum[li] += weights[f];
         }
     }
-    let mut rate = vec![f64::INFINITY; nf];
-    let mut unassigned = nf;
+    let mut unassigned = n;
 
     while unassigned > 0 {
         // Bottleneck link: min cap per unit weight over links still
         // carrying unassigned flows.
         let mut best_link = usize::MAX;
         let mut best_share = f64::INFINITY;
-        for &lu in &used {
+        for &lu in &lk.used {
             let l = lu as usize;
-            if active[l] > 0 {
-                let share = cap[l].max(0.0) / wsum[l].max(1e-300);
+            if lk.active[l] > 0 {
+                let share = lk.cap[l].max(0.0) / lk.wsum[l].max(1e-300);
                 if share < best_share {
                     best_share = share;
                     best_link = l;
@@ -84,26 +208,26 @@ pub fn max_min_rates_weighted(
         // Rate caps that bind before the link share: freeze those flows at
         // their cap and redistribute the freed bandwidth next round.
         let mut any_capped = false;
-        for (f, p) in paths.iter().enumerate() {
+        for f in 0..n {
             if rate[f].is_finite() || caps[f] >= best_share * weights[f] {
                 continue;
             }
             rate[f] = caps[f];
             unassigned -= 1;
             any_capped = true;
-            for &l in *p {
+            for &l in path_of(f) {
                 let li = l.0 as usize;
-                cap[li] -= caps[f];
-                active[li] -= 1;
-                wsum[li] -= weights[f];
+                lk.cap[li] -= caps[f];
+                lk.active[li] -= 1;
+                lk.wsum[li] -= weights[f];
             }
         }
         if any_capped {
             continue;
         }
         if best_link == usize::MAX {
-            // No constrained links left (shouldn't happen with finite caps).
-            for r in rate.iter_mut() {
+            // No constrained links left (empty-path flows only).
+            for r in rate[..n].iter_mut() {
                 if r.is_infinite() {
                     *r = 0.0;
                 }
@@ -111,26 +235,159 @@ pub fn max_min_rates_weighted(
             break;
         }
         // Freeze every unassigned flow crossing the bottleneck.
-        for (f, p) in paths.iter().enumerate() {
+        for f in 0..n {
             if rate[f].is_finite() {
                 continue;
             }
+            let p = path_of(f);
             if p.iter().any(|&l| l.0 as usize == best_link) {
                 let r = best_share * weights[f];
                 rate[f] = r;
                 unassigned -= 1;
-                for &l in *p {
+                for &l in p {
                     let li = l.0 as usize;
-                    cap[li] -= r;
-                    active[li] -= 1;
-                    wsum[li] -= weights[f];
+                    lk.cap[li] -= r;
+                    lk.active[li] -= 1;
+                    lk.wsum[li] -= weights[f];
                 }
             }
         }
         // Numerical hygiene: the bottleneck is now fully allocated.
-        cap[best_link] = cap[best_link].max(0.0);
+        lk.cap[best_link] = lk.cap[best_link].max(0.0);
     }
-    rate
+    // Restore the between-calls invariant (active is structurally zero
+    // here; wsum carries float residue from the subtractions).
+    for &lu in &lk.used {
+        let l = lu as usize;
+        lk.active[l] = 0;
+        lk.wsum[l] = 0.0;
+    }
+}
+
+/// Scratch-buffer connected-component solver for the fabric hot path.
+///
+/// A solve *round* (one [`begin`](Self::begin)) corresponds to one rate
+/// recomputation event. Within a round the caller collects one or more
+/// components — seeded from flows that joined or links that lost a flow
+/// — and solves each; generation stamps deduplicate overlapping seeds so
+/// every component is solved at most once per round. All buffers are
+/// reused across rounds: steady-state solves allocate nothing.
+#[derive(Default)]
+pub struct ComponentSolver {
+    lk: LinkScratch,
+    /// Visited stamp per flow slot (== `stamp` ⇒ claimed this round).
+    flow_stamp: Vec<u32>,
+    /// Visited stamp per link (== `stamp` ⇒ expanded this round).
+    link_stamp: Vec<u32>,
+    stamp: u32,
+    stack: Vec<u32>,
+    comp: Vec<u32>,
+    comp_w: Vec<f64>,
+    comp_c: Vec<f64>,
+    comp_r: Vec<f64>,
+}
+
+impl ComponentSolver {
+    /// Open a fresh solve round over `n_links` links and `n_slots` flow
+    /// slots: sizes the scratch arrays and invalidates previous stamps.
+    pub fn begin(&mut self, n_links: usize, n_slots: usize) {
+        if self.link_stamp.len() < n_links {
+            self.link_stamp.resize(n_links, 0);
+        }
+        if self.flow_stamp.len() < n_slots {
+            self.flow_stamp.resize(n_slots, 0);
+        }
+        self.lk.ensure(n_links);
+        self.stamp = self.stamp.wrapping_add(1);
+        if self.stamp == 0 {
+            // u32 generation wrapped: scrub stale stamps that would
+            // otherwise collide with the restarted counter.
+            self.link_stamp.iter_mut().for_each(|s| *s = 0);
+            self.flow_stamp.iter_mut().for_each(|s| *s = 0);
+            self.stamp = 1;
+        }
+    }
+
+    /// Whether `flow` was already claimed by a component this round.
+    pub fn claimed(&self, flow: u32) -> bool {
+        self.flow_stamp[flow as usize] == self.stamp
+    }
+
+    /// Collect the connected component containing `seed` (a flow slot)
+    /// by BFS over the live link→flow adjacency, leaving the component's
+    /// flow slots sorted ascending in the internal buffer. The caller
+    /// must check [`claimed`](Self::claimed) first.
+    pub fn collect<'a>(
+        &mut self,
+        seed: u32,
+        link_flows: &[Vec<u32>],
+        path_of: impl Fn(u32) -> &'a [LinkId],
+    ) {
+        debug_assert!(!self.claimed(seed));
+        self.comp.clear();
+        self.stack.clear();
+        self.flow_stamp[seed as usize] = self.stamp;
+        self.stack.push(seed);
+        while let Some(f) = self.stack.pop() {
+            self.comp.push(f);
+            for &l in path_of(f) {
+                let li = l.0 as usize;
+                if self.link_stamp[li] != self.stamp {
+                    self.link_stamp[li] = self.stamp;
+                    for &g in &link_flows[li] {
+                        if self.flow_stamp[g as usize] != self.stamp {
+                            self.flow_stamp[g as usize] = self.stamp;
+                            self.stack.push(g);
+                        }
+                    }
+                }
+            }
+        }
+        // Canonical order: the kernel must see flows in ascending slot
+        // order, exactly as the reference oracle does.
+        self.comp.sort_unstable();
+    }
+
+    /// Water-fill the collected component. Rates are retrieved via
+    /// [`result`](Self::result); they are bit-identical to the
+    /// corresponding entries of a full [`max_min_rates_weighted`] solve
+    /// over the same live flow set.
+    pub fn solve_collected<'a>(
+        &mut self,
+        capacity: &[f64],
+        path_of: impl Fn(u32) -> &'a [LinkId],
+        weight_of: impl Fn(u32) -> f64,
+        cap_of: impl Fn(u32) -> f64,
+    ) {
+        let ComponentSolver {
+            lk,
+            comp,
+            comp_w,
+            comp_c,
+            comp_r,
+            ..
+        } = self;
+        comp_w.clear();
+        comp_w.extend(comp.iter().map(|&f| weight_of(f)));
+        comp_c.clear();
+        comp_c.extend(comp.iter().map(|&f| cap_of(f)));
+        comp_r.clear();
+        comp_r.resize(comp.len(), f64::INFINITY);
+        water_fill(
+            capacity,
+            comp.len(),
+            |i| path_of(comp[i]),
+            comp_w,
+            comp_c,
+            comp_r,
+            lk,
+        );
+    }
+
+    /// The last solved component: parallel (flow slots, rates).
+    pub fn result(&self) -> (&[u32], &[f64]) {
+        (&self.comp, &self.comp_r)
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +445,81 @@ mod tests {
     #[test]
     fn empty_inputs() {
         assert!(max_min_rates(&[1.0], &[]).is_empty());
+    }
+
+    #[test]
+    fn disjoint_components_solve_independently() {
+        // Two flows on link 0, one flow on link 1: two components.
+        let caps = [60.0, 10.0];
+        let p0: &[LinkId] = &[l(0)];
+        let p1: &[LinkId] = &[l(1)];
+        let r = max_min_rates(&caps, &[p0, p0, p1]);
+        assert_eq!(r, vec![30.0, 30.0, 10.0]);
+    }
+
+    #[test]
+    fn property_component_solver_matches_oracle_bitwise() {
+        // The incremental-allocator contract: solving any single
+        // component via ComponentSolver reproduces the oracle's rates for
+        // that component's flows bit-for-bit.
+        testkit::check("maxmin-component-vs-oracle", |rng| {
+            let nl = rng.range_usize(2, 12);
+            let nf = rng.range_usize(1, 24);
+            let caps: Vec<f64> = (0..nl).map(|_| rng.range_f64(1.0, 500.0)).collect();
+            let paths: Vec<Vec<LinkId>> = (0..nf)
+                .map(|_| {
+                    // Short paths over few links → several components.
+                    let len = rng.range_usize(1, 3);
+                    let mut links: Vec<u16> = (0..nl as u16).collect();
+                    rng.shuffle(&mut links);
+                    links.truncate(len);
+                    links.into_iter().map(LinkId).collect()
+                })
+                .collect();
+            let refs: Vec<&[LinkId]> = paths.iter().map(|p| p.as_slice()).collect();
+            let w: Vec<f64> = (0..nf).map(|_| rng.range_f64(0.5, 8.0)).collect();
+            let rc: Vec<f64> = (0..nf)
+                .map(|_| {
+                    if rng.bool(0.3) {
+                        rng.range_f64(1.0, 100.0)
+                    } else {
+                        f64::INFINITY
+                    }
+                })
+                .collect();
+            let oracle = max_min_rates_weighted(&caps, &refs, &w, &rc);
+
+            // Live adjacency, as the fabric would maintain it.
+            let mut link_flows: Vec<Vec<u32>> = vec![Vec::new(); nl];
+            for (f, p) in paths.iter().enumerate() {
+                for &x in p {
+                    link_flows[x.0 as usize].push(f as u32);
+                }
+            }
+            let mut solver = ComponentSolver::default();
+            solver.begin(nl, nf);
+            for f0 in 0..nf as u32 {
+                if solver.claimed(f0) {
+                    continue;
+                }
+                solver.collect(f0, &link_flows, |f| refs[f as usize]);
+                solver.solve_collected(
+                    &caps,
+                    |f| refs[f as usize],
+                    |f| w[f as usize],
+                    |f| rc[f as usize],
+                );
+                let (slots, rates) = solver.result();
+                for (&s, &r) in slots.iter().zip(rates) {
+                    assert_eq!(
+                        r.to_bits(),
+                        oracle[s as usize].to_bits(),
+                        "flow {s}: component rate {r} != oracle {}",
+                        oracle[s as usize]
+                    );
+                }
+            }
+        });
     }
 
     /// Load of link `li` under `rates`.

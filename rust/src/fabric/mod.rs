@@ -11,13 +11,32 @@
 //! bandwidth) followed by a transfer phase at the fair-share rate. The
 //! fabric is advanced lazily: callers `poll(now)` to collect completions
 //! and `next_event_time()` to know when the state next changes.
+//!
+//! ## Hot-path layout
+//!
+//! Every per-event operation scales with *live* work, never with the
+//! lifetime slot count: dense `active`/`pending` index sets (swap-remove
+//! with back-pointers) drive `poll`, `advance_to` and `class_rate`; each
+//! active flow carries an absolute `done_at` completion time fixed when
+//! its rate is assigned, so the next-internal-event query is a cached
+//! O(live) min instead of a full-slab scan with float recomputation.
+//!
+//! Rate allocation is *incremental* by default: when flows join or leave,
+//! only the connected components of the links↔flows graph that contain a
+//! touched flow are re-solved ([`ComponentSolver`]); everything else
+//! keeps its rate and completion time bit-for-bit. The full re-solve
+//! (the pre-existing reference path) remains available via
+//! [`Fabric::set_incremental`]`(false)` and produces byte-identical
+//! simulations — the per-component water-filling kernel is shared, so
+//! the float operation sequence per component is the same either way.
 
 mod maxmin;
 
-pub use maxmin::{max_min_rates, max_min_rates_weighted};
+pub use maxmin::{max_min_rates, max_min_rates_weighted, ComponentSolver};
 
 use crate::sim::Time;
 use crate::topology::{LinkId, Topology};
+use std::cell::Cell;
 use std::collections::HashMap;
 
 /// Handle to an in-flight flow.
@@ -31,7 +50,7 @@ pub type FlowTag = u64;
 enum Phase {
     /// DMA setup: becomes active at the stored time.
     Pending { active_at: Time },
-    /// Transferring at `rate` since `since`.
+    /// Transferring at `rate`.
     Active,
     /// Finished (slot free after harvest).
     Done,
@@ -52,6 +71,12 @@ struct Flow {
     tag: FlowTag,
     started: Time,
     live: bool,
+    /// Absolute completion time, fixed whenever `rate` changes
+    /// (`Time::NEVER` while pending or starved).
+    done_at: Time,
+    /// Back-pointer: position in `pending` (while Pending) or `active`
+    /// (while Active), for O(1) swap-removal.
+    set_pos: u32,
 }
 
 /// Cumulative per-flow accounting returned on completion.
@@ -69,6 +94,23 @@ pub struct FlowDone {
     pub finished: Time,
 }
 
+/// Allocator work counters, for perf introspection and the hotpath bench
+/// (`BENCH_0006_hotpath.json` reports these for the incremental vs the
+/// reference path).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Rate recomputation events (any flow join/leave batch).
+    pub recomputes: u64,
+    /// Whole-flow-set re-solves: one per recompute on the reference path,
+    /// zero on the incremental path.
+    pub full_solves: u64,
+    /// Connected-component water-fill passes.
+    pub component_solves: u64,
+    /// Total flow-rate assignments across all component solves — the
+    /// actual allocator work done.
+    pub flows_solved: u64,
+}
+
 /// The fabric simulator.
 pub struct Fabric {
     capacity: Vec<f64>,
@@ -76,33 +118,93 @@ pub struct Fabric {
     free: Vec<u32>,
     /// Active flow ids per link (dense, rebuilt incrementally).
     link_flows: Vec<Vec<u32>>,
+    /// Dense set of Active flow slots (unordered; back-pointers in flows).
+    active: Vec<u32>,
+    /// Dense set of Pending flow slots (unordered; back-pointers in flows).
+    pending: Vec<u32>,
     last_advance: Time,
-    active_count: usize,
-    /// Monotone counter of rate recomputations (perf introspection).
-    pub recomputes: u64,
+    /// Cached next-internal-event time (`Time::NEVER` = idle), valid
+    /// unless `next_dirty`. Interior-mutable so `next_event_time(&self)`
+    /// can refresh it.
+    next_cache: Cell<Time>,
+    next_dirty: Cell<bool>,
+    /// Incremental (component-scoped) rate allocation; false = reference
+    /// full re-solve per event.
+    incremental: bool,
+    solver: ComponentSolver,
+    /// Flow slots that joined the active set since the last recompute.
+    seed_flows: Vec<u32>,
+    /// Links that lost a flow since the last recompute.
+    seed_links: Vec<u32>,
+    /// Scratch for due-event gathering in `poll_into`.
+    due_scratch: Vec<u32>,
+    /// Scratch for full-mode solve ordering.
+    solve_scratch: Vec<u32>,
+    stats: FabricStats,
     /// Total bytes completed per tag-class is left to callers; the fabric
     /// tracks aggregate delivered bytes for utilization reports.
     pub delivered_bytes: f64,
 }
 
 impl Fabric {
-    /// Build over a topology's links.
+    /// Build over a topology's links (incremental allocation on).
     pub fn new(topo: &Topology) -> Fabric {
         Fabric {
             capacity: topo.links.iter().map(|l| l.capacity_bps).collect(),
             flows: Vec::new(),
             free: Vec::new(),
             link_flows: vec![Vec::new(); topo.links.len()],
+            active: Vec::new(),
+            pending: Vec::new(),
             last_advance: Time::ZERO,
-            active_count: 0,
-            recomputes: 0,
+            next_cache: Cell::new(Time::NEVER),
+            next_dirty: Cell::new(false),
+            incremental: true,
+            solver: ComponentSolver::default(),
+            seed_flows: Vec::new(),
+            seed_links: Vec::new(),
+            due_scratch: Vec::new(),
+            solve_scratch: Vec::new(),
+            stats: FabricStats::default(),
             delivered_bytes: 0.0,
         }
     }
 
+    /// Builder-style allocator mode selection (see
+    /// [`set_incremental`](Self::set_incremental)).
+    pub fn with_incremental(mut self, on: bool) -> Fabric {
+        self.set_incremental(on);
+        self
+    }
+
+    /// Choose between incremental (component-scoped, the default) and
+    /// reference (full re-solve per event) rate allocation. Both produce
+    /// bit-identical simulations; the reference path exists as the
+    /// equivalence oracle and baseline. Switching with live flows forces
+    /// one re-solve so rates stay consistent.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
+        if !self.active.is_empty() {
+            let mut seeds: Vec<u32> = self.active.clone();
+            seeds.sort_unstable();
+            self.seed_flows.extend(seeds);
+            self.recompute();
+        }
+    }
+
+    /// Whether incremental allocation is enabled.
+    pub fn is_incremental(&self) -> bool {
+        self.incremental
+    }
+
+    /// Allocator work counters since construction.
+    pub fn stats(&self) -> FabricStats {
+        self.stats
+    }
+
     /// Number of currently live (pending or active) flows.
     pub fn live_flows(&self) -> usize {
-        self.flows.iter().filter(|f| f.live).count()
+        self.active.len() + self.pending.len()
     }
 
     /// Start a flow of `bytes` over `path` with a setup `latency` before it
@@ -153,6 +255,8 @@ impl Fabric {
             tag,
             started: now,
             live: true,
+            done_at: Time::NEVER,
+            set_pos: 0,
         };
         let id = match self.free.pop() {
             Some(i) => {
@@ -164,6 +268,9 @@ impl Fabric {
                 (self.flows.len() - 1) as u32
             }
         };
+        self.flows[id as usize].set_pos = self.pending.len() as u32;
+        self.pending.push(id);
+        self.next_dirty.set(true);
         FlowId(id)
     }
 
@@ -179,63 +286,92 @@ impl Fabric {
         // still count the cancelled flow.
         f.live = false;
         f.phase = Phase::Done;
+        self.next_dirty.set(true);
         if was_active {
+            self.active_remove(id.0);
             self.detach(id.0);
             self.recompute();
+        } else {
+            self.pending_remove(id.0);
         }
         self.free.push(id.0);
     }
 
     /// Advance to `now`, activating due pending flows and harvesting
     /// completions. Returns completion records in deterministic order.
+    /// Allocation-free callers should prefer [`poll_into`](Self::poll_into).
     pub fn poll(&mut self, now: Time) -> Vec<FlowDone> {
         let mut done = Vec::new();
+        self.poll_into(now, &mut done);
+        done
+    }
+
+    /// [`poll`](Self::poll) into a caller-owned buffer (appended, not
+    /// cleared), so steady-state polling allocates nothing.
+    pub fn poll_into(&mut self, now: Time, done: &mut Vec<FlowDone>) {
         // Process piecewise: there may be several internal events (an
         // activation changes rates, which changes completion times) between
         // last_advance and now.
+        let mut due = std::mem::take(&mut self.due_scratch);
         loop {
-            let next = self.next_internal_event();
+            let next = self.next_event();
             let step_to = match next {
                 Some(t) if t <= now => t,
                 _ => now,
             };
             self.advance_to(step_to);
             let mut changed = false;
-            // Activations due.
-            for i in 0..self.flows.len() {
-                let f = &mut self.flows[i];
-                if f.live {
-                    if let Phase::Pending { active_at } = f.phase {
-                        if active_at <= step_to {
-                            f.phase = Phase::Active;
-                            for &l in &self.flows[i].path.clone() {
-                                self.link_flows[l.0 as usize].push(i as u32);
-                            }
-                            self.active_count += 1;
-                            changed = true;
-                        }
+            // Activations due, in ascending slot order (the order fixes
+            // link_flows layout and hence float summation order).
+            due.clear();
+            for &s in &self.pending {
+                if let Phase::Pending { active_at } = self.flows[s as usize].phase {
+                    if active_at <= step_to {
+                        due.push(s);
                     }
                 }
             }
-            // Completions due (remaining hit zero during advance).
-            for i in 0..self.flows.len() {
-                let f = &self.flows[i];
-                if f.live && f.phase == Phase::Active && f.remaining <= 0.25 {
-                    let rec = FlowDone {
-                        id: FlowId(i as u32),
-                        tag: f.tag,
-                        bytes: f.total,
-                        started: f.started,
-                        finished: step_to,
-                    };
-                    self.detach(i as u32);
-                    let f = &mut self.flows[i];
-                    f.live = false;
-                    f.phase = Phase::Done;
-                    self.free.push(i as u32);
-                    done.push(rec);
-                    changed = true;
+            due.sort_unstable();
+            for &s in &due {
+                self.pending_remove(s);
+                self.active_insert(s);
+                let Fabric {
+                    flows, link_flows, ..
+                } = self;
+                let f = &mut flows[s as usize];
+                f.phase = Phase::Active;
+                f.rate = 0.0;
+                f.done_at = Time::NEVER;
+                for &l in &f.path {
+                    link_flows[l.0 as usize].push(s);
                 }
+                self.seed_flows.push(s);
+                changed = true;
+            }
+            // Completions due, in ascending slot order.
+            due.clear();
+            for &s in &self.active {
+                if self.flows[s as usize].done_at <= step_to {
+                    due.push(s);
+                }
+            }
+            due.sort_unstable();
+            for &s in &due {
+                let f = &self.flows[s as usize];
+                done.push(FlowDone {
+                    id: FlowId(s),
+                    tag: f.tag,
+                    bytes: f.total,
+                    started: f.started,
+                    finished: step_to,
+                });
+                self.active_remove(s);
+                self.detach(s);
+                let f = &mut self.flows[s as usize];
+                f.live = false;
+                f.phase = Phase::Done;
+                self.free.push(s);
+                changed = true;
             }
             if changed {
                 self.recompute();
@@ -244,13 +380,13 @@ impl Fabric {
                 break;
             }
         }
-        done
+        self.due_scratch = due;
     }
 
     /// Earliest future time at which fabric state changes (activation or
     /// completion), or `None` if fully idle.
     pub fn next_event_time(&self) -> Option<Time> {
-        self.next_internal_event()
+        self.next_event()
     }
 
     /// Instantaneous rate of a live flow (bytes/sec; 0 while pending).
@@ -273,42 +409,46 @@ impl Fabric {
 
     /// Sum of instantaneous rates of all live flows whose tag satisfies the
     /// predicate — the figure harnesses use this to plot per-class
-    /// bandwidth over time (Fig 9).
+    /// bandwidth over time (Fig 9). O(active flows).
     pub fn class_rate(&self, pred: impl Fn(FlowTag) -> bool) -> f64 {
-        self.flows
+        self.active
             .iter()
-            .filter(|f| f.live && f.phase == Phase::Active && pred(f.tag))
+            .map(|&s| &self.flows[s as usize])
+            .filter(|f| pred(f.tag))
             .map(|f| f.rate)
             .sum()
     }
 
     // ----- internals -------------------------------------------------
 
-    fn next_internal_event(&self) -> Option<Time> {
-        let mut best: Option<Time> = None;
-        for f in &self.flows {
-            if !f.live {
-                continue;
-            }
-            let t = match f.phase {
-                Phase::Pending { active_at } => active_at,
-                Phase::Active => {
-                    if f.rate <= 0.0 {
-                        continue; // starved; completes only after others free capacity
+    /// Cached earliest internal event: min over pending activations and
+    /// active completion times. O(1) when clean, O(live) to refresh.
+    fn next_event(&self) -> Option<Time> {
+        if self.next_dirty.get() {
+            let mut best = Time::NEVER;
+            for &s in &self.pending {
+                if let Phase::Pending { active_at } = self.flows[s as usize].phase {
+                    if active_at < best {
+                        best = active_at;
                     }
-                    // Ceil to a whole nanosecond and always make progress:
-                    // a sub-ns rounding to zero would stall the poll loop.
-                    let ns = (f.remaining / f.rate * 1e9).ceil().max(1.0) as u64;
-                    self.last_advance + Time(ns)
                 }
-                Phase::Done => continue,
-            };
-            best = Some(match best {
-                None => t,
-                Some(b) => b.min(t),
-            });
+            }
+            for &s in &self.active {
+                // Starved flows (rate 0) carry done_at == NEVER.
+                let t = self.flows[s as usize].done_at;
+                if t < best {
+                    best = t;
+                }
+            }
+            self.next_cache.set(best);
+            self.next_dirty.set(false);
         }
-        best
+        let t = self.next_cache.get();
+        if t == Time::NEVER {
+            None
+        } else {
+            Some(t)
+        }
     }
 
     fn advance_to(&mut self, now: Time) {
@@ -316,12 +456,19 @@ impl Fabric {
             return;
         }
         let dt = (now - self.last_advance).as_secs_f64();
-        for f in &mut self.flows {
-            if f.live && f.phase == Phase::Active && f.rate > 0.0 {
+        let Fabric {
+            active,
+            flows,
+            delivered_bytes,
+            ..
+        } = self;
+        for &s in active.iter() {
+            let f = &mut flows[s as usize];
+            if f.rate > 0.0 {
                 let moved = f.rate * dt;
                 let used = moved.min(f.remaining);
                 f.remaining -= used;
-                self.delivered_bytes += used;
+                *delivered_bytes += used;
                 if f.remaining < 0.25 {
                     f.remaining = 0.0;
                 }
@@ -330,39 +477,127 @@ impl Fabric {
         self.last_advance = now;
     }
 
+    fn pending_remove(&mut self, s: u32) {
+        let pos = self.flows[s as usize].set_pos as usize;
+        debug_assert_eq!(self.pending[pos], s);
+        self.pending.swap_remove(pos);
+        if let Some(&moved) = self.pending.get(pos) {
+            self.flows[moved as usize].set_pos = pos as u32;
+        }
+    }
+
+    fn active_insert(&mut self, s: u32) {
+        self.flows[s as usize].set_pos = self.active.len() as u32;
+        self.active.push(s);
+    }
+
+    fn active_remove(&mut self, s: u32) {
+        let pos = self.flows[s as usize].set_pos as usize;
+        debug_assert_eq!(self.active[pos], s);
+        self.active.swap_remove(pos);
+        if let Some(&moved) = self.active.get(pos) {
+            self.flows[moved as usize].set_pos = pos as u32;
+        }
+    }
+
+    /// Unlink a flow from every link it crosses, recording the links as
+    /// component seeds for the next incremental re-solve.
     fn detach(&mut self, idx: u32) {
-        for &l in &self.flows[idx as usize].path.clone() {
-            let v = &mut self.link_flows[l.0 as usize];
+        let Fabric {
+            flows,
+            link_flows,
+            seed_links,
+            ..
+        } = self;
+        for &l in &flows[idx as usize].path {
+            let v = &mut link_flows[l.0 as usize];
             if let Some(p) = v.iter().position(|&x| x == idx) {
                 v.swap_remove(p);
             }
+            seed_links.push(l.0 as u32);
         }
-        self.active_count -= 1;
     }
 
+    /// Re-solve rate allocation after a flow join/leave batch. The
+    /// incremental path re-solves only components seeded by the batch;
+    /// the reference path re-solves every live component. Either way each
+    /// component runs the same water-fill kernel, so a flow's rate (and
+    /// its `done_at`) changes bits only when its allocation truly changed.
     fn recompute(&mut self) {
-        self.recomputes += 1;
-        let mut actives: Vec<u32> = Vec::with_capacity(self.active_count);
-        for (i, f) in self.flows.iter().enumerate() {
-            if f.live && f.phase == Phase::Active {
-                actives.push(i as u32);
+        self.stats.recomputes += 1;
+        self.next_dirty.set(true);
+        let mut solver = std::mem::take(&mut self.solver);
+        let mut seed_flows = std::mem::take(&mut self.seed_flows);
+        let mut seed_links = std::mem::take(&mut self.seed_links);
+        solver.begin(self.capacity.len(), self.flows.len());
+        if self.incremental {
+            for &s in &seed_flows {
+                let f = &self.flows[s as usize];
+                if f.live && f.phase == Phase::Active && !solver.claimed(s) {
+                    self.solve_component(&mut solver, s);
+                }
             }
+            for &l in &seed_links {
+                let mut k = 0;
+                while k < self.link_flows[l as usize].len() {
+                    let g = self.link_flows[l as usize][k];
+                    if !solver.claimed(g) {
+                        self.solve_component(&mut solver, g);
+                    }
+                    k += 1;
+                }
+            }
+        } else {
+            self.stats.full_solves += 1;
+            let mut all = std::mem::take(&mut self.solve_scratch);
+            all.clear();
+            all.extend_from_slice(&self.active);
+            all.sort_unstable();
+            for &s in &all {
+                if !solver.claimed(s) {
+                    self.solve_component(&mut solver, s);
+                }
+            }
+            self.solve_scratch = all;
         }
-        let paths: Vec<&[LinkId]> = actives
-            .iter()
-            .map(|&i| self.flows[i as usize].path.as_slice())
-            .collect();
-        let weights: Vec<f64> = actives
-            .iter()
-            .map(|&i| self.flows[i as usize].weight)
-            .collect();
-        let caps: Vec<f64> = actives
-            .iter()
-            .map(|&i| self.flows[i as usize].cap)
-            .collect();
-        let rates = max_min_rates_weighted(&self.capacity, &paths, &weights, &caps);
-        for (k, &i) in actives.iter().enumerate() {
-            self.flows[i as usize].rate = rates[k];
+        seed_flows.clear();
+        seed_links.clear();
+        self.seed_flows = seed_flows;
+        self.seed_links = seed_links;
+        self.solver = solver;
+    }
+
+    /// Solve the component containing `seed` and apply its rates,
+    /// refreshing `done_at` only for flows whose rate actually changed
+    /// (bit comparison) — unchanged flows keep their exact completion
+    /// times, which is what makes incremental and full allocation
+    /// byte-identical in simulation output.
+    fn solve_component(&mut self, solver: &mut ComponentSolver, seed: u32) {
+        solver.collect(seed, &self.link_flows, |f| {
+            self.flows[f as usize].path.as_slice()
+        });
+        solver.solve_collected(
+            &self.capacity,
+            |f| self.flows[f as usize].path.as_slice(),
+            |f| self.flows[f as usize].weight,
+            |f| self.flows[f as usize].cap,
+        );
+        self.stats.component_solves += 1;
+        let (slots, rates) = solver.result();
+        self.stats.flows_solved += slots.len() as u64;
+        let at = self.last_advance;
+        for (&s, &r) in slots.iter().zip(rates) {
+            let f = &mut self.flows[s as usize];
+            if f.rate.to_bits() != r.to_bits() {
+                f.rate = r;
+                f.done_at = if r > 0.0 {
+                    // Ceil to a whole nanosecond and always make progress:
+                    // a sub-ns rounding to zero would stall the poll loop.
+                    at + Time((f.remaining / r * 1e9).ceil().max(1.0) as u64)
+                } else {
+                    Time::NEVER
+                };
+            }
         }
     }
 }
@@ -386,6 +621,7 @@ pub fn run_to_completion(fabric: &mut Fabric, mut now: Time) -> HashMap<FlowTag,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit;
     use crate::topology::{h20x8, Direction, GpuId, NumaId};
 
     fn topo() -> Topology {
@@ -504,6 +740,18 @@ mod tests {
     }
 
     #[test]
+    fn cancel_pending_flow_never_activates() {
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        let path = t.h2d_direct(NumaId(0), GpuId(0));
+        let a = f.start_flow(Time::ZERO, &path, 1_000_000, Time::from_us(100), 1);
+        f.cancel(Time::from_us(10), a);
+        assert_eq!(f.live_flows(), 0);
+        assert!(f.poll(Time::from_ms(5)).is_empty());
+        assert_eq!(f.next_event_time(), None);
+    }
+
+    #[test]
     fn class_rate_sums_by_tag() {
         let t = topo();
         let mut f = Fabric::new(&t);
@@ -590,5 +838,129 @@ mod tests {
             run_to_completion(&mut f, now);
         }
         assert!(f.flows.len() <= 2, "slab grew: {}", f.flows.len());
+    }
+
+    #[test]
+    fn incremental_skips_untouched_components() {
+        // Two flows on truly disjoint paths (distinct NVLink P2P pairs —
+        // H2D paths from one socket always share the DRAM-read link):
+        // starting the second must not re-solve the first's component.
+        let t = topo();
+        let mut f = Fabric::new(&t);
+        f.start_flow(Time::ZERO, &t.p2p(GpuId(0), GpuId(1)), 1 << 30, Time::ZERO, 1);
+        f.poll(Time::ZERO);
+        let after_first = f.stats();
+        f.start_flow(Time::ZERO, &t.p2p(GpuId(2), GpuId(3)), 1 << 30, Time::ZERO, 2);
+        f.poll(Time::ZERO);
+        let after_second = f.stats();
+        assert_eq!(after_second.full_solves, 0);
+        // The second activation solved exactly one component of one flow.
+        assert_eq!(
+            after_second.flows_solved - after_first.flows_solved,
+            1,
+            "disjoint activation re-solved a foreign component: {after_second:?}"
+        );
+    }
+
+    #[test]
+    fn reference_mode_full_solves_every_event() {
+        let t = topo();
+        let mut f = Fabric::new(&t).with_incremental(false);
+        f.start_flow(Time::ZERO, &t.h2d_direct(NumaId(0), GpuId(0)), 1 << 20, Time::ZERO, 1);
+        run_to_completion(&mut f, Time::ZERO);
+        let s = f.stats();
+        assert_eq!(s.full_solves, s.recomputes);
+        assert!(s.recomputes >= 2, "{s:?}"); // activation + completion
+    }
+
+    /// Drive two fabrics through an identical random churn of starts,
+    /// cancels and polls, asserting lock-step equality of completions and
+    /// rates; also pin the incremental fabric's live rates to the oracle.
+    #[test]
+    fn property_incremental_churn_matches_reference_and_oracle() {
+        testkit::check("fabric-incremental-churn", |rng| {
+            let t = topo();
+            let mut inc = Fabric::new(&t); // incremental (default)
+            let mut full = Fabric::new(&t).with_incremental(false);
+            let mut now = Time::ZERO;
+            let mut live: Vec<FlowId> = Vec::new();
+            let mut tag: FlowTag = 0;
+            let steps = rng.range_usize(10, 40);
+            for _ in 0..steps {
+                let start = live.len() < 2 || rng.bool(0.65);
+                if start {
+                    let path = match rng.range_usize(0, 3) {
+                        0 => t.h2d_direct(NumaId(0), GpuId(rng.range_usize(0, 8) as u8)),
+                        1 => t.h2d_direct(NumaId(1), GpuId(rng.range_usize(0, 8) as u8)),
+                        _ => {
+                            let a = rng.range_usize(0, 8) as u8;
+                            let b = (a + 1 + rng.range_usize(0, 7) as u8) % 8;
+                            t.p2p(GpuId(a), GpuId(b))
+                        }
+                    };
+                    let bytes = rng.range_u64(100_000, 200_000_000);
+                    let latency = Time::from_ns(rng.range_u64(0, 20_000));
+                    let weight = *rng.choose(&[0.5, 1.0, 4.0, 8.0]);
+                    let cap = if rng.bool(0.2) { 10e9 } else { f64::INFINITY };
+                    tag += 1;
+                    let a = inc.start_flow_qos(now, &path, bytes, latency, tag, weight, cap);
+                    let b = full.start_flow_qos(now, &path, bytes, latency, tag, weight, cap);
+                    assert_eq!(a, b, "slot allocation diverged");
+                    live.push(a);
+                } else {
+                    let k = rng.range_usize(0, live.len());
+                    let id = live.swap_remove(k);
+                    inc.cancel(now, id);
+                    full.cancel(now, id);
+                }
+                now = now + Time::from_ns(rng.range_u64(1, 4_000_000));
+                let da = inc.poll(now);
+                let db = full.poll(now);
+                assert_eq!(da.len(), db.len(), "completion count diverged");
+                for (x, y) in da.iter().zip(&db) {
+                    assert_eq!(x.id, y.id);
+                    assert_eq!(x.tag, y.tag);
+                    assert_eq!(x.finished, y.finished, "completion time diverged");
+                    live.retain(|&f| f != x.id);
+                }
+                // Lock-step rates, bit for bit.
+                for s in 0..inc.flows.len() {
+                    let id = FlowId(s as u32);
+                    assert_eq!(
+                        inc.flow_rate(id).to_bits(),
+                        full.flow_rate(id).to_bits(),
+                        "rate diverged on slot {s}"
+                    );
+                }
+                assert_eq!(inc.next_event_time(), full.next_event_time());
+                // Oracle: the incremental fabric's live rates equal a fresh
+                // full water-fill over the same active set, bit for bit.
+                let mut slots: Vec<u32> = inc.active.clone();
+                slots.sort_unstable();
+                let paths: Vec<&[LinkId]> = slots
+                    .iter()
+                    .map(|&s| inc.flows[s as usize].path.as_slice())
+                    .collect();
+                let w: Vec<f64> = slots.iter().map(|&s| inc.flows[s as usize].weight).collect();
+                let c: Vec<f64> = slots.iter().map(|&s| inc.flows[s as usize].cap).collect();
+                let oracle = max_min_rates_weighted(&inc.capacity, &paths, &w, &c);
+                for (k, &s) in slots.iter().enumerate() {
+                    assert_eq!(
+                        inc.flows[s as usize].rate.to_bits(),
+                        oracle[k].to_bits(),
+                        "incremental rate for slot {s} diverged from oracle"
+                    );
+                }
+            }
+            // The whole point: the incremental path never full-solves.
+            assert_eq!(inc.stats().full_solves, 0);
+            assert_eq!(full.stats().full_solves, full.stats().recomputes);
+            assert!(
+                inc.stats().flows_solved <= full.stats().flows_solved,
+                "incremental did more allocator work than the reference: {:?} vs {:?}",
+                inc.stats(),
+                full.stats()
+            );
+        });
     }
 }

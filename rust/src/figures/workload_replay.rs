@@ -25,7 +25,7 @@ use crate::serving::{Compute, ModelRegistry, ModelState, RoutePolicy, ServingFle
 use crate::topology::{h20x8, Direction, GpuId, NumaId};
 use crate::util::rng::Rng;
 use crate::util::table::Table;
-use crate::workload::{ArrivalProcess, TenantSpec, Trace, TraceGen};
+use crate::workload::{ArrivalProcess, Sym, SymbolTable, TenantSpec, Trace, TraceGen};
 
 /// Namespace for replay's model-switch timer tokens ("SWIT" tag), kept
 /// out of the fleet's arrival-token namespace.
@@ -84,6 +84,11 @@ pub struct ReplayReport {
     pub switches: usize,
     /// Total switch weight-transfer time, seconds.
     pub switch_transfer_s: f64,
+    /// Fabric allocator work counters for the run. Deliberately NOT part
+    /// of [`Self::render`]: the incremental and reference allocators do
+    /// different amounts of work (that is the point) while rendering
+    /// byte-identical metrics. `mma bench hotpath` reports these.
+    pub fabric_stats: crate::fabric::FabricStats,
 }
 
 impl ReplayReport {
@@ -215,7 +220,13 @@ pub fn replay(
         let names = trace.models();
         if names.len() > 1 {
             let gpu_count = f.world.topo.gpu_count();
+            // Intern every model name once (symbol k == registry index k);
+            // the per-record boundary scan below then compares u32 symbols
+            // instead of string-comparing and position-searching per pair.
+            let mut syms = SymbolTable::new();
             for (k, name) in names.iter().enumerate() {
+                let s = syms.intern(name);
+                debug_assert_eq!(s.0 as usize, k);
                 let spec = models::by_name(name).unwrap_or_else(|| model.clone());
                 let gpu = GpuId((gpu_count - 1 - (k % gpu_count)) as u8);
                 reg.register(spec, vec![gpu]);
@@ -223,21 +234,19 @@ pub fn replay(
             let mut sorted: Vec<&crate::workload::TraceRecord> =
                 trace.records.iter().collect();
             sorted.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+            let rec_syms: Vec<Sym> = sorted.iter().map(|r| syms.intern(&r.model)).collect();
             // Everything but the first phase's model starts host-side.
-            if let Some(first) = sorted.first() {
-                let first_idx = names.iter().position(|n| *n == first.model).unwrap();
+            if let Some(&first) = rec_syms.first() {
                 for k in 0..names.len() {
-                    if k != first_idx {
+                    if k != first.0 as usize {
                         reg.sleep(&mut f.world, k);
                     }
                 }
             }
-            for w in sorted.windows(2) {
-                if w[1].model != w[0].model {
-                    let from = names.iter().position(|n| *n == w[0].model).unwrap();
-                    let to = names.iter().position(|n| *n == w[1].model).unwrap();
-                    boundaries.push((from, to));
-                    boundary_times.push(w[1].arrival_s);
+            for (i, w) in rec_syms.windows(2).enumerate() {
+                if w[1] != w[0] {
+                    boundaries.push((w[0].0 as usize, w[1].0 as usize));
+                    boundary_times.push(sorted[i + 1].arrival_s);
                 }
             }
         }
@@ -334,6 +343,7 @@ pub fn replay(
         wakes: f.wake_costs.len(),
         switches,
         switch_transfer_s,
+        fabric_stats: f.world.fabric.stats(),
     }
 }
 
@@ -475,6 +485,24 @@ mod tests {
         let a = small_cell(ArrivalProcess::bursty(20.0, 0.9, 2.0));
         let b = small_cell(ArrivalProcess::bursty(20.0, 0.9, 2.0));
         assert_eq!(a.render(), b.render(), "same trace+seed ⇒ identical metrics");
+    }
+
+    #[test]
+    fn incremental_alloc_matches_reference_to_the_byte() {
+        // The tentpole's hard constraint: the optimized (incremental,
+        // component-scoped) fabric allocator and the reference full
+        // re-solve must produce byte-identical replay output — through
+        // the full stack (fleet, engines, QoS, prefix fetches).
+        let shape = ArrivalProcess::bursty(20.0, 0.9, 2.0);
+        let mut reference = MmaConfig::default();
+        reference.incremental_alloc = false;
+        let opt = figure_cell(shape.clone(), 8_192, 4, 40, 2, MmaConfig::default(), SEED);
+        let refr = figure_cell(shape, 8_192, 4, 40, 2, reference, SEED);
+        assert_eq!(
+            opt.render(),
+            refr.render(),
+            "incremental allocator changed simulation output"
+        );
     }
 
     #[test]

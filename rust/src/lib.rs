@@ -65,6 +65,7 @@ pub mod memory;
 pub mod metrics;
 pub mod mma;
 pub mod models;
+pub mod perf;
 pub mod policy;
 pub mod roofline;
 pub mod runtime;

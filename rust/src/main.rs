@@ -17,6 +17,8 @@
 //!               [--requests N] [--tenants K] [--docs D] [--zipf S]
 //!               [--ctx T] [--suffix T] [--output-tokens T] [--seed N]
 //!               [--warm-start] [--switch-models m1,m2 --phase S]
+//! mma bench hotpath [--fast] [--json] [--out FILE]
+//!                                         hot-path perf harness (docs/PERF.md)
 //! mma config-check <file.toml>            validate a config file
 //! ```
 //!
@@ -434,6 +436,29 @@ fn main() {
                 None => print!("{}", trace.render()),
             }
         }
+        "bench" => {
+            if args.pos(1) != Some("hotpath") {
+                eprintln!("usage: mma bench hotpath [--fast] [--json] [--out FILE]");
+                std::process::exit(2);
+            }
+            let report = mma::perf::run_hotpath(args.flag("fast"));
+            if !report.replay_deterministic {
+                eprintln!("FATAL: incremental and reference replays diverged");
+                std::process::exit(1);
+            }
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, report.to_json()).unwrap_or_else(|e| {
+                    eprintln!("--out {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("wrote {path}");
+            }
+            if args.flag("json") {
+                print!("{}", report.to_json());
+            } else {
+                print!("{}", report.render());
+            }
+        }
         "config-check" => {
             let path = args.pos(1).expect("usage: mma config-check <file.toml>");
             let text = std::fs::read_to_string(path).expect("read config");
@@ -454,7 +479,7 @@ fn main() {
             println!("mma — Multipath Memory Access (paper reproduction)");
             println!(
                 "subcommands: topo | microbench | figure <id|all> | serve | switch | \
-                 replay <trace> | trace gen | config-check"
+                 replay <trace> | trace gen | bench hotpath | config-check"
             );
             println!("figures: {:?}", figures::all_ids());
             println!(

@@ -146,6 +146,9 @@ pub struct SimWorld {
     last_sampled: ([f64; NUM_CLASSES], Time),
     /// Pending completion notices for external consumers.
     notices: VecDeque<Notice>,
+    /// Reused buffer for fabric completion harvesting (`Fabric::poll_into`),
+    /// so the per-event hot path stays allocation-free.
+    flow_done_scratch: Vec<FlowDone>,
     /// Fabric-level QoS parameters (per-class weights and the bulk cap):
     /// every flow this world launches — engine chunks, native copies,
     /// background loops — carries its class's weight onto the fabric.
@@ -159,7 +162,7 @@ impl SimWorld {
     /// configured by `cfg`.
     pub fn new(topo: Topology, cfg: MmaConfig) -> SimWorld {
         let n = topo.gpu_count();
-        let fabric = Fabric::new(&topo);
+        let fabric = Fabric::new(&topo).with_incremental(cfg.incremental_alloc);
         let qos = cfg.qos;
         SimWorld {
             fabric,
@@ -178,6 +181,7 @@ impl SimWorld {
             class_delivered: [0.0; NUM_CLASSES],
             last_sampled: ([0.0; NUM_CLASSES], Time::ZERO),
             notices: VecDeque::new(),
+            flow_done_scratch: Vec::new(),
             qos,
             topo,
         }
@@ -512,10 +516,13 @@ impl SimWorld {
         };
         match ev {
             Ev::Fabric => {
-                let done = self.fabric.poll(now);
-                for d in done {
+                let mut done = std::mem::take(&mut self.flow_done_scratch);
+                done.clear();
+                self.fabric.poll_into(now, &mut done);
+                for d in done.drain(..) {
                     self.route_flow_done(now, d);
                 }
+                self.flow_done_scratch = done;
             }
             Ev::EngineWake { e, gpu } => {
                 let acts = self.engines[e as usize].on_wake(now, gpu, &self.topo);

@@ -20,7 +20,8 @@ use crate::gpusim::TransferId;
 use crate::policy::{OutstandingQueue, PolicyView, Pulled, TransferPolicy};
 use crate::sim::Time;
 use crate::topology::{Direction, GpuId, LinkId, NumaId, Topology};
-use std::collections::{HashMap, VecDeque};
+use crate::util::fxmap::FxHashMap;
+use std::collections::VecDeque;
 
 /// What the driver must do on the engine's behalf.
 #[derive(Debug, Clone)]
@@ -147,9 +148,9 @@ pub struct Engine {
     queues: Vec<OutstandingQueue>,
     lanes: Vec<Lanes>,
     relay_inflight: Vec<u32>,
-    inflight: HashMap<u64, InFlight>,
+    inflight: FxHashMap<u64, InFlight>,
     next_key: u64,
-    transfers: HashMap<u32, ActiveTransfer>,
+    transfers: FxHashMap<u32, ActiveTransfer>,
     /// Counters (Fig 11 CPU accounting, relay/direct byte split).
     pub stats: EngineStats,
     central_busy_until: Time,
@@ -168,9 +169,9 @@ impl Engine {
                 .collect(),
             lanes: (0..gpu_count).map(|_| Lanes::default()).collect(),
             relay_inflight: vec![0; gpu_count],
-            inflight: HashMap::new(),
+            inflight: FxHashMap::default(),
             next_key: 0,
-            transfers: HashMap::new(),
+            transfers: FxHashMap::default(),
             stats: EngineStats::new(gpu_count),
             central_busy_until: Time::ZERO,
             cfg,

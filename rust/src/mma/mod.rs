@@ -151,6 +151,11 @@ pub struct MmaConfig {
     /// QoS transfer-class weights/caps and the class-aware engine
     /// behavior switch (off by default: the degenerate unweighted case).
     pub qos: QosConfig,
+    /// Incremental (connected-component) fabric rate allocation. `false`
+    /// selects the reference full re-solve per flow event — simulation
+    /// output is byte-identical either way (the replay determinism test
+    /// pins this); the flag exists for benchmarking and as the oracle leg.
+    pub incremental_alloc: bool,
 }
 
 impl Default for MmaConfig {
@@ -169,6 +174,7 @@ impl Default for MmaConfig {
             activation_ns: 15_000,
             contention_beta: 2.5,
             qos: QosConfig::default(),
+            incremental_alloc: true,
         }
     }
 }

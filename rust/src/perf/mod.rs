@@ -1,0 +1,393 @@
+//! The hotpath performance harness behind `mma bench hotpath` and
+//! `rust/benches/hotpath.rs` — the producer of the repo's perf
+//! trajectory (`BENCH_*.json` files at the repo root).
+//!
+//! Three legs, matching the hot paths the simulator spends its time in:
+//!
+//! 1. **Event queue churn** — pop + reschedule cycles per second on the
+//!    hierarchical timer wheel ([`crate::sim::EventQueue`]) vs the
+//!    retired `BinaryHeap` ([`crate::sim::HeapEventQueue`]); the wheel's
+//!    speedup stays a measured number, not a claim.
+//! 2. **Fabric flow cycle** — flow activation + completion events per
+//!    second through the max-min fabric.
+//! 3. **Workload replay** — wall-clock for a trace replayed through the
+//!    full serving fleet, extrapolated to seconds-per-1M-requests, run
+//!    with both the incremental allocator and the reference full
+//!    re-solve. The harness asserts the two renders byte-identically
+//!    (the tentpole's determinism constraint) and reports each side's
+//!    [`FabricStats`] so the incremental path's work reduction is
+//!    visible in the JSON.
+//!
+//! [`HotpathReport::to_json`] emits the stable `mma-bench-hotpath/1`
+//! schema documented in `docs/PERF.md`; `tools/check_bench.py` validates
+//! it in CI against the committed `BENCH_0006_hotpath.json` baseline.
+
+use crate::config::FleetConfig;
+use crate::fabric::{self, Fabric, FabricStats};
+use crate::figures::workload_replay::{replay, replay_serving, ReplayOptions};
+use crate::mma::MmaConfig;
+use crate::models::qwen_7b_chat;
+use crate::serving::RoutePolicy;
+use crate::sim::{EventQueue, HeapEventQueue, Time};
+use crate::topology::{h20x8, GpuId, NumaId};
+use crate::util::bench::black_box;
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, TenantSpec, Trace, TraceGen};
+use std::time::{Duration, Instant};
+
+/// Seed for the harness's synthetic workloads (fixed: the bench varies
+/// only in wall-clock, never in simulated work).
+const BENCH_SEED: u64 = 0xB006;
+
+/// One replay leg: wall time + the allocator work it took.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayLeg {
+    /// Wall-clock seconds for the replay call.
+    pub wall_s: f64,
+    /// Fabric allocator counters after the run.
+    pub stats: FabricStats,
+}
+
+/// Everything `mma bench hotpath` measures.
+#[derive(Debug, Clone)]
+pub struct HotpathReport {
+    /// Fast mode (smaller budgets/workloads; CI smoke).
+    pub fast: bool,
+    /// Timer-wheel pop+reschedule events per second.
+    pub wheel_events_per_sec: f64,
+    /// Same churn on the retired `BinaryHeap` queue.
+    pub heap_events_per_sec: f64,
+    /// Fabric flow events (activation + completion) per second.
+    pub fabric_events_per_sec: f64,
+    /// Requests in the replay leg's trace.
+    pub replay_requests: usize,
+    /// Whether the incremental and reference replays rendered
+    /// byte-identically (must always be true).
+    pub replay_deterministic: bool,
+    /// Replay with the incremental (component) allocator — the default.
+    pub incremental: ReplayLeg,
+    /// Replay with the reference full re-solve allocator.
+    pub reference: ReplayLeg,
+}
+
+/// Run the full harness. `fast` shrinks budgets and the replay trace for
+/// CI smoke runs; numbers stay comparable only within a mode.
+pub fn run_hotpath(fast: bool) -> HotpathReport {
+    let budget = if fast {
+        Duration::from_millis(120)
+    } else {
+        Duration::from_millis(600)
+    };
+    let requests = if fast { 48 } else { 192 };
+    run_hotpath_with(fast, budget, requests)
+}
+
+/// [`run_hotpath`] with explicit knobs (tests use tiny budgets).
+pub fn run_hotpath_with(fast: bool, budget: Duration, requests: usize) -> HotpathReport {
+    let wheel_events_per_sec = churn_wheel(budget);
+    let heap_events_per_sec = churn_heap(budget);
+    let fabric_events_per_sec = fabric_cycle(budget);
+
+    let trace = replay_trace(requests);
+    let (inc_report, incremental) = replay_leg(&trace, true);
+    let (ref_report, reference) = replay_leg(&trace, false);
+    let replay_deterministic = inc_report == ref_report;
+
+    HotpathReport {
+        fast,
+        wheel_events_per_sec,
+        heap_events_per_sec,
+        fabric_events_per_sec,
+        replay_requests: requests,
+        replay_deterministic,
+        incremental,
+        reference,
+    }
+}
+
+/// Initial backlog + reschedule horizon of the queue churn benches.
+const CHURN_BACKLOG: usize = 4096;
+
+fn churn_wheel(budget: Duration) -> f64 {
+    let mut q = EventQueue::new();
+    let mut rng = Rng::seed_from_u64(BENCH_SEED);
+    for i in 0..CHURN_BACKLOG as u32 {
+        q.schedule_at(Time(rng.range_u64(0, 1 << 24)), i);
+    }
+    let t0 = Instant::now();
+    let mut ops = 0u64;
+    while t0.elapsed() < budget {
+        for _ in 0..1024 {
+            let (t, ev) = q.pop().expect("churn queue never empties");
+            // Mixed-horizon reschedule: near timers dominate, with a tail
+            // of far ones — the shape the MMA driver produces.
+            let delta = 1 + (ev as u64).wrapping_mul(2_654_435_761) % 1_000_000;
+            q.schedule_at(t + Time(delta), ev);
+            ops += 2; // one pop + one schedule
+        }
+    }
+    ops as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn churn_heap(budget: Duration) -> f64 {
+    let mut q = HeapEventQueue::new();
+    let mut rng = Rng::seed_from_u64(BENCH_SEED);
+    for i in 0..CHURN_BACKLOG as u32 {
+        q.schedule_at(Time(rng.range_u64(0, 1 << 24)), i);
+    }
+    let t0 = Instant::now();
+    let mut ops = 0u64;
+    while t0.elapsed() < budget {
+        for _ in 0..1024 {
+            let (t, ev) = q.pop().expect("churn queue never empties");
+            let delta = 1 + (ev as u64).wrapping_mul(2_654_435_761) % 1_000_000;
+            q.schedule_at(t + Time(delta), ev);
+            ops += 2;
+        }
+    }
+    ops as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Flow activation+completion events per second through the fabric.
+fn fabric_cycle(budget: Duration) -> f64 {
+    let topo = h20x8();
+    let path = topo.h2d_direct(NumaId(0), GpuId(0));
+    let t0 = Instant::now();
+    let mut events = 0u64;
+    while t0.elapsed() < budget {
+        let mut f = Fabric::new(&topo);
+        for i in 0..16 {
+            f.start_flow(Time::ZERO, &path, 5_000_000, Time::ZERO, i);
+        }
+        black_box(fabric::run_to_completion(&mut f, Time::ZERO));
+        events += 32; // 16 activations + 16 completions
+    }
+    events as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The replay leg's trace: two tenants (interactive + bulk) over warm
+/// host-tier prefixes on bursty arrivals — the contention-heavy shape
+/// the workload-replay figure uses.
+fn replay_trace(requests: usize) -> Trace {
+    let mut chat = TenantSpec::interactive(1, 4, 8_192);
+    chat.share = 2.0;
+    chat.warm_start = true;
+    let mut bulk = TenantSpec::interactive(2, 4, 8_192);
+    bulk.share = 1.0;
+    bulk.class = Some(crate::mma::TransferClass::Bulk);
+    bulk.warm_start = true;
+    let gen = TraceGen {
+        arrivals: ArrivalProcess::bursty(20.0, 0.9, 2.0),
+        tenants: vec![chat, bulk],
+        requests,
+    };
+    gen.generate(&mut Rng::seed_from_u64(BENCH_SEED))
+}
+
+/// Replay `trace` once with the chosen allocator; returns the rendered
+/// report (for the determinism cross-check) and the timed leg.
+fn replay_leg(trace: &Trace, incremental: bool) -> (String, ReplayLeg) {
+    let mma = MmaConfig {
+        incremental_alloc: incremental,
+        ..MmaConfig::default()
+    };
+    let fleet = FleetConfig {
+        gpus: 2,
+        router: RoutePolicy::RoundRobin,
+        peer_fetch: true,
+        prefix_affinity: false,
+    };
+    let t0 = Instant::now();
+    let report = replay(
+        trace,
+        &qwen_7b_chat(),
+        mma,
+        replay_serving(),
+        fleet,
+        &ReplayOptions::default(),
+    );
+    let wall_s = t0.elapsed().as_secs_f64();
+    (
+        report.render(),
+        ReplayLeg {
+            wall_s,
+            stats: report.fabric_stats,
+        },
+    )
+}
+
+/// Format a float for JSON: finite, fixed precision, no NaN/inf tokens.
+fn jnum(x: f64, decimals: usize) -> String {
+    if x.is_finite() {
+        format!("{x:.decimals$}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn stats_json(out: &mut String, leg: &ReplayLeg, indent: &str) {
+    out.push_str(&format!(
+        "{indent}\"wall_s\": {},\n\
+         {indent}\"recomputes\": {},\n\
+         {indent}\"full_solves\": {},\n\
+         {indent}\"component_solves\": {},\n\
+         {indent}\"flows_solved\": {}\n",
+        jnum(leg.wall_s, 6),
+        leg.stats.recomputes,
+        leg.stats.full_solves,
+        leg.stats.component_solves,
+        leg.stats.flows_solved,
+    ));
+}
+
+impl HotpathReport {
+    /// Seconds to replay one million requests, extrapolated from the
+    /// incremental leg.
+    pub fn wall_per_1m_requests_s(&self) -> f64 {
+        if self.replay_requests == 0 {
+            return 0.0;
+        }
+        self.incremental.wall_s * (1_000_000.0 / self.replay_requests as f64)
+    }
+
+    /// The `mma-bench-hotpath/1` JSON document (stable key order; see
+    /// `docs/PERF.md` for the schema).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"mma-bench-hotpath/1\",\n");
+        s.push_str("  \"bench\": \"BENCH_0006\",\n");
+        s.push_str("  \"provenance\": \"measured\",\n");
+        s.push_str(&format!("  \"fast\": {},\n", self.fast));
+        s.push_str("  \"events_per_sec\": {\n");
+        s.push_str(&format!(
+            "    \"timer_wheel\": {},\n",
+            jnum(self.wheel_events_per_sec, 1)
+        ));
+        s.push_str(&format!(
+            "    \"binary_heap\": {},\n",
+            jnum(self.heap_events_per_sec, 1)
+        ));
+        s.push_str(&format!(
+            "    \"fabric_flow_cycle\": {}\n",
+            jnum(self.fabric_events_per_sec, 1)
+        ));
+        s.push_str("  },\n");
+        s.push_str("  \"replay\": {\n");
+        s.push_str(&format!("    \"requests\": {},\n", self.replay_requests));
+        s.push_str(&format!(
+            "    \"deterministic\": {},\n",
+            self.replay_deterministic
+        ));
+        s.push_str(&format!(
+            "    \"wall_per_1m_requests_s\": {},\n",
+            jnum(self.wall_per_1m_requests_s(), 3)
+        ));
+        s.push_str("    \"incremental\": {\n");
+        stats_json(&mut s, &self.incremental, "      ");
+        s.push_str("    },\n");
+        s.push_str("    \"full\": {\n");
+        stats_json(&mut s, &self.reference, "      ");
+        s.push_str("    }\n");
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable summary (`mma bench hotpath` without `--json`).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "event queue     {:>12.0} events/s (timer wheel) vs {:>12.0} (binary heap), {:.2}x\n",
+            self.wheel_events_per_sec,
+            self.heap_events_per_sec,
+            self.wheel_events_per_sec / self.heap_events_per_sec.max(1.0),
+        ));
+        s.push_str(&format!(
+            "fabric cycle    {:>12.0} flow events/s\n",
+            self.fabric_events_per_sec
+        ));
+        s.push_str(&format!(
+            "replay          {} requests in {:.3} s ({:.1} s per 1M requests), deterministic: {}\n",
+            self.replay_requests,
+            self.incremental.wall_s,
+            self.wall_per_1m_requests_s(),
+            self.replay_deterministic,
+        ));
+        s.push_str(&format!(
+            "allocator work  incremental: {} recomputes, {} full solves, {} component solves, {} flows\n",
+            self.incremental.stats.recomputes,
+            self.incremental.stats.full_solves,
+            self.incremental.stats.component_solves,
+            self.incremental.stats.flows_solved,
+        ));
+        s.push_str(&format!(
+            "                reference:   {} recomputes, {} full solves, {} component solves, {} flows\n",
+            self.reference.stats.recomputes,
+            self.reference.stats.full_solves,
+            self.reference.stats.component_solves,
+            self.reference.stats.flows_solved,
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_runs_and_reports_incremental_win() {
+        // Tiny budgets: this is a correctness test of the harness, not a
+        // measurement. The acceptance-criteria assertions live here: the
+        // incremental path must do strictly fewer full re-solves than the
+        // reference on the replay bench while rendering identically.
+        let r = run_hotpath_with(true, Duration::from_millis(5), 12);
+        assert!(r.replay_deterministic, "replay legs diverged");
+        assert_eq!(r.incremental.stats.full_solves, 0);
+        assert!(
+            r.reference.stats.full_solves > 0,
+            "reference leg did no full solves: {:?}",
+            r.reference.stats
+        );
+        assert!(
+            r.incremental.stats.full_solves < r.reference.stats.full_solves,
+            "incremental must full-solve strictly less"
+        );
+        // Same event sequence ⇒ same number of recompute events.
+        assert_eq!(
+            r.incremental.stats.recomputes,
+            r.reference.stats.recomputes
+        );
+        assert!(r.wheel_events_per_sec > 0.0);
+        assert!(r.heap_events_per_sec > 0.0);
+        assert!(r.fabric_events_per_sec > 0.0);
+        assert!(r.wall_per_1m_requests_s() > 0.0);
+    }
+
+    #[test]
+    fn json_has_stable_schema_keys() {
+        let r = run_hotpath_with(true, Duration::from_millis(2), 6);
+        let j = r.to_json();
+        for key in [
+            "\"schema\": \"mma-bench-hotpath/1\"",
+            "\"bench\": \"BENCH_0006\"",
+            "\"provenance\": \"measured\"",
+            "\"events_per_sec\"",
+            "\"timer_wheel\"",
+            "\"binary_heap\"",
+            "\"fabric_flow_cycle\"",
+            "\"replay\"",
+            "\"wall_per_1m_requests_s\"",
+            "\"incremental\"",
+            "\"full\"",
+            "\"full_solves\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        // Structurally sane: balanced braces, no NaN/inf tokens.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+        assert!(!r.render().is_empty());
+    }
+}

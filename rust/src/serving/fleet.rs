@@ -29,7 +29,7 @@ use crate::mma::{Notice, SimWorld};
 use crate::models::ModelSpec;
 use crate::sim::Time;
 use crate::topology::{GpuId, NumaId};
-use std::collections::HashMap;
+use crate::util::fxmap::FxHashMap;
 
 /// Namespace for the fleet's arrival-timer tokens, so timers scheduled by
 /// other consumers of the shared world are ignored instead of being
@@ -52,7 +52,7 @@ pub struct ServingFleet {
     pub wake_costs: Vec<(usize, PhaseResult)>,
     hbm: HbmAllocator,
     arrivals: Vec<Request>,
-    assignments: HashMap<u64, usize>,
+    assignments: FxHashMap<u64, usize>,
 }
 
 impl ServingFleet {
@@ -133,7 +133,7 @@ impl ServingFleet {
             wake_costs: Vec::new(),
             hbm,
             arrivals: Vec::new(),
-            assignments: HashMap::new(),
+            assignments: FxHashMap::default(),
             cfg,
         }
     }

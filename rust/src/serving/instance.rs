@@ -35,7 +35,8 @@ use crate::models::ModelSpec;
 use crate::roofline::GpuRoofline;
 use crate::sim::Time;
 use crate::topology::{Direction, GpuId, NumaId};
-use std::collections::{HashMap, VecDeque};
+use crate::util::fxmap::FxHashMap;
+use std::collections::VecDeque;
 
 /// Compute-time provider: roofline for paper-scale models, real PJRT for
 /// the live tiny model, fixed for unit tests.
@@ -210,14 +211,14 @@ pub struct ServingInstance {
     compute: Box<dyn Compute>,
     gpu: GpuId,
     host_numa: NumaId,
-    outcomes: HashMap<u64, RequestOutcome>,
+    outcomes: FxHashMap<u64, RequestOutcome>,
     next_seq: u64,
     awake: bool,
     prefill_stream: StreamHandle,
     decode_stream: StreamHandle,
     /// In-flight fetch chunk → owning request.
-    inflight_fetch: HashMap<u32, RequestId>,
-    jobs: HashMap<u64, PrefillJob>,
+    inflight_fetch: FxHashMap<u32, RequestId>,
+    jobs: FxHashMap<u64, PrefillJob>,
     /// Fetched (or pipeline-released) prefills waiting for the compute lane.
     ready_prefills: VecDeque<RequestId>,
     /// Idle fetch streams, recycled across requests (`StreamId` is a u16:
@@ -226,7 +227,7 @@ pub struct ServingInstance {
     /// Fetches in flight, by prefix key. A concurrent request hitting the
     /// same key *joins* the in-flight fetch (value = joiners) instead of
     /// seeing a prematurely-promoted GPU tier or re-fetching.
-    inflight_prefix: HashMap<u64, Vec<RequestId>>,
+    inflight_prefix: FxHashMap<u64, Vec<RequestId>>,
     /// Suffix tokens of admitted-but-unfinished prefills (budget hold).
     inflight_prefill_tokens: u32,
     prefill_busy: bool,
@@ -295,16 +296,16 @@ impl ServingInstance {
             compute,
             gpu,
             host_numa,
-            outcomes: HashMap::new(),
+            outcomes: FxHashMap::default(),
             next_seq: 0,
             awake: true,
             prefill_stream,
             decode_stream,
-            inflight_fetch: HashMap::new(),
-            jobs: HashMap::new(),
+            inflight_fetch: FxHashMap::default(),
+            jobs: FxHashMap::default(),
             ready_prefills: VecDeque::new(),
             fetch_streams: Vec::new(),
-            inflight_prefix: HashMap::new(),
+            inflight_prefix: FxHashMap::default(),
             inflight_prefill_tokens: 0,
             prefill_busy: false,
             decode_busy: false,

@@ -1,7 +1,7 @@
 //! Paged KV-cache manager (vLLM-style): fixed-size token blocks, per-GPU
 //! free lists, per-sequence block tables with copy-on-reuse refcounts.
 
-use std::collections::HashMap;
+use crate::util::fxmap::FxHashMap;
 
 /// Index of a KV block within its GPU's pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -17,7 +17,7 @@ pub struct KvCacheManager {
     block_tokens: u32,
     free: Vec<BlockId>,
     refcount: Vec<u32>,
-    tables: HashMap<u64, Vec<BlockId>>,
+    tables: FxHashMap<u64, Vec<BlockId>>,
     total: u32,
 }
 
@@ -28,7 +28,7 @@ impl KvCacheManager {
             block_tokens,
             free: (0..total_blocks).rev().map(BlockId).collect(),
             refcount: vec![0; total_blocks as usize],
-            tables: HashMap::new(),
+            tables: FxHashMap::default(),
             total: total_blocks,
         }
     }

@@ -17,7 +17,7 @@
 use crate::memory::{HostAlloc, HostPool};
 use crate::topology::NumaId;
 use crate::util::rng::Rng;
-use std::collections::HashMap;
+use crate::util::fxmap::FxHashMap;
 
 /// Rolling hash of a token prefix (block-aligned chain hash, as LMCache
 /// keys chunks by content).
@@ -47,7 +47,7 @@ pub struct GpuPrefixTier {
     block_tokens: u32,
     capacity_tokens: u64,
     used: u64,
-    entries: HashMap<u64, (u32, u64)>, // key → (tokens, last_use)
+    entries: FxHashMap<u64, (u32, u64)>, // key → (tokens, last_use)
     clock: u64,
 }
 
@@ -58,7 +58,7 @@ impl GpuPrefixTier {
             block_tokens: block_tokens.max(1),
             capacity_tokens,
             used: 0,
-            entries: HashMap::new(),
+            entries: FxHashMap::default(),
             clock: 0,
         }
     }
@@ -172,7 +172,7 @@ pub struct HostPrefixPool {
     bytes_per_token: u64,
     numa: NumaId,
     pool: HostPool,
-    entries: HashMap<u64, HostEntry>,
+    entries: FxHashMap<u64, HostEntry>,
     clock: u64,
 }
 
@@ -192,7 +192,7 @@ impl HostPrefixPool {
             bytes_per_token: bpt,
             numa,
             pool: HostPool::new(numa_count.max(1), capacity_tokens.saturating_mul(bpt)),
-            entries: HashMap::new(),
+            entries: FxHashMap::default(),
             clock: 0,
         }
     }

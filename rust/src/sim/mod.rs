@@ -8,7 +8,7 @@
 mod queue;
 mod time;
 
-pub use queue::EventQueue;
+pub use queue::{EventQueue, HeapEventQueue};
 pub use time::Time;
 
 /// Nanoseconds per microsecond.

@@ -3,6 +3,25 @@
 //! Events at equal timestamps pop in insertion order (FIFO tie-break via a
 //! monotone sequence number), which keeps every simulation run bit-exact —
 //! a property the calibration tests and the figure harnesses rely on.
+//!
+//! [`EventQueue`] is a hierarchical timer wheel (calendar queue): 11
+//! levels of 64 slots, 6 bits of the nanosecond timestamp per level, with
+//! one occupancy bitmap per level. Scheduling is O(1); popping is O(1)
+//! bitmap scans plus a scan of one slot. An entry's level is the position
+//! of the highest bit in which its deadline differs from the current
+//! time, so levels are *time-ordered*: every level-ℓ entry is strictly
+//! earlier than every level-(ℓ+1) entry, and within a level a lower slot
+//! index is strictly earlier. The earliest entry therefore always sits in
+//! the first occupied slot of the lowest non-empty level. When time
+//! advances, entries whose deadline is now close re-file to a lower level
+//! (the cascade); because an entry's slot index depends only on its
+//! deadline, exactly the slot containing the new current time needs
+//! draining at each level.
+//!
+//! The previous `BinaryHeap` implementation survives as
+//! [`HeapEventQueue`] — the reference oracle for the wheel's
+//! pop-order-equivalence property test and the baseline leg of the
+//! hotpath benchmark (`mma bench hotpath`).
 
 use super::Time;
 use std::cmp::Ordering;
@@ -35,9 +54,21 @@ impl<E> Ord for Entry<E> {
     }
 }
 
-/// Min-heap of timestamped events with FIFO tie-breaking.
+/// Bits of the timestamp consumed per wheel level.
+const LEVEL_BITS: u32 = 6;
+/// Slots per level (`2^LEVEL_BITS`).
+const SLOTS: usize = 1 << LEVEL_BITS;
+/// Wheel levels; `11 * 6 = 66 >= 64` bits, so every u64 deadline fits.
+const LEVELS: usize = 11;
+
+/// Timestamped event queue with FIFO tie-breaking, implemented as a
+/// hierarchical timer wheel.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    /// `LEVELS * SLOTS` buckets, indexed `level * SLOTS + slot`.
+    slots: Vec<Vec<Entry<E>>>,
+    /// Per-level slot-occupancy bitmap.
+    occupied: [u64; LEVELS],
+    len: usize,
     seq: u64,
     now: Time,
 }
@@ -52,7 +83,9 @@ impl<E> EventQueue<E> {
     /// Empty queue at time zero.
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            slots: std::iter::repeat_with(Vec::new).take(LEVELS * SLOTS).collect(),
+            occupied: [0; LEVELS],
+            len: 0,
             seq: 0,
             now: Time::ZERO,
         }
@@ -66,6 +99,136 @@ impl<E> EventQueue<E> {
     /// Schedule `ev` at absolute time `at`. Scheduling in the past is
     /// clamped to `now` (the event fires "immediately", after already-queued
     /// events at `now`).
+    pub fn schedule_at(&mut self, at: Time, ev: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.file(Entry { at, seq, ev });
+        self.len += 1;
+    }
+
+    /// Schedule `ev` after a delay relative to `now`.
+    pub fn schedule_in(&mut self, delay: Time, ev: E) {
+        self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Pop the earliest event, advancing `now` to its timestamp.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let (lvl, slot) = self.earliest_slot()?;
+        let bucket = &mut self.slots[lvl * SLOTS + slot];
+        let mut best = 0;
+        for i in 1..bucket.len() {
+            if (bucket[i].at, bucket[i].seq) < (bucket[best].at, bucket[best].seq) {
+                best = i;
+            }
+        }
+        let entry = bucket.swap_remove(best);
+        if bucket.is_empty() {
+            self.occupied[lvl] &= !(1u64 << slot);
+        }
+        self.len -= 1;
+        debug_assert!(entry.at >= self.now, "time went backwards");
+        if entry.at > self.now {
+            self.now = entry.at;
+            self.cascade();
+        }
+        Some((entry.at, entry.ev))
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<Time> {
+        let (lvl, slot) = self.earliest_slot()?;
+        self.slots[lvl * SLOTS + slot].iter().map(|e| e.at).min()
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// File an entry into the wheel relative to the current time.
+    /// Invariant: `entry.at >= self.now`.
+    fn file(&mut self, entry: Entry<E>) {
+        let x = entry.at.0 ^ self.now.0;
+        let lvl = if x == 0 {
+            0
+        } else {
+            (((63 - x.leading_zeros()) / LEVEL_BITS) as usize).min(LEVELS - 1)
+        };
+        let slot = ((entry.at.0 >> (LEVEL_BITS * lvl as u32)) & (SLOTS as u64 - 1)) as usize;
+        self.slots[lvl * SLOTS + slot].push(entry);
+        self.occupied[lvl] |= 1u64 << slot;
+    }
+
+    /// Lowest non-empty level + its first occupied slot — by the level
+    /// ordering argument in the module docs, the bucket holding the
+    /// earliest entry.
+    fn earliest_slot(&self) -> Option<(usize, usize)> {
+        self.occupied
+            .iter()
+            .position(|&b| b != 0)
+            .map(|lvl| (lvl, self.occupied[lvl].trailing_zeros() as usize))
+    }
+
+    /// Re-file entries whose level dropped because `now` advanced. An
+    /// entry of level ℓ needs demotion exactly when its deadline now
+    /// agrees with `now` on all bits ≥ 6ℓ — i.e. it sits in the slot of
+    /// level ℓ that contains `now`. Draining that one slot per level
+    /// restores the filing invariant; demoted entries always land on a
+    /// strictly lower level, never back in a drained slot.
+    fn cascade(&mut self) {
+        for lvl in (1..LEVELS).rev() {
+            let slot = ((self.now.0 >> (LEVEL_BITS * lvl as u32)) & (SLOTS as u64 - 1)) as usize;
+            if self.occupied[lvl] & (1u64 << slot) != 0 {
+                let mut bucket = std::mem::take(&mut self.slots[lvl * SLOTS + slot]);
+                self.occupied[lvl] &= !(1u64 << slot);
+                for e in bucket.drain(..) {
+                    self.file(e);
+                }
+                // Hand the (now empty) allocation back to the drained slot.
+                self.slots[lvl * SLOTS + slot] = bucket;
+            }
+        }
+    }
+}
+
+/// The original `BinaryHeap` event queue, kept verbatim as the reference
+/// implementation: the wheel must pop the exact same `(time, event)`
+/// sequence (see `property_wheel_matches_heap_pop_order`), and the
+/// hotpath benchmark reports both so the wheel's speedup stays measured.
+pub struct HeapEventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: Time,
+}
+
+impl<E> Default for HeapEventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> HeapEventQueue<E> {
+    /// Empty queue at time zero.
+    pub fn new() -> Self {
+        HeapEventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: Time::ZERO,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at` (past times clamp to `now`).
     pub fn schedule_at(&mut self, at: Time, ev: E) {
         let at = at.max(self.now);
         let seq = self.seq;
@@ -105,6 +268,7 @@ impl<E> EventQueue<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit;
 
     #[test]
     fn pops_in_time_order() {
@@ -154,5 +318,86 @@ mod tests {
         q.schedule_at(Time(7), 0);
         assert_eq!(q.len(), 1);
         assert_eq!(q.peek_time(), Some(Time(7)));
+    }
+
+    #[test]
+    fn distant_deadlines_cross_many_levels() {
+        // Deadlines spanning ns to ~19 minutes exercise levels 0..=6 and
+        // the multi-level cascade on each pop.
+        let mut q = EventQueue::new();
+        let times = [
+            1u64,
+            63,
+            64,
+            4_095,
+            4_096,
+            1 << 18,
+            (1 << 18) + 1,
+            1 << 30,
+            (1 << 40) - 1,
+            1 << 40,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            q.schedule_at(Time(t), i);
+        }
+        let popped: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(t, _)| t.0).collect();
+        let mut want = times.to_vec();
+        want.sort_unstable();
+        assert_eq!(popped, want);
+    }
+
+    #[test]
+    fn interleaved_insert_after_advance_stays_ordered() {
+        // A fresh near-deadline insert after `now` has advanced must not
+        // overtake an older, earlier entry parked on a higher level — the
+        // failure mode the eager cascade exists to prevent.
+        let mut q = EventQueue::new();
+        q.schedule_at(Time(100), "early-far");
+        q.schedule_at(Time(70), "first");
+        assert_eq!(q.pop(), Some((Time(70), "first"))); // now = 70
+        q.schedule_at(Time(101), "late-near");
+        assert_eq!(q.pop(), Some((Time(100), "early-far")));
+        assert_eq!(q.pop(), Some((Time(101), "late-near")));
+    }
+
+    /// The wheel must reproduce the heap's pop sequence exactly under
+    /// random interleavings of scheduling (with duplicates and past
+    /// clamps) and popping, across deadline spreads that hit many levels.
+    #[test]
+    fn property_wheel_matches_heap_pop_order() {
+        testkit::check("timer-wheel-vs-heap", |rng| {
+            let mut wheel = EventQueue::new();
+            let mut heap = HeapEventQueue::new();
+            let horizon = *rng.choose(&[1_000u64, 100_000, 1 << 24, 1 << 40]);
+            let mut id = 0u32;
+            let mut tie = Vec::new();
+            for _ in 0..rng.range_usize(50, 300) {
+                if wheel.is_empty() || rng.bool(0.6) {
+                    // Absolute deadlines, sometimes in the past (both
+                    // implementations clamp), sometimes exact duplicates.
+                    let at = if !tie.is_empty() && rng.bool(0.3) {
+                        *rng.choose(&tie)
+                    } else {
+                        let t = Time(rng.range_u64(0, horizon));
+                        tie.push(t);
+                        t
+                    };
+                    wheel.schedule_at(at, id);
+                    heap.schedule_at(at, id);
+                    id += 1;
+                } else {
+                    assert_eq!(wheel.peek_time(), heap.peek_time());
+                    let a = wheel.pop();
+                    let b = heap.pop();
+                    assert_eq!(a, b, "pop diverged");
+                    assert_eq!(wheel.now(), heap.now());
+                }
+                assert_eq!(wheel.len(), heap.len());
+            }
+            while let Some(b) = heap.pop() {
+                assert_eq!(wheel.pop(), Some(b), "drain diverged");
+            }
+            assert!(wheel.is_empty());
+        });
     }
 }

@@ -2,7 +2,8 @@
 //!
 //! Warms up, then runs timed batches until a target wall budget is spent,
 //! reporting mean / p50 / p99 per-iteration times. Used by
-//! `rust/benches/hotpath.rs` for the §Perf pass.
+//! `rust/benches/hotpath.rs` and `mma bench hotpath` for the perf
+//! trajectory (`BENCH_*.json`).
 
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
@@ -12,7 +13,9 @@ pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
 }
 
-/// Result of one benchmark.
+/// Result of one benchmark. Holds its per-batch samples presorted, so any
+/// number of [`Self::percentile`] queries costs one sort total (paid at
+/// construction), not one sort per call.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     /// Benchmark label.
@@ -25,9 +28,36 @@ pub struct BenchResult {
     pub p50_ns: f64,
     /// 99th percentile ns per iteration (over batches).
     pub p99_ns: f64,
+    /// Per-batch ns/iter samples, sorted ascending.
+    samples: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Build from raw per-batch samples (ns/iter); sorts them once.
+    pub fn from_samples(name: &str, iters: u64, mut samples: Vec<f64>) -> BenchResult {
+        assert!(!samples.is_empty(), "benchmark produced no samples");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mut r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: 0.0,
+            p99_ns: 0.0,
+            samples,
+        };
+        r.p50_ns = r.percentile(0.50);
+        r.p99_ns = r.percentile(0.99);
+        r
+    }
+
+    /// Percentile (0.0..=1.0) of the per-batch ns/iter distribution —
+    /// an index into the presorted samples, O(1) per query.
+    pub fn percentile(&self, p: f64) -> f64 {
+        debug_assert!((0.0..=1.0).contains(&p));
+        self.samples[((self.samples.len() - 1) as f64 * p) as usize]
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -86,16 +116,7 @@ impl Bencher {
             samples.push(dt);
             iters += batch;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
-        let res = BenchResult {
-            name: name.to_string(),
-            iters,
-            mean_ns: mean,
-            p50_ns: pct(0.50),
-            p99_ns: pct(0.99),
-        };
+        let res = BenchResult::from_samples(name, iters, samples);
         println!("{}", res.summary());
         self.results.push(res);
         self.results.last().unwrap()
@@ -123,5 +144,16 @@ mod tests {
         assert!(r.iters > 1000);
         assert!(r.mean_ns > 0.0);
         assert!(r.p50_ns <= r.p99_ns * 1.0001);
+    }
+
+    #[test]
+    fn percentiles_index_presorted_samples() {
+        let r = BenchResult::from_samples("t", 5, vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(1.0), 5.0);
+        assert_eq!(r.p50_ns, r.percentile(0.5));
+        assert_eq!(r.p50_ns, 3.0);
+        assert_eq!(r.p99_ns, r.percentile(0.99));
+        assert!((r.mean_ns - 3.0).abs() < 1e-12);
     }
 }

@@ -1,0 +1,129 @@
+//! Deterministic, fast hashing for hot integer-keyed maps.
+//!
+//! `std::collections::HashMap`'s default `RandomState` re-seeds SipHash
+//! per process — robust against adversarial keys, but (a) slow for the
+//! simulator's u32/u64 keys (request ids, prefix hashes, packed flow
+//! tags) and (b) a source of run-to-run iteration-order variance that
+//! deterministic code has to keep defending against. [`FxHasher`] is the
+//! multiply-rotate hash used by rustc (firefox "Fx" hash): one rotate,
+//! one xor and one multiply per 8-byte chunk, with a fixed seed — the
+//! same inputs hash identically in every process. Only use it for
+//! trusted, internally-generated keys; it is not DoS-resistant.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// `HashMap` keyed by [`FxHasher`] — drop-in for internally-generated keys.
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+/// `HashSet` keyed by [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+/// rustc's FxHash: multiply-rotate over 8-byte chunks, fixed seed.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+/// Knuth-style odd multiplier (golden-ratio derived), as used by rustc.
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf) | ((rem.len() as u64) << 56));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add_to_hash(n as u64);
+    }
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add_to_hash(n as u64);
+    }
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add_to_hash(n as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add_to_hash(n);
+    }
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add_to_hash(n as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::{BuildHasher, Hash};
+
+    fn hash_one<T: Hash>(x: &T) -> u64 {
+        let mut h = FxHasher::default();
+        x.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn deterministic_across_builders() {
+        // Unlike RandomState, two independent maps hash identically.
+        let b1: BuildHasherDefault<FxHasher> = Default::default();
+        let b2: BuildHasherDefault<FxHasher> = Default::default();
+        for k in [0u64, 1, 42, u64::MAX, 0xdead_beef] {
+            let mut h1 = b1.build_hasher();
+            let mut h2 = b2.build_hasher();
+            k.hash(&mut h1);
+            k.hash(&mut h2);
+            assert_eq!(h1.finish(), h2.finish());
+        }
+    }
+
+    #[test]
+    fn distinguishes_nearby_keys() {
+        let a = hash_one(&1u64);
+        let b = hash_one(&2u64);
+        let c = hash_one(&3u64);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a, c);
+        // Strings hash by content, with length folded into the tail chunk.
+        assert_ne!(hash_one(&"abc"), hash_one(&"abd"));
+        assert_ne!(hash_one(&"ab"), hash_one(&"ab\0"));
+    }
+
+    #[test]
+    fn map_and_set_round_trip() {
+        let mut m: FxHashMap<u64, &str> = FxHashMap::default();
+        m.insert(7, "seven");
+        m.insert(11, "eleven");
+        assert_eq!(m.get(&7), Some(&"seven"));
+        assert_eq!(m.len(), 2);
+        let mut s: FxHashSet<u32> = FxHashSet::default();
+        assert!(s.insert(5));
+        assert!(!s.insert(5));
+        assert!(s.contains(&5));
+    }
+}

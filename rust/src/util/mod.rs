@@ -5,5 +5,6 @@
 pub mod bench;
 pub mod cli;
 pub mod fmt;
+pub mod fxmap;
 pub mod rng;
 pub mod table;

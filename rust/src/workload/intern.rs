@@ -1,0 +1,92 @@
+//! String interning for hot-path workload keys.
+//!
+//! Replaying a million-request trace compares model / tenant names on
+//! every record; hashing and equality-checking `String`s in that loop is
+//! pure overhead. A [`SymbolTable`] maps each distinct string to a dense
+//! [`Sym`] (u32) once, after which comparisons and map keys are integer
+//! ops. Symbols are handed out in first-insertion order, so interning the
+//! same stream of names always yields the same ids — determinism is
+//! preserved across runs and across optimized/reference simulations.
+
+use crate::util::fxmap::FxHashMap;
+
+/// Interned string handle: dense index into the owning [`SymbolTable`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct Sym(pub u32);
+
+/// Insertion-ordered string interner.
+#[derive(Default, Clone, Debug)]
+pub struct SymbolTable {
+    by_name: FxHashMap<String, Sym>,
+    names: Vec<String>,
+}
+
+impl SymbolTable {
+    /// Empty table.
+    pub fn new() -> SymbolTable {
+        SymbolTable::default()
+    }
+
+    /// Intern `name`, returning its symbol (allocating one on first sight).
+    pub fn intern(&mut self, name: &str) -> Sym {
+        if let Some(&s) = self.by_name.get(name) {
+            return s;
+        }
+        let s = Sym(self.names.len() as u32);
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), s);
+        s
+    }
+
+    /// Look up an already-interned name without allocating a symbol.
+    pub fn get(&self, name: &str) -> Option<Sym> {
+        self.by_name.get(name).copied()
+    }
+
+    /// The string behind a symbol. Panics on a foreign symbol.
+    pub fn resolve(&self, s: Sym) -> &str {
+        &self.names[s.0 as usize]
+    }
+
+    /// Number of distinct interned strings.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True if nothing has been interned.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_dense() {
+        let mut t = SymbolTable::new();
+        let a = t.intern("llama-70b");
+        let b = t.intern("qwen-32b");
+        assert_eq!(a, Sym(0));
+        assert_eq!(b, Sym(1));
+        assert_eq!(t.intern("llama-70b"), a);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.resolve(a), "llama-70b");
+        assert_eq!(t.resolve(b), "qwen-32b");
+        assert_eq!(t.get("qwen-32b"), Some(b));
+        assert_eq!(t.get("absent"), None);
+    }
+
+    #[test]
+    fn symbols_follow_first_insertion_order() {
+        // Same name stream ⇒ same ids, regardless of how often names repeat.
+        let stream = ["b", "a", "b", "c", "a"];
+        let mut t1 = SymbolTable::new();
+        let mut t2 = SymbolTable::new();
+        let s1: Vec<Sym> = stream.iter().map(|n| t1.intern(n)).collect();
+        let s2: Vec<Sym> = stream.iter().map(|n| t2.intern(n)).collect();
+        assert_eq!(s1, s2);
+        assert_eq!(s1, vec![Sym(0), Sym(1), Sym(0), Sym(2), Sym(1)]);
+    }
+}

@@ -7,15 +7,19 @@
 //! * [`gen`] — trace generators: Poisson / MMPP-bursty / diurnal
 //!   arrivals, multi-tenant mixes with Zipf document popularity, and
 //!   model-switch schedules.
+//! * [`intern`] — u32 symbol table for model/tenant names, so replay hot
+//!   loops compare integers instead of hashing strings.
 //! * this module — the original in-process helpers: multi-turn QA
 //!   sessions over long documents (the LongBench v2-style setup of
 //!   §5.2.1) and raw Poisson arrival times, used by the Fig 2/12
 //!   harnesses.
 
 pub mod gen;
+pub mod intern;
 pub mod trace;
 
 pub use gen::{model_switch_trace, ArrivalProcess, TenantSpec, TraceGen};
+pub use intern::{Sym, SymbolTable};
 pub use trace::{Trace, TraceRecord, TRACE_VERSION};
 
 use crate::serving::{Request, RequestId};

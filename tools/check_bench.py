@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Validate a `mma bench hotpath --json` report against the committed
+baseline (`BENCH_0006_hotpath.json`).
+
+Two duties, split by baseline provenance (see docs/PERF.md):
+
+1. Schema validation — always. The fresh report must be the
+   `mma-bench-hotpath/1` document shape, its replay must be flagged
+   deterministic, and the incremental allocator must have done zero full
+   re-solves while the reference did at least one.
+2. Regression gate — only when the baseline's `provenance` is
+   `"measured"`. CI machines are noisy, so the gate is deliberately
+   loose: fail only if any events/sec figure fell below HALF the
+   baseline (a >2x regression). A `"desk-estimated"` baseline skips the
+   gate entirely (the numbers were never measured on comparable
+   hardware). Set MMA_BENCH_SKIP_REGRESSION=1 to skip the gate on a
+   machine known to be slow.
+
+Usage: check_bench.py <fresh-report.json> [baseline.json]
+"""
+
+import json
+import os
+import sys
+
+BASELINE = "BENCH_0006_hotpath.json"
+SCHEMA = "mma-bench-hotpath/1"
+# Events/sec may drop to 1/REGRESSION_FACTOR of baseline before failing.
+REGRESSION_FACTOR = 2.0
+
+EVENTS_KEYS = ("timer_wheel", "binary_heap", "fabric_flow_cycle")
+LEG_KEYS = ("wall_s", "recomputes", "full_solves", "component_solves", "flows_solved")
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+        raise  # unreachable
+
+
+def check_schema(doc: dict, path: str) -> None:
+    if doc.get("schema") != SCHEMA:
+        fail(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    if doc.get("provenance") not in ("measured", "desk-estimated"):
+        fail(f"{path}: bad provenance {doc.get('provenance')!r}")
+    eps = doc.get("events_per_sec")
+    if not isinstance(eps, dict):
+        fail(f"{path}: missing events_per_sec object")
+    for k in EVENTS_KEYS:
+        v = eps.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            fail(f"{path}: events_per_sec.{k} = {v!r} (want a positive number)")
+    replay = doc.get("replay")
+    if not isinstance(replay, dict):
+        fail(f"{path}: missing replay object")
+    if replay.get("deterministic") is not True:
+        fail(f"{path}: replay.deterministic is {replay.get('deterministic')!r}")
+    if not isinstance(replay.get("requests"), int) or replay["requests"] <= 0:
+        fail(f"{path}: replay.requests = {replay.get('requests')!r}")
+    w = replay.get("wall_per_1m_requests_s")
+    if not isinstance(w, (int, float)) or w <= 0:
+        fail(f"{path}: replay.wall_per_1m_requests_s = {w!r}")
+    for leg in ("incremental", "full"):
+        obj = replay.get(leg)
+        if not isinstance(obj, dict):
+            fail(f"{path}: missing replay.{leg} object")
+        for k in LEG_KEYS:
+            v = obj.get(k)
+            if not isinstance(v, (int, float)) or v < 0:
+                fail(f"{path}: replay.{leg}.{k} = {v!r}")
+    # The tentpole's acceptance criterion, checked on every fresh report:
+    # incremental does strictly fewer full re-solves than the reference.
+    inc, full = replay["incremental"], replay["full"]
+    if inc["full_solves"] >= full["full_solves"] or full["full_solves"] == 0:
+        fail(
+            f"{path}: incremental full_solves {inc['full_solves']} must be "
+            f"strictly below reference full_solves {full['full_solves']} (> 0)"
+        )
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        fail("usage: check_bench.py <fresh-report.json> [baseline.json]")
+    fresh_path = sys.argv[1]
+    base_path = sys.argv[2] if len(sys.argv) > 2 else BASELINE
+
+    fresh = load(fresh_path)
+    check_schema(fresh, fresh_path)
+    base = load(base_path)
+    check_schema(base, base_path)
+    print(f"check_bench: schema ok ({fresh_path}, baseline {base_path})")
+
+    if base.get("provenance") != "measured":
+        print(
+            f"check_bench: baseline provenance is "
+            f"{base.get('provenance')!r}; regression gate skipped"
+        )
+        return
+    if os.environ.get("MMA_BENCH_SKIP_REGRESSION"):
+        print("check_bench: MMA_BENCH_SKIP_REGRESSION set; regression gate skipped")
+        return
+
+    worst = []
+    for k in EVENTS_KEYS:
+        got = fresh["events_per_sec"][k]
+        want = base["events_per_sec"][k]
+        ratio = got / want
+        print(f"check_bench: events_per_sec.{k}: {got:.0f} vs baseline {want:.0f} ({ratio:.2f}x)")
+        if ratio < 1.0 / REGRESSION_FACTOR:
+            worst.append((k, ratio))
+    if worst:
+        detail = ", ".join(f"{k} at {r:.2f}x" for k, r in worst)
+        fail(
+            f"events/sec regression beyond {REGRESSION_FACTOR}x tolerance: {detail} "
+            f"(set MMA_BENCH_SKIP_REGRESSION=1 to skip on known-slow machines)"
+        )
+    print("check_bench: regression gate ok")
+
+
+if __name__ == "__main__":
+    main()
