@@ -19,7 +19,7 @@ fn main() {
 
     // Max-min fair allocation at fleet scale (the fabric's inner loop).
     let topo = h20x8();
-    let paths_owned: Vec<Vec<LinkId>> = (0..32)
+    let paths_owned: Vec<mma::util::SmallPath> = (0..32)
         .map(|i| {
             let g = GpuId((i % 8) as u8);
             if i % 2 == 0 {
@@ -74,4 +74,9 @@ fn main() {
     // incremental/reference replay legs with their allocator counters.
     println!("\n== mma::perf::run_hotpath ==");
     print!("{}", mma::perf::run_hotpath(false).render());
+
+    // The BENCH_0007 engine leg: the allocation-free engine pipeline in
+    // isolation (chunks/s, sink growth policing; docs/PERF.md).
+    println!("\n== mma::perf::run_engine_bench ==");
+    print!("{}", mma::perf::run_engine_bench(false).render());
 }

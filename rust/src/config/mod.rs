@@ -187,6 +187,10 @@ impl WorkloadConfig {
 pub struct RunConfig {
     /// Which server preset to simulate.
     pub preset: Preset,
+    /// Worker threads for parallel sweep runners (`mma figure --jobs` /
+    /// `MMA_JOBS` override; sweep output is byte-identical for any
+    /// value). 1 = sequential.
+    pub jobs: usize,
     /// MMA engine tunables.
     pub mma: MmaConfig,
     /// Serving knobs.
@@ -201,6 +205,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             preset: Preset::H20x8,
+            jobs: 1,
             mma: MmaConfig::default(),
             serving: ServingConfig::default(),
             fleet: FleetConfig::default(),
@@ -308,6 +313,15 @@ impl RunConfig {
                 self.workload.arrivals = v;
             }
         }
+        if let Some(v) = get("MMA_JOBS") {
+            // Same stance as MMA_POLICY: an unparseable or zero value
+            // changes nothing rather than silently going sequential.
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    self.jobs = n;
+                }
+            }
+        }
         if get("MMA_DISABLE").is_some() {
             self.mma.policy = PolicySpec::Native;
         }
@@ -326,6 +340,13 @@ fn apply_run(cfg: &mut RunConfig, table: &BTreeMap<String, TomlValue>) -> Result
                     Preset::parse(s).ok_or_else(|| format!("unknown preset {s:?}"))?;
             }
             ("preset", _) => return bad(k, "string"),
+            ("jobs", TomlValue::Int(i)) => {
+                if *i < 1 {
+                    return Err(format!("[run] jobs = {i} must be >= 1"));
+                }
+                cfg.jobs = *i as usize;
+            }
+            ("jobs", _) => return bad(k, "integer"),
             _ => return Err(format!("unknown key {k:?} in [run]")),
         }
     }
@@ -965,6 +986,27 @@ mod tests {
         assert_eq!(cfg.workload.arrivals, "diurnal");
         std::env::remove_var("MMA_TRACE");
         std::env::remove_var("MMA_WORKLOAD");
+    }
+
+    #[test]
+    fn jobs_key_parses_and_validates() {
+        let cfg = RunConfig::from_toml("[run]\njobs = 4").unwrap();
+        assert_eq!(cfg.jobs, 4);
+        assert_eq!(RunConfig::default().jobs, 1);
+        assert!(RunConfig::from_toml("[run]\njobs = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\njobs = \"two\"").is_err());
+        // MMA_JOBS overrides; junk values change nothing.
+        std::env::set_var("MMA_JOBS", "8");
+        let mut cfg = RunConfig::default();
+        cfg.apply_env();
+        assert_eq!(cfg.jobs, 8);
+        std::env::set_var("MMA_JOBS", "zero");
+        cfg.apply_env();
+        assert_eq!(cfg.jobs, 8);
+        std::env::set_var("MMA_JOBS", "0");
+        cfg.apply_env();
+        assert_eq!(cfg.jobs, 8);
+        std::env::remove_var("MMA_JOBS");
     }
 
     #[test]

@@ -25,11 +25,28 @@ pub use workload_replay::workload_replay;
 
 use crate::topology::h20x8;
 use crate::util::table::Table;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Default RNG seed of the stochastic runners (overridable via `--seed`).
 /// Historically hardwired inside `serving_figs`; kept at the same value so
 /// default outputs are unchanged.
 pub const DEFAULT_SEED: u64 = 0xF16;
+
+/// Worker threads for the parallel sweep runners (`--jobs` / `MMA_JOBS` /
+/// `[run] jobs`). Sweeps fan independent cells over
+/// [`crate::util::par::par_map`] and merge results in canonical cell
+/// order, so output is byte-identical for any value.
+static JOBS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the sweep worker-thread count (clamped to at least 1).
+pub fn set_jobs(n: usize) {
+    JOBS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current sweep worker-thread count (see [`set_jobs`]; default 1).
+pub fn jobs() -> usize {
+    JOBS.load(Ordering::Relaxed)
+}
 
 /// Table 1: effective interconnect bandwidths of the simulated testbed.
 pub fn table1_interconnects() -> Table {

@@ -10,6 +10,7 @@ use crate::figures::micro::measure_bw;
 use crate::mma::MmaConfig;
 use crate::policy::{self, PolicySpec};
 use crate::topology::{h20x8, Direction, GpuId};
+use crate::util::par::par_map;
 use crate::util::table::Table;
 
 /// Policies compared, in table-column order.
@@ -49,18 +50,31 @@ pub fn cfg_for(policy: &str, n_relays: usize) -> MmaConfig {
     }
 }
 
-/// The sweep table: H2D GB/s per policy at 0..=7 relay paths.
+/// The sweep table: H2D GB/s per policy at 0..=7 relay paths. Cells run
+/// on [`crate::figures::jobs`] worker threads (each cell owns its
+/// `SimWorld`, so cells are independent) and merge in canonical row-major
+/// order — the table is byte-identical for any worker count.
 pub fn policy_sweep(fast: bool) -> Table {
+    policy_sweep_jobs(fast, crate::figures::jobs())
+}
+
+/// [`policy_sweep`] with an explicit worker count — the seam the
+/// jobs-byte-identity test drives without touching the process-global
+/// jobs setting.
+pub fn policy_sweep_jobs(fast: bool, jobs: usize) -> Table {
     let bytes: u64 = if fast { 1 << 30 } else { 4 << 30 };
     let mut header = vec!["relays".to_string()];
     header.extend(POLICIES.iter().map(|p| format!("{p} GB/s")));
     let mut t = Table::new(header);
-    for n in 0..=7usize {
+    let cells: Vec<(usize, &str)> = (0..=7usize)
+        .flat_map(|n| POLICIES.iter().map(move |&p| (n, p)))
+        .collect();
+    let bws = par_map(jobs, cells, |_, (n, p)| {
+        measure_bw(Direction::H2D, bytes, cfg_for(p, n))
+    });
+    for (n, row_bws) in bws.chunks(POLICIES.len()).enumerate() {
         let mut row = vec![n.to_string()];
-        for p in POLICIES {
-            let bw = measure_bw(Direction::H2D, bytes, cfg_for(p, n));
-            row.push(format!("{:.1}", bw / 1e9));
-        }
+        row.extend(row_bws.iter().map(|bw| format!("{:.1}", bw / 1e9)));
         t.row(row);
     }
     t
@@ -110,6 +124,15 @@ mod tests {
                 "{p} fell behind greedy: {bw} vs {greedy}"
             );
         }
+    }
+
+    #[test]
+    fn sweep_output_identical_across_job_counts() {
+        // The acceptance bar for the parallel executor: merged output is
+        // byte-for-byte the sequential output, for any worker count.
+        let seq = policy_sweep_jobs(true, 1).render();
+        let par = policy_sweep_jobs(true, 4).render();
+        assert_eq!(seq, par, "parallel sweep must be byte-identical");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! ```text
 //! mma topo [--preset h20x8]               describe the simulated server
 //! mma microbench [--dir h2d] [--size 1GB] [--relays 7] [--policy <name>]
-//! mma figure <id|all> [--fast] [--seed N] regenerate a paper table/figure
+//! mma figure <id|all> [--fast] [--seed N] [--jobs N]
+//!                                         regenerate a paper table/figure
 //! mma serve [--model qwen-7b] [--ctx 65536] [--docs 4] [--policy <name>]
 //!           [--arrival-rate R] [--max-concurrency N] [--fetch-chunks C]
 //!           [--gpus N] [--router round-robin|least-loaded]
@@ -17,7 +18,7 @@
 //!               [--requests N] [--tenants K] [--docs D] [--zipf S]
 //!               [--ctx T] [--suffix T] [--output-tokens T] [--seed N]
 //!               [--warm-start] [--switch-models m1,m2 --phase S]
-//! mma bench hotpath [--fast] [--json] [--out FILE]
+//! mma bench hotpath [--fast] [--json] [--out FILE] [--out-engine FILE]
 //!                                         hot-path perf harness (docs/PERF.md)
 //! mma config-check <file.toml>            validate a config file
 //! ```
@@ -33,6 +34,10 @@
 //! trace` key (or `MMA_TRACE`) names the input. `mma trace gen`
 //! materializes generator output — bursty/diurnal arrivals, multi-tenant
 //! Zipf mixes, model-switch schedules — to a file or stdout.
+//!
+//! `mma figure --jobs N` (also `MMA_JOBS` / `[run] jobs`) fans a sweep's
+//! independent cells over N worker threads; results merge in canonical
+//! cell order, so output stays byte-identical for any job count.
 //!
 //! `--policy` selects the transfer policy on any run: `native`,
 //! `static-split` (or `static:<gpu>:<w>,...`), `mma-greedy`,
@@ -194,6 +199,9 @@ fn main() {
         "figure" => {
             let id = args.pos(1).unwrap_or("all");
             let fast = args.flag("fast");
+            // Precedence: --jobs flag → MMA_JOBS (already folded into the
+            // run config by apply_env) → [run] jobs → 1.
+            figures::set_jobs(args.or("jobs", cfg.jobs).max(1));
             if id == "all" {
                 for id in figures::all_ids() {
                     println!("\n===== figure {id} =====");
@@ -438,10 +446,13 @@ fn main() {
         }
         "bench" => {
             if args.pos(1) != Some("hotpath") {
-                eprintln!("usage: mma bench hotpath [--fast] [--json] [--out FILE]");
+                eprintln!(
+                    "usage: mma bench hotpath [--fast] [--json] [--out FILE] [--out-engine FILE]"
+                );
                 std::process::exit(2);
             }
-            let report = mma::perf::run_hotpath(args.flag("fast"));
+            let fast = args.flag("fast");
+            let report = mma::perf::run_hotpath(fast);
             if !report.replay_deterministic {
                 eprintln!("FATAL: incremental and reference replays diverged");
                 std::process::exit(1);
@@ -453,10 +464,27 @@ fn main() {
                 });
                 eprintln!("wrote {path}");
             }
+            // The BENCH_0007 engine leg: measured alongside the hotpath
+            // harness so one CI invocation produces both documents.
+            let engine = mma::perf::run_engine_bench(fast);
+            if engine.engine.steady_state_allocs != 0 {
+                eprintln!(
+                    "FATAL: engine steady state allocated ({} sink growths)",
+                    engine.engine.steady_state_allocs
+                );
+                std::process::exit(1);
+            }
+            if let Some(path) = args.get("out-engine") {
+                std::fs::write(path, engine.to_json()).unwrap_or_else(|e| {
+                    eprintln!("--out-engine {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("wrote {path}");
+            }
             if args.flag("json") {
                 print!("{}", report.to_json());
             } else {
-                print!("{}", report.render());
+                print!("{}{}", report.render(), engine.render());
             }
         }
         "config-check" => {

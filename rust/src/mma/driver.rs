@@ -3,7 +3,7 @@
 //! (or the native/static baselines) — every figure harness, integration
 //! test, and the serving layer's transfer clock run through [`SimWorld`].
 
-use super::engine::{Engine, EngineAction};
+use super::engine::{ActionSink, Engine, EngineAction};
 use super::interceptor::{self, Route};
 use super::sync_engine::SyncEngine;
 use super::transfer_task::{
@@ -13,7 +13,8 @@ use super::{MmaConfig, QosConfig};
 use crate::fabric::{Fabric, FlowDone};
 use crate::gpusim::{Action, GpuSim, StreamId, StreamTask, TransferId};
 use crate::sim::{EventQueue, Time};
-use crate::topology::{Direction, GpuId, LinkId, Topology};
+use crate::topology::{Direction, GpuId, Topology};
+use crate::util::SmallPath;
 use std::collections::VecDeque;
 
 /// Flow-tag layout: `[class:8][kind:8][a:24][b:24]` (`class` is the
@@ -113,7 +114,7 @@ pub struct Sample {
 /// A background copy loop: back-to-back DMA on a fixed path (emulating
 /// third-party traffic such as NIC DMA or a co-running native app).
 struct BgLoop {
-    path: Vec<LinkId>,
+    path: SmallPath,
     bytes: u64,
     remaining: u64,
     class: TransferClass,
@@ -149,6 +150,10 @@ pub struct SimWorld {
     /// Reused buffer for fabric completion harvesting (`Fabric::poll_into`),
     /// so the per-event hot path stays allocation-free.
     flow_done_scratch: Vec<FlowDone>,
+    /// Reused action buffer for every engine call (`*_into` entry points):
+    /// taken out, cleared, filled, applied, and put back — the per-event
+    /// engine path never allocates a fresh `Vec<EngineAction>`.
+    action_scratch: ActionSink,
     /// Fabric-level QoS parameters (per-class weights and the bulk cap):
     /// every flow this world launches — engine chunks, native copies,
     /// background loops — carries its class's weight onto the fabric.
@@ -182,6 +187,7 @@ impl SimWorld {
             last_sampled: ([0.0; NUM_CLASSES], Time::ZERO),
             notices: VecDeque::new(),
             flow_done_scratch: Vec::new(),
+            action_scratch: ActionSink::new(),
             qos,
             topo,
         }
@@ -339,8 +345,7 @@ impl SimWorld {
             (Route::Engine, None) => {
                 // Sync engine copy: the copy point is active immediately.
                 self.transfers.push(rec);
-                let acts = self.engines[engine_idx].activate(now, tid, desc, &self.topo);
-                self.apply(now, engine_idx as u8, acts);
+                self.engine_activate(now, engine_idx as u8, tid, desc);
             }
             (Route::Native, Some(s)) => {
                 self.transfers.push(rec);
@@ -389,11 +394,12 @@ impl SimWorld {
     /// `bytes` over `path` (native-style single flows). Returns the loop id.
     pub fn start_bg_loop(
         &mut self,
-        path: Vec<LinkId>,
+        path: impl Into<SmallPath>,
         bytes: u64,
         repeat: u64,
         class: TransferClass,
     ) -> u32 {
+        let path = path.into();
         let id = self.bg.len() as u32;
         let latency = Time::from_ns(self.topo.lat.dma_setup_ns);
         self.bg.push(BgLoop {
@@ -525,12 +531,18 @@ impl SimWorld {
                 self.flow_done_scratch = done;
             }
             Ev::EngineWake { e, gpu } => {
-                let acts = self.engines[e as usize].on_wake(now, gpu, &self.topo);
-                self.apply(now, e, acts);
+                let mut sink = std::mem::take(&mut self.action_scratch);
+                sink.clear();
+                self.engines[e as usize].on_wake_into(now, gpu, &self.topo, &mut sink);
+                self.apply(now, e, &mut sink);
+                self.action_scratch = sink;
             }
             Ev::Retire { e, gpu, key } => {
-                let acts = self.engines[e as usize].on_retire(now, gpu, key, &self.topo);
-                self.apply(now, e, acts);
+                let mut sink = std::mem::take(&mut self.action_scratch);
+                sink.clear();
+                self.engines[e as usize].on_retire_into(now, gpu, key, &self.topo, &mut sink);
+                self.apply(now, e, &mut sink);
+                self.action_scratch = sink;
             }
             Ev::KernelDone { dev, stream, tag } => {
                 self.gpus.complete_head(dev, stream);
@@ -602,8 +614,11 @@ impl SimWorld {
             tag::KIND_CHUNK | tag::KIND_CHUNK_MID => {
                 let e = tag::a(d.tag) as u8;
                 let key = tag::b(d.tag) as u64;
-                let acts = self.engines[e as usize].on_flow_done(now, key, &self.topo);
-                self.apply(now, e, acts);
+                let mut sink = std::mem::take(&mut self.action_scratch);
+                sink.clear();
+                self.engines[e as usize].on_flow_done_into(now, key, &self.topo, &mut sink);
+                self.apply(now, e, &mut sink);
+                self.action_scratch = sink;
             }
             tag::KIND_NATIVE => {
                 let tid = TransferId(tag::b(d.tag));
@@ -628,8 +643,19 @@ impl SimWorld {
         }
     }
 
-    fn apply(&mut self, now: Time, e: u8, acts: Vec<EngineAction>) {
-        for a in acts {
+    /// Run one engine's `*_into` entry point through the shared
+    /// [`Self::action_scratch`] sink and apply the resulting actions —
+    /// the allocation-free replacement for collecting a `Vec` per event.
+    fn engine_activate(&mut self, now: Time, e: u8, tid: TransferId, desc: TransferDesc) {
+        let mut sink = std::mem::take(&mut self.action_scratch);
+        sink.clear();
+        self.engines[e as usize].activate_into(now, tid, desc, &self.topo, &mut sink);
+        self.apply(now, e, &mut sink);
+        self.action_scratch = sink;
+    }
+
+    fn apply(&mut self, now: Time, e: u8, sink: &mut ActionSink) {
+        for a in sink.drain() {
             match a {
                 EngineAction::StartFlow {
                     key,
@@ -707,8 +733,7 @@ impl SimWorld {
                     rec.state = TransferState::Active;
                     let e = rec.engine.expect("callback for native transfer");
                     let desc = rec.desc;
-                    let acts = self.engines[e as usize].activate(now, tid, desc, &self.topo);
-                    self.apply(now, e, acts);
+                    self.engine_activate(now, e, tid, desc);
                 }
                 Action::SpinParked { .. } => {}
             }

@@ -28,7 +28,7 @@ pub mod task_manager;
 pub mod transfer_task;
 
 pub use driver::{Notice, SimWorld, StreamHandle};
-pub use engine::Engine;
+pub use engine::{ActionSink, Engine, EngineAction};
 pub use transfer_task::{TransferClass, TransferDesc, NUM_CLASSES};
 
 use crate::policy::PolicySpec;

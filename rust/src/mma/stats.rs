@@ -32,6 +32,9 @@ pub struct EngineStats {
     pub transfers_completed: u64,
     /// Transfers that took the native fallback path.
     pub fallback_transfers: u64,
+    /// Completion/retirement notices for unknown or already-retired chunk
+    /// keys — counted and skipped instead of aborting the replay.
+    pub stray_events: u64,
 }
 
 impl EngineStats {
@@ -47,6 +50,7 @@ impl EngineStats {
             backoff_events: vec![0; gpu_count],
             transfers_completed: 0,
             fallback_transfers: 0,
+            stray_events: 0,
         }
     }
 

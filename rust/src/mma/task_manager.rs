@@ -85,21 +85,36 @@ impl TaskManager {
         chunk_bytes: u64,
         class: TransferClass,
     ) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        Self::split_into(transfer, dest, bytes, chunk_bytes, class, &mut out);
+        out
+    }
+
+    /// [`TaskManager::split`] into a caller-owned buffer (cleared first),
+    /// so activation can reuse one scratch `Vec` across transfers instead
+    /// of allocating per call.
+    pub fn split_into(
+        transfer: TransferId,
+        dest: GpuId,
+        bytes: u64,
+        chunk_bytes: u64,
+        class: TransferClass,
+        out: &mut Vec<Chunk>,
+    ) {
         assert!(bytes > 0, "empty transfer");
+        out.clear();
         let cb = chunk_bytes.max(1);
         let n = bytes.div_ceil(cb);
-        (0..n)
-            .map(|i| {
-                let off = i * cb;
-                Chunk {
-                    transfer,
-                    index: i as u32,
-                    bytes: (bytes - off).min(cb),
-                    dest,
-                    class,
-                }
-            })
-            .collect()
+        out.extend((0..n).map(|i| {
+            let off = i * cb;
+            Chunk {
+                transfer,
+                index: i as u32,
+                bytes: (bytes - off).min(cb),
+                dest,
+                class,
+            }
+        }));
     }
 
     /// Enqueue chunks into the destination-tagged queue (pull mode).

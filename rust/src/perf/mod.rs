@@ -25,14 +25,16 @@
 use crate::config::FleetConfig;
 use crate::fabric::{self, Fabric, FabricStats};
 use crate::figures::workload_replay::{replay, replay_serving, ReplayOptions};
-use crate::mma::MmaConfig;
+use crate::gpusim::TransferId;
+use crate::mma::{ActionSink, Engine, EngineAction, MmaConfig, TransferDesc};
 use crate::models::qwen_7b_chat;
 use crate::serving::RoutePolicy;
 use crate::sim::{EventQueue, HeapEventQueue, Time};
-use crate::topology::{h20x8, GpuId, NumaId};
+use crate::topology::{h20x8, Direction, GpuId, NumaId, Topology};
 use crate::util::bench::black_box;
 use crate::util::rng::Rng;
 use crate::workload::{ArrivalProcess, TenantSpec, Trace, TraceGen};
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// Seed for the harness's synthetic workloads (fixed: the bench varies
@@ -100,6 +102,142 @@ pub fn run_hotpath_with(fast: bool, budget: Duration, requests: usize) -> Hotpat
         fabric_events_per_sec,
         replay_requests: requests,
         replay_deterministic,
+        incremental,
+        reference,
+    }
+}
+
+/// The engine-cycle leg of `BENCH_0007`: the MMA engine pipeline driven
+/// directly (no fabric, synthetic 1 us flow times), so the number
+/// isolates the engine's own per-event cost — split, policy pull,
+/// dispatch, retire — on the allocation-free sink/slab path.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineCycle {
+    /// Chunks retired per wall-clock second through the full
+    /// activate → wake → flow-done → retire cycle.
+    pub chunks_per_sec: f64,
+    /// Engine actions emitted during the measured window (post-warm-up).
+    pub actions_total: u64,
+    /// [`ActionSink`] buffer growths observed after the warm-up transfer.
+    /// The zero-allocation acceptance bar: must be 0 — every steady-state
+    /// event reuses the sink, the slab slots, and the inline paths.
+    pub steady_state_allocs: u64,
+    /// Actions emitted per sink growth over the whole run (warm-up
+    /// included); higher means the one-time warm-up amortizes further.
+    pub actions_per_alloc: f64,
+}
+
+/// Transfer size of one engine-cycle iteration (10 default chunks).
+const ENGINE_XFER_BYTES: u64 = 50_000_000;
+
+/// Run one transfer through the engine to quiescence with the reused
+/// sink; returns chunks retired. Mirrors the engine's sink-based test
+/// executor: the executor itself stays on the allocation-free path once
+/// the `pending` ring is warm.
+fn engine_transfer(
+    e: &mut Engine,
+    topo: &Topology,
+    sink: &mut ActionSink,
+    pending: &mut VecDeque<EngineAction>,
+    tid: u32,
+) -> u64 {
+    sink.clear();
+    let desc = TransferDesc::new(Direction::H2D, GpuId(0), NumaId(0), ENGINE_XFER_BYTES);
+    e.activate_into(Time::ZERO, TransferId(tid), desc, topo, sink);
+    pending.extend(sink.drain());
+    let mut now = Time::ZERO;
+    let mut retired = 0u64;
+    while let Some(act) = pending.pop_front() {
+        sink.clear();
+        match act {
+            EngineAction::StartFlow { key, .. } => {
+                now = now + Time::from_us(1);
+                e.on_flow_done_into(now, key, topo, sink);
+            }
+            EngineAction::RetireAt { gpu, key, at } => {
+                now = now.max(at);
+                retired += 1;
+                e.on_retire_into(now, gpu, key, topo, sink);
+            }
+            EngineAction::WakeAt { gpu, at } => {
+                now = now.max(at);
+                e.on_wake_into(now, gpu, topo, sink);
+            }
+            EngineAction::TransferComplete { .. } => {}
+        }
+        pending.extend(sink.drain());
+    }
+    retired
+}
+
+/// Measure the engine cycle: one warm-up transfer sizes the sink, slabs,
+/// and lane queues, then transfers loop under `budget` while the sink's
+/// growth counter polices the zero-allocation bar.
+pub fn engine_cycle(budget: Duration) -> EngineCycle {
+    let topo = h20x8();
+    let mut e = Engine::new(0, Direction::H2D, MmaConfig::default(), topo.gpu_count());
+    let mut sink = ActionSink::new();
+    let mut pending = VecDeque::new();
+    engine_transfer(&mut e, &topo, &mut sink, &mut pending, 0);
+    let warm_grows = sink.grows();
+    let warm_pushed = sink.pushed();
+    let t0 = Instant::now();
+    let mut chunks = 0u64;
+    let mut tid = 1u32;
+    while t0.elapsed() < budget {
+        chunks += engine_transfer(&mut e, &topo, &mut sink, &mut pending, tid);
+        tid += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    EngineCycle {
+        chunks_per_sec: chunks as f64 / wall.max(1e-9),
+        actions_total: sink.pushed() - warm_pushed,
+        steady_state_allocs: sink.grows() - warm_grows,
+        actions_per_alloc: sink.pushed() as f64 / sink.grows().max(1) as f64,
+    }
+}
+
+/// Everything the `BENCH_0007` engine bench measures: the engine cycle
+/// plus the twin replay legs (the end-to-end view of the same event
+/// path, incremental vs reference allocator).
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    /// Fast mode (smaller budgets/workloads; CI smoke).
+    pub fast: bool,
+    /// The isolated engine-pipeline measurement.
+    pub engine: EngineCycle,
+    /// Requests in the replay legs' trace.
+    pub replay_requests: usize,
+    /// Whether the twin replays rendered byte-identically.
+    pub replay_deterministic: bool,
+    /// Replay with the incremental (component) allocator.
+    pub incremental: ReplayLeg,
+    /// Replay with the reference full re-solve allocator.
+    pub reference: ReplayLeg,
+}
+
+/// Run the `BENCH_0007` engine bench (`mma bench hotpath --out-engine`).
+pub fn run_engine_bench(fast: bool) -> EngineReport {
+    let budget = if fast {
+        Duration::from_millis(120)
+    } else {
+        Duration::from_millis(600)
+    };
+    let requests = if fast { 48 } else { 192 };
+    run_engine_bench_with(fast, budget, requests)
+}
+
+/// [`run_engine_bench`] with explicit knobs (tests use tiny budgets).
+pub fn run_engine_bench_with(fast: bool, budget: Duration, requests: usize) -> EngineReport {
+    let engine = engine_cycle(budget);
+    let trace = replay_trace(requests);
+    let (inc_report, incremental) = replay_leg(&trace, true);
+    let (ref_report, reference) = replay_leg(&trace, false);
+    EngineReport {
+        fast,
+        engine,
+        replay_requests: requests,
+        replay_deterministic: inc_report == ref_report,
         incremental,
         reference,
     }
@@ -332,6 +470,85 @@ impl HotpathReport {
     }
 }
 
+impl EngineReport {
+    /// Seconds to replay one million requests, extrapolated from the
+    /// incremental leg.
+    pub fn wall_per_1m_requests_s(&self) -> f64 {
+        if self.replay_requests == 0 {
+            return 0.0;
+        }
+        self.incremental.wall_s * (1_000_000.0 / self.replay_requests as f64)
+    }
+
+    /// The `mma-bench-engine/1` JSON document (stable key order; see
+    /// `docs/PERF.md` for the schema).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"mma-bench-engine/1\",\n");
+        s.push_str("  \"bench\": \"BENCH_0007\",\n");
+        s.push_str("  \"provenance\": \"measured\",\n");
+        s.push_str(&format!("  \"fast\": {},\n", self.fast));
+        s.push_str("  \"engine\": {\n");
+        s.push_str(&format!(
+            "    \"chunks_per_sec\": {},\n",
+            jnum(self.engine.chunks_per_sec, 1)
+        ));
+        s.push_str(&format!(
+            "    \"actions_total\": {},\n",
+            self.engine.actions_total
+        ));
+        s.push_str(&format!(
+            "    \"actions_per_alloc\": {},\n",
+            jnum(self.engine.actions_per_alloc, 1)
+        ));
+        s.push_str(&format!(
+            "    \"steady_state_allocs\": {}\n",
+            self.engine.steady_state_allocs
+        ));
+        s.push_str("  },\n");
+        s.push_str("  \"replay\": {\n");
+        s.push_str(&format!("    \"requests\": {},\n", self.replay_requests));
+        s.push_str(&format!(
+            "    \"deterministic\": {},\n",
+            self.replay_deterministic
+        ));
+        s.push_str(&format!(
+            "    \"wall_per_1m_requests_s\": {},\n",
+            jnum(self.wall_per_1m_requests_s(), 3)
+        ));
+        s.push_str("    \"incremental\": {\n");
+        stats_json(&mut s, &self.incremental, "      ");
+        s.push_str("    },\n");
+        s.push_str("    \"full\": {\n");
+        stats_json(&mut s, &self.reference, "      ");
+        s.push_str("    }\n");
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable summary (the engine leg of `mma bench hotpath`).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "engine cycle    {:>12.0} chunks/s, {} actions, {:.0} actions/alloc, {} steady-state allocs\n",
+            self.engine.chunks_per_sec,
+            self.engine.actions_total,
+            self.engine.actions_per_alloc,
+            self.engine.steady_state_allocs,
+        ));
+        s.push_str(&format!(
+            "engine replay   {} requests in {:.3} s ({:.1} s per 1M requests), deterministic: {}\n",
+            self.replay_requests,
+            self.incremental.wall_s,
+            self.wall_per_1m_requests_s(),
+            self.replay_deterministic,
+        ));
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,6 +580,51 @@ mod tests {
         assert!(r.heap_events_per_sec > 0.0);
         assert!(r.fabric_events_per_sec > 0.0);
         assert!(r.wall_per_1m_requests_s() > 0.0);
+    }
+
+    #[test]
+    fn engine_bench_holds_the_zero_alloc_bar() {
+        // Tiny budget: correctness of the harness, not a measurement. The
+        // acceptance criterion lives here — steady-state engine events
+        // must never grow the reused sink.
+        let r = run_engine_bench_with(true, Duration::from_millis(5), 12);
+        assert_eq!(
+            r.engine.steady_state_allocs, 0,
+            "engine steady state allocated: {:?}",
+            r.engine
+        );
+        assert!(r.engine.chunks_per_sec > 0.0);
+        assert!(r.engine.actions_total > 0);
+        assert!(r.engine.actions_per_alloc > 0.0);
+        assert!(r.replay_deterministic, "replay legs diverged");
+        assert!(
+            r.incremental.stats.full_solves < r.reference.stats.full_solves,
+            "incremental must full-solve strictly less"
+        );
+    }
+
+    #[test]
+    fn engine_json_has_stable_schema_keys() {
+        let r = run_engine_bench_with(true, Duration::from_millis(2), 6);
+        let j = r.to_json();
+        for key in [
+            "\"schema\": \"mma-bench-engine/1\"",
+            "\"bench\": \"BENCH_0007\"",
+            "\"provenance\": \"measured\"",
+            "\"chunks_per_sec\"",
+            "\"actions_total\"",
+            "\"actions_per_alloc\"",
+            "\"steady_state_allocs\"",
+            "\"replay\"",
+            "\"deterministic\"",
+            "\"incremental\"",
+            "\"full\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+        assert!(!r.render().is_empty());
     }
 
     #[test]

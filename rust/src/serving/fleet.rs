@@ -239,6 +239,7 @@ impl ServingFleet {
         let phase = self.registry.start_sleep(&mut self.world, i);
         phase.wait(&mut self.world);
         self.instances[i].set_awake(false);
+        self.router.set_awake(i, false);
     }
 
     /// Run `requests` to completion; returns outcomes in request order.
@@ -319,8 +320,10 @@ impl ServingFleet {
         } else {
             None
         };
-        let awake: Vec<bool> = self.instances.iter().map(|i| i.awake()).collect();
-        let (chosen, needs_wake) = self.router.route(affinity, &awake);
+        // Residency lives in the router (synced on sleep/wake events), so
+        // routing reads the incremental index instead of re-collecting and
+        // re-scanning instance state per arrival.
+        let (chosen, needs_wake) = self.router.route_next(affinity);
         self.assignments.insert(req.id.0, chosen);
         if needs_wake && !self.pending_wakes.iter().any(|(i, _)| *i == chosen) {
             // Non-blocking: the H2D weight reload contends with live
@@ -367,6 +370,7 @@ impl ServingFleet {
                 let (inst, _) = self.pending_wakes.swap_remove(i);
                 self.wake_costs.push((inst, res));
                 self.instances[inst].set_awake(true);
+                self.router.set_awake(inst, true);
                 self.pump_instance(inst);
             } else {
                 i += 1;

@@ -1,7 +1,7 @@
 //! Request router / frontend: maps incoming requests to serving instances.
 //!
 //! Event-driven: the router holds no clock and never blocks. The
-//! [`crate::serving::ServingFleet`] calls [`Router::route`] when an
+//! [`crate::serving::ServingFleet`] calls [`Router::route_next`] when an
 //! arrival timer fires and [`Router::done`] when a completion notice
 //! retires a request, so every placement decision happens mid-simulation
 //! on the one [`crate::mma::SimWorld`] event loop. Routing to a sleeping
@@ -9,6 +9,16 @@
 //! and the fleet starts a non-blocking wake whose weight transfers co-run
 //! with live serving traffic (the control plane whose switch latency
 //! Fig 13 measures).
+//!
+//! Residency is router state, not a per-arrival argument: the fleet calls
+//! [`Router::set_awake`] on sleep/wake transitions, and the least-loaded
+//! pick reads an incrementally-maintained index (a lazy-deletion min-heap
+//! over `(load, instance)`) instead of scanning every instance per
+//! arrival — O(log n) amortized per event and allocation-free at steady
+//! state.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Placement policy across the instances of a fleet.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,6 +52,18 @@ impl RoutePolicy {
 pub struct Router {
     policy: RoutePolicy,
     inflight: Vec<u32>,
+    /// Residency per instance, updated by [`Router::set_awake`]
+    /// (instances start awake).
+    awake: Vec<bool>,
+    awake_count: usize,
+    /// Incremental least-loaded index: min-heap of `(load, instance)`
+    /// snapshots with lazy deletion. Invariant: every awake instance has
+    /// an entry carrying its *current* load (pushed on route/done/wake);
+    /// entries whose load or residency no longer matches are stale and
+    /// popped on sight. Loads are small and churn is per-request, so the
+    /// heap stays shallow and reuses its buffer — no per-arrival scan,
+    /// no per-arrival allocation.
+    heap: BinaryHeap<Reverse<(u32, usize)>>,
     rr_next: usize,
     /// Instances that received a request while asleep (on-demand wake
     /// triggers), in routing order.
@@ -49,65 +71,126 @@ pub struct Router {
 }
 
 impl Router {
-    /// Router for `instances` serving slots.
+    /// Router for `instances` serving slots (all initially awake).
     pub fn new(policy: RoutePolicy, instances: usize) -> Router {
         Router {
             policy,
             inflight: vec![0; instances],
+            awake: vec![true; instances],
+            awake_count: instances,
+            heap: (0..instances).map(|i| Reverse((0, i))).collect(),
             rr_next: 0,
             wake_events: Vec::new(),
         }
     }
 
-    /// Route one request. `awake[i]` is instance `i`'s residency;
-    /// `affinity` is the instance already holding the request's prefix
-    /// GPU-resident (prefix-affinity routing), honored when awake.
-    /// If every instance is asleep the pick falls back to the placement
-    /// policy over all instances and `needs_wake` is true — the caller
-    /// starts a non-blocking wake and the request queues behind it.
-    /// Returns `(instance, needs_wake)`.
-    pub fn route(&mut self, affinity: Option<usize>, awake: &[bool]) -> (usize, bool) {
-        assert_eq!(awake.len(), self.inflight.len());
-        assert!(!awake.is_empty());
-        let chosen = match affinity.filter(|&a| awake[a]) {
+    /// Record instance `instance` going to sleep / waking up. Waking
+    /// refreshes its index entry; sleeping just strands stale entries for
+    /// the lazy pop. Idempotent.
+    pub fn set_awake(&mut self, instance: usize, awake: bool) {
+        if self.awake[instance] == awake {
+            return;
+        }
+        self.awake[instance] = awake;
+        if awake {
+            self.awake_count += 1;
+            self.heap.push(Reverse((self.inflight[instance], instance)));
+        } else {
+            self.awake_count -= 1;
+        }
+    }
+
+    /// Route one request using the router's own residency state (see
+    /// [`Router::set_awake`]). `affinity` is the instance already holding
+    /// the request's prefix GPU-resident (prefix-affinity routing),
+    /// honored when awake. If every instance is asleep the pick falls
+    /// back to the placement policy over all instances and `needs_wake`
+    /// is true — the caller starts a non-blocking wake and the request
+    /// queues behind it. Returns `(instance, needs_wake)`.
+    pub fn route_next(&mut self, affinity: Option<usize>) -> (usize, bool) {
+        assert!(!self.inflight.is_empty());
+        let chosen = match affinity.filter(|&a| self.awake[a]) {
             Some(a) => a,
-            None => {
-                let ready: Vec<usize> = (0..awake.len()).filter(|&i| awake[i]).collect();
-                let pool = if ready.is_empty() {
-                    (0..awake.len()).collect()
-                } else {
-                    ready
-                };
-                match self.policy {
-                    RoutePolicy::RoundRobin => {
-                        let i = pool[self.rr_next % pool.len()];
-                        self.rr_next += 1;
-                        i
-                    }
-                    RoutePolicy::LeastLoaded => *pool
-                        .iter()
-                        .min_by_key(|&&i| (self.inflight[i], i))
-                        .unwrap(),
-                }
-            }
+            None => match self.policy {
+                RoutePolicy::RoundRobin => self.pick_round_robin(),
+                RoutePolicy::LeastLoaded => self.pick_least_loaded(),
+            },
         };
-        let needs_wake = !awake[chosen];
+        let needs_wake = !self.awake[chosen];
         if needs_wake {
             self.wake_events.push(chosen);
         }
         self.inflight[chosen] += 1;
+        if self.awake[chosen] {
+            self.heap.push(Reverse((self.inflight[chosen], chosen)));
+        }
         (chosen, needs_wake)
+    }
+
+    /// Legacy arrival API: sync residency from `awake`, then route. Kept
+    /// for callers that track residency themselves; new code should use
+    /// [`Router::set_awake`] + [`Router::route_next`].
+    pub fn route(&mut self, affinity: Option<usize>, awake: &[bool]) -> (usize, bool) {
+        assert_eq!(awake.len(), self.inflight.len());
+        assert!(!awake.is_empty());
+        for (i, &a) in awake.iter().enumerate() {
+            self.set_awake(i, a);
+        }
+        self.route_next(affinity)
     }
 
     /// A request finished on `instance`.
     pub fn done(&mut self, instance: usize) {
         debug_assert!(self.inflight[instance] > 0);
         self.inflight[instance] -= 1;
+        if self.awake[instance] {
+            self.heap.push(Reverse((self.inflight[instance], instance)));
+        }
     }
 
     /// Current load of an instance.
     pub fn load(&self, instance: usize) -> u32 {
         self.inflight[instance]
+    }
+
+    /// Lowest `(load, index)` among awake instances via the lazy heap;
+    /// full scan over everyone only in the all-asleep fallback.
+    fn pick_least_loaded(&mut self) -> usize {
+        while let Some(&Reverse((load, i))) = self.heap.peek() {
+            if self.awake[i] && self.inflight[i] == load {
+                return i;
+            }
+            self.heap.pop();
+        }
+        debug_assert_eq!(self.awake_count, 0);
+        (0..self.inflight.len())
+            .min_by_key(|&i| (self.inflight[i], i))
+            .expect("router has instances")
+    }
+
+    /// The `rr_next`-th awake instance (all instances when none are
+    /// awake) — the same rotation the old materialized ready-list
+    /// produced, without building it.
+    fn pick_round_robin(&mut self) -> usize {
+        let n = self.inflight.len();
+        let pick = if self.awake_count == 0 {
+            self.rr_next % n
+        } else {
+            let mut k = self.rr_next % self.awake_count;
+            let mut found = 0;
+            for (i, &a) in self.awake.iter().enumerate() {
+                if a {
+                    if k == 0 {
+                        found = i;
+                        break;
+                    }
+                    k -= 1;
+                }
+            }
+            found
+        };
+        self.rr_next += 1;
+        pick
     }
 }
 
@@ -184,6 +267,22 @@ mod tests {
     }
 
     #[test]
+    fn set_awake_drives_routing_without_slices() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 3);
+        r.set_awake(0, false);
+        assert_eq!(r.route_next(None).0, 1);
+        r.set_awake(1, false);
+        r.set_awake(2, false);
+        // All asleep: fallback picks the global least-loaded and wakes it.
+        let (i, wake) = r.route_next(None);
+        assert_eq!(i, 0);
+        assert!(wake);
+        // Waking an instance puts it back in the index immediately.
+        r.set_awake(2, true);
+        assert_eq!(r.route_next(None), (2, false));
+    }
+
+    #[test]
     fn route_policy_parse_roundtrips() {
         for p in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
             assert_eq!(RoutePolicy::parse(p.name()), Some(p));
@@ -191,5 +290,83 @@ mod tests {
         assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
         assert_eq!(RoutePolicy::parse("ll"), Some(RoutePolicy::LeastLoaded));
         assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+
+    /// Full-scan reference: the exact pre-index algorithm (materialized
+    /// ready list, `min_by_key` / modular rotation over it).
+    fn oracle(
+        policy: RoutePolicy,
+        rr: &mut usize,
+        loads: &[u32],
+        awake: &[bool],
+        affinity: Option<usize>,
+    ) -> usize {
+        if let Some(a) = affinity.filter(|&a| awake[a]) {
+            return a;
+        }
+        let ready: Vec<usize> = (0..loads.len()).filter(|&i| awake[i]).collect();
+        let pool = if ready.is_empty() {
+            (0..loads.len()).collect()
+        } else {
+            ready
+        };
+        match policy {
+            RoutePolicy::RoundRobin => {
+                let i = pool[*rr % pool.len()];
+                *rr += 1;
+                i
+            }
+            RoutePolicy::LeastLoaded => {
+                *pool.iter().min_by_key(|&&i| (loads[i], i)).unwrap()
+            }
+        }
+    }
+
+    #[test]
+    fn property_incremental_index_matches_full_scan_under_churn() {
+        // Randomized route/done/sleep/wake churn: after every event the
+        // incremental index must agree with a fresh full scan (the oracle
+        // replays the old router algorithm exactly, including rotation
+        // state and all-asleep fallback).
+        crate::testkit::check("router_index_oracle", |rng| {
+            let n = rng.range_usize(1, 9);
+            let policy = if rng.bool(0.5) {
+                RoutePolicy::LeastLoaded
+            } else {
+                RoutePolicy::RoundRobin
+            };
+            let mut r = Router::new(policy, n);
+            let mut awake = vec![true; n];
+            let mut loads = vec![0u32; n];
+            let mut rr = 0usize;
+            for _ in 0..rng.range_usize(10, 200) {
+                match rng.range_u64(0, 4) {
+                    0 => {
+                        let i = rng.range_usize(0, n);
+                        let a = rng.bool(0.5);
+                        awake[i] = a;
+                        r.set_awake(i, a);
+                    }
+                    1 => {
+                        let loaded: Vec<usize> = (0..n).filter(|&i| loads[i] > 0).collect();
+                        if let Some(&i) = (!loaded.is_empty()).then(|| rng.choose(&loaded)) {
+                            loads[i] -= 1;
+                            r.done(i);
+                        }
+                    }
+                    _ => {
+                        let affinity = rng.bool(0.3).then(|| rng.range_usize(0, n));
+                        let expect = oracle(policy, &mut rr, &loads, &awake, affinity);
+                        let (got, needs_wake) = r.route_next(affinity);
+                        assert_eq!(got, expect, "index diverged from full scan");
+                        assert_eq!(needs_wake, !awake[got]);
+                        loads[got] += 1;
+                    }
+                }
+                for i in 0..n {
+                    assert_eq!(r.load(i), loads[i]);
+                }
+            }
+        });
     }
 }

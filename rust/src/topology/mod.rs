@@ -16,6 +16,7 @@ mod presets;
 
 pub use presets::{a100x8, h20x8, single_numa_4gpu, Preset};
 
+use crate::util::SmallPath;
 use std::collections::HashMap;
 use std::fmt;
 
@@ -231,7 +232,7 @@ impl Topology {
         self.capacity(self.link(kind))
     }
 
-    fn xgmi_hop(&self, from: NumaId, to: NumaId, gpu: GpuId, path: &mut Vec<LinkId>) {
+    fn xgmi_hop(&self, from: NumaId, to: NumaId, gpu: GpuId, path: &mut SmallPath) {
         if from != to {
             path.push(self.link(LinkKind::Xgmi(from, to)));
             path.push(self.link(LinkKind::XgmiLane(gpu)));
@@ -242,9 +243,14 @@ impl Topology {
     ///
     /// DRAM read → (xGMI if crossing sockets) → PCIe switch uplink →
     /// GPU PCIe lane → HBM ingest.
-    pub fn h2d_direct(&self, buf_numa: NumaId, dst: GpuId) -> Vec<LinkId> {
+    ///
+    /// All path constructors return a [`SmallPath`]: the longest preset
+    /// path is 7 links, which fits the inline capacity, so building a
+    /// path never touches the heap.
+    pub fn h2d_direct(&self, buf_numa: NumaId, dst: GpuId) -> SmallPath {
         let spec = self.gpus[dst.0 as usize];
-        let mut p = vec![self.link(LinkKind::DramRd(buf_numa))];
+        let mut p = SmallPath::new();
+        p.push(self.link(LinkKind::DramRd(buf_numa)));
         self.xgmi_hop(buf_numa, spec.numa, dst, &mut p);
         p.push(self.link(LinkKind::SwitchH2D(spec.pcie_switch)));
         p.push(self.link(LinkKind::PcieH2D(dst)));
@@ -253,54 +259,54 @@ impl Topology {
     }
 
     /// H2D relay stage 1: host buffer → relay GPU's HBM (its own PCIe lane).
-    pub fn h2d_relay_stage1(&self, buf_numa: NumaId, relay: GpuId) -> Vec<LinkId> {
+    pub fn h2d_relay_stage1(&self, buf_numa: NumaId, relay: GpuId) -> SmallPath {
         self.h2d_direct(buf_numa, relay)
     }
 
     /// H2D relay stage 2: relay GPU → target GPU over NVLink.
-    pub fn h2d_relay_stage2(&self, relay: GpuId, dst: GpuId) -> Vec<LinkId> {
-        vec![
+    pub fn h2d_relay_stage2(&self, relay: GpuId, dst: GpuId) -> SmallPath {
+        SmallPath::from_slice(&[
             self.link(LinkKind::HbmOut(relay)),
             self.link(LinkKind::NvOut(relay)),
             self.link(LinkKind::NvIn(dst)),
             self.link(LinkKind::HbmIn(dst)),
-        ]
+        ])
     }
 
     /// Direct D2H path: GPU `src` → host buffer on `buf_numa`.
-    pub fn d2h_direct(&self, src: GpuId, buf_numa: NumaId) -> Vec<LinkId> {
+    pub fn d2h_direct(&self, src: GpuId, buf_numa: NumaId) -> SmallPath {
         let spec = self.gpus[src.0 as usize];
-        let mut p = vec![
+        let mut p = SmallPath::from_slice(&[
             self.link(LinkKind::HbmOut(src)),
             self.link(LinkKind::PcieD2H(src)),
             self.link(LinkKind::SwitchD2H(spec.pcie_switch)),
-        ];
+        ]);
         self.xgmi_hop(spec.numa, buf_numa, src, &mut p);
         p.push(self.link(LinkKind::DramWr(buf_numa)));
         p
     }
 
     /// D2H relay stage 1: target GPU → relay GPU over NVLink.
-    pub fn d2h_relay_stage1(&self, src: GpuId, relay: GpuId) -> Vec<LinkId> {
-        vec![
+    pub fn d2h_relay_stage1(&self, src: GpuId, relay: GpuId) -> SmallPath {
+        SmallPath::from_slice(&[
             self.link(LinkKind::HbmOut(src)),
             self.link(LinkKind::NvOut(src)),
             self.link(LinkKind::NvIn(relay)),
             self.link(LinkKind::HbmIn(relay)),
-        ]
+        ])
     }
 
     /// D2H relay stage 2: relay GPU → host buffer over its own PCIe lane.
     /// Includes the relay-serialization cap (§5.1.1: the relay must
     /// interleave NVLink ingress and PCIe egress on its copy engine).
-    pub fn d2h_relay_stage2(&self, relay: GpuId, buf_numa: NumaId) -> Vec<LinkId> {
+    pub fn d2h_relay_stage2(&self, relay: GpuId, buf_numa: NumaId) -> SmallPath {
         let spec = self.gpus[relay.0 as usize];
-        let mut p = vec![
+        let mut p = SmallPath::from_slice(&[
             self.link(LinkKind::HbmOut(relay)),
             self.link(LinkKind::RelayD2HCap(relay)),
             self.link(LinkKind::PcieD2H(relay)),
             self.link(LinkKind::SwitchD2H(spec.pcie_switch)),
-        ];
+        ]);
         self.xgmi_hop(spec.numa, buf_numa, relay, &mut p);
         p.push(self.link(LinkKind::DramWr(buf_numa)));
         p
@@ -308,13 +314,13 @@ impl Topology {
 
     /// GPU↔GPU P2P path over the NVSwitch fabric (used by the Table 2
     /// probe and by NCCL-style background traffic).
-    pub fn p2p(&self, src: GpuId, dst: GpuId) -> Vec<LinkId> {
-        vec![
+    pub fn p2p(&self, src: GpuId, dst: GpuId) -> SmallPath {
+        SmallPath::from_slice(&[
             self.link(LinkKind::HbmOut(src)),
             self.link(LinkKind::NvOut(src)),
             self.link(LinkKind::NvIn(dst)),
             self.link(LinkKind::HbmIn(dst)),
-        ]
+        ])
     }
 
     /// Relay candidates for a target GPU, NUMA-local peers first (the

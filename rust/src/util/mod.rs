@@ -6,5 +6,10 @@ pub mod bench;
 pub mod cli;
 pub mod fmt;
 pub mod fxmap;
+pub mod par;
 pub mod rng;
+pub mod slab;
+pub mod small;
 pub mod table;
+
+pub use small::SmallPath;

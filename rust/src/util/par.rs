@@ -1,0 +1,85 @@
+//! Scoped-thread parallel map for independent sweep cells.
+//!
+//! Figure sweeps evaluate a grid of cells where each cell builds its own
+//! `SimWorld` and shares nothing with its neighbours — embarrassingly
+//! parallel work that previously ran sequentially. [`par_map`] fans the
+//! cells out over `std::thread::scope` workers (zero dependencies, no
+//! thread pool to manage) and writes every result into its input slot,
+//! so the merged output is in canonical input order and **byte-identical
+//! for any job count** — the determinism contract `--jobs` must keep.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` using up to `jobs` worker threads, preserving
+/// input order in the result. `jobs <= 1` (or a single item) runs
+/// sequentially on the caller's thread with no synchronization.
+///
+/// `f` receives `(index, item)` so cells can derive per-cell seeds from
+/// their canonical position rather than from scheduling order. A panic
+/// in any worker propagates to the caller once all workers have joined.
+pub fn par_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if jobs <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("cell claimed twice");
+                let r = f(i, item);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell not computed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order_for_any_job_count() {
+        let items: Vec<u64> = (0..37).collect();
+        let seq = par_map(1, items.clone(), |i, x| x * 100 + i as u64);
+        for jobs in [2, 4, 16] {
+            let par = par_map(jobs, items.clone(), |i, x| x * 100 + i as u64);
+            assert_eq!(par, seq, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn more_jobs_than_items_is_fine() {
+        let out = par_map(8, vec![1u32, 2], |_, x| x + 1);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(4, empty, |_, x: u32| x).is_empty());
+        assert_eq!(par_map(4, vec![9u32], |i, x| x + i as u32), vec![9]);
+    }
+
+    #[test]
+    fn index_matches_canonical_position() {
+        let items: Vec<&str> = vec!["a", "b", "c", "d", "e"];
+        let out = par_map(3, items, |i, s| format!("{i}:{s}"));
+        assert_eq!(out, vec!["0:a", "1:b", "2:c", "3:d", "4:e"]);
+    }
+}

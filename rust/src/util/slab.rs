@@ -1,0 +1,178 @@
+//! Generational slab: dense storage with stable, compact `u32` keys.
+//!
+//! The MMA engine tracks every in-flight chunk and active transfer by a
+//! key that also rides inside the 24-bit `b` field of a fabric flow tag
+//! (`mma` driver tag packing). A hash map works but costs a hash + probe
+//! per event and re-allocates as it grows; a generational slab gives
+//! O(1) array indexing, reuses slots without reallocating at steady
+//! state, and detects stale keys.
+//!
+//! A key packs a slot index in its low 16 bits and a generation counter
+//! in the next 8 bits, so every key fits in 24 bits. Removing an entry
+//! bumps the slot's generation; a stale key held by an outside observer
+//! (e.g. a completion notice for an already-retired chunk) then misses
+//! instead of aliasing the slot's new occupant.
+
+/// Maximum live entries (slot index is 16 bits).
+pub const MAX_SLOTS: usize = 1 << 16;
+
+struct Entry<T> {
+    gen: u8,
+    val: Option<T>,
+}
+
+/// A generational slab. Keys are handed out by [`Slab::insert`] and stay
+/// valid until [`Slab::remove`] retires them.
+pub struct Slab<T> {
+    entries: Vec<Entry<T>>,
+    free: Vec<u16>,
+    len: usize,
+}
+
+impl<T> Slab<T> {
+    /// Empty slab.
+    pub fn new() -> Slab<T> {
+        Slab {
+            entries: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    fn split(key: u32) -> (usize, u8) {
+        ((key & 0xFFFF) as usize, ((key >> 16) & 0xFF) as u8)
+    }
+
+    /// Insert a value, returning its key (always < 2^24).
+    ///
+    /// Panics if the slab already holds [`MAX_SLOTS`] live entries.
+    pub fn insert(&mut self, val: T) -> u32 {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let e = &mut self.entries[s as usize];
+                debug_assert!(e.val.is_none());
+                e.val = Some(val);
+                s
+            }
+            None => {
+                assert!(self.entries.len() < MAX_SLOTS, "slab full");
+                self.entries.push(Entry { gen: 0, val: Some(val) });
+                (self.entries.len() - 1) as u16
+            }
+        };
+        self.len += 1;
+        ((self.entries[slot as usize].gen as u32) << 16) | slot as u32
+    }
+
+    /// Look up a live entry; `None` for stale or never-issued keys.
+    pub fn get(&self, key: u32) -> Option<&T> {
+        let (slot, gen) = Self::split(key);
+        match self.entries.get(slot) {
+            Some(e) if e.gen == gen => e.val.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Mutable lookup; `None` for stale or never-issued keys.
+    pub fn get_mut(&mut self, key: u32) -> Option<&mut T> {
+        let (slot, gen) = Self::split(key);
+        match self.entries.get_mut(slot) {
+            Some(e) if e.gen == gen => e.val.as_mut(),
+            _ => None,
+        }
+    }
+
+    /// Remove and return a live entry, bumping the slot's generation so
+    /// the key (and any copies of it) go stale. `None` if the key is
+    /// already stale.
+    pub fn remove(&mut self, key: u32) -> Option<T> {
+        let (slot, gen) = Self::split(key);
+        let e = self.entries.get_mut(slot)?;
+        if e.gen != gen || e.val.is_none() {
+            return None;
+        }
+        let val = e.val.take();
+        e.gen = e.gen.wrapping_add(1);
+        self.free.push(slot as u16);
+        self.len -= 1;
+        val
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no entries are live.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<&str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        *s.get_mut(a).unwrap() = "a2";
+        assert_eq!(s.remove(a), Some("a2"));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(a), None);
+    }
+
+    #[test]
+    fn stale_key_misses_after_slot_reuse() {
+        let mut s: Slab<u32> = Slab::new();
+        let k1 = s.insert(1);
+        assert_eq!(s.remove(k1), Some(1));
+        let k2 = s.insert(2);
+        // Same slot, new generation: distinct key, stale one misses.
+        assert_eq!(k1 & 0xFFFF, k2 & 0xFFFF);
+        assert_ne!(k1, k2);
+        assert_eq!(s.get(k1), None);
+        assert_eq!(s.remove(k1), None);
+        assert_eq!(s.get(k2), Some(&2));
+    }
+
+    #[test]
+    fn keys_fit_in_24_bits_and_slots_are_reused() {
+        let mut s: Slab<usize> = Slab::new();
+        let keys: Vec<u32> = (0..32).map(|i| s.insert(i)).collect();
+        for (i, k) in keys.iter().enumerate() {
+            assert!(*k < (1 << 24));
+            assert_eq!(s.get(*k), Some(&i));
+        }
+        for k in &keys {
+            s.remove(*k).unwrap();
+        }
+        assert!(s.is_empty());
+        // Re-inserting reuses retired slots instead of growing.
+        let before = s.entries.len();
+        for i in 0..32 {
+            s.insert(i);
+        }
+        assert_eq!(s.entries.len(), before);
+    }
+
+    #[test]
+    fn double_remove_is_safe() {
+        let mut s: Slab<u8> = Slab::new();
+        let k = s.insert(7);
+        assert_eq!(s.remove(k), Some(7));
+        assert_eq!(s.remove(k), None);
+        assert!(s.is_empty());
+    }
+}

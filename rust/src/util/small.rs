@@ -1,0 +1,214 @@
+//! [`SmallPath`]: an inline small-vector for fabric link paths.
+//!
+//! Every chunk the MMA engine dispatches carries the `LinkId` path it
+//! crosses. Real paths are short — the longest preset path (cross-socket
+//! relay D2H) is 7 links — so storing them in a `Vec` costs one heap
+//! allocation per dispatched chunk for data that fits in two machine
+//! words. `SmallPath` keeps up to [`INLINE_LINKS`] links inline and only
+//! spills to a heap `Vec` beyond that, making path construction
+//! allocation-free on the engine's steady-state path.
+
+use crate::topology::LinkId;
+use std::fmt;
+use std::ops::Deref;
+
+/// Links stored inline before spilling to the heap.
+pub const INLINE_LINKS: usize = 8;
+
+#[derive(Clone)]
+enum Repr {
+    Inline { len: u8, buf: [LinkId; INLINE_LINKS] },
+    Heap(Vec<LinkId>),
+}
+
+/// A path of fabric links with inline storage for up to
+/// [`INLINE_LINKS`] entries. Dereferences to `&[LinkId]`, so it drops
+/// into any API that takes a link slice.
+#[derive(Clone)]
+pub struct SmallPath(Repr);
+
+impl SmallPath {
+    /// Empty path (inline representation).
+    pub fn new() -> SmallPath {
+        SmallPath(Repr::Inline {
+            len: 0,
+            buf: [LinkId(0); INLINE_LINKS],
+        })
+    }
+
+    /// Copy a slice into a path, spilling only if it exceeds the inline
+    /// capacity.
+    pub fn from_slice(links: &[LinkId]) -> SmallPath {
+        let mut p = SmallPath::new();
+        for &l in links {
+            p.push(l);
+        }
+        p
+    }
+
+    /// Append a link, spilling to the heap past the inline capacity.
+    pub fn push(&mut self, l: LinkId) {
+        match &mut self.0 {
+            Repr::Inline { len, buf } => {
+                let n = *len as usize;
+                if n < INLINE_LINKS {
+                    buf[n] = l;
+                    *len += 1;
+                } else {
+                    let mut v = Vec::with_capacity(INLINE_LINKS * 2);
+                    v.extend_from_slice(&buf[..]);
+                    v.push(l);
+                    self.0 = Repr::Heap(v);
+                }
+            }
+            Repr::Heap(v) => v.push(l),
+        }
+    }
+
+    /// The links as a slice.
+    pub fn as_slice(&self) -> &[LinkId] {
+        match &self.0 {
+            Repr::Inline { len, buf } => &buf[..*len as usize],
+            Repr::Heap(v) => v,
+        }
+    }
+
+    /// Number of links.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// True when the path has no links.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the path has spilled to heap storage (diagnostics/tests).
+    pub fn spilled(&self) -> bool {
+        matches!(self.0, Repr::Heap(_))
+    }
+}
+
+impl Default for SmallPath {
+    fn default() -> Self {
+        SmallPath::new()
+    }
+}
+
+impl Deref for SmallPath {
+    type Target = [LinkId];
+    fn deref(&self) -> &[LinkId] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<LinkId>> for SmallPath {
+    fn from(v: Vec<LinkId>) -> SmallPath {
+        if v.len() <= INLINE_LINKS {
+            SmallPath::from_slice(&v)
+        } else {
+            SmallPath(Repr::Heap(v))
+        }
+    }
+}
+
+impl FromIterator<LinkId> for SmallPath {
+    fn from_iter<I: IntoIterator<Item = LinkId>>(iter: I) -> SmallPath {
+        let mut p = SmallPath::new();
+        for l in iter {
+            p.push(l);
+        }
+        p
+    }
+}
+
+impl<'a> IntoIterator for &'a SmallPath {
+    type Item = &'a LinkId;
+    type IntoIter = std::slice::Iter<'a, LinkId>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl PartialEq for SmallPath {
+    fn eq(&self, other: &SmallPath) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl Eq for SmallPath {}
+
+impl fmt::Debug for SmallPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(ns: &[u16]) -> Vec<LinkId> {
+        ns.iter().map(|&n| LinkId(n)).collect()
+    }
+
+    #[test]
+    fn inline_push_preserves_order_without_spilling() {
+        let mut p = SmallPath::new();
+        assert!(p.is_empty());
+        for n in 0..INLINE_LINKS as u16 {
+            p.push(LinkId(n));
+        }
+        assert_eq!(p.len(), INLINE_LINKS);
+        assert!(!p.spilled());
+        assert_eq!(p.as_slice(), &ids(&[0, 1, 2, 3, 4, 5, 6, 7])[..]);
+    }
+
+    #[test]
+    fn push_past_inline_capacity_spills_and_keeps_contents() {
+        let mut p = SmallPath::new();
+        for n in 0..12u16 {
+            p.push(LinkId(n));
+        }
+        assert!(p.spilled());
+        assert_eq!(p.len(), 12);
+        let want: Vec<LinkId> = (0..12u16).map(LinkId).collect();
+        assert_eq!(p.as_slice(), &want[..]);
+    }
+
+    #[test]
+    fn from_vec_stays_inline_when_short() {
+        let short = SmallPath::from(ids(&[3, 1, 4]));
+        assert!(!short.spilled());
+        assert_eq!(short.as_slice(), &ids(&[3, 1, 4])[..]);
+        let long = SmallPath::from(ids(&[0, 1, 2, 3, 4, 5, 6, 7, 8]));
+        assert!(long.spilled());
+        assert_eq!(long.len(), 9);
+    }
+
+    #[test]
+    fn eq_compares_contents_across_representations() {
+        let inline = SmallPath::from_slice(&ids(&[1, 2, 3]));
+        let mut heap = SmallPath::from(ids(&[0, 1, 2, 3, 4, 5, 6, 7, 9]));
+        assert_ne!(inline, heap);
+        heap = SmallPath(Repr::Heap(ids(&[1, 2, 3])));
+        assert_eq!(inline, heap);
+    }
+
+    #[test]
+    fn deref_gives_slice_methods() {
+        let p: SmallPath = ids(&[5, 6]).into();
+        assert_eq!(p.iter().map(|l| l.0).sum::<u16>(), 11);
+        assert_eq!(p[1], LinkId(6));
+        let collected: SmallPath = p.iter().copied().collect();
+        assert_eq!(collected, p);
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let mut a = SmallPath::from_slice(&ids(&[1]));
+        let b = a.clone();
+        a.push(LinkId(2));
+        assert_eq!(b.len(), 1);
+        assert_eq!(a.len(), 2);
+    }
+}

@@ -1,20 +1,28 @@
 #!/usr/bin/env python3
-"""Validate a `mma bench hotpath --json` report against the committed
-baseline (`BENCH_0006_hotpath.json`).
+"""Validate a bench JSON report against its committed baseline.
 
-Two duties, split by baseline provenance (see docs/PERF.md):
+Handles both bench documents the `mma bench hotpath` invocation emits
+(dispatch is on the report's `schema` key; see docs/PERF.md):
 
-1. Schema validation — always. The fresh report must be the
-   `mma-bench-hotpath/1` document shape, its replay must be flagged
-   deterministic, and the incremental allocator must have done zero full
-   re-solves while the reference did at least one.
+* `mma-bench-hotpath/1` — the BENCH_0006 hotpath harness
+  (baseline `BENCH_0006_hotpath.json`)
+* `mma-bench-engine/1` — the BENCH_0007 allocation-free engine leg
+  (baseline `BENCH_0007_engine.json`, written via `--out-engine`)
+
+Two duties, split by baseline provenance:
+
+1. Schema validation — always. The fresh report must match its schema's
+   document shape, its replay must be flagged deterministic, the
+   incremental allocator must have done zero full re-solves while the
+   reference did at least one, and (engine schema) the engine's steady
+   state must have allocated nothing.
 2. Regression gate — only when the baseline's `provenance` is
    `"measured"`. CI machines are noisy, so the gate is deliberately
-   loose: fail only if any events/sec figure fell below HALF the
-   baseline (a >2x regression). A `"desk-estimated"` baseline skips the
-   gate entirely (the numbers were never measured on comparable
-   hardware). Set MMA_BENCH_SKIP_REGRESSION=1 to skip the gate on a
-   machine known to be slow.
+   loose: fail only if a throughput figure fell below HALF the baseline
+   (a >2x regression). A `"desk-estimated"` baseline skips the gate
+   entirely (the numbers were never measured on comparable hardware).
+   Set MMA_BENCH_SKIP_REGRESSION=1 to skip the gate on a machine known
+   to be slow.
 
 Usage: check_bench.py <fresh-report.json> [baseline.json]
 """
@@ -23,9 +31,13 @@ import json
 import os
 import sys
 
-BASELINE = "BENCH_0006_hotpath.json"
-SCHEMA = "mma-bench-hotpath/1"
-# Events/sec may drop to 1/REGRESSION_FACTOR of baseline before failing.
+SCHEMA_HOTPATH = "mma-bench-hotpath/1"
+SCHEMA_ENGINE = "mma-bench-engine/1"
+DEFAULT_BASELINES = {
+    SCHEMA_HOTPATH: "BENCH_0006_hotpath.json",
+    SCHEMA_ENGINE: "BENCH_0007_engine.json",
+}
+# Throughput may drop to 1/REGRESSION_FACTOR of baseline before failing.
 REGRESSION_FACTOR = 2.0
 
 EVENTS_KEYS = ("timer_wheel", "binary_heap", "fabric_flow_cycle")
@@ -46,18 +58,7 @@ def load(path: str) -> dict:
         raise  # unreachable
 
 
-def check_schema(doc: dict, path: str) -> None:
-    if doc.get("schema") != SCHEMA:
-        fail(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
-    if doc.get("provenance") not in ("measured", "desk-estimated"):
-        fail(f"{path}: bad provenance {doc.get('provenance')!r}")
-    eps = doc.get("events_per_sec")
-    if not isinstance(eps, dict):
-        fail(f"{path}: missing events_per_sec object")
-    for k in EVENTS_KEYS:
-        v = eps.get(k)
-        if not isinstance(v, (int, float)) or v <= 0:
-            fail(f"{path}: events_per_sec.{k} = {v!r} (want a positive number)")
+def check_replay(doc: dict, path: str) -> None:
     replay = doc.get("replay")
     if not isinstance(replay, dict):
         fail(f"{path}: missing replay object")
@@ -76,7 +77,7 @@ def check_schema(doc: dict, path: str) -> None:
             v = obj.get(k)
             if not isinstance(v, (int, float)) or v < 0:
                 fail(f"{path}: replay.{leg}.{k} = {v!r}")
-    # The tentpole's acceptance criterion, checked on every fresh report:
+    # The BENCH_0006 acceptance criterion, checked on every fresh report:
     # incremental does strictly fewer full re-solves than the reference.
     inc, full = replay["incremental"], replay["full"]
     if inc["full_solves"] >= full["full_solves"] or full["full_solves"] == 0:
@@ -86,16 +87,67 @@ def check_schema(doc: dict, path: str) -> None:
         )
 
 
+def check_hotpath_schema(doc: dict, path: str) -> None:
+    eps = doc.get("events_per_sec")
+    if not isinstance(eps, dict):
+        fail(f"{path}: missing events_per_sec object")
+    for k in EVENTS_KEYS:
+        v = eps.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            fail(f"{path}: events_per_sec.{k} = {v!r} (want a positive number)")
+    check_replay(doc, path)
+
+
+def check_engine_schema(doc: dict, path: str) -> None:
+    eng = doc.get("engine")
+    if not isinstance(eng, dict):
+        fail(f"{path}: missing engine object")
+    for k in ("chunks_per_sec", "actions_per_alloc"):
+        v = eng.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            fail(f"{path}: engine.{k} = {v!r} (want a positive number)")
+    if not isinstance(eng.get("actions_total"), int) or eng["actions_total"] <= 0:
+        fail(f"{path}: engine.actions_total = {eng.get('actions_total')!r}")
+    # The BENCH_0007 acceptance criterion, on every report regardless of
+    # provenance: the engine's steady state must never allocate.
+    if eng.get("steady_state_allocs") != 0:
+        fail(
+            f"{path}: engine.steady_state_allocs = "
+            f"{eng.get('steady_state_allocs')!r} (the zero-alloc bar is 0)"
+        )
+    check_replay(doc, path)
+
+
+def check_schema(doc: dict, path: str, schema: str) -> None:
+    if doc.get("schema") != schema:
+        fail(f"{path}: schema {doc.get('schema')!r} != {schema!r}")
+    if doc.get("provenance") not in ("measured", "desk-estimated"):
+        fail(f"{path}: bad provenance {doc.get('provenance')!r}")
+    if schema == SCHEMA_HOTPATH:
+        check_hotpath_schema(doc, path)
+    else:
+        check_engine_schema(doc, path)
+
+
+def throughput_figures(doc: dict, schema: str) -> dict:
+    if schema == SCHEMA_HOTPATH:
+        return {f"events_per_sec.{k}": doc["events_per_sec"][k] for k in EVENTS_KEYS}
+    return {"engine.chunks_per_sec": doc["engine"]["chunks_per_sec"]}
+
+
 def main() -> None:
     if len(sys.argv) < 2:
         fail("usage: check_bench.py <fresh-report.json> [baseline.json]")
     fresh_path = sys.argv[1]
-    base_path = sys.argv[2] if len(sys.argv) > 2 else BASELINE
-
     fresh = load(fresh_path)
-    check_schema(fresh, fresh_path)
+    schema = fresh.get("schema")
+    if schema not in DEFAULT_BASELINES:
+        fail(f"{fresh_path}: unknown schema {schema!r}")
+    base_path = sys.argv[2] if len(sys.argv) > 2 else DEFAULT_BASELINES[schema]
+
+    check_schema(fresh, fresh_path, schema)
     base = load(base_path)
-    check_schema(base, base_path)
+    check_schema(base, base_path, schema)
     print(f"check_bench: schema ok ({fresh_path}, baseline {base_path})")
 
     if base.get("provenance") != "measured":
@@ -108,18 +160,19 @@ def main() -> None:
         print("check_bench: MMA_BENCH_SKIP_REGRESSION set; regression gate skipped")
         return
 
+    fresh_figs = throughput_figures(fresh, schema)
+    base_figs = throughput_figures(base, schema)
     worst = []
-    for k in EVENTS_KEYS:
-        got = fresh["events_per_sec"][k]
-        want = base["events_per_sec"][k]
+    for k, got in fresh_figs.items():
+        want = base_figs[k]
         ratio = got / want
-        print(f"check_bench: events_per_sec.{k}: {got:.0f} vs baseline {want:.0f} ({ratio:.2f}x)")
+        print(f"check_bench: {k}: {got:.0f} vs baseline {want:.0f} ({ratio:.2f}x)")
         if ratio < 1.0 / REGRESSION_FACTOR:
             worst.append((k, ratio))
     if worst:
         detail = ", ".join(f"{k} at {r:.2f}x" for k, r in worst)
         fail(
-            f"events/sec regression beyond {REGRESSION_FACTOR}x tolerance: {detail} "
+            f"throughput regression beyond {REGRESSION_FACTOR}x tolerance: {detail} "
             f"(set MMA_BENCH_SKIP_REGRESSION=1 to skip on known-slow machines)"
         )
     print("check_bench: regression gate ok")
