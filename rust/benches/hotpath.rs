@@ -79,4 +79,9 @@ fn main() {
     // isolation (chunks/s, sink growth policing; docs/PERF.md).
     println!("\n== mma::perf::run_engine_bench ==");
     print!("{}", mma::perf::run_engine_bench(false).render());
+
+    // The BENCH_0008 serving leg: LRU prefix-tier churn, the streaming
+    // histogram, and the bounded-window streamed replay vs its oracle.
+    println!("\n== mma::perf::run_serving_bench ==");
+    print!("{}", mma::perf::run_serving_bench(false).render());
 }

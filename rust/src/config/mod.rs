@@ -127,6 +127,12 @@ pub struct WorkloadConfig {
     /// first touch claims its context as cached prefix, and replay
     /// pre-seeds the host tier (the §5.2.1 warm-tier setup).
     pub warm_start: bool,
+    /// Reorder window for streaming replay ingestion: `mma replay` holds
+    /// at most this many trace records in memory while merging arrivals
+    /// into time order (`--window` overrides). A trace more disordered
+    /// than the window spills to the materialized path — same output,
+    /// whole-trace memory.
+    pub reorder_window: u32,
 }
 
 impl Default for WorkloadConfig {
@@ -146,6 +152,7 @@ impl Default for WorkloadConfig {
             suffix_tokens: 64,
             output_tokens: 16,
             warm_start: false,
+            reorder_window: 1024,
         }
     }
 }
@@ -178,7 +185,30 @@ impl WorkloadConfig {
         if self.context_tokens == 0 || self.output_tokens == 0 {
             return Err("context_tokens and output_tokens must be >= 1".to_string());
         }
+        if self.reorder_window == 0 {
+            return Err("reorder_window must be >= 1".to_string());
+        }
         Ok(())
+    }
+}
+
+/// Metrics-layer knobs: the bounded-memory streaming histogram the perf
+/// harness records latencies into (`docs/PERF.md`, BENCH_0008).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsConfig {
+    /// Log-spaced bins in the streaming latency histogram. More bins
+    /// tighten the percentile relative-error bound (see
+    /// [`crate::metrics::LogHistogram::rel_error_bound`]); the default
+    /// 1024 keeps it under 1.4% across the [1 ns, 1000 s) span while the
+    /// whole histogram stays in a few KiB.
+    pub histogram_bins: u32,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> Self {
+        MetricsConfig {
+            histogram_bins: 1024,
+        }
     }
 }
 
@@ -199,6 +229,8 @@ pub struct RunConfig {
     pub fleet: FleetConfig,
     /// Workload knobs.
     pub workload: WorkloadConfig,
+    /// Metrics knobs.
+    pub metrics: MetricsConfig,
 }
 
 impl Default for RunConfig {
@@ -210,6 +242,7 @@ impl Default for RunConfig {
             serving: ServingConfig::default(),
             fleet: FleetConfig::default(),
             workload: WorkloadConfig::default(),
+            metrics: MetricsConfig::default(),
         }
     }
 }
@@ -233,6 +266,7 @@ impl RunConfig {
                 "serving" => apply_serving(&mut cfg.serving, table)?,
                 "fleet" => apply_fleet(&mut cfg.fleet, table)?,
                 "workload" => apply_workload(&mut cfg.workload, table)?,
+                "metrics" => apply_metrics(&mut cfg.metrics, table)?,
                 other => return Err(format!("unknown section [{other}]")),
             }
         }
@@ -248,6 +282,9 @@ impl RunConfig {
         cfg.workload
             .validate()
             .map_err(|e| format!("[workload] {e}"))?;
+        if cfg.metrics.histogram_bins == 0 {
+            return Err("[metrics] histogram_bins must be >= 1".to_string());
+        }
         if cfg.fleet.gpus as usize > gpu_count {
             return Err(format!(
                 "[fleet] gpus = {} exceeds the preset's {gpu_count} GPUs",
@@ -612,6 +649,7 @@ fn apply_fleet(f: &mut FleetConfig, table: &BTreeMap<String, TomlValue>) -> Resu
 /// suffix_tokens = 64
 /// output_tokens = 16
 /// warm_start = false        # first doc touches claim a warm host tier
+/// reorder_window = 1024     # streaming-replay arrival-merge lookahead
 /// ```
 fn apply_workload(
     w: &mut WorkloadConfig,
@@ -646,7 +684,27 @@ fn apply_workload(
             ("output_tokens", TomlValue::Int(i)) => w.output_tokens = u32v(k, *i)?,
             ("warm_start", TomlValue::Bool(b)) => w.warm_start = *b,
             ("warm_start", _) => return bad(k, "bool"),
+            ("reorder_window", TomlValue::Int(i)) => w.reorder_window = u32v(k, *i)?,
             _ => return Err(format!("unknown or mistyped key {k:?} in [workload]")),
+        }
+    }
+    Ok(())
+}
+
+/// `[metrics]` section: bounded-memory metrics knobs.
+///
+/// ```text
+/// [metrics]
+/// histogram_bins = 1024     # log-spaced streaming-histogram bins
+/// ```
+fn apply_metrics(m: &mut MetricsConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("histogram_bins", TomlValue::Int(i)) => {
+                m.histogram_bins = u32::try_from(*i)
+                    .map_err(|_| format!("key {k:?}: {i} out of range (0..=4294967295)"))?;
+            }
+            _ => return Err(format!("unknown or mistyped key {k:?} in [metrics]")),
         }
     }
     Ok(())
@@ -970,6 +1028,26 @@ mod tests {
         // Negative / oversized integers error instead of wrapping.
         assert!(RunConfig::from_toml("[workload]\nrequests = -1").is_err());
         assert!(RunConfig::from_toml("[workload]\ntenants = 5000000000").is_err());
+    }
+
+    #[test]
+    fn reorder_window_and_metrics_sections_parse() {
+        let cfg = RunConfig::from_toml(
+            "[workload]\nreorder_window = 64\n\n[metrics]\nhistogram_bins = 256",
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.reorder_window, 64);
+        assert_eq!(cfg.metrics.histogram_bins, 256);
+        // Defaults match the documented values.
+        let d = RunConfig::default();
+        assert_eq!(d.workload.reorder_window, 1024);
+        assert_eq!(d.metrics.histogram_bins, 1024);
+        // Rejections: zero window/bins, wrapping integers, unknown keys.
+        assert!(RunConfig::from_toml("[workload]\nreorder_window = 0").is_err());
+        assert!(RunConfig::from_toml("[workload]\nreorder_window = -1").is_err());
+        assert!(RunConfig::from_toml("[metrics]\nhistogram_bins = 0").is_err());
+        assert!(RunConfig::from_toml("[metrics]\nhistogram_bins = -1").is_err());
+        assert!(RunConfig::from_toml("[metrics]\nnope = 1").is_err());
     }
 
     #[test]

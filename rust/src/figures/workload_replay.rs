@@ -16,16 +16,23 @@
 //! with live serving fetches on the shared fabric (the paper's sleep-mode
 //! switching scenario under realistic load).
 
+use std::io::BufRead;
+
 use crate::config::{FleetConfig, ServingConfig};
 use crate::metrics::Summary;
 use crate::mma::{MmaConfig, SimWorld};
 use crate::models::{self, qwen_7b_chat, ModelSpec};
 use crate::roofline::h20;
-use crate::serving::{Compute, ModelRegistry, ModelState, RoutePolicy, ServingFleet};
+use crate::serving::{
+    Compute, ModelRegistry, ModelState, RequestOutcome, RoutePolicy, ServingFleet,
+};
+use crate::sim::Time;
 use crate::topology::{h20x8, Direction, GpuId, NumaId};
 use crate::util::rng::Rng;
 use crate::util::table::Table;
-use crate::workload::{ArrivalProcess, Sym, SymbolTable, TenantSpec, Trace, TraceGen};
+use crate::workload::stream::{scan, ArrivalMerger, TraceReader};
+use crate::workload::trace::{duration_of, models_of, warm_prefixes_of, TraceRecord};
+use crate::workload::{open_trace, ArrivalProcess, Sym, SymbolTable, TenantSpec, Trace, TraceGen};
 
 /// Namespace for replay's model-switch timer tokens ("SWIT" tag), kept
 /// out of the fleet's arrival-token namespace.
@@ -43,6 +50,30 @@ pub struct ReplayOptions {
     pub follow_switches: bool,
     /// Replay only the first N records (0 = all; `mma replay --fast`).
     pub max_requests: usize,
+}
+
+/// How a replay ingested its trace: the streaming path's memory story.
+/// Like [`ReplayReport::fabric_stats`], deliberately NOT part of
+/// [`ReplayReport::render`] — the streamed and materialized paths hold
+/// different amounts of memory (that is the point) while rendering
+/// byte-identical metrics. `mma bench` reports these.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestStats {
+    /// True when requests streamed through the bounded-window arrival
+    /// merge (O(window) ingestion memory); false when the trace was
+    /// materialized up front (O(trace)).
+    pub streamed: bool,
+    /// True when streaming was requested but the pre-scan found disorder
+    /// beyond the reorder window, forcing the documented materialize-and-
+    /// sort spill path.
+    pub spilled: bool,
+    /// The reorder window the streaming path ran (or would run) with.
+    pub reorder_window: usize,
+    /// Most records the merge window ever held (≤ `reorder_window + 1`).
+    pub peak_window: usize,
+    /// Peak bytes of ingestion state: merge-window records plus the
+    /// streaming reader's line buffer. Zero on the materialized path.
+    pub peak_tracked_bytes: u64,
 }
 
 /// Aggregate result of one replay run. All fields derive from the
@@ -89,6 +120,9 @@ pub struct ReplayReport {
     /// different amounts of work (that is the point) while rendering
     /// byte-identical metrics. `mma bench hotpath` reports these.
     pub fabric_stats: crate::fabric::FabricStats,
+    /// Trace-ingestion stats (streamed vs materialized, peak bytes).
+    /// Also excluded from [`Self::render`]; `mma bench` reports these.
+    pub ingest: IngestStats,
 }
 
 impl ReplayReport {
@@ -170,8 +204,29 @@ pub fn replay_serving() -> ServingConfig {
     }
 }
 
+fn build_fleet(
+    model: &ModelSpec,
+    mma: MmaConfig,
+    serving: ServingConfig,
+    fleet_cfg: FleetConfig,
+) -> ServingFleet {
+    let world = SimWorld::new(h20x8(), mma);
+    let computes: Vec<Box<dyn Compute>> = (0..fleet_cfg.gpus)
+        .map(|_| Box::new(h20()) as Box<dyn Compute>)
+        .collect();
+    ServingFleet::new(
+        fleet_cfg,
+        serving,
+        model.clone(),
+        world,
+        computes,
+        NumaId(0),
+    )
+}
+
 /// Replay `trace` through a serving fleet. Deterministic: the trace
-/// fixes arrivals, the simulation fixes everything else.
+/// fixes arrivals, the simulation fixes everything else. Works on a
+/// borrowed record slice — `--max` truncation never clones a record.
 pub fn replay(
     trace: &Trace,
     model: &ModelSpec,
@@ -180,26 +235,15 @@ pub fn replay(
     fleet_cfg: FleetConfig,
     opts: &ReplayOptions,
 ) -> ReplayReport {
-    let trace = if opts.max_requests > 0 {
-        trace.truncated(opts.max_requests)
+    let records: &[TraceRecord] = if opts.max_requests > 0 {
+        &trace.records[..opts.max_requests.min(trace.records.len())]
     } else {
-        trace.clone()
+        &trace.records
     };
-    let world = SimWorld::new(h20x8(), mma);
-    let computes: Vec<Box<dyn Compute>> = (0..fleet_cfg.gpus)
-        .map(|_| Box::new(h20()) as Box<dyn Compute>)
-        .collect();
-    let mut f = ServingFleet::new(
-        fleet_cfg,
-        serving,
-        model.clone(),
-        world,
-        computes,
-        NumaId(0),
-    );
+    let mut f = build_fleet(model, mma, serving, fleet_cfg);
     // Warm state the trace claims a previous session left in the host
     // tier: seed it before the first arrival, tenant-namespaced.
-    for (tenant, key, tokens) in trace.warm_prefixes() {
+    for (tenant, key, tokens) in warm_prefixes_of(records) {
         f.seed_tenant_prefix(tenant, key, tokens);
     }
     if opts.sleep_all {
@@ -217,7 +261,7 @@ pub fn replay(
     let mut boundary_times: Vec<f64> = Vec::new();
     let mut phases = Vec::new();
     if opts.follow_switches {
-        let names = trace.models();
+        let names = models_of(records);
         if names.len() > 1 {
             let gpu_count = f.world.topo.gpu_count();
             // Intern every model name once (symbol k == registry index k);
@@ -231,8 +275,7 @@ pub fn replay(
                 let gpu = GpuId((gpu_count - 1 - (k % gpu_count)) as u8);
                 reg.register(spec, vec![gpu]);
             }
-            let mut sorted: Vec<&crate::workload::TraceRecord> =
-                trace.records.iter().collect();
+            let mut sorted: Vec<&TraceRecord> = records.iter().collect();
             sorted.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
             let rec_syms: Vec<Sym> = sorted.iter().map(|r| syms.intern(&r.model)).collect();
             // Everything but the first phase's model starts host-side.
@@ -258,13 +301,17 @@ pub fn replay(
     let t0 = f.now();
     for (i, &bt) in boundary_times.iter().enumerate() {
         let token = SWITCH_TOKEN_BASE | i as u64;
-        f.world
-            .schedule_timer(t0 + crate::sim::Time::from_secs_f64(bt), token);
+        f.world.schedule_timer(t0 + Time::from_secs_f64(bt), token);
     }
-    let mut reqs = trace.requests();
-    for r in &mut reqs {
-        r.arrival = t0 + r.arrival;
-    }
+    let reqs: Vec<_> = records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut q = r.to_request(i as u64);
+            q.arrival = t0 + q.arrival;
+            q
+        })
+        .collect();
     let mut switches = 0usize;
     let out = f.run_with(reqs, |world, token| {
         if (token & SWITCH_TOKEN_BASE) != SWITCH_TOKEN_BASE {
@@ -292,21 +339,49 @@ pub fn replay(
         switch_transfer_s += p.wait(&mut f.world).transfer.as_secs_f64();
     }
 
+    let tenants: Vec<u32> = records.iter().map(|r| r.tenant).collect();
+    finish_report(
+        &f,
+        t0,
+        &out,
+        &tenants,
+        duration_of(records),
+        switches,
+        switch_transfer_s,
+        IngestStats::default(),
+    )
+}
+
+/// Aggregate a finished run into a [`ReplayReport`]. Shared by the
+/// materialized and streamed paths: `outcomes` and `tenants` are in
+/// *record* order (request id order), so both paths sum TTFTs in the
+/// same sequence and render byte-identically.
+#[allow(clippy::too_many_arguments)]
+fn finish_report(
+    f: &ServingFleet,
+    t0: Time,
+    outcomes: &[RequestOutcome],
+    tenants: &[u32],
+    trace_span_s: f64,
+    switches: usize,
+    switch_transfer_s: f64,
+    ingest: IngestStats,
+) -> ReplayReport {
     let mut ttft = Summary::new();
     let mut makespan = 0.0f64;
     let mut tenant_sums: Vec<(u32, usize, f64)> = Vec::new();
-    for (o, r) in out.iter().zip(&trace.records) {
+    for (o, &tenant) in outcomes.iter().zip(tenants) {
         ttft.record(o.ttft_s());
         if let Some(fin) = o.finished_at {
             // Relative to trace start (t0), like every other metric.
             makespan = makespan.max(fin.since(t0).as_secs_f64());
         }
-        match tenant_sums.iter_mut().find(|(t, _, _)| *t == r.tenant) {
+        match tenant_sums.iter_mut().find(|(t, _, _)| *t == tenant) {
             Some((_, n, sum)) => {
                 *n += 1;
                 *sum += o.ttft_s();
             }
-            None => tenant_sums.push((r.tenant, 1, o.ttft_s())),
+            None => tenant_sums.push((tenant, 1, o.ttft_s())),
         }
     }
     tenant_sums.sort_by_key(|(t, _, _)| *t);
@@ -326,8 +401,8 @@ pub fn replay(
         0.0
     };
     ReplayReport {
-        requests: out.len(),
-        trace_span_s: trace.duration_s(),
+        requests: outcomes.len(),
+        trace_span_s,
         makespan_s: makespan,
         mean_ttft: ttft.mean(),
         p50_ttft: ttft.p50(),
@@ -344,7 +419,164 @@ pub fn replay(
         switches,
         switch_transfer_s,
         fabric_stats: f.world.fabric.stats(),
+        ingest,
     }
+}
+
+/// Streaming replay: two passes over a re-openable trace source, holding
+/// O(reorder window) records instead of the whole trace.
+///
+/// Pass 1 ([`scan`]) learns the request count, span, warm prefixes, and
+/// whether `reorder_window` suffices. Pass 2 streams records through an
+/// [`ArrivalMerger`] straight into [`ServingFleet::run_streamed`].
+/// When the window is exceeded — or `--follow-switches` needs the whole
+/// trace for its boundary scan — this falls back to the documented spill
+/// path: [`Trace`]-materialize and run the exact [`replay`]. Either way
+/// the rendered report is byte-identical to the materialized path; only
+/// `ingest` (and peak memory) differ.
+pub fn replay_streamed<R, F>(
+    mut open: F,
+    model: &ModelSpec,
+    mma: MmaConfig,
+    serving: ServingConfig,
+    fleet_cfg: FleetConfig,
+    opts: &ReplayOptions,
+    reorder_window: usize,
+) -> Result<ReplayReport, String>
+where
+    R: BufRead,
+    F: FnMut() -> Result<TraceReader<R>, String>,
+{
+    let max = (opts.max_requests > 0).then_some(opts.max_requests);
+    let materialize = |open: &mut F| -> Result<Trace, String> {
+        let records: Result<Vec<TraceRecord>, String> = open()?.collect();
+        Ok(Trace { records: records? })
+    };
+    if opts.follow_switches {
+        // The model-boundary scan needs every record, time-sorted: spill
+        // by design (not a window failure).
+        let trace = materialize(&mut open)?;
+        let mut report = replay(&trace, model, mma, serving, fleet_cfg, opts);
+        report.ingest.reorder_window = reorder_window;
+        return Ok(report);
+    }
+    let info = scan(open()?, max, reorder_window)?;
+    if !info.sorted_within_window {
+        let trace = materialize(&mut open)?;
+        let mut report = replay(&trace, model, mma, serving, fleet_cfg, opts);
+        report.ingest.spilled = true;
+        report.ingest.reorder_window = reorder_window;
+        return Ok(report);
+    }
+
+    let mut f = build_fleet(model, mma, serving, fleet_cfg);
+    for &(tenant, key, tokens) in &info.warm {
+        f.seed_tenant_prefix(tenant, key, tokens);
+    }
+    if opts.sleep_all {
+        for i in 0..f.instance_count() {
+            f.sleep_instance(i);
+        }
+    }
+    let t0 = f.now();
+
+    let n = info.requests;
+    let cap = max.unwrap_or(usize::MAX);
+    let mut rdr = open()?;
+    let mut merger = ArrivalMerger::new(reorder_window);
+    let mut tenants = vec![0u32; n];
+    let mut seq = 0usize;
+    let mut input_done = false;
+    let make_req = |s: u64, r: TraceRecord| {
+        let mut q = r.to_request(s);
+        q.arrival = t0 + q.arrival;
+        q
+    };
+    let requests = std::iter::from_fn(|| loop {
+        if input_done {
+            let (s, rec) = merger.pop()?;
+            return Some(make_req(s, rec));
+        }
+        if seq >= cap {
+            input_done = true;
+            continue;
+        }
+        match rdr.next() {
+            None => input_done = true,
+            // Pass 1 validated every consumed line; a failure here means
+            // the source changed between the passes.
+            Some(Err(e)) => panic!("trace changed between replay passes: {e}"),
+            Some(Ok(rec)) => {
+                tenants[seq] = rec.tenant;
+                let emitted = merger.push(seq as u64, rec);
+                seq += 1;
+                if let Some((s, rec)) = emitted {
+                    return Some(make_req(s, rec));
+                }
+            }
+        }
+    });
+    let out = f.run_streamed(requests, |_, _| {});
+
+    // run_streamed returns arrival order; the report aggregates in
+    // record (id) order, exactly like the materialized path.
+    let mut by_id: Vec<Option<RequestOutcome>> = vec![None; n];
+    for o in out {
+        by_id[o.id.0 as usize] = Some(o);
+    }
+    let ordered: Vec<RequestOutcome> = by_id
+        .into_iter()
+        .map(|o| o.expect("every streamed request has an outcome"))
+        .collect();
+    let ingest = IngestStats {
+        streamed: true,
+        spilled: false,
+        reorder_window,
+        peak_window: merger.peak_entries(),
+        peak_tracked_bytes: merger.peak_bytes() + rdr.line_buffer_bytes(),
+    };
+    Ok(finish_report(
+        &f,
+        t0,
+        &ordered,
+        &tenants,
+        info.duration_s,
+        0,
+        0.0,
+        ingest,
+    ))
+}
+
+/// [`replay_streamed`] over a trace file path (`mma replay`'s default
+/// ingestion). Opens the file twice: once to scan, once to stream.
+pub fn replay_path(
+    path: &str,
+    model: &ModelSpec,
+    mma: MmaConfig,
+    serving: ServingConfig,
+    fleet_cfg: FleetConfig,
+    opts: &ReplayOptions,
+    reorder_window: usize,
+) -> Result<ReplayReport, String> {
+    replay_streamed(
+        || open_trace(path),
+        model,
+        mma,
+        serving,
+        fleet_cfg,
+        opts,
+        reorder_window,
+    )
+    .map_err(|e| {
+        // `open_trace` labels IO errors with the path already; record
+        // parse errors carry only a line number, so label them here —
+        // the CLI error text must match `Trace::load` byte for byte.
+        if e.starts_with("read ") {
+            e
+        } else {
+            format!("{path}: {e}")
+        }
+    })
 }
 
 /// The figure's two-tenant mix: tenant 1 is an interactive chat tenant
@@ -581,6 +813,181 @@ mod tests {
             &opts,
         );
         assert_eq!(r.render(), r2.render());
+    }
+
+    fn stream_from(text: &str) -> impl FnMut() -> Result<TraceReader<std::io::Cursor<Vec<u8>>>, String> + '_ {
+        move || Ok(TraceReader::new(std::io::Cursor::new(text.as_bytes().to_vec())))
+    }
+
+    fn replay_fleet(gpus: u32) -> FleetConfig {
+        FleetConfig {
+            gpus,
+            router: RoutePolicy::RoundRobin,
+            peer_fetch: true,
+            prefix_affinity: false,
+        }
+    }
+
+    #[test]
+    fn streamed_replay_is_byte_identical_to_materialized() {
+        // The tentpole gate: the O(window) streaming path and the
+        // O(trace) materialized path must render the same bytes — across
+        // arrival shapes, warm prefixes, multi-tenant mixes, and `--max`.
+        for (requests, max_requests) in [(40usize, 0usize), (40, 13)] {
+            let gen = TraceGen {
+                arrivals: ArrivalProcess::bursty(20.0, 0.9, 2.0),
+                tenants: figure_tenants(8_192, 4),
+                requests,
+            };
+            let trace = gen.generate(&mut Rng::seed_from_u64(SEED));
+            let text = trace.render();
+            let opts = ReplayOptions {
+                max_requests,
+                ..Default::default()
+            };
+            let base = replay(
+                &trace,
+                &qwen_7b_chat(),
+                MmaConfig::native(),
+                replay_serving(),
+                replay_fleet(2),
+                &opts,
+            );
+            let streamed = replay_streamed(
+                stream_from(&text),
+                &qwen_7b_chat(),
+                MmaConfig::native(),
+                replay_serving(),
+                replay_fleet(2),
+                &opts,
+                1024,
+            )
+            .unwrap();
+            assert_eq!(
+                streamed.render(),
+                base.render(),
+                "streamed vs materialized (max={max_requests})"
+            );
+            assert!(streamed.ingest.streamed);
+            assert!(!streamed.ingest.spilled);
+            assert!(streamed.ingest.peak_window <= 1025);
+            assert!(streamed.ingest.peak_tracked_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn streamed_replay_spills_when_window_too_small() {
+        // Generator traces are emitted in arrival order per tenant but
+        // interleaved across tenants; window 0 forces the spill path,
+        // which must still render identically.
+        let gen = TraceGen {
+            arrivals: ArrivalProcess::bursty(20.0, 0.9, 2.0),
+            tenants: figure_tenants(8_192, 4),
+            requests: 24,
+        };
+        let trace = gen.generate(&mut Rng::seed_from_u64(SEED));
+        // Force disorder the window cannot hold by prepending a late
+        // record at the end of the file.
+        let mut shuffled = trace.clone();
+        let first = shuffled.records.remove(0);
+        shuffled.records.push(first);
+        let text = shuffled.render();
+        let opts = ReplayOptions::default();
+        let base = replay(
+            &shuffled,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            replay_fleet(2),
+            &opts,
+        );
+        let streamed = replay_streamed(
+            stream_from(&text),
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            replay_fleet(2),
+            &opts,
+            1,
+        )
+        .unwrap();
+        assert_eq!(streamed.render(), base.render(), "spill path must match");
+        assert!(!streamed.ingest.streamed);
+        assert!(streamed.ingest.spilled);
+    }
+
+    #[test]
+    fn streamed_replay_supports_sleep_all() {
+        let gen = TraceGen {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 10.0 },
+            tenants: vec![TenantSpec::interactive(0, 2, 4_096)],
+            requests: 8,
+        };
+        let trace = gen.generate(&mut Rng::seed_from_u64(SEED));
+        let text = trace.render();
+        let opts = ReplayOptions {
+            sleep_all: true,
+            ..Default::default()
+        };
+        let base = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            replay_fleet(2),
+            &opts,
+        );
+        let streamed = replay_streamed(
+            stream_from(&text),
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            replay_fleet(2),
+            &opts,
+            256,
+        )
+        .unwrap();
+        assert_eq!(streamed.render(), base.render());
+        assert!(streamed.render().contains("on-demand wakes"));
+    }
+
+    #[test]
+    fn follow_switches_takes_the_materialized_path() {
+        let models = vec!["qwen-7b-chat".to_string(), "qwen3-4b".to_string()];
+        let trace = model_switch_trace(
+            &mut Rng::seed_from_u64(SEED),
+            &models,
+            6.0,
+            2.0,
+            4_096,
+            36,
+        );
+        let text = trace.render();
+        let opts = ReplayOptions {
+            follow_switches: true,
+            ..Default::default()
+        };
+        let base = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            replay_fleet(2),
+            &opts,
+        );
+        let streamed = replay_streamed(
+            stream_from(&text),
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            replay_serving(),
+            replay_fleet(2),
+            &opts,
+            256,
+        )
+        .unwrap();
+        assert_eq!(streamed.render(), base.render());
+        assert!(!streamed.ingest.streamed, "switch replay materializes");
+        assert!(streamed.switches >= 1);
     }
 
     #[test]

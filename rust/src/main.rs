@@ -13,13 +13,14 @@
 //! mma replay [trace.jsonl] [--gpus N] [--policy <name>] [--qos on|off]
 //!            [--model qwen-7b] [--sleep-all] [--follow-switches]
 //!            [--max N | --fast] [--router ...] [--peer-fetch ...]
+//!            [--window N]                     streaming reorder window
 //! mma trace gen [--out FILE] [--arrivals poisson|bursty|diurnal]
 //!               [--rate R] [--burstiness B] [--dwell S] [--period S]
 //!               [--requests N] [--tenants K] [--docs D] [--zipf S]
 //!               [--ctx T] [--suffix T] [--output-tokens T] [--seed N]
 //!               [--warm-start] [--switch-models m1,m2 --phase S]
 //! mma bench hotpath [--fast] [--json] [--out FILE] [--out-engine FILE]
-//!                                         hot-path perf harness (docs/PERF.md)
+//!                   [--out-serving FILE]   hot-path perf harness (docs/PERF.md)
 //! mma config-check <file.toml>            validate a config file
 //! ```
 //!
@@ -30,7 +31,12 @@
 //! `mma replay` feeds a JSONL trace (see `docs/CONFIG.md` and
 //! `examples/sample_trace.jsonl`) through the serving fleet
 //! deterministically: the same trace and configuration print a
-//! byte-identical metrics block. With no positional path the `[workload]
+//! byte-identical metrics block. The trace is line-streamed through a
+//! bounded reorder window (`--window`, `[workload] reorder_window`) so
+//! peak ingestion memory is O(window), spilling to whole-trace
+//! materialization — same output — only when the trace is more
+//! disordered than the window or `--follow-switches` needs the full
+//! schedule. With no positional path the `[workload]
 //! trace` key (or `MMA_TRACE`) names the input. `mma trace gen`
 //! materializes generator output — bursty/diurnal arrivals, multi-tenant
 //! Zipf mixes, model-switch schedules — to a file or stdout.
@@ -63,7 +69,7 @@
 
 use mma::config::RunConfig;
 use mma::figures;
-use mma::figures::workload_replay::{replay, replay_serving_from, ReplayOptions};
+use mma::figures::workload_replay::{replay_path, replay_serving_from, ReplayOptions};
 use mma::mma::{MmaConfig, SimWorld, TransferDesc};
 use mma::models;
 use mma::policy::PolicySpec;
@@ -72,7 +78,7 @@ use mma::topology::{Direction, GpuId, NumaId, Preset};
 use mma::util::cli::Args;
 use mma::util::fmt;
 use mma::util::rng::Rng;
-use mma::workload::{model_switch_trace, Trace, TraceGen};
+use mma::workload::{model_switch_trace, TraceGen};
 
 /// Engine config for a run: start from the resolved run config's
 /// `[mma]`/`[policy]`/`[qos]` state (file → env already applied), then
@@ -348,10 +354,6 @@ fn main() {
                 );
                 std::process::exit(2);
             };
-            let trace = Trace::load(&path).unwrap_or_else(|e| {
-                eprintln!("invalid trace: {e}");
-                std::process::exit(1);
-            });
             let mcfg = mma_cfg(&args, &cfg.mma);
             let policy = mcfg.policy.name();
             let qos_on = mcfg.qos.enabled;
@@ -377,7 +379,17 @@ fn main() {
                 fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
                 ..replay_serving_from(&cfg.serving)
             };
-            let report = replay(&trace, &model, mcfg, serving, fleet, &opts);
+            // Streaming ingestion: the trace is line-streamed through a
+            // bounded reorder window (O(window) resident records); a
+            // trace more disordered than the window — or a
+            // --follow-switches run, which needs the whole schedule —
+            // spills to the materialized path with identical output.
+            let window = args.or("window", cfg.workload.reorder_window as usize);
+            let report = replay_path(&path, &model, mcfg, serving, fleet, &opts, window)
+                .unwrap_or_else(|e| {
+                    eprintln!("invalid trace: {e}");
+                    std::process::exit(1);
+                });
             println!(
                 "replay {path}: {} records, gpus={gpus} policy={policy} qos={}",
                 report.requests,
@@ -447,7 +459,8 @@ fn main() {
         "bench" => {
             if args.pos(1) != Some("hotpath") {
                 eprintln!(
-                    "usage: mma bench hotpath [--fast] [--json] [--out FILE] [--out-engine FILE]"
+                    "usage: mma bench hotpath [--fast] [--json] [--out FILE] \
+                     [--out-engine FILE] [--out-serving FILE]"
                 );
                 std::process::exit(2);
             }
@@ -481,10 +494,31 @@ fn main() {
                 });
                 eprintln!("wrote {path}");
             }
+            // The BENCH_0008 serving leg: LRU tier churn, streaming
+            // histogram, and the streamed replay path vs its
+            // materialized oracle.
+            let serving =
+                mma::perf::run_serving_bench_bins(fast, cfg.metrics.histogram_bins as usize);
+            if !serving.serving.streaming_identical {
+                eprintln!("FATAL: streamed and materialized replays diverged");
+                std::process::exit(1);
+            }
+            if let Some(path) = args.get("out-serving") {
+                std::fs::write(path, serving.to_json()).unwrap_or_else(|e| {
+                    eprintln!("--out-serving {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("wrote {path}");
+            }
             if args.flag("json") {
                 print!("{}", report.to_json());
             } else {
-                print!("{}{}", report.render(), engine.render());
+                print!(
+                    "{}{}{}",
+                    report.render(),
+                    engine.render(),
+                    serving.render()
+                );
             }
         }
         "config-check" => {

@@ -1,0 +1,257 @@
+//! A log-binned streaming histogram: O(1) `record`, O(bins) percentile,
+//! fixed memory — the bounded-memory replacement for keeping every
+//! latency sample in a [`super::Summary`] vector and re-sorting per
+//! percentile query.
+//!
+//! # Binning and the error bound
+//!
+//! Bins cover `[LO, HI)` = `[1e-9, 1e3)` seconds (sub-nanosecond to
+//! ~17 minutes — every latency this simulator produces) in geometric
+//! steps: bin `i` spans `[LO·r^i, LO·r^(i+1))` with
+//! `r = (HI/LO)^(1/bins)`. A percentile query walks the counts to the
+//! nearest-rank bin (the same rank rule as [`super::Summary`]) and
+//! returns the bin's geometric midpoint `LO·r^(i+0.5)`.
+//!
+//! Binning is monotone — larger samples land in weakly larger bins — so
+//! the walk's bin always *contains* the exact nearest-rank sample, and
+//! the midpoint is within a factor `sqrt(r)` of it. The relative error
+//! of any percentile is therefore bounded by [`LogHistogram::rel_error_bound`]
+//! `= sqrt(r) − 1` (≈1.36% at the default 1024 bins over 12 decades);
+//! halving the bins doubles the decades per bin and roughly doubles the
+//! bound. Out-of-range samples keep the bound honest at the extremes:
+//! values below `LO` (including zero) are reported as the exact tracked
+//! minimum, values at or above `HI` as the exact tracked maximum.
+//! `count`, `sum`/`mean`, `min`, and `max` are always exact.
+
+use crate::sim::Time;
+
+/// Lower edge of the binned range, seconds.
+const LO: f64 = 1e-9;
+/// Upper edge of the binned range, seconds.
+const HI: f64 = 1e3;
+
+/// Default bin count (≈1.36% relative error over 12 decades).
+pub const DEFAULT_BINS: usize = 1024;
+
+/// The streaming histogram. Memory is `O(bins)` and never grows.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    bins: Vec<u64>,
+    /// Samples below `LO` (including zero/negative): reported as `min`.
+    under: u64,
+    /// Samples at or above `HI`: reported as `max`.
+    over: u64,
+    inv_ln_ratio: f64,
+    ratio: f64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new(DEFAULT_BINS)
+    }
+}
+
+impl LogHistogram {
+    /// Histogram with `bins` geometric buckets over `[1e-9, 1e3)` s.
+    pub fn new(bins: usize) -> LogHistogram {
+        let bins = bins.max(1);
+        let ratio = (HI / LO).powf(1.0 / bins as f64);
+        LogHistogram {
+            bins: vec![0; bins],
+            under: 0,
+            over: 0,
+            inv_ln_ratio: 1.0 / ratio.ln(),
+            ratio,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one sample, O(1).
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        if v < LO {
+            self.under += 1;
+        } else if v >= HI {
+            self.over += 1;
+        } else {
+            let idx = ((v / LO).ln() * self.inv_ln_ratio) as usize;
+            let idx = idx.min(self.bins.len() - 1); // float-edge safety
+            self.bins[idx] += 1;
+        }
+    }
+
+    /// Record a duration in seconds.
+    pub fn record_time(&mut self, t: Time) {
+        self.record(t.as_secs_f64());
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact arithmetic mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Exact minimum (0 if empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.min
+    }
+
+    /// Exact maximum (0 if empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.max
+    }
+
+    /// Percentile in `[0,100]` by nearest-rank (0 if empty), O(bins).
+    /// Accurate to [`Self::rel_error_bound`] for in-range samples; exact
+    /// at the tracked extremes for out-of-range ones.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        // Same rank rule as `Summary::percentile` over the sorted samples;
+        // binning is monotone, so walking counts lands in the bin that
+        // contains the exact nearest-rank sample.
+        let rank = ((self.count - 1) as f64 * (p / 100.0)).round() as u64;
+        let mut seen = self.under;
+        if rank < seen {
+            return self.min;
+        }
+        for (i, &n) in self.bins.iter().enumerate() {
+            seen += n;
+            if rank < seen {
+                return LO * self.ratio.powf(i as f64 + 0.5);
+            }
+        }
+        self.max
+    }
+
+    /// p50 shortcut.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// p99 shortcut.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Worst-case relative error of an in-range percentile:
+    /// `sqrt(ratio) − 1` where `ratio` is the per-bin geometric step.
+    pub fn rel_error_bound(&self) -> f64 {
+        self.ratio.sqrt() - 1.0
+    }
+
+    /// Fixed memory footprint of the bin array plus counters, bytes.
+    /// Unlike a sample vector this never grows with `record` volume.
+    pub fn tracked_bytes(&self) -> u64 {
+        (self.bins.len() * std::mem::size_of::<u64>() + std::mem::size_of::<LogHistogram>())
+            as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Summary;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LogHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn exact_fields_are_exact() {
+        let mut h = LogHistogram::default();
+        for v in [0.5, 0.001, 2.0, 0.25] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 2.0);
+        assert!((h.mean() - (0.5 + 0.001 + 2.0 + 0.25) / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn out_of_range_samples_use_exact_extremes() {
+        let mut h = LogHistogram::default();
+        h.record(0.0); // below LO → under bucket
+        h.record(5e9); // above HI → over bucket
+        h.record(1.0);
+        assert_eq!(h.percentile(0.0), 0.0, "underflow reports exact min");
+        assert_eq!(h.percentile(100.0), 5e9, "overflow reports exact max");
+    }
+
+    #[test]
+    fn percentiles_match_exact_summary_within_bound() {
+        // The exact-sample Summary is the oracle: for log-uniform samples
+        // spanning 8 decades, every percentile must agree within the
+        // documented relative-error bound.
+        let mut rng = Rng::seed_from_u64(0xb008);
+        for bins in [256usize, 1024] {
+            let mut h = LogHistogram::new(bins);
+            let mut exact = Summary::new();
+            for _ in 0..20_000 {
+                // log-uniform over [1e-6, 1e2)
+                let u = rng.next_u64() as f64 / u64::MAX as f64;
+                let v = 1e-6 * 10f64.powf(8.0 * u);
+                h.record(v);
+                exact.record(v);
+            }
+            let bound = h.rel_error_bound();
+            assert!(bound > 0.0 && bound < 0.06, "bound sane: {bound}");
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                let want = exact.percentile(p);
+                let got = h.percentile(p);
+                let rel = (got - want).abs() / want;
+                assert!(
+                    rel <= bound + 1e-12,
+                    "bins {bins} p{p}: got {got}, exact {want}, rel {rel:.5} > bound {bound:.5}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_is_fixed_regardless_of_volume() {
+        let mut h = LogHistogram::new(512);
+        let before = h.tracked_bytes();
+        for i in 0..100_000u64 {
+            h.record(1e-6 * (1 + i % 997) as f64);
+        }
+        assert_eq!(h.tracked_bytes(), before, "no growth with record volume");
+        assert!(before < 8 * 1024, "512 bins stay in a few KiB: {before}");
+    }
+}

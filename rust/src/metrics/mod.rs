@@ -3,12 +3,32 @@
 
 use crate::sim::Time;
 
-/// A simple exact-sample summary (sufficient at harness scales; switch to
-/// sketches only if sample counts explode).
-#[derive(Debug, Clone, Default)]
+pub mod hist;
+
+pub use hist::LogHistogram;
+
+/// A simple exact-sample summary. Memory grows with sample count and
+/// percentiles sort — it doubles as the accuracy oracle for the
+/// bounded-memory [`LogHistogram`], which hot paths should prefer.
+#[derive(Debug, Clone)]
 pub struct Summary {
     samples: Vec<f64>,
     sorted: bool,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Summary {
+        Summary {
+            samples: Vec::new(),
+            sorted: true,
+            // Fold identities of the retired O(n) min/max scans, so the
+            // empty-summary results (0.0 for both) are unchanged.
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
 }
 
 impl Summary {
@@ -17,10 +37,13 @@ impl Summary {
         Summary::default()
     }
 
-    /// Record a sample.
+    /// Record a sample; min/max update incrementally here so the getters
+    /// stay O(1).
     pub fn record(&mut self, v: f64) {
         self.samples.push(v);
         self.sorted = false;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
     }
 
     /// Record a duration in seconds.
@@ -41,17 +64,18 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
-    /// Minimum (0 if empty).
+    /// Minimum (0 if empty), O(1).
     pub fn min(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.min
     }
 
-    /// Maximum (0 if empty).
+    /// Maximum (0 if empty), O(1). Matches the retired fold, whose
+    /// identity was 0.0 (not `-inf`).
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(0.0, f64::max)
+        self.max
     }
 
     fn ensure_sorted(&mut self) {
@@ -124,6 +148,21 @@ mod tests {
         assert_eq!(s.percentile(100.0), 5.0);
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn min_max_track_incrementally() {
+        let mut s = Summary::new();
+        s.record(4.0);
+        assert_eq!(s.min(), 4.0);
+        assert_eq!(s.max(), 4.0);
+        s.record(1.5);
+        s.record(9.0);
+        assert_eq!(s.min(), 1.5);
+        assert_eq!(s.max(), 9.0);
+        let _ = s.p50(); // sorting must not disturb the tracked extremes
+        assert_eq!(s.min(), 1.5);
+        assert_eq!(s.max(), 9.0);
     }
 
     #[test]

@@ -21,20 +21,29 @@
 //! [`HotpathReport::to_json`] emits the stable `mma-bench-hotpath/1`
 //! schema documented in `docs/PERF.md`; `tools/check_bench.py` validates
 //! it in CI against the committed `BENCH_0006_hotpath.json` baseline.
+//!
+//! Two sibling benches share the harness: the `BENCH_0007` engine cycle
+//! ([`run_engine_bench`], `mma-bench-engine/1`) and the `BENCH_0008`
+//! serving cycle ([`run_serving_bench`], `mma-bench-serving/1`) — LRU
+//! prefix-tier churn, streaming-histogram record rate, and the
+//! bounded-window streamed replay path, each cross-checked against its
+//! exact/materialized oracle in the same invocation.
 
 use crate::config::FleetConfig;
 use crate::fabric::{self, Fabric, FabricStats};
-use crate::figures::workload_replay::{replay, replay_serving, ReplayOptions};
+use crate::figures::workload_replay::{replay, replay_serving, replay_streamed, ReplayOptions};
 use crate::gpusim::TransferId;
+use crate::metrics::LogHistogram;
 use crate::mma::{ActionSink, Engine, EngineAction, MmaConfig, TransferDesc};
 use crate::models::qwen_7b_chat;
-use crate::serving::RoutePolicy;
+use crate::serving::{GpuPrefixTier, RoutePolicy};
 use crate::sim::{EventQueue, HeapEventQueue, Time};
 use crate::topology::{h20x8, Direction, GpuId, NumaId, Topology};
 use crate::util::bench::black_box;
 use crate::util::rng::Rng;
-use crate::workload::{ArrivalProcess, TenantSpec, Trace, TraceGen};
+use crate::workload::{ArrivalProcess, TenantSpec, Trace, TraceGen, TraceReader};
 use std::collections::VecDeque;
+use std::io::Cursor;
 use std::time::{Duration, Instant};
 
 /// Seed for the harness's synthetic workloads (fixed: the bench varies
@@ -241,6 +250,170 @@ pub fn run_engine_bench_with(fast: bool, budget: Duration, requests: usize) -> E
         incremental,
         reference,
     }
+}
+
+/// The serving-cycle leg of `BENCH_0008`: the three serving-layer hot
+/// paths this PR series made O(1)/O(window) — LRU prefix-tier churn,
+/// the bounded-memory streaming histogram, and the streamed replay
+/// ingestion path — each with its bar encoded in the report.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingCycle {
+    /// Prefix-tier operations (touch-or-insert under constant eviction
+    /// pressure) per wall-clock second on the intrusive-LRU tier.
+    pub lru_ops_per_sec: f64,
+    /// Streaming-histogram samples recorded per wall-clock second.
+    pub hist_records_per_sec: f64,
+    /// Bins the histogram leg ran with (`[metrics] histogram_bins`).
+    pub hist_bins: usize,
+    /// Requests in the streamed replay leg's trace.
+    pub requests: usize,
+    /// Requests replayed per wall-clock second on the streamed path.
+    pub requests_per_sec: f64,
+    /// Peak ingestion bytes the streamed replay tracked (merge-window
+    /// records + line buffer) — the O(window) memory claim, as a number.
+    pub peak_tracked_bytes: u64,
+    /// Whether the streamed and materialized replays rendered
+    /// byte-identically (must always be true).
+    pub streaming_identical: bool,
+    /// Whether the streamed leg spilled to the materialized path (must
+    /// be false: the generated trace is sorted within any window).
+    pub spilled: bool,
+}
+
+/// Everything the `BENCH_0008` serving bench measures.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Fast mode (smaller budgets/workloads; CI smoke).
+    pub fast: bool,
+    /// The serving-cycle measurements.
+    pub serving: ServingCycle,
+}
+
+/// Run the `BENCH_0008` serving bench (`mma bench hotpath --out-serving`).
+pub fn run_serving_bench(fast: bool) -> ServingReport {
+    run_serving_bench_bins(fast, crate::metrics::hist::DEFAULT_BINS)
+}
+
+/// [`run_serving_bench`] with the histogram sized per the resolved
+/// `[metrics] histogram_bins` (the CLI passes the config value through).
+pub fn run_serving_bench_bins(fast: bool, bins: usize) -> ServingReport {
+    let budget = if fast {
+        Duration::from_millis(120)
+    } else {
+        Duration::from_millis(600)
+    };
+    let requests = if fast { 48 } else { 192 };
+    run_serving_bench_with(fast, budget, requests, bins)
+}
+
+/// [`run_serving_bench`] with explicit knobs (tests use tiny budgets).
+pub fn run_serving_bench_with(
+    fast: bool,
+    budget: Duration,
+    requests: usize,
+    bins: usize,
+) -> ServingReport {
+    let lru_ops_per_sec = lru_churn(budget);
+    let hist_records_per_sec = hist_churn(budget, bins);
+    let (requests_per_sec, peak_tracked_bytes, streaming_identical, spilled) =
+        streamed_replay_leg(requests);
+    ServingReport {
+        fast,
+        serving: ServingCycle {
+            lru_ops_per_sec,
+            hist_records_per_sec,
+            hist_bins: bins.max(1),
+            requests,
+            requests_per_sec,
+            peak_tracked_bytes,
+            streaming_identical,
+            spilled,
+        },
+    }
+}
+
+/// Prefix-tier churn: a tier holding 1/16 of the keyspace, so most
+/// inserts evict — the worst case for the retired O(n) scan and the
+/// steady state of a busy serving instance. Each iteration is the
+/// scheduler's access shape: touch the key if resident, insert it
+/// otherwise.
+fn lru_churn(budget: Duration) -> f64 {
+    // 1024 resident blocks of 16 tokens; 4096 keys of 64 tokens each.
+    let mut tier = GpuPrefixTier::new(16, 16 * 1024);
+    let mut rng = Rng::seed_from_u64(BENCH_SEED);
+    let t0 = Instant::now();
+    let mut ops = 0u64;
+    while t0.elapsed() < budget {
+        for _ in 0..1024 {
+            let key = rng.range_u64(1, 4096);
+            if !tier.touch(key) {
+                black_box(tier.insert(key, 64));
+            }
+            ops += 1;
+        }
+    }
+    ops as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Histogram churn: log-uniform latencies (the TTFT shape) cycled from a
+/// precomputed block so the measurement is `record()`, not `powf()`.
+fn hist_churn(budget: Duration, bins: usize) -> f64 {
+    let mut rng = Rng::seed_from_u64(BENCH_SEED);
+    let samples: Vec<f64> = (0..1024)
+        .map(|_| 1e-6 * 1e6f64.powf(rng.range_f64(0.0, 1.0)))
+        .collect();
+    let mut h = LogHistogram::new(bins);
+    let t0 = Instant::now();
+    let mut ops = 0u64;
+    while t0.elapsed() < budget {
+        for &v in &samples {
+            h.record(v);
+        }
+        ops += samples.len() as u64;
+    }
+    black_box(h.percentile(99.0));
+    ops as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Replay the bench trace both ways — materialized (the oracle) and
+/// streamed through the bounded-window ingestion — timing the streamed
+/// side; returns (requests/s, peak tracked bytes, identical, spilled).
+fn streamed_replay_leg(requests: usize) -> (f64, u64, bool, bool) {
+    let trace = replay_trace(requests);
+    let text = trace.render();
+    let fleet = || FleetConfig {
+        gpus: 2,
+        router: RoutePolicy::RoundRobin,
+        peer_fetch: true,
+        prefix_affinity: false,
+    };
+    let opts = ReplayOptions::default();
+    let oracle = replay(
+        &trace,
+        &qwen_7b_chat(),
+        MmaConfig::default(),
+        replay_serving(),
+        fleet(),
+        &opts,
+    );
+    let t0 = Instant::now();
+    let streamed = replay_streamed(
+        || Ok(TraceReader::new(Cursor::new(text.as_bytes()))),
+        &qwen_7b_chat(),
+        MmaConfig::default(),
+        replay_serving(),
+        fleet(),
+        &opts,
+        1024,
+    )
+    .expect("generated trace streams cleanly");
+    let wall_s = t0.elapsed().as_secs_f64();
+    (
+        requests as f64 / wall_s.max(1e-9),
+        streamed.ingest.peak_tracked_bytes,
+        oracle.render() == streamed.render(),
+        streamed.ingest.spilled,
+    )
 }
 
 /// Initial backlog + reschedule horizon of the queue churn benches.
@@ -549,6 +722,73 @@ impl EngineReport {
     }
 }
 
+impl ServingReport {
+    /// The `mma-bench-serving/1` JSON document (stable key order; see
+    /// `docs/PERF.md` for the schema).
+    pub fn to_json(&self) -> String {
+        let c = &self.serving;
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"mma-bench-serving/1\",\n");
+        s.push_str("  \"bench\": \"BENCH_0008\",\n");
+        s.push_str("  \"provenance\": \"measured\",\n");
+        s.push_str(&format!("  \"fast\": {},\n", self.fast));
+        s.push_str("  \"serving\": {\n");
+        s.push_str(&format!(
+            "    \"lru_ops_per_sec\": {},\n",
+            jnum(c.lru_ops_per_sec, 1)
+        ));
+        s.push_str(&format!(
+            "    \"hist_records_per_sec\": {},\n",
+            jnum(c.hist_records_per_sec, 1)
+        ));
+        s.push_str(&format!("    \"hist_bins\": {},\n", c.hist_bins));
+        s.push_str(&format!("    \"requests\": {},\n", c.requests));
+        s.push_str(&format!(
+            "    \"requests_per_sec\": {},\n",
+            jnum(c.requests_per_sec, 1)
+        ));
+        s.push_str(&format!(
+            "    \"peak_tracked_bytes\": {},\n",
+            c.peak_tracked_bytes
+        ));
+        s.push_str(&format!(
+            "    \"streaming_identical\": {},\n",
+            c.streaming_identical
+        ));
+        s.push_str(&format!("    \"spilled\": {}\n", c.spilled));
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable summary (the serving leg of `mma bench hotpath`).
+    pub fn render(&self) -> String {
+        let c = &self.serving;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "prefix lru      {:>12.0} tier ops/s (touch-or-insert under eviction pressure)\n",
+            c.lru_ops_per_sec
+        ));
+        s.push_str(&format!(
+            "histogram       {:>12.0} records/s ({} bins, {} tracked bytes, bounded)\n",
+            c.hist_records_per_sec,
+            c.hist_bins,
+            LogHistogram::new(c.hist_bins).tracked_bytes(),
+        ));
+        s.push_str(&format!(
+            "serving replay  {} requests streamed at {:.0} req/s, peak {} ingest bytes, \
+             identical: {}, spilled: {}\n",
+            c.requests,
+            c.requests_per_sec,
+            c.peak_tracked_bytes,
+            c.streaming_identical,
+            c.spilled,
+        ));
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -619,6 +859,48 @@ mod tests {
             "\"deterministic\"",
             "\"incremental\"",
             "\"full\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+        assert!(!r.render().is_empty());
+    }
+
+    #[test]
+    fn serving_bench_streams_identically() {
+        // Tiny budget: harness correctness, not a measurement. The
+        // acceptance bars live here — the streamed replay must render
+        // byte-identically to the materialized oracle without spilling,
+        // and its tracked ingestion memory must be a real bounded number.
+        let r = run_serving_bench_with(true, Duration::from_millis(5), 12, 256);
+        let c = r.serving;
+        assert!(c.streaming_identical, "streamed replay diverged");
+        assert!(!c.spilled, "sorted bench trace must not spill");
+        assert!(c.lru_ops_per_sec > 0.0);
+        assert!(c.hist_records_per_sec > 0.0);
+        assert!(c.requests_per_sec > 0.0);
+        assert!(c.peak_tracked_bytes > 0, "streamed leg tracked no memory");
+        assert_eq!(c.requests, 12);
+        assert_eq!(c.hist_bins, 256);
+    }
+
+    #[test]
+    fn serving_json_has_stable_schema_keys() {
+        let r = run_serving_bench_with(true, Duration::from_millis(2), 6, 1024);
+        let j = r.to_json();
+        for key in [
+            "\"schema\": \"mma-bench-serving/1\"",
+            "\"bench\": \"BENCH_0008\"",
+            "\"provenance\": \"measured\"",
+            "\"lru_ops_per_sec\"",
+            "\"hist_records_per_sec\"",
+            "\"hist_bins\": 1024",
+            "\"requests\"",
+            "\"requests_per_sec\"",
+            "\"peak_tracked_bytes\"",
+            "\"streaming_identical\": true",
+            "\"spilled\": false",
         ] {
             assert!(j.contains(key), "missing {key} in:\n{j}");
         }

@@ -302,6 +302,83 @@ impl ServingFleet {
             .collect()
     }
 
+    /// [`Self::run_with`] over an *iterator* of requests already sorted
+    /// by `(arrival, id)` — the order [`Self::run_with`] sorts into and
+    /// the order [`crate::workload::ArrivalMerger`] emits. Exactly one
+    /// arrival timer is outstanding at a time and only one staged request
+    /// is held, so fleet-side memory is O(1) in the trace length (plus
+    /// the returned outcomes); `run_with` holds every request and its
+    /// timer up front.
+    ///
+    /// The successor's timer is scheduled *before* the current arrival is
+    /// handled, so same-timestamp arrivals keep their relative order and
+    /// precede any events the current arrival generates — the same
+    /// interleaving as up-front scheduling. (Residual caveat: an arrival
+    /// whose timestamp collides to the exact nanosecond with a completion
+    /// scheduled before it was staged can order differently than the
+    /// up-front path; the streamed-vs-materialized replay equivalence
+    /// tests pin the observable output byte-for-byte.)
+    ///
+    /// Returns outcomes in arrival order (the iteration order), not
+    /// request-id order.
+    pub fn run_streamed<I, F>(&mut self, requests: I, mut on_timer: F) -> Vec<RequestOutcome>
+    where
+        I: IntoIterator<Item = Request>,
+        F: FnMut(&mut SimWorld, u64),
+    {
+        let mut rest = requests.into_iter();
+        let mut ids: Vec<RequestId> = Vec::new();
+        let mut next_token: u64 = ARRIVAL_TOKEN_BASE;
+        let mut staged: Option<(u64, Request)> = None;
+        if let Some(r) = rest.next() {
+            self.world.schedule_timer(r.arrival, next_token);
+            staged = Some((next_token, r));
+            next_token += 1;
+        }
+        let mut last_key: Option<(Time, u64)> = None;
+        while !(staged.is_none() && self.instances.iter().all(|i| i.is_idle())) {
+            let Some(notice) = self.world.next_notice() else {
+                panic!("serving fleet stalled: world idle with work pending");
+            };
+            match notice {
+                Notice::Timer(token) => {
+                    match staged.take() {
+                        Some((t, req)) if t == token => {
+                            let key = (req.arrival, req.id.0);
+                            debug_assert!(
+                                last_key.map_or(true, |l| l <= key),
+                                "run_streamed requires (arrival, id)-sorted input"
+                            );
+                            last_key = Some(key);
+                            // Stage the successor first: see above.
+                            if let Some(nr) = rest.next() {
+                                self.world.schedule_timer(nr.arrival, next_token);
+                                staged = Some((next_token, nr));
+                                next_token += 1;
+                            }
+                            ids.push(req.id);
+                            self.on_arrival(req);
+                        }
+                        other => {
+                            staged = other;
+                            on_timer(&mut self.world, token);
+                            continue;
+                        }
+                    }
+                }
+                Notice::TransferDone(tid) => {
+                    self.poll_wakes();
+                    self.dispatch_transfer(tid.0);
+                }
+                Notice::KernelDone(tag) => self.dispatch_kernel(tag),
+            }
+            self.drain_finished();
+        }
+        ids.iter()
+            .map(|id| self.outcome(*id).expect("missing outcome").clone())
+            .collect()
+    }
+
     /// Outcome of a request served by whichever instance it was routed to.
     pub fn outcome(&self, id: RequestId) -> Option<&RequestOutcome> {
         let i = *self.assignments.get(&id.0)?;
@@ -628,6 +705,69 @@ mod tests {
         f.world.schedule_timer(Time::from_ms(1), 0xBEEF);
         let mut seen = Vec::new();
         let out = f.run_with(
+            vec![Request {
+                cached_prefix_tokens: 0,
+                ..hit(1, 2, 1000, 0)
+            }],
+            |_, tok| seen.push(tok),
+        );
+        assert_eq!(out.len(), 1);
+        assert!(out[0].finished_at.is_some());
+        assert_eq!(seen, vec![0xBEEF]);
+    }
+
+    #[test]
+    fn run_streamed_matches_run_with() {
+        // Same requests through both paths — including a same-timestamp
+        // arrival pair and warm prefix fetches — must produce identical
+        // outcomes, placements, and fetch accounting.
+        let reqs = |t0: Time| {
+            vec![
+                Request {
+                    arrival: t0 + Time::from_ms(5),
+                    ..hit(0, 0, 8192, 9)
+                },
+                Request {
+                    arrival: t0 + Time::from_ms(5),
+                    ..hit(1, 0, 8192, 9)
+                },
+                Request {
+                    arrival: t0 + Time::from_ms(40),
+                    cached_prefix_tokens: 0,
+                    prefix_key: 0,
+                    ..hit(2, 0, 4000, 0)
+                },
+                Request {
+                    arrival: t0 + Time::from_ms(90),
+                    ..hit(3, 0, 8192, 9)
+                },
+            ]
+        };
+        let mut a = fleet(2, true, MmaConfig::native());
+        a.seed_host_prefix(9, 8192);
+        let base = a.run_with(reqs(a.now()), |_, _| {});
+        let mut b = fleet(2, true, MmaConfig::native());
+        b.seed_host_prefix(9, 8192);
+        // Pre-sorted by (arrival, id) — run_streamed's input contract.
+        let streamed = b.run_streamed(reqs(b.now()), |_, _| {});
+        assert_eq!(base.len(), streamed.len());
+        for (x, y) in base.iter().zip(&streamed) {
+            assert_eq!(x.id, y.id, "arrival order == sorted order here");
+            assert_eq!(x.first_token_at, y.first_token_at);
+            assert_eq!(x.finished_at, y.finished_at);
+            assert_eq!(x.ttft.fetch_s, y.ttft.fetch_s);
+        }
+        assert_eq!(a.per_instance_counts(), b.per_instance_counts());
+        assert_eq!(a.fetch_counts(), b.fetch_counts());
+        assert_eq!(a.fetch_bytes(), b.fetch_bytes());
+    }
+
+    #[test]
+    fn run_streamed_hands_foreign_timers_to_the_hook() {
+        let mut f = fleet(1, false, MmaConfig::native());
+        f.world.schedule_timer(Time::from_ms(1), 0xBEEF);
+        let mut seen = Vec::new();
+        let out = f.run_streamed(
             vec![Request {
                 cached_prefix_tokens: 0,
                 ..hit(1, 2, 1000, 0)

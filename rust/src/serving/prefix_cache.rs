@@ -13,11 +13,31 @@
 //! The host tier's occupancy is enforced in bytes through
 //! [`crate::memory::HostPool`], so seeding and offloads can never exceed
 //! the configured pinned-host capacity — over-pressure drops LRU entries.
+//!
+//! # Eviction is O(1), and why the order is pinned
+//!
+//! Both tiers keep recency in a slab-backed intrusive list
+//! ([`crate::util::lru::LruList`]): touch, insert, and evict are O(1),
+//! where the retired implementation scanned every entry per eviction
+//! (`min_by_key` over a use-clock — O(n) per demotion, O(n²) under
+//! sustained pressure). The retired scans are kept verbatim in
+//! [`oracle`], and randomized-churn property tests assert the two
+//! eviction orders are *identical*, not merely equivalent.
+//!
+//! That identity holds because the old order had no real ties to break:
+//! the use-clock ticked on every touch/insert, so every resident entry
+//! carried a unique `last_use` and `min_by_key` was a total order over
+//! strict recency — exactly the list's tail-first order. Map iteration
+//! order never mattered and still doesn't; replay output is byte-for-byte
+//! unchanged. (If a future change ever makes two entries share a
+//! recency slot — e.g. batch seeding without ticks — the order must be
+//! re-pinned explicitly; see `oracle_clock_is_strictly_monotone`.)
 
 use crate::memory::{HostAlloc, HostPool};
 use crate::topology::NumaId;
-use crate::util::rng::Rng;
 use crate::util::fxmap::FxHashMap;
+use crate::util::lru::LruList;
+use crate::util::rng::Rng;
 
 /// Rolling hash of a token prefix (block-aligned chain hash, as LMCache
 /// keys chunks by content).
@@ -40,15 +60,24 @@ pub struct GpuInsert {
     pub evicted: Vec<(u64, u32)>,
 }
 
+/// One resident GPU-tier entry (payload slab parallel to the LRU list).
+#[derive(Debug, Clone, Copy, Default)]
+struct GpuSlot {
+    key: u64,
+    tokens: u32,
+}
+
 /// Prefixes resident in one GPU's KV blocks (per serving instance).
-/// Token-capacity LRU; a hit is zero-copy block sharing.
+/// Token-capacity LRU; a hit is zero-copy block sharing. All operations
+/// O(1) — see the module docs for the eviction-order contract.
 #[derive(Debug)]
 pub struct GpuPrefixTier {
     block_tokens: u32,
     capacity_tokens: u64,
     used: u64,
-    entries: FxHashMap<u64, (u32, u64)>, // key → (tokens, last_use)
-    clock: u64,
+    index: FxHashMap<u64, u32>, // key → LRU slot
+    slots: Vec<GpuSlot>,        // slot → payload
+    lru: LruList,
 }
 
 impl GpuPrefixTier {
@@ -58,14 +87,10 @@ impl GpuPrefixTier {
             block_tokens: block_tokens.max(1),
             capacity_tokens,
             used: 0,
-            entries: FxHashMap::default(),
-            clock: 0,
+            index: FxHashMap::default(),
+            slots: Vec::new(),
+            lru: LruList::new(),
         }
-    }
-
-    fn tick(&mut self) -> u64 {
-        self.clock += 1;
-        self.clock
     }
 
     /// Round tokens up to block granularity.
@@ -73,17 +98,27 @@ impl GpuPrefixTier {
         (tokens as u64).div_ceil(self.block_tokens as u64) * self.block_tokens as u64
     }
 
+    fn set_slot(&mut self, slot: u32, key: u64, tokens: u32) {
+        let s = GpuSlot { key, tokens };
+        if slot as usize == self.slots.len() {
+            self.slots.push(s);
+        } else {
+            self.slots[slot as usize] = s;
+        }
+    }
+
     /// Tokens of a resident prefix, without touching LRU state.
     pub fn peek(&self, key: u64) -> Option<u32> {
-        self.entries.get(&key).map(|(t, _)| *t)
+        self.index
+            .get(&key)
+            .map(|&slot| self.slots[slot as usize].tokens)
     }
 
     /// Refresh a resident prefix's LRU position; false if absent.
     pub fn touch(&mut self, key: u64) -> bool {
-        let now = self.tick();
-        match self.entries.get_mut(&key) {
-            Some(e) => {
-                e.1 = now;
+        match self.index.get(&key) {
+            Some(&slot) => {
+                self.lru.touch(slot);
                 true
             }
             None => false,
@@ -95,9 +130,8 @@ impl GpuPrefixTier {
     /// make room (returned for host offload); a prefix larger than the
     /// whole tier is not inserted (`inserted == false`, nothing evicted).
     pub fn insert(&mut self, key: u64, tokens: u32) -> GpuInsert {
-        let now = self.tick();
-        if let Some(e) = self.entries.get_mut(&key) {
-            e.1 = now;
+        if let Some(&slot) = self.index.get(&key) {
+            self.lru.touch(slot);
             return GpuInsert {
                 inserted: true,
                 evicted: Vec::new(),
@@ -109,18 +143,20 @@ impl GpuPrefixTier {
         }
         let mut evicted = Vec::new();
         while self.used + size > self.capacity_tokens {
-            let lru = self
-                .entries
-                .iter()
-                .min_by_key(|(_, (_, at))| *at)
-                .map(|(k, _)| *k)
+            let victim = self
+                .lru
+                .tail()
                 .expect("used > 0 implies a resident entry");
-            let (t, _) = self.entries.remove(&lru).unwrap();
+            let GpuSlot { key: k, tokens: t } = self.slots[victim as usize];
+            self.lru.remove(victim);
+            self.index.remove(&k);
             self.used -= self.rounded(t);
-            evicted.push((lru, t));
+            evicted.push((k, t));
         }
         self.used += size;
-        self.entries.insert(key, (tokens, now));
+        let slot = self.lru.push_front();
+        self.set_slot(slot, key, tokens);
+        self.index.insert(key, slot);
         GpuInsert {
             inserted: true,
             evicted,
@@ -129,7 +165,9 @@ impl GpuPrefixTier {
 
     /// Remove a prefix (explicit offload); returns its tokens.
     pub fn remove(&mut self, key: u64) -> Option<u32> {
-        let (tokens, _) = self.entries.remove(&key)?;
+        let slot = self.index.remove(&key)?;
+        let tokens = self.slots[slot as usize].tokens;
+        self.lru.remove(slot);
         self.used -= self.rounded(tokens);
         Some(tokens)
     }
@@ -146,34 +184,37 @@ impl GpuPrefixTier {
 
     /// Number of resident prefixes.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.index.len()
     }
 
     /// True when nothing is resident.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.index.is_empty()
     }
 }
 
-#[derive(Debug)]
-struct HostEntry {
+/// One resident host-tier entry (payload slab parallel to the LRU list).
+#[derive(Debug, Clone, Copy)]
+struct HostSlot {
+    key: u64,
     tokens: u32,
     alloc: HostAlloc,
-    last_use: u64,
 }
 
 /// The fleet-shared pinned-host prefix tier. Every byte is accounted
 /// through a [`HostPool`], so occupancy cannot exceed the configured
 /// capacity: inserts under pressure drop LRU entries, and an entry larger
-/// than the whole tier is skipped rather than cached.
+/// than the whole tier is skipped rather than cached. All operations
+/// O(1) — see the module docs for the eviction-order contract.
 #[derive(Debug)]
 pub struct HostPrefixPool {
     block_tokens: u32,
     bytes_per_token: u64,
     numa: NumaId,
     pool: HostPool,
-    entries: FxHashMap<u64, HostEntry>,
-    clock: u64,
+    index: FxHashMap<u64, u32>, // key → LRU slot
+    slots: Vec<HostSlot>,       // slot → payload
+    lru: LruList,
 }
 
 impl HostPrefixPool {
@@ -192,14 +233,10 @@ impl HostPrefixPool {
             bytes_per_token: bpt,
             numa,
             pool: HostPool::new(numa_count.max(1), capacity_tokens.saturating_mul(bpt)),
-            entries: FxHashMap::default(),
-            clock: 0,
+            index: FxHashMap::default(),
+            slots: Vec::new(),
+            lru: LruList::new(),
         }
-    }
-
-    fn tick(&mut self) -> u64 {
-        self.clock += 1;
-        self.clock
     }
 
     fn bytes_for(&self, tokens: u32) -> u64 {
@@ -208,17 +245,22 @@ impl HostPrefixPool {
         (rounded * self.bytes_per_token).max(1)
     }
 
+    fn set_slot(&mut self, slot: u32, s: HostSlot) {
+        if slot as usize == self.slots.len() {
+            self.slots.push(s);
+        } else {
+            self.slots[slot as usize] = s;
+        }
+    }
+
     fn drop_lru(&mut self) -> bool {
-        let Some(k) = self
-            .entries
-            .iter()
-            .min_by_key(|(_, e)| e.last_use)
-            .map(|(k, _)| *k)
-        else {
+        let Some(victim) = self.lru.tail() else {
             return false;
         };
-        let e = self.entries.remove(&k).unwrap();
-        self.pool.free(e.alloc);
+        let HostSlot { key, alloc, .. } = self.slots[victim as usize];
+        self.lru.remove(victim);
+        self.index.remove(&key);
+        self.pool.free(alloc);
         true
     }
 
@@ -226,22 +268,16 @@ impl HostPrefixPool {
     /// backing [`HostPool`], dropping LRU entries under pressure; returns
     /// false when the prefix cannot fit even in an empty tier.
     pub fn insert(&mut self, key: u64, tokens: u32) -> bool {
-        let now = self.tick();
-        if let Some(e) = self.entries.get_mut(&key) {
-            e.last_use = now;
+        if let Some(&slot) = self.index.get(&key) {
+            self.lru.touch(slot);
             return true;
         }
         let bytes = self.bytes_for(tokens);
         loop {
             if let Some(alloc) = self.pool.alloc(self.numa, bytes) {
-                self.entries.insert(
-                    key,
-                    HostEntry {
-                        tokens,
-                        alloc,
-                        last_use: now,
-                    },
-                );
+                let slot = self.lru.push_front();
+                self.set_slot(slot, HostSlot { key, tokens, alloc });
+                self.index.insert(key, slot);
                 return true;
             }
             if !self.drop_lru() {
@@ -252,15 +288,16 @@ impl HostPrefixPool {
 
     /// Tokens of a host-resident prefix, without touching LRU state.
     pub fn peek(&self, key: u64) -> Option<u32> {
-        self.entries.get(&key).map(|e| e.tokens)
+        self.index
+            .get(&key)
+            .map(|&slot| self.slots[slot as usize].tokens)
     }
 
     /// Refresh a host entry's LRU position; false if absent.
     pub fn touch(&mut self, key: u64) -> bool {
-        let now = self.tick();
-        match self.entries.get_mut(&key) {
-            Some(e) => {
-                e.last_use = now;
+        match self.index.get(&key) {
+            Some(&slot) => {
+                self.lru.touch(slot);
                 true
             }
             None => false,
@@ -269,9 +306,11 @@ impl HostPrefixPool {
 
     /// Drop a prefix, freeing its bytes; returns its tokens.
     pub fn remove(&mut self, key: u64) -> Option<u32> {
-        let e = self.entries.remove(&key)?;
-        self.pool.free(e.alloc);
-        Some(e.tokens)
+        let slot = self.index.remove(&key)?;
+        let HostSlot { tokens, alloc, .. } = self.slots[slot as usize];
+        self.lru.remove(slot);
+        self.pool.free(alloc);
+        Some(tokens)
     }
 
     /// Bytes currently pinned (from the backing [`HostPool`] accounting).
@@ -286,12 +325,12 @@ impl HostPrefixPool {
 
     /// Number of cached prefixes.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.index.len()
     }
 
     /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.index.is_empty()
     }
 
     /// Fill with `n` synthetic prefixes of `tokens` each (workload setup).
@@ -306,8 +345,245 @@ impl HostPrefixPool {
     }
 }
 
+/// The retired O(n)-scan tiers, kept verbatim as reference oracles for
+/// the O(1) implementations above. Every operation ticks a strictly
+/// monotone use-clock, so `min_by_key(last_use)` is a total order —
+/// the property that makes the LRU-list rewrite byte-identical (see the
+/// module docs). Used only by property tests; never on a hot path.
+pub mod oracle {
+    use super::*;
+
+    /// The retired scan-eviction GPU tier ([`GpuPrefixTier`]'s oracle).
+    #[derive(Debug)]
+    pub struct ScanGpuTier {
+        block_tokens: u32,
+        capacity_tokens: u64,
+        used: u64,
+        entries: FxHashMap<u64, (u32, u64)>, // key → (tokens, last_use)
+        clock: u64,
+    }
+
+    impl ScanGpuTier {
+        /// Tier of `capacity_tokens` (block-aligned internally).
+        pub fn new(block_tokens: u32, capacity_tokens: u64) -> ScanGpuTier {
+            ScanGpuTier {
+                block_tokens: block_tokens.max(1),
+                capacity_tokens,
+                used: 0,
+                entries: FxHashMap::default(),
+                clock: 0,
+            }
+        }
+
+        fn tick(&mut self) -> u64 {
+            self.clock += 1;
+            self.clock
+        }
+
+        fn rounded(&self, tokens: u32) -> u64 {
+            (tokens as u64).div_ceil(self.block_tokens as u64) * self.block_tokens as u64
+        }
+
+        /// The strictly-monotone use-clock (exposed so tests can pin the
+        /// no-ties invariant the O(1) rewrite relies on).
+        pub fn clock(&self) -> u64 {
+            self.clock
+        }
+
+        /// Tokens of a resident prefix, without touching LRU state.
+        pub fn peek(&self, key: u64) -> Option<u32> {
+            self.entries.get(&key).map(|(t, _)| *t)
+        }
+
+        /// Refresh a resident prefix's LRU position; false if absent.
+        pub fn touch(&mut self, key: u64) -> bool {
+            let now = self.tick();
+            match self.entries.get_mut(&key) {
+                Some(e) => {
+                    e.1 = now;
+                    true
+                }
+                None => false,
+            }
+        }
+
+        /// Insert (or refresh) a prefix; the retired full-scan eviction.
+        pub fn insert(&mut self, key: u64, tokens: u32) -> GpuInsert {
+            let now = self.tick();
+            if let Some(e) = self.entries.get_mut(&key) {
+                e.1 = now;
+                return GpuInsert {
+                    inserted: true,
+                    evicted: Vec::new(),
+                };
+            }
+            let size = self.rounded(tokens);
+            if size > self.capacity_tokens {
+                return GpuInsert::default();
+            }
+            let mut evicted = Vec::new();
+            while self.used + size > self.capacity_tokens {
+                let lru = self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, (_, at))| *at)
+                    .map(|(k, _)| *k)
+                    .expect("used > 0 implies a resident entry");
+                let (t, _) = self.entries.remove(&lru).unwrap();
+                self.used -= self.rounded(t);
+                evicted.push((lru, t));
+            }
+            self.used += size;
+            self.entries.insert(key, (tokens, now));
+            GpuInsert {
+                inserted: true,
+                evicted,
+            }
+        }
+
+        /// Remove a prefix; returns its tokens.
+        pub fn remove(&mut self, key: u64) -> Option<u32> {
+            let (tokens, _) = self.entries.remove(&key)?;
+            self.used -= self.rounded(tokens);
+            Some(tokens)
+        }
+
+        /// Tokens resident (block-aligned accounting).
+        pub fn used_tokens(&self) -> u64 {
+            self.used
+        }
+
+        /// Number of resident prefixes.
+        pub fn len(&self) -> usize {
+            self.entries.len()
+        }
+    }
+
+    #[derive(Debug)]
+    struct ScanHostEntry {
+        tokens: u32,
+        alloc: HostAlloc,
+        last_use: u64,
+    }
+
+    /// The retired scan-eviction host tier ([`HostPrefixPool`]'s oracle).
+    #[derive(Debug)]
+    pub struct ScanHostPool {
+        block_tokens: u32,
+        bytes_per_token: u64,
+        numa: NumaId,
+        pool: HostPool,
+        entries: FxHashMap<u64, ScanHostEntry>,
+        clock: u64,
+    }
+
+    impl ScanHostPool {
+        /// Pool of `capacity_tokens` on `numa` at `bytes_per_token`.
+        pub fn new(
+            block_tokens: u32,
+            capacity_tokens: u64,
+            bytes_per_token: u64,
+            numa_count: u8,
+            numa: NumaId,
+        ) -> ScanHostPool {
+            let bpt = bytes_per_token.max(1);
+            ScanHostPool {
+                block_tokens: block_tokens.max(1),
+                bytes_per_token: bpt,
+                numa,
+                pool: HostPool::new(numa_count.max(1), capacity_tokens.saturating_mul(bpt)),
+                entries: FxHashMap::default(),
+                clock: 0,
+            }
+        }
+
+        fn tick(&mut self) -> u64 {
+            self.clock += 1;
+            self.clock
+        }
+
+        fn bytes_for(&self, tokens: u32) -> u64 {
+            let rounded =
+                (tokens as u64).div_ceil(self.block_tokens as u64) * self.block_tokens as u64;
+            (rounded * self.bytes_per_token).max(1)
+        }
+
+        fn drop_lru(&mut self) -> Option<u64> {
+            let k = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| *k)?;
+            let e = self.entries.remove(&k).unwrap();
+            self.pool.free(e.alloc);
+            Some(k)
+        }
+
+        /// Insert (or refresh) a prefix; the retired full-scan eviction.
+        pub fn insert(&mut self, key: u64, tokens: u32) -> bool {
+            let now = self.tick();
+            if let Some(e) = self.entries.get_mut(&key) {
+                e.last_use = now;
+                return true;
+            }
+            let bytes = self.bytes_for(tokens);
+            loop {
+                if let Some(alloc) = self.pool.alloc(self.numa, bytes) {
+                    self.entries.insert(
+                        key,
+                        ScanHostEntry {
+                            tokens,
+                            alloc,
+                            last_use: now,
+                        },
+                    );
+                    return true;
+                }
+                if self.drop_lru().is_none() {
+                    return false;
+                }
+            }
+        }
+
+        /// Tokens of a host-resident prefix, without touching LRU state.
+        pub fn peek(&self, key: u64) -> Option<u32> {
+            self.entries.get(&key).map(|e| e.tokens)
+        }
+
+        /// Refresh a host entry's LRU position; false if absent.
+        pub fn touch(&mut self, key: u64) -> bool {
+            let now = self.tick();
+            match self.entries.get_mut(&key) {
+                Some(e) => {
+                    e.last_use = now;
+                    true
+                }
+                None => false,
+            }
+        }
+
+        /// Drop a prefix, freeing its bytes; returns its tokens.
+        pub fn remove(&mut self, key: u64) -> Option<u32> {
+            let e = self.entries.remove(&key)?;
+            self.pool.free(e.alloc);
+            Some(e.tokens)
+        }
+
+        /// Bytes currently pinned.
+        pub fn used_bytes(&self) -> u64 {
+            self.pool.used(self.numa)
+        }
+
+        /// Number of cached prefixes.
+        pub fn len(&self) -> usize {
+            self.entries.len()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::oracle::{ScanGpuTier, ScanHostPool};
     use super::*;
 
     fn host(capacity_tokens: u64) -> HostPrefixPool {
@@ -425,5 +701,87 @@ mod tests {
         let keys = h.populate(&mut rng, 8, 100);
         assert_eq!(keys.len(), 8);
         assert_eq!(h.len(), 8);
+    }
+
+    // ----- oracle equivalence (the tentpole's property tests) -----------
+
+    /// Randomized op script both implementations run in lockstep.
+    fn op_script(seed: u64, ops: usize, key_space: u64) -> Vec<(u8, u64, u32)> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..ops)
+            .map(|_| {
+                let op = rng.range_u64(0, 10) as u8; // weighted toward insert
+                let key = rng.range_u64(1, key_space + 1);
+                let tokens = rng.range_u64(1, 2049) as u32;
+                (op, key, tokens)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gpu_tier_matches_scan_oracle_under_randomized_churn() {
+        // Small capacity vs key space ⇒ constant eviction pressure. The
+        // O(1) list and the O(n) scan must agree on *everything*: insert
+        // outcomes (including the exact eviction sequence), touch/peek
+        // results, removal results, and accounting — on every step.
+        for seed in [1u64, 0xfeed, 0xb008] {
+            let mut fast = GpuPrefixTier::new(16, 8 * 1024);
+            let mut slow = ScanGpuTier::new(16, 8 * 1024);
+            for (op, key, tokens) in op_script(seed, 3000, 24) {
+                match op {
+                    0..=5 => {
+                        let a = fast.insert(key, tokens);
+                        let b = slow.insert(key, tokens);
+                        assert_eq!(a.inserted, b.inserted, "seed {seed}");
+                        assert_eq!(a.evicted, b.evicted, "seed {seed}: eviction order");
+                    }
+                    6..=7 => assert_eq!(fast.touch(key), slow.touch(key), "seed {seed}"),
+                    8 => assert_eq!(fast.remove(key), slow.remove(key), "seed {seed}"),
+                    _ => assert_eq!(fast.peek(key), slow.peek(key), "seed {seed}"),
+                }
+                assert_eq!(fast.used_tokens(), slow.used_tokens(), "seed {seed}");
+                assert_eq!(fast.len(), slow.len(), "seed {seed}");
+            }
+            assert!(!fast.is_empty(), "churn should leave residents");
+        }
+    }
+
+    #[test]
+    fn host_pool_matches_scan_oracle_under_randomized_churn() {
+        for seed in [2u64, 0xcafe, 0xb008] {
+            let mut fast = HostPrefixPool::new(16, 8 * 1024, 1, 1, NumaId(0));
+            let mut slow = ScanHostPool::new(16, 8 * 1024, 1, 1, NumaId(0));
+            for (op, key, tokens) in op_script(seed, 3000, 24) {
+                match op {
+                    0..=5 => {
+                        assert_eq!(fast.insert(key, tokens), slow.insert(key, tokens));
+                    }
+                    6..=7 => assert_eq!(fast.touch(key), slow.touch(key), "seed {seed}"),
+                    8 => assert_eq!(fast.remove(key), slow.remove(key), "seed {seed}"),
+                    _ => assert_eq!(fast.peek(key), slow.peek(key), "seed {seed}"),
+                }
+                assert_eq!(fast.used_bytes(), slow.used_bytes(), "seed {seed}");
+                assert_eq!(fast.len(), slow.len(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_clock_is_strictly_monotone() {
+        // The pinned tie-break: the retired scan never had ties to break,
+        // because every touch/insert ticked the clock exactly once —
+        // `last_use` values are unique, so `min_by_key` is a total order
+        // identical to strict recency. This is the invariant that makes
+        // the LRU-list eviction order (and replay output) byte-identical.
+        let mut t = ScanGpuTier::new(16, 1 << 20);
+        let mut last = t.clock();
+        for i in 0..100u64 {
+            t.insert(i + 1, 64);
+            assert_eq!(t.clock(), last + 1, "one tick per op, never reused");
+            last = t.clock();
+            t.touch((i % 7) + 1);
+            assert_eq!(t.clock(), last + 1);
+            last = t.clock();
+        }
     }
 }

@@ -1,0 +1,245 @@
+//! A slab-backed intrusive doubly-linked LRU list: `touch`, `push_front`,
+//! `remove`, and `tail` (the LRU victim) are all O(1).
+//!
+//! The list stores no payload — callers keep their entries in a parallel
+//! `Vec` indexed by the `u32` slot ids this list hands out, and a map from
+//! their own keys to slots. Slots are recycled through a free list, so a
+//! cache that churns at a steady population allocates nothing after
+//! warm-up (the same slab discipline as `util::slab`, specialized to the
+//! recency-order links the prefix tiers need).
+//!
+//! Recency order is the *only* order: the front is the most recently
+//! used slot, the tail the least. Because every `insert`/`touch` moves
+//! exactly one slot to the front, the tail is always the unique LRU
+//! entry — the same total order the retired `min_by_key(last_use)` scan
+//! produced with its strictly monotone use-clock (see
+//! `serving::prefix_cache::oracle` for the retained reference).
+
+/// Sentinel for "no slot".
+const NIL: u32 = u32::MAX;
+
+/// The intrusive list. All operations O(1); memory is O(high-water slots).
+#[derive(Debug, Default, Clone)]
+pub struct LruList {
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    head: u32,
+    tail: u32,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl LruList {
+    /// An empty list.
+    pub fn new() -> LruList {
+        LruList {
+            prev: Vec::new(),
+            next: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Live slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no slot is live.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocate a slot and link it at the front (most recently used).
+    /// Returns the slot id; ids are reused after [`Self::remove`], and a
+    /// fresh id always equals the previous slot high-water mark (so a
+    /// parallel payload `Vec` can `push` exactly when `id == vec.len()`).
+    pub fn push_front(&mut self) -> u32 {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                let s = self.prev.len() as u32;
+                assert!(s < NIL, "LruList slot ids exhausted");
+                self.prev.push(NIL);
+                self.next.push(NIL);
+                s
+            }
+        };
+        self.link_front(slot);
+        self.len += 1;
+        slot
+    }
+
+    /// Move a live slot to the front (most recently used).
+    pub fn touch(&mut self, slot: u32) {
+        if self.head == slot {
+            return;
+        }
+        self.unlink(slot);
+        self.link_front(slot);
+    }
+
+    /// Unlink a live slot and recycle its id.
+    pub fn remove(&mut self, slot: u32) {
+        self.unlink(slot);
+        self.free.push(slot);
+        self.len -= 1;
+    }
+
+    /// The least recently used slot (`None` when empty).
+    pub fn tail(&self) -> Option<u32> {
+        if self.tail == NIL {
+            None
+        } else {
+            Some(self.tail)
+        }
+    }
+
+    /// The most recently used slot (`None` when empty).
+    pub fn front(&self) -> Option<u32> {
+        if self.head == NIL {
+            None
+        } else {
+            Some(self.head)
+        }
+    }
+
+    /// Slots from most to least recently used (test/debug aid; O(len)).
+    pub fn iter(&self) -> LruIter<'_> {
+        LruIter {
+            list: self,
+            at: self.head,
+        }
+    }
+
+    fn link_front(&mut self, slot: u32) {
+        let s = slot as usize;
+        self.prev[s] = NIL;
+        self.next[s] = self.head;
+        if self.head != NIL {
+            self.prev[self.head as usize] = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    fn unlink(&mut self, slot: u32) {
+        let s = slot as usize;
+        let (p, n) = (self.prev[s], self.next[s]);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        self.prev[s] = NIL;
+        self.next[s] = NIL;
+    }
+}
+
+/// Iterator over slots, most recently used first.
+pub struct LruIter<'a> {
+    list: &'a LruList,
+    at: u32,
+}
+
+impl Iterator for LruIter<'_> {
+    type Item = u32;
+    fn next(&mut self) -> Option<u32> {
+        if self.at == NIL {
+            return None;
+        }
+        let s = self.at;
+        self.at = self.list.next[s as usize];
+        Some(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn push_touch_evict_order() {
+        let mut l = LruList::new();
+        let a = l.push_front();
+        let b = l.push_front();
+        let c = l.push_front();
+        assert_eq!(l.tail(), Some(a));
+        l.touch(a); // order now a, c, b
+        assert_eq!(l.tail(), Some(b));
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![a, c, b]);
+        l.remove(b);
+        assert_eq!(l.tail(), Some(c));
+        l.remove(c);
+        assert_eq!(l.tail(), Some(a));
+        assert_eq!(l.front(), Some(a));
+        l.remove(a);
+        assert!(l.is_empty());
+        assert_eq!(l.tail(), None);
+    }
+
+    #[test]
+    fn slots_are_recycled_not_grown() {
+        let mut l = LruList::new();
+        let a = l.push_front();
+        let b = l.push_front();
+        l.remove(a);
+        let c = l.push_front();
+        assert_eq!(c, a, "freed slot reused");
+        assert_eq!(l.len(), 2);
+        let d = l.push_front();
+        assert_eq!(d as usize, 2, "fresh ids extend the slab in order");
+        let _ = b;
+    }
+
+    #[test]
+    fn touching_the_front_is_a_noop() {
+        let mut l = LruList::new();
+        let a = l.push_front();
+        let b = l.push_front();
+        l.touch(b);
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![b, a]);
+    }
+
+    #[test]
+    fn randomized_order_matches_vec_model() {
+        // Model: a Vec kept in recency order (front = MRU). Every list op
+        // must agree with the model after arbitrary interleavings.
+        let mut l = LruList::new();
+        let mut model: Vec<u32> = Vec::new();
+        let mut rng = Rng::seed_from_u64(0x10b);
+        for _ in 0..4000 {
+            match rng.range_u64(0, 3) {
+                0 => {
+                    let s = l.push_front();
+                    model.insert(0, s);
+                }
+                1 if !model.is_empty() => {
+                    let i = rng.range_u64(0, model.len() as u64) as usize;
+                    let s = model.remove(i);
+                    l.touch(s);
+                    model.insert(0, s);
+                }
+                2 if !model.is_empty() => {
+                    let i = rng.range_u64(0, model.len() as u64) as usize;
+                    let s = model.remove(i);
+                    l.remove(s);
+                }
+                _ => {}
+            }
+            assert_eq!(l.len(), model.len());
+            assert_eq!(l.tail(), model.last().copied());
+        }
+        assert_eq!(l.iter().collect::<Vec<_>>(), model);
+    }
+}

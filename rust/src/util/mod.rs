@@ -6,6 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod fmt;
 pub mod fxmap;
+pub mod lru;
 pub mod par;
 pub mod rng;
 pub mod slab;

@@ -7,6 +7,9 @@
 //! * [`gen`] — trace generators: Poisson / MMPP-bursty / diurnal
 //!   arrivals, multi-tenant mixes with Zipf document popularity, and
 //!   model-switch schedules.
+//! * [`stream`] — line-streaming trace ingestion with a bounded-lookahead
+//!   arrival merge, so replay holds O(window) records instead of the
+//!   whole trace.
 //! * [`intern`] — u32 symbol table for model/tenant names, so replay hot
 //!   loops compare integers instead of hashing strings.
 //! * this module — the original in-process helpers: multi-turn QA
@@ -16,10 +19,12 @@
 
 pub mod gen;
 pub mod intern;
+pub mod stream;
 pub mod trace;
 
 pub use gen::{model_switch_trace, ArrivalProcess, TenantSpec, TraceGen};
 pub use intern::{Sym, SymbolTable};
+pub use stream::{open_trace, ArrivalMerger, TraceReader, TraceScan};
 pub use trace::{Trace, TraceRecord, TRACE_VERSION};
 
 use crate::serving::{Request, RequestId};

@@ -1,0 +1,444 @@
+//! Streaming trace ingestion: parse JSONL records line-by-line off any
+//! [`BufRead`] and merge near-sorted arrivals through a bounded
+//! lookahead window, so replaying a trace holds O(window) records in
+//! memory instead of materializing — and sorting — the whole file the
+//! way [`Trace::load`] + [`Trace::requests`] do.
+//!
+//! # The bounded-lookahead merge
+//!
+//! Generated traces are near-sorted by construction (diurnal/MMPP
+//! generators emit in arrival order; multi-tenant interleaving displaces
+//! records by at most a burst). [`ArrivalMerger`] exploits that: it
+//! holds a min-heap of at most `window + 1` records keyed by
+//! `(arrival, file_index)` — **exactly** the `(r.arrival, r.id.0)` key
+//! the fleet's materialized path sorts by, with arrivals compared as
+//! quantized [`Time`] values, not raw `f64` seconds — and emits the
+//! minimum whenever the heap exceeds the window. If no record is
+//! displaced by more than `window` positions, the emitted sequence is
+//! globally sorted and replay is byte-identical to the materialized
+//! path.
+//!
+//! # The spill path
+//!
+//! A bounded merger cannot repair disorder it has already emitted past,
+//! so disorder is detected *up front*: [`scan`] makes a cheap first pass
+//! (file-order, O(window) + O(distinct prefixes) memory) that simulates
+//! the merge on sort keys alone and reports whether the window suffices.
+//! When it does not — or when a consumer needs random access, like
+//! `--follow-switches`' model-boundary scan — callers fall back to the
+//! documented spill path: materialize via [`Trace::load`] and take the
+//! O(trace) memory cost. Same bytes out either way; only peak memory
+//! differs.
+
+use std::collections::BinaryHeap;
+use std::io::BufRead;
+
+use super::trace::{
+    header_version, parse_object, record_from_fields, Trace, TraceRecord, TRACE_VERSION,
+};
+use crate::sim::Time;
+use crate::util::fxmap::FxHashMap;
+
+/// Streaming JSONL trace parser over any [`BufRead`]. Yields records in
+/// file order, reusing one line buffer; errors carry the same 1-based
+/// line numbers and messages as [`Trace::parse`].
+pub struct TraceReader<R: BufRead> {
+    inner: R,
+    line: String,
+    lineno: usize,
+    saw_header: bool,
+    done: bool,
+}
+
+impl<R: BufRead> TraceReader<R> {
+    /// Stream records from `inner` (header validated on first line).
+    pub fn new(inner: R) -> TraceReader<R> {
+        TraceReader {
+            inner,
+            line: String::new(),
+            lineno: 0,
+            saw_header: false,
+            done: false,
+        }
+    }
+
+    /// High-water capacity of the reused line buffer, bytes.
+    pub fn line_buffer_bytes(&self) -> u64 {
+        self.line.capacity() as u64
+    }
+
+    fn fail(&mut self, e: String) -> Option<Result<TraceRecord, String>> {
+        self.done = true;
+        Some(Err(format!("line {}: {e}", self.lineno)))
+    }
+}
+
+impl<R: BufRead> Iterator for TraceReader<R> {
+    type Item = Result<TraceRecord, String>;
+
+    fn next(&mut self) -> Option<Result<TraceRecord, String>> {
+        if self.done {
+            return None;
+        }
+        loop {
+            self.line.clear();
+            match self.inner.read_line(&mut self.line) {
+                Ok(0) => {
+                    self.done = true;
+                    if !self.saw_header {
+                        return Some(Err(format!(
+                            "missing trace header (expected {{\"mma_trace\": {TRACE_VERSION}}})"
+                        )));
+                    }
+                    return None;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(format!("read: {e}")));
+                }
+            }
+            self.lineno += 1;
+            let line = self.line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields = match parse_object(line) {
+                Ok(f) => f,
+                Err(e) => return self.fail(e),
+            };
+            if !self.saw_header {
+                let version = match header_version(&fields) {
+                    Ok(v) => v,
+                    Err(e) => return self.fail(e),
+                };
+                if version != TRACE_VERSION as u64 {
+                    return self.fail(format!(
+                        "unsupported trace version {version} \
+                         (this build reads {TRACE_VERSION})"
+                    ));
+                }
+                self.saw_header = true;
+                continue;
+            }
+            return match record_from_fields(fields) {
+                Ok(r) => Some(Ok(r)),
+                Err(e) => self.fail(e),
+            };
+        }
+    }
+}
+
+/// Open a trace file for streaming (buffered; errors match
+/// [`Trace::load`]'s `read {path:?}: ...` form).
+pub fn open_trace(
+    path: &str,
+) -> Result<TraceReader<std::io::BufReader<std::fs::File>>, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    Ok(TraceReader::new(std::io::BufReader::new(f)))
+}
+
+/// A record waiting in the merge window, ordered by the fleet's sort key.
+struct Pending {
+    key: (Time, u64), // (arrival, file index) — the materialized sort key
+    rec: TraceRecord,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Pending) -> bool {
+        self.key == other.key
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Pending) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Pending) -> std::cmp::Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want the minimum key.
+        other.key.cmp(&self.key)
+    }
+}
+
+/// Bounded-lookahead arrival merge: push records in file order, receive
+/// them in `(arrival, file_index)` order as long as no record is
+/// displaced by more than `window` positions (guaranteed when a prior
+/// [`scan`] reported `sorted_within_window`). Holds at most
+/// `window + 1` records; tracks its own peak footprint.
+pub struct ArrivalMerger {
+    window: usize,
+    heap: BinaryHeap<Pending>,
+    held_bytes: u64,
+    peak_entries: usize,
+    peak_bytes: u64,
+}
+
+fn record_bytes(r: &TraceRecord) -> u64 {
+    (std::mem::size_of::<Pending>() + r.model.capacity()) as u64
+}
+
+impl ArrivalMerger {
+    /// Merger holding at most `window + 1` records (window 0 = pass-through).
+    pub fn new(window: usize) -> ArrivalMerger {
+        ArrivalMerger {
+            window,
+            heap: BinaryHeap::with_capacity(window + 2),
+            held_bytes: 0,
+            peak_entries: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Offer the next file-order record (`seq` = 0-based file index, the
+    /// replay request id). Returns an emitted record once the window is
+    /// full.
+    pub fn push(&mut self, seq: u64, rec: TraceRecord) -> Option<(u64, TraceRecord)> {
+        self.held_bytes += record_bytes(&rec);
+        self.heap.push(Pending {
+            key: (Time::from_secs_f64(rec.arrival_s), seq),
+            rec,
+        });
+        self.peak_entries = self.peak_entries.max(self.heap.len());
+        self.peak_bytes = self.peak_bytes.max(self.held_bytes);
+        if self.heap.len() > self.window {
+            return self.pop();
+        }
+        None
+    }
+
+    /// Drain one record after input is exhausted (sorted order).
+    pub fn pop(&mut self) -> Option<(u64, TraceRecord)> {
+        let p = self.heap.pop()?;
+        self.held_bytes -= record_bytes(&p.rec);
+        Some((p.key.1, p.rec))
+    }
+
+    /// Most records ever held at once (≤ `window + 1`).
+    pub fn peak_entries(&self) -> usize {
+        self.peak_entries
+    }
+
+    /// Peak bytes of held records (struct + model-string storage).
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+}
+
+/// What one cheap file-order pass learns about a trace — everything
+/// replay needs *before* streaming requests into the fleet.
+#[derive(Debug, Clone, Default)]
+pub struct TraceScan {
+    /// Records the replay will consume (after any `max_requests` cap).
+    pub requests: usize,
+    /// Last arrival among consumed records, seconds.
+    pub duration_s: f64,
+    /// Pre-seeded host-tier prefixes, identical to
+    /// [`Trace::warm_prefixes`] on the consumed records.
+    pub warm: Vec<(u32, u64, u32)>,
+    /// True when a `window`-bounded merge emits the consumed records in
+    /// globally sorted order — i.e. the streaming path is exact. False
+    /// means the caller must take the materialize-and-sort spill path.
+    pub sorted_within_window: bool,
+}
+
+/// First pass over a trace: count (capped at `max_requests`), duration,
+/// warm prefixes, and whether the reorder `window` suffices. Memory is
+/// O(window) for the merge simulation plus O(distinct prefix keys) for
+/// the warm-prefix map — never O(trace).
+pub fn scan<R: BufRead>(
+    reader: TraceReader<R>,
+    max_requests: Option<usize>,
+    window: usize,
+) -> Result<TraceScan, String> {
+    let cap = max_requests.unwrap_or(usize::MAX);
+    let mut out = TraceScan {
+        sorted_within_window: true,
+        ..TraceScan::default()
+    };
+    // (tenant, key) → first appearance by the stable-sort order
+    // (arrival, file index), carrying its cached-token claim.
+    let mut first: FxHashMap<(u32, u64), (f64, u64, u32)> = FxHashMap::default();
+    // The merge simulated on sort keys alone.
+    let mut keys: BinaryHeap<std::cmp::Reverse<(Time, u64)>> = BinaryHeap::new();
+    let mut last_emitted: Option<(Time, u64)> = None;
+    let mut check = |k: (Time, u64), last: &mut Option<(Time, u64)>, ok: &mut bool| {
+        if last.is_some_and(|l| k < l) {
+            *ok = false;
+        }
+        *last = Some(k);
+    };
+    for (seq, rec) in reader.enumerate() {
+        if seq >= cap {
+            break;
+        }
+        let rec = rec?;
+        out.requests += 1;
+        out.duration_s = out.duration_s.max(rec.arrival_s);
+        if rec.prefix_key != 0 {
+            let at = (rec.arrival_s, seq as u64, rec.cached_prefix_tokens);
+            first
+                .entry((rec.tenant, rec.prefix_key))
+                .and_modify(|cur| {
+                    if at.0.total_cmp(&cur.0).then(at.1.cmp(&cur.1)).is_lt() {
+                        *cur = at;
+                    }
+                })
+                .or_insert(at);
+        }
+        keys.push(std::cmp::Reverse((
+            Time::from_secs_f64(rec.arrival_s),
+            seq as u64,
+        )));
+        if keys.len() > window {
+            let std::cmp::Reverse(k) = keys.pop().unwrap();
+            check(k, &mut last_emitted, &mut out.sorted_within_window);
+        }
+    }
+    while let Some(std::cmp::Reverse(k)) = keys.pop() {
+        check(k, &mut last_emitted, &mut out.sorted_within_window);
+    }
+    // Warm prefixes in the materialized order: stable sort by arrival
+    // (ties by file position), first appearance wins, cold firsts drop.
+    let mut warm: Vec<(f64, u64, u32, u64, u32)> = first
+        .into_iter()
+        .filter(|(_, (_, _, cached))| *cached > 0)
+        .map(|((tenant, key), (t, seq, cached))| (t, seq, tenant, key, cached))
+        .collect();
+    warm.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    out.warm = warm.into_iter().map(|(_, _, t, k, c)| (t, k, c)).collect();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn reader(text: &str) -> TraceReader<Cursor<&[u8]>> {
+        TraceReader::new(Cursor::new(text.as_bytes()))
+    }
+
+    fn rec(t: f64, key: u64, cached: u32) -> TraceRecord {
+        TraceRecord {
+            arrival_s: t,
+            prompt_tokens: 1024,
+            output_tokens: 8,
+            prefix_key: key,
+            cached_prefix_tokens: cached,
+            tenant: 0,
+            model: String::new(),
+            class: None,
+        }
+    }
+
+    #[test]
+    fn streaming_parse_matches_materialized() {
+        let t = Trace {
+            records: vec![rec(0.5, 7, 0), rec(0.25, 9, 512), rec(1.0, 0, 0)],
+        };
+        let text = t.render();
+        let streamed: Result<Vec<_>, _> = reader(&text).collect();
+        assert_eq!(streamed.unwrap(), t.records);
+    }
+
+    #[test]
+    fn streaming_errors_match_trace_parse() {
+        // Same messages, same line numbers, for every failure mode.
+        for text in [
+            "",                                                  // no header
+            "{\"mma_trace\": 2}\n",                              // bad version
+            "{\"t\": 0.0, \"prompt\": 8, \"output\": 1}\n",      // record first
+            "{\"mma_trace\": 1}\nnot json\n",                    // malformed line
+            "{\"mma_trace\": 1}\n{\"t\": 0.0, \"prompt\": 8}\n", // missing field
+        ] {
+            let want = Trace::parse(text).unwrap_err();
+            let got = reader(text)
+                .collect::<Result<Vec<_>, _>>()
+                .expect_err(text);
+            assert_eq!(got, want, "for {text:?}");
+        }
+    }
+
+    #[test]
+    fn merger_sorts_within_window() {
+        // Displacements of 1-2 positions; window 2 suffices.
+        let arrivals = [0.1, 0.0, 0.3, 0.2, 0.5, 0.4];
+        let mut m = ArrivalMerger::new(2);
+        let mut out = Vec::new();
+        for (seq, &t) in arrivals.iter().enumerate() {
+            if let Some((s, r)) = m.push(seq as u64, rec(t, 0, 0)) {
+                out.push((s, r.arrival_s));
+            }
+        }
+        while let Some((s, r)) = m.pop() {
+            out.push((s, r.arrival_s));
+        }
+        let sorted: Vec<f64> = out.iter().map(|(_, t)| *t).collect();
+        assert_eq!(sorted, vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5]);
+        // Sequence numbers come along for request ids.
+        assert_eq!(out[0].0, 1);
+        assert!(m.peak_entries() <= 3, "window+1 bound: {}", m.peak_entries());
+        assert!(m.peak_bytes() > 0);
+    }
+
+    #[test]
+    fn merger_ties_resolve_by_file_order() {
+        // Equal arrivals must emit in file order — the fleet's sort key.
+        let mut m = ArrivalMerger::new(4);
+        let mut out = Vec::new();
+        for seq in 0..4u64 {
+            if let Some((s, _)) = m.push(seq, rec(1.0, 0, 0)) {
+                out.push(s);
+            }
+        }
+        while let Some((s, _)) = m.pop() {
+            out.push(s);
+        }
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn scan_reports_counts_warm_and_window() {
+        let t = Trace {
+            records: vec![
+                rec(0.5, 7, 512), // warm (first appearance, cached)
+                rec(0.25, 9, 0),  // cold first appearance of 9
+                rec(1.0, 9, 256), // later claim of 9: NOT warm
+                rec(2.0, 0, 0),
+            ],
+        };
+        let s = scan(reader(&t.render()), None, 2).unwrap();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.duration_s, 2.0);
+        assert_eq!(s.warm, t.warm_prefixes());
+        assert_eq!(s.warm, vec![(0, 7, 512)]);
+        assert!(s.sorted_within_window, "displacement 1 fits window 2");
+        // Window 0 cannot fix any disorder.
+        let s0 = scan(reader(&t.render()), None, 0).unwrap();
+        assert!(!s0.sorted_within_window);
+        // The cap truncates exactly like `Trace::truncated`.
+        let s1 = scan(reader(&t.render()), Some(2), 2).unwrap();
+        assert_eq!(s1.requests, 2);
+        assert_eq!(s1.duration_s, 0.5);
+        assert_eq!(s1.warm, t.truncated(2).warm_prefixes());
+    }
+
+    #[test]
+    fn scan_detects_window_violation() {
+        // One record displaced 3 positions; window 2 is insufficient,
+        // window 3 is enough.
+        let t = Trace {
+            records: vec![rec(1.0, 0, 0), rec(2.0, 0, 0), rec(3.0, 0, 0), rec(0.5, 0, 0)],
+        };
+        assert!(!scan(reader(&t.render()), None, 2).unwrap().sorted_within_window);
+        assert!(scan(reader(&t.render()), None, 3).unwrap().sorted_within_window);
+    }
+
+    #[test]
+    fn open_trace_error_mentions_path() {
+        let e = open_trace("/nonexistent/trace.jsonl").unwrap_err();
+        assert!(e.contains("/nonexistent/trace.jsonl"), "{e}");
+    }
+}

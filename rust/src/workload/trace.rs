@@ -181,41 +181,18 @@ impl Trace {
     /// already claims a cached prefix — state a previous session left in
     /// the host tier, which replay must seed before running.
     pub fn warm_prefixes(&self) -> Vec<(u32, u64, u32)> {
-        let mut seen = std::collections::HashSet::new();
-        let mut out = Vec::new();
-        let mut by_time: Vec<&TraceRecord> = self.records.iter().collect();
-        by_time.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
-        for r in by_time {
-            // `insert` must run for every first appearance (cold ones
-            // too), so it sits in the chain ahead of the cached check.
-            if r.prefix_key != 0
-                && seen.insert((r.tenant, r.prefix_key))
-                && r.cached_prefix_tokens > 0
-            {
-                out.push((r.tenant, r.prefix_key, r.cached_prefix_tokens));
-            }
-        }
-        out
+        warm_prefixes_of(&self.records)
     }
 
     /// Distinct model ids in arrival order of first appearance (empty
     /// string = the default model).
     pub fn models(&self) -> Vec<String> {
-        let mut out: Vec<String> = Vec::new();
-        for r in &self.records {
-            if !out.contains(&r.model) {
-                out.push(r.model.clone());
-            }
-        }
-        out
+        models_of(&self.records)
     }
 
     /// Trace duration: the last arrival, seconds.
     pub fn duration_s(&self) -> f64 {
-        self.records
-            .iter()
-            .map(|r| r.arrival_s)
-            .fold(0.0, f64::max)
+        duration_of(&self.records)
     }
 
     /// Mean offered rate over the trace span, requests/second.
@@ -248,6 +225,44 @@ impl Trace {
     }
 }
 
+/// Slice form of [`Trace::warm_prefixes`]: replay works on
+/// `&trace.records[..n]` directly (no per-record clone for `--max`).
+/// Order: stable sort by arrival — ties resolve by file position — then
+/// first appearance per `(tenant, key)`.
+pub fn warm_prefixes_of(records: &[TraceRecord]) -> Vec<(u32, u64, u32)> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    let mut by_time: Vec<&TraceRecord> = records.iter().collect();
+    by_time.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    for r in by_time {
+        // `insert` must run for every first appearance (cold ones
+        // too), so it sits in the chain ahead of the cached check.
+        if r.prefix_key != 0
+            && seen.insert((r.tenant, r.prefix_key))
+            && r.cached_prefix_tokens > 0
+        {
+            out.push((r.tenant, r.prefix_key, r.cached_prefix_tokens));
+        }
+    }
+    out
+}
+
+/// Slice form of [`Trace::duration_s`]: the last arrival, seconds.
+pub fn duration_of(records: &[TraceRecord]) -> f64 {
+    records.iter().map(|r| r.arrival_s).fold(0.0, f64::max)
+}
+
+/// Slice form of [`Trace::models`].
+pub fn models_of(records: &[TraceRecord]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for r in records {
+        if !out.contains(&r.model) {
+            out.push(r.model.clone());
+        }
+    }
+    out
+}
+
 /// Shortest-roundtrip float rendering (Rust's `{:?}` guarantees the
 /// printed form parses back to the identical bits).
 fn format_f64(x: f64) -> String {
@@ -271,7 +286,7 @@ fn render_str(s: &str, out: &mut String) {
 /// One parsed JSON scalar. Integers stay exact (`u64`), never routed
 /// through `f64`.
 #[derive(Debug, Clone, PartialEq)]
-enum JsonValue {
+pub(crate) enum JsonValue {
     /// Unsigned integer (exact).
     UInt(u64),
     /// Float.
@@ -301,8 +316,9 @@ impl JsonValue {
 
 /// Parse one flat JSON object (`{"k": v, ...}`). Strict about everything
 /// the format does not need: no nesting, no arrays, no null, no duplicate
-/// keys, no negative numbers.
-fn parse_object(line: &str) -> Result<Vec<(String, JsonValue)>, String> {
+/// keys, no negative numbers. Shared with the line-streaming reader in
+/// [`crate::workload::stream`].
+pub(crate) fn parse_object(line: &str) -> Result<Vec<(String, JsonValue)>, String> {
     let b = line.as_bytes();
     let mut i = 0usize;
     let skip_ws = |i: &mut usize| {
@@ -418,7 +434,7 @@ fn parse_value(line: &str, i: &mut usize) -> Result<JsonValue, String> {
     }
 }
 
-fn header_version(fields: &[(String, JsonValue)]) -> Result<u64, String> {
+pub(crate) fn header_version(fields: &[(String, JsonValue)]) -> Result<u64, String> {
     if fields.len() != 1 || fields[0].0 != "mma_trace" {
         return Err(format!(
             "first line must be the header {{\"mma_trace\": {TRACE_VERSION}}}"
@@ -430,7 +446,9 @@ fn header_version(fields: &[(String, JsonValue)]) -> Result<u64, String> {
         .ok_or_else(|| "header version must be an integer".to_string())
 }
 
-fn record_from_fields(fields: Vec<(String, JsonValue)>) -> Result<TraceRecord, String> {
+pub(crate) fn record_from_fields(
+    fields: Vec<(String, JsonValue)>,
+) -> Result<TraceRecord, String> {
     let mut r = TraceRecord {
         arrival_s: f64::NAN,
         prompt_tokens: 0,

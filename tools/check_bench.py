@@ -8,14 +8,20 @@ Handles both bench documents the `mma bench hotpath` invocation emits
   (baseline `BENCH_0006_hotpath.json`)
 * `mma-bench-engine/1` — the BENCH_0007 allocation-free engine leg
   (baseline `BENCH_0007_engine.json`, written via `--out-engine`)
+* `mma-bench-serving/1` — the BENCH_0008 serving-cycle leg: LRU
+  prefix-tier churn, streaming-histogram record rate, and the
+  bounded-window streamed replay path
+  (baseline `BENCH_0008_serving.json`, written via `--out-serving`)
 
 Two duties, split by baseline provenance:
 
 1. Schema validation — always. The fresh report must match its schema's
    document shape, its replay must be flagged deterministic, the
    incremental allocator must have done zero full re-solves while the
-   reference did at least one, and (engine schema) the engine's steady
-   state must have allocated nothing.
+   reference did at least one, (engine schema) the engine's steady
+   state must have allocated nothing, and (serving schema) the streamed
+   replay must have rendered identically to the materialized oracle
+   without spilling.
 2. Regression gate — only when the baseline's `provenance` is
    `"measured"`. CI machines are noisy, so the gate is deliberately
    loose: fail only if a throughput figure fell below HALF the baseline
@@ -33,9 +39,11 @@ import sys
 
 SCHEMA_HOTPATH = "mma-bench-hotpath/1"
 SCHEMA_ENGINE = "mma-bench-engine/1"
+SCHEMA_SERVING = "mma-bench-serving/1"
 DEFAULT_BASELINES = {
     SCHEMA_HOTPATH: "BENCH_0006_hotpath.json",
     SCHEMA_ENGINE: "BENCH_0007_engine.json",
+    SCHEMA_SERVING: "BENCH_0008_serving.json",
 }
 # Throughput may drop to 1/REGRESSION_FACTOR of baseline before failing.
 REGRESSION_FACTOR = 2.0
@@ -118,6 +126,26 @@ def check_engine_schema(doc: dict, path: str) -> None:
     check_replay(doc, path)
 
 
+def check_serving_schema(doc: dict, path: str) -> None:
+    srv = doc.get("serving")
+    if not isinstance(srv, dict):
+        fail(f"{path}: missing serving object")
+    for k in ("lru_ops_per_sec", "hist_records_per_sec", "requests_per_sec"):
+        v = srv.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            fail(f"{path}: serving.{k} = {v!r} (want a positive number)")
+    for k in ("hist_bins", "requests", "peak_tracked_bytes"):
+        if not isinstance(srv.get(k), int) or srv[k] <= 0:
+            fail(f"{path}: serving.{k} = {srv.get(k)!r} (want a positive int)")
+    # The BENCH_0008 acceptance criteria, on every report regardless of
+    # provenance: the streamed replay renders byte-identically to the
+    # materialized oracle and never spills on the sorted bench trace.
+    if srv.get("streaming_identical") is not True:
+        fail(f"{path}: serving.streaming_identical is {srv.get('streaming_identical')!r}")
+    if srv.get("spilled") is not False:
+        fail(f"{path}: serving.spilled is {srv.get('spilled')!r} (must be false)")
+
+
 def check_schema(doc: dict, path: str, schema: str) -> None:
     if doc.get("schema") != schema:
         fail(f"{path}: schema {doc.get('schema')!r} != {schema!r}")
@@ -125,6 +153,8 @@ def check_schema(doc: dict, path: str, schema: str) -> None:
         fail(f"{path}: bad provenance {doc.get('provenance')!r}")
     if schema == SCHEMA_HOTPATH:
         check_hotpath_schema(doc, path)
+    elif schema == SCHEMA_SERVING:
+        check_serving_schema(doc, path)
     else:
         check_engine_schema(doc, path)
 
@@ -132,6 +162,11 @@ def check_schema(doc: dict, path: str, schema: str) -> None:
 def throughput_figures(doc: dict, schema: str) -> dict:
     if schema == SCHEMA_HOTPATH:
         return {f"events_per_sec.{k}": doc["events_per_sec"][k] for k in EVENTS_KEYS}
+    if schema == SCHEMA_SERVING:
+        return {
+            f"serving.{k}": doc["serving"][k]
+            for k in ("lru_ops_per_sec", "hist_records_per_sec", "requests_per_sec")
+        }
     return {"engine.chunks_per_sec": doc["engine"]["chunks_per_sec"]}
 
 
