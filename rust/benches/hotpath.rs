@@ -84,4 +84,9 @@ fn main() {
     // histogram, and the bounded-window streamed replay vs its oracle.
     println!("\n== mma::perf::run_serving_bench ==");
     print!("{}", mma::perf::run_serving_bench(false).render());
+
+    // The BENCH_0009 fabric leg: chunked churn through the O(due) event
+    // loop — solve coalescing, lazy due heaps, interned paths.
+    println!("\n== mma::perf::run_fabric_bench ==");
+    print!("{}", mma::perf::run_fabric_bench(false).render());
 }

@@ -402,6 +402,7 @@ fn apply_mma(m: &mut MmaConfig, table: &BTreeMap<String, TomlValue>) -> Result<(
             ("dual_pipeline", TomlValue::Bool(b)) => m.dual_pipeline = *b,
             ("centralized_dispatch", TomlValue::Bool(b)) => m.centralized_dispatch = *b,
             ("incremental_alloc", TomlValue::Bool(b)) => m.incremental_alloc = *b,
+            ("coalesce_solves", TomlValue::Bool(b)) => m.coalesce_solves = *b,
             ("activation_ns", TomlValue::Int(i)) => m.activation_ns = *i as u64,
             ("contention_beta", TomlValue::Float(f)) => m.contention_beta = *f,
             ("contention_beta", TomlValue::Int(i)) => m.contention_beta = *i as f64,
@@ -749,6 +750,7 @@ mod tests {
             relay_gpus = [1, 2, 3]
             contention_beta = 2.5
             incremental_alloc = false
+            coalesce_solves = false
 
             [serving]
             kv_block_tokens = 16
@@ -767,6 +769,7 @@ mod tests {
             Some(vec![GpuId(1), GpuId(2), GpuId(3)])
         );
         assert!(!cfg.mma.incremental_alloc);
+        assert!(!cfg.mma.coalesce_solves);
         assert_eq!(cfg.serving.tp, 4);
         assert!(!cfg.serving.pd_disaggregation);
         assert_eq!(cfg.serving.arrival_rate_rps, 2.5);

@@ -352,6 +352,14 @@ impl ComponentSolver {
     /// [`result`](Self::result); they are bit-identical to the
     /// corresponding entries of a full [`max_min_rates_weighted`] solve
     /// over the same live flow set.
+    ///
+    /// The kernel is *memoryless*: rates depend only on capacities and
+    /// the component's membership (canonicalized to ascending slot
+    /// order by [`collect`](Self::collect)), never on previously
+    /// assigned rates. That property is what lets the fabric coalesce a
+    /// whole same-timestamp join/leave cascade into one solve — the
+    /// merged batch yields the same bits as solving each sub-batch in
+    /// sequence, because the intermediate rates leave no trace.
     pub fn solve_collected<'a>(
         &mut self,
         capacity: &[f64],

@@ -738,6 +738,24 @@ mod tests {
     }
 
     #[test]
+    fn coalesce_solves_matches_eager_to_the_byte() {
+        // The solve-coalescing analogue of the incremental-allocator
+        // constraint: deferring same-timestamp fabric recomputes to one
+        // batch solve must produce byte-identical replay output through
+        // the full stack (fleet, engines, QoS, prefix fetches).
+        let shape = ArrivalProcess::bursty(20.0, 0.9, 2.0);
+        let mut eager = MmaConfig::default();
+        eager.coalesce_solves = false;
+        let coal = figure_cell(shape.clone(), 8_192, 4, 40, 2, MmaConfig::default(), SEED);
+        let eag = figure_cell(shape, 8_192, 4, 40, 2, eager, SEED);
+        assert_eq!(
+            coal.render(),
+            eag.render(),
+            "solve coalescing changed simulation output"
+        );
+    }
+
+    #[test]
     fn sleep_all_records_on_demand_wakes() {
         let gen = TraceGen {
             arrivals: ArrivalProcess::Poisson { rate_rps: 10.0 },

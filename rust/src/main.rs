@@ -20,7 +20,8 @@
 //!               [--ctx T] [--suffix T] [--output-tokens T] [--seed N]
 //!               [--warm-start] [--switch-models m1,m2 --phase S]
 //! mma bench hotpath [--fast] [--json] [--out FILE] [--out-engine FILE]
-//!                   [--out-serving FILE]   hot-path perf harness (docs/PERF.md)
+//!                   [--out-serving FILE] [--out-fabric FILE]
+//!                                          hot-path perf harness (docs/PERF.md)
 //! mma config-check <file.toml>            validate a config file
 //! ```
 //!
@@ -460,7 +461,7 @@ fn main() {
             if args.pos(1) != Some("hotpath") {
                 eprintln!(
                     "usage: mma bench hotpath [--fast] [--json] [--out FILE] \
-                     [--out-engine FILE] [--out-serving FILE]"
+                     [--out-engine FILE] [--out-serving FILE] [--out-fabric FILE]"
                 );
                 std::process::exit(2);
             }
@@ -510,14 +511,44 @@ fn main() {
                 });
                 eprintln!("wrote {path}");
             }
+            // The BENCH_0009 fabric leg: chunked churn through the
+            // O(due) event loop, with the coalescing and zero-alloc
+            // bars enforced here.
+            let fabric = mma::perf::run_fabric_bench(fast);
+            if !fabric.fabric.coalesced_identical {
+                eprintln!("FATAL: coalesced and eager fabric runs diverged");
+                std::process::exit(1);
+            }
+            if fabric.fabric.alloc_growth != 0 {
+                eprintln!(
+                    "FATAL: steady-state flow starts allocated ({} container growths)",
+                    fabric.fabric.alloc_growth
+                );
+                std::process::exit(1);
+            }
+            if fabric.fabric.solves_per_event >= 1.0 {
+                eprintln!(
+                    "FATAL: solve coalescing collapsed no cascades ({:.3} solves/event)",
+                    fabric.fabric.solves_per_event
+                );
+                std::process::exit(1);
+            }
+            if let Some(path) = args.get("out-fabric") {
+                std::fs::write(path, fabric.to_json()).unwrap_or_else(|e| {
+                    eprintln!("--out-fabric {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("wrote {path}");
+            }
             if args.flag("json") {
                 print!("{}", report.to_json());
             } else {
                 print!(
-                    "{}{}{}",
+                    "{}{}{}{}",
                     report.render(),
                     engine.render(),
-                    serving.render()
+                    serving.render(),
+                    fabric.render()
                 );
             }
         }

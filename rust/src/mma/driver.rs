@@ -10,7 +10,7 @@ use super::transfer_task::{
     SubmitKind, TransferClass, TransferDesc, TransferRec, TransferState, NUM_CLASSES,
 };
 use super::{MmaConfig, QosConfig};
-use crate::fabric::{Fabric, FlowDone};
+use crate::fabric::{Fabric, FlowDone, PathId};
 use crate::gpusim::{Action, GpuSim, StreamId, StreamTask, TransferId};
 use crate::sim::{EventQueue, Time};
 use crate::topology::{Direction, GpuId, Topology};
@@ -114,7 +114,9 @@ pub struct Sample {
 /// A background copy loop: back-to-back DMA on a fixed path (emulating
 /// third-party traffic such as NIC DMA or a co-running native app).
 struct BgLoop {
-    path: SmallPath,
+    /// Interned route: each iteration restarts the flow by id, so
+    /// steady-state background traffic allocates nothing.
+    path: PathId,
     bytes: u64,
     remaining: u64,
     class: TransferClass,
@@ -167,7 +169,9 @@ impl SimWorld {
     /// configured by `cfg`.
     pub fn new(topo: Topology, cfg: MmaConfig) -> SimWorld {
         let n = topo.gpu_count();
-        let fabric = Fabric::new(&topo).with_incremental(cfg.incremental_alloc);
+        let fabric = Fabric::new(&topo)
+            .with_incremental(cfg.incremental_alloc)
+            .with_coalesce(cfg.coalesce_solves);
         let qos = cfg.qos;
         SimWorld {
             fabric,
@@ -399,7 +403,8 @@ impl SimWorld {
         repeat: u64,
         class: TransferClass,
     ) -> u32 {
-        let path = path.into();
+        let path: SmallPath = path.into();
+        let path = self.fabric.intern_path(&path);
         let id = self.bg.len() as u32;
         let latency = Time::from_ns(self.topo.lat.dma_setup_ns);
         self.bg.push(BgLoop {
@@ -581,9 +586,9 @@ impl SimWorld {
                     lp.remaining -= 1;
                     let class = lp.class;
                     let t = tag::pack(class.id(), tag::KIND_BG, 0, id);
-                    let (path, bytes, latency) = (lp.path.clone(), lp.bytes, lp.latency);
+                    let (path, bytes, latency) = (lp.path, lp.bytes, lp.latency);
                     let (w, cap) = (self.qos.weight(class), self.qos.cap(class));
-                    self.fabric.start_flow_qos(now, &path, bytes, latency, t, w, cap);
+                    self.fabric.start_flow_path(now, path, bytes, latency, t, w, cap);
                 }
             }
             Ev::Timer { token } => {

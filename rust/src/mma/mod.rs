@@ -156,6 +156,13 @@ pub struct MmaConfig {
     /// output is byte-identical either way (the replay determinism test
     /// pins this); the flag exists for benchmarking and as the oracle leg.
     pub incremental_alloc: bool,
+    /// Timestamp-cascade solve coalescing: defer fabric rate recomputes
+    /// within one virtual instant so a completion → replacement-chunk
+    /// cascade settles under a single solve. `false` selects eager
+    /// per-event solving — simulation output is byte-identical either
+    /// way (property-tested); the flag exists for benchmarking and as
+    /// the oracle leg.
+    pub coalesce_solves: bool,
 }
 
 impl Default for MmaConfig {
@@ -175,6 +182,7 @@ impl Default for MmaConfig {
             contention_beta: 2.5,
             qos: QosConfig::default(),
             incremental_alloc: true,
+            coalesce_solves: true,
         }
     }
 }

@@ -27,10 +27,16 @@
 //! serving cycle ([`run_serving_bench`], `mma-bench-serving/1`) — LRU
 //! prefix-tier churn, streaming-histogram record rate, and the
 //! bounded-window streamed replay path, each cross-checked against its
-//! exact/materialized oracle in the same invocation.
+//! exact/materialized oracle in the same invocation. `BENCH_0009`
+//! ([`run_fabric_bench`], `mma-bench-fabric/1`) measures the O(due)
+//! fabric event loop under heavy chunked churn: events per second with
+//! solve coalescing, the solves-per-event ratio (must stay below 1.0 —
+//! cascades demonstrably collapse), the zero-flow-start-allocs
+//! invariant on the interned-path fast path, and a coalesced-vs-eager
+//! completion-stream identity check.
 
 use crate::config::FleetConfig;
-use crate::fabric::{self, Fabric, FabricStats};
+use crate::fabric::{self, Fabric, FabricStats, FlowDone};
 use crate::figures::workload_replay::{replay, replay_serving, replay_streamed, ReplayOptions};
 use crate::gpusim::TransferId;
 use crate::metrics::LogHistogram;
@@ -329,6 +335,152 @@ pub fn run_serving_bench_with(
             streaming_identical,
             spilled,
         },
+    }
+}
+
+/// The fabric-event-loop leg of `BENCH_0009`: chunked churn through the
+/// O(due) fabric, with every acceptance bar encoded in the report.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricCycle {
+    /// Fabric events (activations + completions) per wall-clock second
+    /// on the coalesced churn scenario.
+    pub events_per_sec: f64,
+    /// Events in one deterministic churn run (`2 × lanes × chunks`).
+    pub events_total: u64,
+    /// Rate recomputes the coalesced run performed.
+    pub solves: u64,
+    /// `solves / events_total` — must stay below 1.0: coalescing folds
+    /// every completion → same-instant replacement cascade into one
+    /// solve.
+    pub solves_per_event: f64,
+    /// Recompute requests that were deferred instead of solved eagerly.
+    pub deferred_solves: u64,
+    /// Deferred requests that folded into an already-pending batch — the
+    /// solves the cascade actually saved.
+    pub cascade_events: u64,
+    /// Fabric container growths after warm-up — **must be 0**: the
+    /// interned-path flow-start path allocates nothing in steady state.
+    pub alloc_growth: u64,
+    /// Whether the coalesced and eager runs produced identical
+    /// completion streams (tag and time, in order) — **must be true**.
+    pub coalesced_identical: bool,
+}
+
+/// Everything the `BENCH_0009` fabric bench measures.
+#[derive(Debug, Clone)]
+pub struct FabricReport {
+    /// Fast mode (smaller budgets/workloads; CI smoke).
+    pub fast: bool,
+    /// The fabric-event-loop measurements.
+    pub fabric: FabricCycle,
+}
+
+/// Run the `BENCH_0009` fabric bench (`mma bench hotpath --out-fabric`).
+pub fn run_fabric_bench(fast: bool) -> FabricReport {
+    let budget = if fast {
+        Duration::from_millis(120)
+    } else {
+        Duration::from_millis(600)
+    };
+    let chunks = if fast { 32 } else { 128 };
+    run_fabric_bench_with(fast, budget, chunks)
+}
+
+/// [`run_fabric_bench`] with explicit knobs (tests use tiny budgets).
+pub fn run_fabric_bench_with(fast: bool, budget: Duration, chunks: u64) -> FabricReport {
+    let lanes = 8;
+    // Deterministic leg: the coalesced and eager twins must produce the
+    // same completion stream, and the coalesced run's counters carry the
+    // solves-per-event and zero-alloc acceptance bars.
+    let coal = fabric_churn(true, lanes, chunks);
+    let eager = fabric_churn(false, lanes, chunks);
+    let coalesced_identical = coal.completions == eager.completions;
+    let events_total = coal.events;
+    let solves = coal.stats.recomputes;
+    // Timed leg: repeat the coalesced churn within the budget.
+    let t0 = Instant::now();
+    let mut timed_events = 0u64;
+    while t0.elapsed() < budget {
+        let run = fabric_churn(true, lanes, chunks);
+        timed_events += run.events;
+        black_box(run.completions);
+    }
+    let events_per_sec = timed_events as f64 / t0.elapsed().as_secs_f64();
+    FabricReport {
+        fast,
+        fabric: FabricCycle {
+            events_per_sec,
+            events_total,
+            solves,
+            solves_per_event: solves as f64 / events_total.max(1) as f64,
+            deferred_solves: coal.stats.deferred_solves,
+            cascade_events: coal.stats.cascade_events,
+            alloc_growth: coal.alloc_growth,
+            coalesced_identical,
+        },
+    }
+}
+
+/// One churn run's observables.
+struct ChurnRun {
+    completions: Vec<(u64, Time)>,
+    stats: FabricStats,
+    /// Container growths after the warm-up waves.
+    alloc_growth: u64,
+    /// Activations + completions over the whole run.
+    events: u64,
+}
+
+/// The `BENCH_0009` scenario: `lanes` contending H2D lanes (one socket,
+/// so every lane shares the DRAM-read link and the switch uplinks),
+/// each carrying `chunks` back-to-back copies restarted with zero
+/// latency at the completion instant — the completion → replacement
+/// cascade an engine generates at every chunk boundary. Chunk sizes are
+/// staggered per lane so boundaries disturb (and restore) neighbour
+/// rates instead of completing in symmetric lock-step.
+fn fabric_churn(coalesce: bool, lanes: usize, chunks: u64) -> ChurnRun {
+    let topo = h20x8();
+    let mut f = Fabric::new(&topo).with_coalesce(coalesce);
+    let pids: Vec<_> = (0..lanes)
+        .map(|g| f.intern_path(&topo.h2d_direct(NumaId(0), GpuId((g % 8) as u8))))
+        .collect();
+    let chunk_bytes = |lane: usize| 5_000_000 + 4096 * lane as u64;
+    let warm_done = chunks.min(8) * lanes as u64;
+    let mut left = vec![chunks.saturating_sub(1); lanes];
+    let mut completions = Vec::new();
+    let mut done_buf: Vec<FlowDone> = Vec::new();
+    let mut now = Time::ZERO;
+    for (lane, &pid) in pids.iter().enumerate() {
+        let b = chunk_bytes(lane);
+        f.start_flow_path(now, pid, b, Time::ZERO, lane as u64, 1.0, f64::INFINITY);
+    }
+    let mut alloc_base = None;
+    loop {
+        done_buf.clear();
+        f.poll_into(now, &mut done_buf);
+        for k in 0..done_buf.len() {
+            let d = done_buf[k];
+            completions.push((d.tag, d.finished));
+            let lane = (d.tag % lanes as u64) as usize;
+            if left[lane] > 0 {
+                left[lane] -= 1;
+                let (tag, b) = (d.tag + lanes as u64, chunk_bytes(lane));
+                f.start_flow_path(now, pids[lane], b, Time::ZERO, tag, 1.0, f64::INFINITY);
+            }
+        }
+        if alloc_base.is_none() && completions.len() as u64 >= warm_done {
+            alloc_base = Some(f.start_alloc_growth());
+        }
+        match f.next_event_time() {
+            Some(t) => now = now.max(t),
+            None => break,
+        }
+    }
+    ChurnRun {
+        completions,
+        stats: f.stats(),
+        alloc_growth: f.start_alloc_growth() - alloc_base.unwrap_or(0),
+        events: 2 * lanes as u64 * chunks,
     }
 }
 
@@ -789,6 +941,60 @@ impl ServingReport {
     }
 }
 
+impl FabricReport {
+    /// The `mma-bench-fabric/1` JSON document (stable key order; see
+    /// `docs/PERF.md` for the schema).
+    pub fn to_json(&self) -> String {
+        let c = &self.fabric;
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"mma-bench-fabric/1\",\n");
+        s.push_str("  \"bench\": \"BENCH_0009\",\n");
+        s.push_str("  \"provenance\": \"measured\",\n");
+        s.push_str(&format!("  \"fast\": {},\n", self.fast));
+        s.push_str("  \"fabric\": {\n");
+        s.push_str(&format!(
+            "    \"events_per_sec\": {},\n",
+            jnum(c.events_per_sec, 1)
+        ));
+        s.push_str(&format!("    \"events_total\": {},\n", c.events_total));
+        s.push_str(&format!("    \"solves\": {},\n", c.solves));
+        s.push_str(&format!(
+            "    \"solves_per_event\": {},\n",
+            jnum(c.solves_per_event, 4)
+        ));
+        s.push_str(&format!(
+            "    \"deferred_solves\": {},\n",
+            c.deferred_solves
+        ));
+        s.push_str(&format!("    \"cascade_events\": {},\n", c.cascade_events));
+        s.push_str(&format!("    \"alloc_growth\": {},\n", c.alloc_growth));
+        s.push_str(&format!(
+            "    \"coalesced_identical\": {}\n",
+            c.coalesced_identical
+        ));
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable summary (the fabric leg of `mma bench hotpath`).
+    pub fn render(&self) -> String {
+        let c = &self.fabric;
+        format!(
+            "fabric churn    {:>12.0} events/s, {:.3} solves/event \
+             ({} deferred, {} cascades folded), {} steady-state allocs, \
+             coalesced identical: {}\n",
+            c.events_per_sec,
+            c.solves_per_event,
+            c.deferred_solves,
+            c.cascade_events,
+            c.alloc_growth,
+            c.coalesced_identical,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -901,6 +1107,50 @@ mod tests {
             "\"peak_tracked_bytes\"",
             "\"streaming_identical\": true",
             "\"spilled\": false",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+        assert!(!r.render().is_empty());
+    }
+
+    #[test]
+    fn fabric_bench_holds_the_coalescing_bars() {
+        // Tiny budget: harness correctness, not a measurement. The
+        // acceptance bars live here — coalescing must fold cascades
+        // (solves-per-event < 1), steady-state flow starts must not
+        // allocate, and the coalesced run must match eager exactly.
+        let r = run_fabric_bench_with(true, Duration::from_millis(5), 24);
+        let c = r.fabric;
+        assert!(c.coalesced_identical, "coalesced and eager runs diverged");
+        assert_eq!(c.alloc_growth, 0, "steady-state flow starts allocated");
+        assert!(
+            c.solves_per_event < 1.0,
+            "cascades did not collapse: {c:?}"
+        );
+        assert!(c.cascade_events > 0, "no cascade was folded: {c:?}");
+        assert!(c.deferred_solves > 0);
+        assert!(c.events_per_sec > 0.0);
+        assert_eq!(c.events_total, 2 * 8 * 24);
+    }
+
+    #[test]
+    fn fabric_json_has_stable_schema_keys() {
+        let r = run_fabric_bench_with(true, Duration::from_millis(2), 12);
+        let j = r.to_json();
+        for key in [
+            "\"schema\": \"mma-bench-fabric/1\"",
+            "\"bench\": \"BENCH_0009\"",
+            "\"provenance\": \"measured\"",
+            "\"events_per_sec\"",
+            "\"events_total\"",
+            "\"solves\"",
+            "\"solves_per_event\"",
+            "\"deferred_solves\"",
+            "\"cascade_events\"",
+            "\"alloc_growth\": 0",
+            "\"coalesced_identical\": true",
         ] {
             assert!(j.contains(key), "missing {key} in:\n{j}");
         }

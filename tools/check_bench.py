@@ -12,6 +12,11 @@ Handles both bench documents the `mma bench hotpath` invocation emits
   prefix-tier churn, streaming-histogram record rate, and the
   bounded-window streamed replay path
   (baseline `BENCH_0008_serving.json`, written via `--out-serving`)
+* `mma-bench-fabric/1` — the BENCH_0009 O(due) fabric event loop:
+  chunked-churn events/s, the solves-per-event ratio (coalescing must
+  keep it below 1.0), the zero-flow-start-allocs invariant, and the
+  coalesced-vs-eager completion-stream identity
+  (baseline `BENCH_0009_fabric.json`, written via `--out-fabric`)
 
 Two duties, split by baseline provenance:
 
@@ -40,10 +45,12 @@ import sys
 SCHEMA_HOTPATH = "mma-bench-hotpath/1"
 SCHEMA_ENGINE = "mma-bench-engine/1"
 SCHEMA_SERVING = "mma-bench-serving/1"
+SCHEMA_FABRIC = "mma-bench-fabric/1"
 DEFAULT_BASELINES = {
     SCHEMA_HOTPATH: "BENCH_0006_hotpath.json",
     SCHEMA_ENGINE: "BENCH_0007_engine.json",
     SCHEMA_SERVING: "BENCH_0008_serving.json",
+    SCHEMA_FABRIC: "BENCH_0009_fabric.json",
 }
 # Throughput may drop to 1/REGRESSION_FACTOR of baseline before failing.
 REGRESSION_FACTOR = 2.0
@@ -146,6 +153,35 @@ def check_serving_schema(doc: dict, path: str) -> None:
         fail(f"{path}: serving.spilled is {srv.get('spilled')!r} (must be false)")
 
 
+def check_fabric_schema(doc: dict, path: str) -> None:
+    fab = doc.get("fabric")
+    if not isinstance(fab, dict):
+        fail(f"{path}: missing fabric object")
+    v = fab.get("events_per_sec")
+    if not isinstance(v, (int, float)) or v <= 0:
+        fail(f"{path}: fabric.events_per_sec = {v!r} (want a positive number)")
+    for k in ("events_total", "solves", "deferred_solves", "cascade_events"):
+        if not isinstance(fab.get(k), int) or fab[k] <= 0:
+            fail(f"{path}: fabric.{k} = {fab.get(k)!r} (want a positive int)")
+    # The BENCH_0009 acceptance criteria, on every report regardless of
+    # provenance: coalescing demonstrably collapses same-timestamp
+    # cascades, steady-state flow starts never allocate, and the
+    # coalesced run matches eager solving exactly.
+    spe = fab.get("solves_per_event")
+    if not isinstance(spe, (int, float)) or not 0 < spe < 1.0:
+        fail(f"{path}: fabric.solves_per_event = {spe!r} (must be in (0, 1))")
+    if fab.get("alloc_growth") != 0:
+        fail(
+            f"{path}: fabric.alloc_growth = {fab.get('alloc_growth')!r} "
+            f"(the zero-alloc bar is 0)"
+        )
+    if fab.get("coalesced_identical") is not True:
+        fail(
+            f"{path}: fabric.coalesced_identical is "
+            f"{fab.get('coalesced_identical')!r}"
+        )
+
+
 def check_schema(doc: dict, path: str, schema: str) -> None:
     if doc.get("schema") != schema:
         fail(f"{path}: schema {doc.get('schema')!r} != {schema!r}")
@@ -155,6 +191,8 @@ def check_schema(doc: dict, path: str, schema: str) -> None:
         check_hotpath_schema(doc, path)
     elif schema == SCHEMA_SERVING:
         check_serving_schema(doc, path)
+    elif schema == SCHEMA_FABRIC:
+        check_fabric_schema(doc, path)
     else:
         check_engine_schema(doc, path)
 
@@ -167,6 +205,8 @@ def throughput_figures(doc: dict, schema: str) -> dict:
             f"serving.{k}": doc["serving"][k]
             for k in ("lru_ops_per_sec", "hist_records_per_sec", "requests_per_sec")
         }
+    if schema == SCHEMA_FABRIC:
+        return {"fabric.events_per_sec": doc["fabric"]["events_per_sec"]}
     return {"engine.chunks_per_sec": doc["engine"]["chunks_per_sec"]}
 
 
