@@ -1,0 +1,18 @@
+//! TTFT / TPOT vs batch size × prefill chunk × context under the
+//! batch-aware H20 roofline — the continuous-batching memory-wall sweep
+//! (decode step time grows with aggregate KV bytes, prefill stays
+//! roughly flat per token). Same table as `mma figure batching`.
+//!
+//! `--fast` (or `MMA_FAST_BENCH`) shrinks the sweep for smoke runs; the
+//! sweep is deterministic (all arrivals at t=0), so there is no seed.
+
+use mma::figures::batching;
+use mma::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fast = args.flag("fast") || std::env::var("MMA_FAST_BENCH").is_ok();
+    println!("=== Continuous batching: TTFT/TPOT vs batch x chunk x context ===");
+    let t = batching(fast);
+    t.print();
+}

@@ -89,4 +89,9 @@ fn main() {
     // loop — solve coalescing, lazy due heaps, interned paths.
     println!("\n== mma::perf::run_fabric_bench ==");
     print!("{}", mma::perf::run_fabric_bench(false).render());
+
+    // The BENCH_0010 batching leg: roofline-priced fused steps with the
+    // memory-wall and legacy-oracle identity bars.
+    println!("\n== mma::perf::run_batching_bench ==");
+    print!("{}", mma::perf::run_batching_bench(false).render());
 }

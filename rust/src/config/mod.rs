@@ -14,6 +14,63 @@ use crate::serving::router::RoutePolicy;
 use crate::topology::{GpuId, Preset, Topology};
 use std::collections::BTreeMap;
 
+/// Which model the serving instances derive kernel durations from
+/// (`[compute] source`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeSource {
+    /// Per-request costs exactly as the seed scheduler priced them: the
+    /// batch-aware [`crate::serving::Compute`] methods fall through to
+    /// their per-request defaults, so output is byte-identical to
+    /// pre-`[compute]` runs.
+    Legacy,
+    /// The H20 roofline ([`crate::roofline::GpuRoofline`]): prefill legs
+    /// are compute-bound, decode steps stream `weights + Σ KV(context_i)`
+    /// over HBM bandwidth — step time responds to batch composition.
+    Roofline,
+}
+
+impl ComputeSource {
+    /// Parse the `[compute] source` / `MMA_COMPUTE` spellings.
+    pub fn parse(s: &str) -> Option<ComputeSource> {
+        match s.to_ascii_lowercase().as_str() {
+            "legacy" | "fixed" => Some(ComputeSource::Legacy),
+            "roofline" | "h20" => Some(ComputeSource::Roofline),
+            _ => None,
+        }
+    }
+
+    /// The config-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeSource::Legacy => "legacy",
+            ComputeSource::Roofline => "roofline",
+        }
+    }
+}
+
+/// Continuous-batching knobs (`[batching]` section). Off (the default)
+/// the per-request seed scheduler runs untouched — byte-identical
+/// output; on, the instance forms fused iteration-level steps (chunked
+/// prefill interleaved with the whole decode batch, join/leave at step
+/// boundaries).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchingConfig {
+    /// Master switch for iteration-level continuous batching.
+    pub enabled: bool,
+    /// Chunked-prefill chunk size, tokens per step; 0 schedules each
+    /// prefill whole (no chunking).
+    pub chunk_tokens: u32,
+}
+
+impl Default for BatchingConfig {
+    fn default() -> Self {
+        BatchingConfig {
+            enabled: false,
+            chunk_tokens: 0,
+        }
+    }
+}
+
 /// Serving-layer knobs.
 #[derive(Clone, Debug)]
 pub struct ServingConfig {
@@ -42,6 +99,10 @@ pub struct ServingConfig {
     /// prefill (serialized); >1 pipelines the fetch with prefill compute
     /// (prefill starts once the first chunk lands).
     pub fetch_chunks: u32,
+    /// Kernel-duration source (the `[compute]` TOML section).
+    pub compute: ComputeSource,
+    /// Continuous-batching knobs (the `[batching]` TOML section).
+    pub batching: BatchingConfig,
 }
 
 impl Default for ServingConfig {
@@ -57,6 +118,8 @@ impl Default for ServingConfig {
             arrival_rate_rps: 0.0,
             max_concurrency: 0,
             fetch_chunks: 1,
+            compute: ComputeSource::Legacy,
+            batching: BatchingConfig::default(),
         }
     }
 }
@@ -264,6 +327,8 @@ impl RunConfig {
                 "policy" => apply_policy(&mut cfg.mma, table)?,
                 "qos" => apply_qos(&mut cfg.mma, table)?,
                 "serving" => apply_serving(&mut cfg.serving, table)?,
+                "compute" => apply_compute(&mut cfg.serving, table)?,
+                "batching" => apply_batching(&mut cfg.serving.batching, table)?,
                 "fleet" => apply_fleet(&mut cfg.fleet, table)?,
                 "workload" => apply_workload(&mut cfg.workload, table)?,
                 "metrics" => apply_metrics(&mut cfg.metrics, table)?,
@@ -299,8 +364,11 @@ impl RunConfig {
     /// `MMA_FLOW_CONTROL`, `MMA_DISABLE`), plus `MMA_POLICY` naming a
     /// transfer policy (see [`PolicySpec::parse`]), `MMA_QOS`
     /// (`on`/`off`) toggling the QoS transfer classes, `MMA_TRACE`
-    /// naming the default replay trace, and `MMA_WORKLOAD` naming the
-    /// generator arrival shape (`poisson`/`bursty`/`diurnal`).
+    /// naming the default replay trace, `MMA_WORKLOAD` naming the
+    /// generator arrival shape (`poisson`/`bursty`/`diurnal`),
+    /// `MMA_COMPUTE` (`legacy`/`roofline`) selecting the kernel-duration
+    /// source, and `MMA_BATCHING` (`on`/`off`) / `MMA_CHUNK_TOKENS`
+    /// driving the continuous-batching section.
     pub fn apply_env(&mut self) {
         let get = |k: &str| std::env::var(k).ok();
         if let Some(v) = get("MMA_CHUNK_SIZE") {
@@ -348,6 +416,26 @@ impl RunConfig {
             let v = v.to_ascii_lowercase();
             if matches!(v.as_str(), "poisson" | "bursty" | "mmpp" | "diurnal") {
                 self.workload.arrivals = v;
+            }
+        }
+        if let Some(v) = get("MMA_COMPUTE") {
+            // Same stance as MMA_POLICY: an unknown source changes
+            // nothing rather than silently reverting to legacy costs.
+            if let Some(src) = ComputeSource::parse(&v) {
+                self.serving.compute = src;
+            }
+        }
+        if let Some(v) = get("MMA_BATCHING") {
+            match v.to_ascii_lowercase().as_str() {
+                "on" | "1" | "true" | "yes" => self.serving.batching.enabled = true,
+                "off" | "0" | "false" | "no" => self.serving.batching.enabled = false,
+                _ => {}
+            }
+        }
+        if let Some(v) = get("MMA_CHUNK_TOKENS") {
+            // Unparseable values change nothing (0 is valid: no chunking).
+            if let Ok(n) = v.trim().parse::<u32>() {
+                self.serving.batching.chunk_tokens = n;
             }
         }
         if let Some(v) = get("MMA_JOBS") {
@@ -706,6 +794,49 @@ fn apply_metrics(m: &mut MetricsConfig, table: &BTreeMap<String, TomlValue>) -> 
                     .map_err(|_| format!("key {k:?}: {i} out of range (0..=4294967295)"))?;
             }
             _ => return Err(format!("unknown or mistyped key {k:?} in [metrics]")),
+        }
+    }
+    Ok(())
+}
+
+/// `[compute]` section: the kernel-duration source.
+///
+/// ```text
+/// [compute]
+/// source = "roofline"       # legacy | roofline
+/// ```
+fn apply_compute(s: &mut ServingConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("source", TomlValue::Str(name)) => {
+                s.compute = ComputeSource::parse(name)
+                    .ok_or_else(|| format!("unknown compute source {name:?} (legacy | roofline)"))?;
+            }
+            ("source", _) => return bad(k, "string"),
+            _ => return Err(format!("unknown or mistyped key {k:?} in [compute]")),
+        }
+    }
+    Ok(())
+}
+
+/// `[batching]` section: iteration-level continuous batching.
+///
+/// ```text
+/// [batching]
+/// enabled = true            # off = the per-request seed scheduler
+/// chunk_tokens = 512        # chunked-prefill step size (0 = whole prompt)
+/// ```
+fn apply_batching(b: &mut BatchingConfig, table: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+    for (k, v) in table {
+        match (k.as_str(), v) {
+            ("enabled", TomlValue::Bool(x)) => b.enabled = *x,
+            ("enabled", _) => return bad(k, "bool"),
+            ("chunk_tokens", TomlValue::Int(i)) => {
+                b.chunk_tokens = u32::try_from(*i)
+                    .map_err(|_| format!("key {k:?}: {i} out of range (0..=4294967295)"))?;
+            }
+            ("chunk_tokens", _) => return bad(k, "integer"),
+            _ => return Err(format!("unknown or mistyped key {k:?} in [batching]")),
         }
     }
     Ok(())
@@ -1118,6 +1249,64 @@ mod tests {
         std::env::remove_var("MMA_RELAY_GPUS");
         std::env::remove_var("MMA_FLOW_CONTROL");
         std::env::remove_var("MMA_POLICY");
+    }
+
+    #[test]
+    fn compute_and_batching_sections_parse() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [compute]
+            source = "roofline"
+
+            [batching]
+            enabled = true
+            chunk_tokens = 512
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serving.compute, ComputeSource::Roofline);
+        assert!(cfg.serving.batching.enabled);
+        assert_eq!(cfg.serving.batching.chunk_tokens, 512);
+        // Defaults are the byte-identity pair: legacy costs, batching off.
+        let d = RunConfig::default().serving;
+        assert_eq!(d.compute, ComputeSource::Legacy);
+        assert!(!d.batching.enabled);
+        assert_eq!(d.batching.chunk_tokens, 0);
+        // Spelling aliases.
+        assert_eq!(ComputeSource::parse("h20"), Some(ComputeSource::Roofline));
+        assert_eq!(ComputeSource::parse("fixed"), Some(ComputeSource::Legacy));
+        assert_eq!(ComputeSource::Roofline.name(), "roofline");
+        // Rejections: unknown source, mistyped keys, unknown keys,
+        // negative chunk sizes.
+        assert!(RunConfig::from_toml("[compute]\nsource = \"gpu\"").is_err());
+        assert!(RunConfig::from_toml("[compute]\nsource = 1").is_err());
+        assert!(RunConfig::from_toml("[compute]\nnope = 1").is_err());
+        assert!(RunConfig::from_toml("[batching]\nenabled = 1").is_err());
+        assert!(RunConfig::from_toml("[batching]\nchunk_tokens = -1").is_err());
+        assert!(RunConfig::from_toml("[batching]\nnope = true").is_err());
+    }
+
+    #[test]
+    fn compute_and_batching_env_overrides() {
+        std::env::set_var("MMA_COMPUTE", "roofline");
+        std::env::set_var("MMA_BATCHING", "on");
+        std::env::set_var("MMA_CHUNK_TOKENS", "256");
+        let mut cfg = RunConfig::default();
+        cfg.apply_env();
+        assert_eq!(cfg.serving.compute, ComputeSource::Roofline);
+        assert!(cfg.serving.batching.enabled);
+        assert_eq!(cfg.serving.batching.chunk_tokens, 256);
+        // Junk values change nothing (MMA_POLICY stance).
+        std::env::set_var("MMA_COMPUTE", "abacus");
+        std::env::set_var("MMA_BATCHING", "maybe");
+        std::env::set_var("MMA_CHUNK_TOKENS", "lots");
+        cfg.apply_env();
+        assert_eq!(cfg.serving.compute, ComputeSource::Roofline);
+        assert!(cfg.serving.batching.enabled);
+        assert_eq!(cfg.serving.batching.chunk_tokens, 256);
+        std::env::remove_var("MMA_COMPUTE");
+        std::env::remove_var("MMA_BATCHING");
+        std::env::remove_var("MMA_CHUNK_TOKENS");
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! The continuous-batching sweep (ISSUE 10): TTFT / TPOT versus batch
+//! size × prefill chunk size × context, with step durations priced by
+//! the batch-aware H20 roofline ([`crate::roofline::GpuRoofline`]).
+//!
+//! The point of the figure is the memory-wall signature the paper's §5
+//! TTFT/TPOT claims rest on ("Mind the Memory Gap", "AI and Memory
+//! Wall"): each decode iteration streams `weights + Σ KV(context_i)`
+//! over HBM, so decode step time grows with the batch's aggregate KV
+//! bytes, while prefill — compute-bound above the roofline crossover —
+//! stays roughly flat per token no matter how the batch is composed.
+//! Every cell is a deterministic simulation (no RNG: arrivals are all at
+//! t=0), so the table is byte-stable.
+
+use crate::config::{BatchingConfig, ComputeSource, ServingConfig};
+use crate::mma::{MmaConfig, SimWorld};
+use crate::models::qwen_7b_chat;
+use crate::serving::{compute_from, Request, RequestId, ServingFleet, StepRecord};
+use crate::sim::Time;
+use crate::topology::{h20x8, NumaId};
+use crate::util::table::Table;
+
+/// One sweep cell: `batch` identical cold requests of `context` prompt
+/// tokens served to completion under continuous batching.
+#[derive(Clone, Debug)]
+pub struct BatchingCell {
+    /// Mean time to first token, seconds.
+    pub mean_ttft: f64,
+    /// Mean time per output token after the first, seconds.
+    pub mean_tpot: f64,
+    /// Every fused step the instance ran, in launch order.
+    pub steps: Vec<StepRecord>,
+}
+
+impl BatchingCell {
+    /// Pure-decode steps at the full `batch` width, in launch order —
+    /// the steps the memory-wall signature is read off.
+    pub fn full_decode_steps(&self, batch: u32) -> Vec<StepRecord> {
+        self.steps
+            .iter()
+            .filter(|s| s.prefill_tokens == 0 && s.decode_batch == batch)
+            .copied()
+            .collect()
+    }
+
+    /// Decode step time strictly increases with aggregate KV bytes over
+    /// the full-batch decode steps (the memory-wall signature).
+    pub fn decode_kv_monotone(&self, batch: u32) -> bool {
+        let steps = self.full_decode_steps(batch);
+        steps.len() >= 2
+            && steps
+                .windows(2)
+                .all(|w| w[1].decode_kv_bytes > w[0].decode_kv_bytes && w[1].secs > w[0].secs)
+    }
+
+    /// Mean seconds per prefill token over the steps that carried
+    /// prefill work (compute-bound ⇒ roughly flat across batch sizes).
+    pub fn prefill_secs_per_token(&self) -> f64 {
+        let (mut secs, mut tokens) = (0.0, 0u64);
+        for s in &self.steps {
+            if s.prefill_tokens > 0 {
+                secs += s.secs;
+                tokens += s.prefill_tokens as u64;
+            }
+        }
+        if tokens == 0 {
+            0.0
+        } else {
+            secs / tokens as f64
+        }
+    }
+
+    /// Largest aggregate decode KV footprint any step carried, bytes.
+    pub fn peak_kv_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.decode_kv_bytes).max().unwrap_or(0)
+    }
+}
+
+/// Run one cell: `batch` cold requests (no prefix reuse — this figure
+/// isolates compute, not transfer) of `context` prompt tokens and
+/// `output_tokens` generated tokens each, under the roofline compute
+/// source and chunked prefill of `chunk_tokens` (0 = unchunked).
+pub fn batching_cell(batch: u32, chunk_tokens: u32, context: u32, output_tokens: u32) -> BatchingCell {
+    let serving = ServingConfig {
+        compute: ComputeSource::Roofline,
+        batching: BatchingConfig {
+            enabled: true,
+            chunk_tokens,
+        },
+        // Wide pools/budget so batching policy, not capacity, shapes the
+        // steps (same stance as `replay_serving`).
+        gpu_kv_blocks: 1 << 20,
+        host_kv_blocks: 1 << 22,
+        max_batch_tokens: 512 * 1024,
+        max_batch_seqs: batch,
+        max_concurrency: batch,
+        pd_disaggregation: false,
+        ..ServingConfig::default()
+    };
+    let fleet_cfg = crate::testkit::fleet_config(1, false);
+    let world = SimWorld::new(h20x8(), MmaConfig::native());
+    let mut fleet = ServingFleet::new(
+        fleet_cfg,
+        serving.clone(),
+        qwen_7b_chat(),
+        world,
+        vec![compute_from(serving.compute)],
+        NumaId(0),
+    );
+    let reqs: Vec<Request> = (0..batch as u64)
+        .map(|i| Request {
+            id: RequestId(i),
+            arrival: Time::ZERO,
+            prompt_tokens: context,
+            cached_prefix_tokens: 0,
+            prefix_key: 0,
+            output_tokens,
+            tenant: 0,
+            class: None,
+        })
+        .collect();
+    let out = fleet.run(reqs);
+    let n = out.len().max(1) as f64;
+    let mean_ttft = out.iter().map(|o| o.ttft_s()).sum::<f64>() / n;
+    let mean_tpot = out
+        .iter()
+        .filter_map(|o| {
+            let fin = o.finished_at?;
+            let toks = output_tokens.saturating_sub(1);
+            (toks > 0).then(|| fin.since(o.first_token_at).as_secs_f64() / toks as f64)
+        })
+        .sum::<f64>()
+        / n;
+    BatchingCell {
+        mean_ttft,
+        mean_tpot,
+        steps: fleet.instance(0).steps().to_vec(),
+    }
+}
+
+/// The sweep: TTFT / TPOT / step shape per batch × chunk × context.
+pub fn batching(fast: bool) -> Table {
+    let contexts: &[u32] = if fast {
+        &[4_096, 16_384]
+    } else {
+        &[4_096, 16_384, 65_536]
+    };
+    let batches: &[u32] = if fast { &[1, 8] } else { &[1, 8, 32] };
+    let chunks: &[u32] = if fast { &[0, 2_048] } else { &[0, 2_048, 8_192] };
+    let output_tokens = if fast { 16 } else { 32 };
+    let mut t = Table::new([
+        "batch",
+        "chunk",
+        "context",
+        "mean TTFT (s)",
+        "mean TPOT (ms)",
+        "prefill (us/tok)",
+        "steps",
+        "peak KV (GB)",
+    ]);
+    for &context in contexts {
+        for &batch in batches {
+            for &chunk in chunks {
+                let cell = batching_cell(batch, chunk, context, output_tokens);
+                t.row([
+                    format!("{batch}"),
+                    format!("{chunk}"),
+                    format!("{context}"),
+                    format!("{:.3}", cell.mean_ttft),
+                    format!("{:.3}", 1e3 * cell.mean_tpot),
+                    format!("{:.2}", 1e6 * cell.prefill_secs_per_token()),
+                    format!("{}", cell.steps.len()),
+                    format!("{:.2}", cell.peak_kv_bytes() as f64 / 1e9),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_step_time_grows_with_aggregate_kv_bytes() {
+        // The acceptance gate: with roofline costs on, decode step time
+        // strictly increases with the batch's aggregate KV bytes.
+        let cell = batching_cell(8, 0, 16_384, 16);
+        assert!(
+            cell.decode_kv_monotone(8),
+            "memory-wall signature missing: {:?}",
+            cell.full_decode_steps(8)
+        );
+    }
+
+    #[test]
+    fn tpot_grows_with_batch_while_prefill_stays_flat() {
+        // Bigger batches stream more aggregate KV per decode iteration ⇒
+        // TPOT rises; prefill is compute-bound, so its per-token cost
+        // stays roughly flat across batch sizes.
+        let small = batching_cell(1, 0, 16_384, 16);
+        let big = batching_cell(16, 0, 16_384, 16);
+        assert!(
+            big.mean_tpot > 1.2 * small.mean_tpot,
+            "TPOT must feel the memory wall: batch 16 {} vs batch 1 {}",
+            big.mean_tpot,
+            small.mean_tpot
+        );
+        let (a, b) = (small.prefill_secs_per_token(), big.prefill_secs_per_token());
+        assert!(
+            b < 1.5 * a && a < 1.5 * b,
+            "prefill must stay roughly flat: {a} vs {b}"
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_splits_steps_without_changing_work() {
+        let whole = batching_cell(4, 0, 16_384, 4);
+        let chunked = batching_cell(4, 2_048, 16_384, 4);
+        let tokens = |c: &BatchingCell| -> u64 {
+            c.steps.iter().map(|s| s.prefill_tokens as u64).sum()
+        };
+        assert_eq!(tokens(&whole), tokens(&chunked), "same prefill tokens");
+        assert!(
+            chunked.steps.len() > whole.steps.len(),
+            "chunking must split prefill across more steps: {} vs {}",
+            chunked.steps.len(),
+            whole.steps.len()
+        );
+        // Per-step prefill legs respect the chunk size.
+        assert!(chunked
+            .steps
+            .iter()
+            .all(|s| s.prefill_tokens <= 4 * 2_048));
+    }
+
+    #[test]
+    fn figure_is_deterministic_and_renders() {
+        let a = batching(true).render();
+        let b = batching(true).render();
+        assert_eq!(a, b);
+        for needle in ["batch", "TPOT", "peak KV"] {
+            assert!(a.contains(needle), "missing {needle}:\n{a}");
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! the paper reports; `rust/benches/*` and the `mma figure <id>` CLI both
 //! print them. See DESIGN.md §5 for the experiment index.
 
+pub mod batching;
 pub mod fleet_scaling;
 pub mod micro;
 pub mod policy_sweep;
@@ -11,6 +12,7 @@ pub mod serve_concurrency;
 pub mod serving_figs;
 pub mod workload_replay;
 
+pub use batching::batching;
 pub use fleet_scaling::fleet_scaling;
 pub use micro::{
     fig14_tp_sweep, fig15_sensitivity, fig16_fallback, fig7_bw_vs_size, fig8_bw_vs_paths,
@@ -82,6 +84,7 @@ pub fn run_by_name(id: &str, fast: bool, seed: u64) -> Option<String> {
         "fleet" | "fleet_scaling" => fleet_scaling(fast, seed).render(),
         "qos" | "qos_isolation" => qos_isolation(fast, seed).render(),
         "replay" | "workload_replay" => workload_replay(fast, seed).render(),
+        "batching" => batching(fast).render(),
         _ => return None,
     };
     Some(s)
@@ -89,11 +92,12 @@ pub fn run_by_name(id: &str, fast: bool, seed: u64) -> Option<String> {
 
 /// All figure ids, in paper order (the policy sweep, the serving
 /// concurrency sweep, the fleet-scaling sweep, the QoS-isolation co-run,
-/// and the workload-replay sweep are this repo's own).
+/// the workload-replay sweep, and the continuous-batching sweep are this
+/// repo's own).
 pub fn all_ids() -> &'static [&'static str] {
     &[
         "table1", "2", "3", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "table2",
-        "policy", "concurrency", "fleet", "qos", "replay",
+        "policy", "concurrency", "fleet", "qos", "replay", "batching",
     ]
 }
 

@@ -22,9 +22,8 @@ use crate::config::{FleetConfig, ServingConfig};
 use crate::metrics::Summary;
 use crate::mma::{MmaConfig, SimWorld};
 use crate::models::{self, qwen_7b_chat, ModelSpec};
-use crate::roofline::h20;
 use crate::serving::{
-    Compute, ModelRegistry, ModelState, RequestOutcome, RoutePolicy, ServingFleet,
+    compute_from, Compute, ModelRegistry, ModelState, RequestOutcome, RoutePolicy, ServingFleet,
 };
 use crate::sim::Time;
 use crate::topology::{h20x8, Direction, GpuId, NumaId};
@@ -211,8 +210,11 @@ fn build_fleet(
     fleet_cfg: FleetConfig,
 ) -> ServingFleet {
     let world = SimWorld::new(h20x8(), mma);
+    // `[compute] source` picks the cost model: "legacy" is the seed
+    // per-request view (byte-identical to pre-batching replays),
+    // "roofline" the batch-aware fused-step H20 roofline.
     let computes: Vec<Box<dyn Compute>> = (0..fleet_cfg.gpus)
-        .map(|_| Box::new(h20()) as Box<dyn Compute>)
+        .map(|_| compute_from(serving.compute))
         .collect();
     ServingFleet::new(
         fleet_cfg,
@@ -756,6 +758,101 @@ mod tests {
     }
 
     #[test]
+    fn continuous_batching_batch1_matches_per_request_oracle() {
+        // The oracle gate (ISSUE 10): continuous batching with batch
+        // size 1 + chunking off forms one-leg fused steps whose
+        // durations, streams, and admission order are exactly the
+        // per-request scheduler's — so under legacy costs the rendered
+        // replay must be byte-identical. The seed scheduler survives as
+        // the oracle, same pattern as the incremental-allocator and
+        // solve-coalescing gates above.
+        use crate::config::{BatchingConfig, ComputeSource};
+        let gen = TraceGen {
+            arrivals: ArrivalProcess::bursty(20.0, 0.9, 2.0),
+            tenants: figure_tenants(8_192, 4),
+            requests: 40,
+        };
+        let trace = gen.generate(&mut Rng::seed_from_u64(SEED));
+        let per_request = ServingConfig {
+            max_batch_seqs: 1,
+            max_concurrency: 1,
+            compute: ComputeSource::Legacy,
+            ..replay_serving()
+        };
+        let batched = ServingConfig {
+            batching: BatchingConfig {
+                enabled: true,
+                chunk_tokens: 0,
+            },
+            ..per_request.clone()
+        };
+        let opts = ReplayOptions::default();
+        let base = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            per_request,
+            replay_fleet(2),
+            &opts,
+        );
+        let cb = replay(
+            &trace,
+            &qwen_7b_chat(),
+            MmaConfig::native(),
+            batched,
+            replay_fleet(2),
+            &opts,
+        );
+        assert_eq!(
+            cb.render(),
+            base.render(),
+            "batch-1/chunk-off continuous batching diverged from the per-request oracle"
+        );
+    }
+
+    #[test]
+    fn roofline_costs_change_replay_but_stay_deterministic() {
+        // Flipping `[compute] source` to the batch-aware roofline must
+        // actually change the simulation (otherwise the wiring is dead)
+        // while staying byte-deterministic run-to-run.
+        use crate::config::{BatchingConfig, ComputeSource};
+        let gen = TraceGen {
+            arrivals: ArrivalProcess::bursty(20.0, 0.9, 2.0),
+            tenants: figure_tenants(8_192, 4),
+            requests: 40,
+        };
+        let trace = gen.generate(&mut Rng::seed_from_u64(SEED));
+        let roofline = ServingConfig {
+            compute: ComputeSource::Roofline,
+            batching: BatchingConfig {
+                enabled: true,
+                chunk_tokens: 2048,
+            },
+            ..replay_serving()
+        };
+        let opts = ReplayOptions::default();
+        let run = |cfg: ServingConfig| {
+            replay(
+                &trace,
+                &qwen_7b_chat(),
+                MmaConfig::native(),
+                cfg,
+                replay_fleet(2),
+                &opts,
+            )
+        };
+        let a = run(roofline.clone());
+        let b = run(roofline);
+        assert_eq!(a.render(), b.render(), "roofline replay must be deterministic");
+        let legacy = run(replay_serving());
+        assert_ne!(
+            a.render(),
+            legacy.render(),
+            "batch-aware roofline costs must change the replay"
+        );
+    }
+
+    #[test]
     fn sleep_all_records_on_demand_wakes() {
         let gen = TraceGen {
             arrivals: ArrivalProcess::Poisson { rate_rps: 10.0 },
@@ -838,12 +935,7 @@ mod tests {
     }
 
     fn replay_fleet(gpus: u32) -> FleetConfig {
-        FleetConfig {
-            gpus,
-            router: RoutePolicy::RoundRobin,
-            peer_fetch: true,
-            prefix_affinity: false,
-        }
+        crate::testkit::fleet_config(gpus, true)
     }
 
     #[test]

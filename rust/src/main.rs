@@ -9,10 +9,12 @@
 //!           [--arrival-rate R] [--max-concurrency N] [--fetch-chunks C]
 //!           [--gpus N] [--router round-robin|least-loaded]
 //!           [--peer-fetch true|false] [--prefix-affinity] [--qos on|off]
+//!           [--compute legacy|roofline] [--batching on|off] [--chunk-tokens T]
 //! mma switch [--model qwen3-32b] [--policy <name>] [--qos on|off]
 //! mma replay [trace.jsonl] [--gpus N] [--policy <name>] [--qos on|off]
 //!            [--model qwen-7b] [--sleep-all] [--follow-switches]
 //!            [--max N | --fast] [--router ...] [--peer-fetch ...]
+//!            [--compute ...] [--batching ...] [--chunk-tokens T]
 //!            [--window N]                     streaming reorder window
 //! mma trace gen [--out FILE] [--arrivals poisson|bursty|diurnal]
 //!               [--rate R] [--burstiness B] [--dwell S] [--period S]
@@ -21,7 +23,7 @@
 //!               [--warm-start] [--switch-models m1,m2 --phase S]
 //! mma bench hotpath [--fast] [--json] [--out FILE] [--out-engine FILE]
 //!                   [--out-serving FILE] [--out-fabric FILE]
-//!                                          hot-path perf harness (docs/PERF.md)
+//!                   [--out-batching FILE]  hot-path perf harness (docs/PERF.md)
 //! mma config-check <file.toml>            validate a config file
 //! ```
 //!
@@ -67,6 +69,14 @@
 //! outweigh bulk model wakes on every shared link (weighted max-min
 //! fabric + class-aware engine issue order). `mma figure qos` reproduces
 //! the wake-co-run isolation experiment.
+//!
+//! `--compute legacy|roofline` (serve/replay; also the `[compute]` TOML
+//! section / `MMA_COMPUTE`) selects the kernel-duration source, and
+//! `--batching on|off` + `--chunk-tokens T` (the `[batching]` section /
+//! `MMA_BATCHING`, `MMA_CHUNK_TOKENS`) enable iteration-level continuous
+//! batching with chunked prefill. Both default to legacy/off, which is
+//! byte-identical to pre-`[compute]` output; `mma figure batching`
+//! sweeps the roofline-priced TTFT/TPOT surface.
 
 use mma::config::RunConfig;
 use mma::figures;
@@ -156,6 +166,33 @@ fn fleet_cfg(args: &Args, cfg: &RunConfig) -> mma::config::FleetConfig {
         peer_fetch,
         prefix_affinity: args.flag("prefix-affinity") || cfg.fleet.prefix_affinity,
     }
+}
+
+/// Apply the `--compute` / `--batching` / `--chunk-tokens` flag
+/// overrides to a resolved serving config (file → env already applied;
+/// shared by the serve and replay arms so the two cannot drift).
+fn serving_overrides(
+    args: &Args,
+    mut serving: mma::config::ServingConfig,
+) -> mma::config::ServingConfig {
+    if let Some(v) = args.get("compute") {
+        serving.compute = mma::config::ComputeSource::parse(v).unwrap_or_else(|| {
+            eprintln!("--compute: expected legacy|roofline, got {v:?}");
+            std::process::exit(2);
+        });
+    }
+    if let Some(v) = args.get("batching") {
+        serving.batching.enabled = match v.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" | "yes" => true,
+            "off" | "false" | "0" | "no" => false,
+            other => {
+                eprintln!("--batching: expected on|off, got {other:?}");
+                std::process::exit(2);
+            }
+        };
+    }
+    serving.batching.chunk_tokens = args.or("chunk-tokens", serving.batching.chunk_tokens);
+    serving
 }
 
 fn main() {
@@ -255,15 +292,18 @@ fn main() {
                 // ([serving] pd_disaggregation = false) — PD mode offloads
                 // prefill KV to host right away, leaving no GPU-resident
                 // copy for siblings to pull.
-                let serving = mma::config::ServingConfig {
-                    arrival_rate_rps: rate,
-                    max_concurrency: args.or("max-concurrency", cfg.serving.max_concurrency),
-                    fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
-                    gpu_kv_blocks: 1 << 20,
-                    host_kv_blocks: 1 << 22,
-                    max_batch_tokens: 512 * 1024,
-                    ..cfg.serving.clone()
-                };
+                let serving = serving_overrides(
+                    &args,
+                    mma::config::ServingConfig {
+                        arrival_rate_rps: rate,
+                        max_concurrency: args.or("max-concurrency", cfg.serving.max_concurrency),
+                        fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
+                        gpu_kv_blocks: 1 << 20,
+                        host_kv_blocks: 1 << 22,
+                        max_batch_tokens: 512 * 1024,
+                        ..cfg.serving.clone()
+                    },
+                );
                 let r = figures::fleet_scaling::fleet_run(
                     &model,
                     ctx,
@@ -294,15 +334,18 @@ fn main() {
                 // batch/seq knobs all honored); only the pools and batch
                 // budget are widened so admission, not capacity, governs
                 // the measured concurrency.
-                let serving = mma::config::ServingConfig {
-                    arrival_rate_rps: rate,
-                    max_concurrency: args.or("max-concurrency", cfg.serving.max_concurrency),
-                    fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
-                    gpu_kv_blocks: 1 << 20,
-                    host_kv_blocks: 1 << 22,
-                    max_batch_tokens: 512 * 1024,
-                    ..cfg.serving.clone()
-                };
+                let serving = serving_overrides(
+                    &args,
+                    mma::config::ServingConfig {
+                        arrival_rate_rps: rate,
+                        max_concurrency: args.or("max-concurrency", cfg.serving.max_concurrency),
+                        fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
+                        gpu_kv_blocks: 1 << 20,
+                        host_kv_blocks: 1 << 22,
+                        max_batch_tokens: 512 * 1024,
+                        ..cfg.serving.clone()
+                    },
+                );
                 let (mean, p99) = figures::serve_concurrency::concurrency_run(
                     &model,
                     ctx,
@@ -376,10 +419,13 @@ fn main() {
             // concurrency. NB: as with serve, peer-NVLink fetches show
             // up in aggregated mode ([serving] pd_disaggregation =
             // false) — PD mode offloads prefill KV to host right away.
-            let serving = mma::config::ServingConfig {
-                fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
-                ..replay_serving_from(&cfg.serving)
-            };
+            let serving = serving_overrides(
+                &args,
+                mma::config::ServingConfig {
+                    fetch_chunks: args.or("fetch-chunks", cfg.serving.fetch_chunks),
+                    ..replay_serving_from(&cfg.serving)
+                },
+            );
             // Streaming ingestion: the trace is line-streamed through a
             // bounded reorder window (O(window) resident records); a
             // trace more disordered than the window — or a
@@ -461,7 +507,8 @@ fn main() {
             if args.pos(1) != Some("hotpath") {
                 eprintln!(
                     "usage: mma bench hotpath [--fast] [--json] [--out FILE] \
-                     [--out-engine FILE] [--out-serving FILE] [--out-fabric FILE]"
+                     [--out-engine FILE] [--out-serving FILE] [--out-fabric FILE] \
+                     [--out-batching FILE]"
                 );
                 std::process::exit(2);
             }
@@ -540,15 +587,38 @@ fn main() {
                 });
                 eprintln!("wrote {path}");
             }
+            // The BENCH_0010 batching leg: roofline-priced fused steps,
+            // with the memory-wall and legacy-identity bars enforced
+            // here.
+            let batching = mma::perf::run_batching_bench(fast);
+            if !batching.batching.decode_kv_monotone {
+                eprintln!("FATAL: decode step time did not grow with aggregate KV bytes");
+                std::process::exit(1);
+            }
+            if !batching.batching.legacy_identical {
+                eprintln!(
+                    "FATAL: batch-1 continuous batching diverged from the \
+                     per-request scheduler"
+                );
+                std::process::exit(1);
+            }
+            if let Some(path) = args.get("out-batching") {
+                std::fs::write(path, batching.to_json()).unwrap_or_else(|e| {
+                    eprintln!("--out-batching {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("wrote {path}");
+            }
             if args.flag("json") {
                 print!("{}", report.to_json());
             } else {
                 print!(
-                    "{}{}{}{}",
+                    "{}{}{}{}{}",
                     report.render(),
                     engine.render(),
                     serving.render(),
-                    fabric.render()
+                    fabric.render(),
+                    batching.render()
                 );
             }
         }

@@ -9,6 +9,7 @@
 //! reproduced without the actual checkpoints.
 
 use crate::topology::NumaId;
+use crate::util::rng::Rng;
 
 /// Numeric format of stored tensors.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -233,6 +234,40 @@ pub fn paper_models() -> Vec<ModelSpec> {
     vec![qwen3_0_6b(), qwen3_4b(), qwen_7b_chat(), qwen3_32b()]
 }
 
+/// A randomized but architecturally plausible decoder spec for property
+/// tests ([`crate::testkit::check`]): GQA ratios, head dims, and KV
+/// dtypes drawn from the ranges real deployments use, with `params`
+/// derived from the projection shapes so every derived quantity
+/// (`kv_bytes_per_token`, `weight_bytes`, `flops_per_token`) stays
+/// mutually consistent.
+pub fn sample_spec(rng: &mut Rng) -> ModelSpec {
+    let layers = rng.range_u64(4, 96) as u32;
+    let head_dim = [64u32, 128][rng.range_usize(0, 2)];
+    let heads = [8u32, 16, 32, 64][rng.range_usize(0, 4)];
+    let kv_heads = [heads, heads / 2, heads / 4, heads.min(8)][rng.range_usize(0, 4)].max(1);
+    let hidden = heads * head_dim;
+    let intermediate = hidden * rng.range_u64(2, 5) as u32;
+    let vocab = 32_000u32;
+    let (h, i) = (hidden as u64, intermediate as u64);
+    let qd = heads as u64 * head_dim as u64;
+    let kvd = kv_heads as u64 * head_dim as u64;
+    let per_layer = 2 * h * qd + 2 * h * kvd + 3 * h * i;
+    let params = 2 * vocab as u64 * h + layers as u64 * per_layer;
+    ModelSpec {
+        name: "sampled",
+        params,
+        layers,
+        hidden,
+        heads,
+        kv_heads,
+        head_dim,
+        intermediate,
+        vocab,
+        weight_dtype: Dtype::F16,
+        kv_dtype: [Dtype::F16, Dtype::I8][rng.range_usize(0, 2)],
+    }
+}
+
 /// Where the serving stack pins its host staging buffers (the paper's
 /// testbed pins near the first socket).
 pub fn default_host_numa() -> NumaId {
@@ -306,6 +341,20 @@ mod tests {
             .filter(|&&b| b >= 11_300_000)
             .sum();
         assert!(above as f64 / big.tensor_bytes() as f64 > 0.9);
+    }
+
+    #[test]
+    fn sampled_specs_stay_internally_consistent() {
+        crate::testkit::check("sample-spec", |rng| {
+            let m = sample_spec(rng);
+            assert!(m.kv_heads >= 1 && m.kv_heads <= m.heads);
+            assert_eq!(m.heads % m.kv_heads, 0, "GQA groups divide evenly");
+            assert!(m.kv_bytes_per_token() > 0);
+            assert!(m.flops_per_token(0) >= 2.0 * m.params as f64);
+            // `params` is derived from the projection shapes, so the
+            // tensor-by-tensor walk recovers exactly the weight bytes.
+            assert_eq!(m.tensor_bytes(), m.weight_bytes());
+        });
     }
 
     #[test]

@@ -33,9 +33,15 @@
 //! solve coalescing, the solves-per-event ratio (must stay below 1.0 —
 //! cascades demonstrably collapse), the zero-flow-start-allocs
 //! invariant on the interned-path fast path, and a coalesced-vs-eager
-//! completion-stream identity check.
+//! completion-stream identity check. `BENCH_0010`
+//! ([`run_batching_bench`], `mma-bench-batching/1`) measures the
+//! roofline-grounded continuous-batching step loop: fused steps per
+//! second, the memory-wall invariant (decode step time strictly
+//! increasing with aggregate batch KV bytes — must hold), and the
+//! legacy-oracle identity flag (batch-1 + chunking-off batching renders
+//! byte-identically to the per-request scheduler — must hold).
 
-use crate::config::FleetConfig;
+use crate::config::{BatchingConfig, ComputeSource, FleetConfig, ServingConfig};
 use crate::fabric::{self, Fabric, FabricStats, FlowDone};
 use crate::figures::workload_replay::{replay, replay_serving, replay_streamed, ReplayOptions};
 use crate::gpusim::TransferId;
@@ -417,6 +423,127 @@ pub fn run_fabric_bench_with(fast: bool, budget: Duration, chunks: u64) -> Fabri
             cascade_events: coal.stats.cascade_events,
             alloc_growth: coal.alloc_growth,
             coalesced_identical,
+        },
+    }
+}
+
+/// The continuous-batching leg of `BENCH_0010`: one roofline-priced
+/// probe cell plus the legacy-oracle identity check, with every
+/// acceptance bar encoded in the report.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchingCycle {
+    /// Fused steps simulated per wall-clock second on the probe cell.
+    pub steps_per_sec: f64,
+    /// Fused steps in one deterministic probe cell.
+    pub steps_total: u64,
+    /// Full-batch pure-decode steps among them — the samples the
+    /// memory-wall signature is read off.
+    pub decode_steps: u64,
+    /// Decode step time strictly increases with the batch's aggregate KV
+    /// bytes over the full-batch decode steps — **must be true**: each
+    /// iteration streams `weights + Σ KV(context_i)` over HBM.
+    pub decode_kv_monotone: bool,
+    /// Largest aggregate decode KV footprint any step carried, bytes.
+    pub peak_kv_bytes: u64,
+    /// Mean prefill microseconds per token over the probe cell
+    /// (compute-bound above the roofline crossover ⇒ roughly flat).
+    pub prefill_us_per_token: f64,
+    /// Batch-1 + chunking-off continuous batching rendered
+    /// byte-identically to the per-request seed scheduler under legacy
+    /// costs — **must be true** (the oracle gate).
+    pub legacy_identical: bool,
+}
+
+/// Everything the `BENCH_0010` batching bench measures.
+#[derive(Debug, Clone)]
+pub struct BatchingReport {
+    /// Fast mode (smaller budgets/workloads; CI smoke).
+    pub fast: bool,
+    /// The continuous-batching measurements.
+    pub batching: BatchingCycle,
+}
+
+/// Run the `BENCH_0010` batching bench (`mma bench hotpath
+/// --out-batching`).
+pub fn run_batching_bench(fast: bool) -> BatchingReport {
+    let budget = if fast {
+        Duration::from_millis(120)
+    } else {
+        Duration::from_millis(600)
+    };
+    let batch = if fast { 8 } else { 16 };
+    let requests = if fast { 24 } else { 48 };
+    run_batching_bench_with(fast, budget, batch, requests)
+}
+
+/// [`run_batching_bench`] with explicit knobs (tests use tiny budgets).
+/// `batch` sizes the roofline probe cell; `requests` sizes the trace the
+/// legacy-identity oracle replays.
+pub fn run_batching_bench_with(
+    fast: bool,
+    budget: Duration,
+    batch: u32,
+    requests: usize,
+) -> BatchingReport {
+    // Deterministic leg 1: the memory-wall probe cell — `batch` cold
+    // 16K-context requests under roofline costs, unchunked.
+    let cell = crate::figures::batching::batching_cell(batch, 0, 16_384, 16);
+    let decode_steps = cell.full_decode_steps(batch).len() as u64;
+    let decode_kv_monotone = cell.decode_kv_monotone(batch);
+    // Deterministic leg 2: batch-1 + chunking-off continuous batching
+    // must render byte-identically to the per-request seed scheduler
+    // under legacy costs (same gate the replay oracle test holds).
+    let trace = replay_trace(requests);
+    let per_request = ServingConfig {
+        max_batch_seqs: 1,
+        max_concurrency: 1,
+        compute: ComputeSource::Legacy,
+        ..replay_serving()
+    };
+    let batched = ServingConfig {
+        batching: BatchingConfig {
+            enabled: true,
+            chunk_tokens: 0,
+        },
+        ..per_request.clone()
+    };
+    let fleet = FleetConfig {
+        gpus: 2,
+        router: RoutePolicy::RoundRobin,
+        peer_fetch: true,
+        prefix_affinity: false,
+    };
+    let opts = ReplayOptions::default();
+    let model = qwen_7b_chat();
+    let base = replay(
+        &trace,
+        &model,
+        MmaConfig::default(),
+        per_request,
+        fleet.clone(),
+        &opts,
+    );
+    let cb = replay(&trace, &model, MmaConfig::default(), batched, fleet, &opts);
+    let legacy_identical = base.render() == cb.render();
+    // Timed leg: repeat the probe cell within the budget.
+    let t0 = Instant::now();
+    let mut timed_steps = 0u64;
+    while t0.elapsed() < budget {
+        let run = crate::figures::batching::batching_cell(batch, 0, 16_384, 16);
+        timed_steps += run.steps.len() as u64;
+        black_box(run.mean_tpot);
+    }
+    let steps_per_sec = timed_steps as f64 / t0.elapsed().as_secs_f64();
+    BatchingReport {
+        fast,
+        batching: BatchingCycle {
+            steps_per_sec,
+            steps_total: cell.steps.len() as u64,
+            decode_steps,
+            decode_kv_monotone,
+            peak_kv_bytes: cell.peak_kv_bytes(),
+            prefill_us_per_token: 1e6 * cell.prefill_secs_per_token(),
+            legacy_identical,
         },
     }
 }
@@ -995,6 +1122,60 @@ impl FabricReport {
     }
 }
 
+impl BatchingReport {
+    /// The `mma-bench-batching/1` JSON document (stable key order; see
+    /// `docs/PERF.md` for the schema).
+    pub fn to_json(&self) -> String {
+        let c = &self.batching;
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"mma-bench-batching/1\",\n");
+        s.push_str("  \"bench\": \"BENCH_0010\",\n");
+        s.push_str("  \"provenance\": \"measured\",\n");
+        s.push_str(&format!("  \"fast\": {},\n", self.fast));
+        s.push_str("  \"batching\": {\n");
+        s.push_str(&format!(
+            "    \"steps_per_sec\": {},\n",
+            jnum(c.steps_per_sec, 1)
+        ));
+        s.push_str(&format!("    \"steps_total\": {},\n", c.steps_total));
+        s.push_str(&format!("    \"decode_steps\": {},\n", c.decode_steps));
+        s.push_str(&format!(
+            "    \"decode_kv_monotone\": {},\n",
+            c.decode_kv_monotone
+        ));
+        s.push_str(&format!("    \"peak_kv_bytes\": {},\n", c.peak_kv_bytes));
+        s.push_str(&format!(
+            "    \"prefill_us_per_token\": {},\n",
+            jnum(c.prefill_us_per_token, 3)
+        ));
+        s.push_str(&format!(
+            "    \"legacy_identical\": {}\n",
+            c.legacy_identical
+        ));
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable summary (the batching leg of `mma bench hotpath`).
+    pub fn render(&self) -> String {
+        let c = &self.batching;
+        format!(
+            "batching step   {:>12.0} steps/s ({} steps, {} full-batch \
+             decode), peak KV {:.2} GB, prefill {:.2} us/tok, \
+             kv-monotone: {}, legacy identical: {}\n",
+            c.steps_per_sec,
+            c.steps_total,
+            c.decode_steps,
+            c.peak_kv_bytes as f64 / 1e9,
+            c.prefill_us_per_token,
+            c.decode_kv_monotone,
+            c.legacy_identical,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1151,6 +1332,47 @@ mod tests {
             "\"cascade_events\"",
             "\"alloc_growth\": 0",
             "\"coalesced_identical\": true",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+        assert!(!r.render().is_empty());
+    }
+
+    #[test]
+    fn batching_bench_holds_the_memory_wall_bars() {
+        let r = run_batching_bench_with(true, Duration::from_millis(5), 4, 12);
+        let c = &r.batching;
+        assert!(
+            c.decode_kv_monotone,
+            "decode step time must grow with aggregate KV bytes"
+        );
+        assert!(
+            c.legacy_identical,
+            "batch-1 + chunking-off must render identically to the seed scheduler"
+        );
+        assert!(c.steps_per_sec > 0.0);
+        assert!(c.steps_total > 0 && c.decode_steps >= 2);
+        assert!(c.peak_kv_bytes > 0);
+        assert!(c.prefill_us_per_token > 0.0);
+    }
+
+    #[test]
+    fn batching_json_has_stable_schema_keys() {
+        let r = run_batching_bench_with(true, Duration::from_millis(2), 4, 12);
+        let j = r.to_json();
+        for key in [
+            "\"schema\": \"mma-bench-batching/1\"",
+            "\"bench\": \"BENCH_0010\"",
+            "\"provenance\": \"measured\"",
+            "\"steps_per_sec\"",
+            "\"steps_total\"",
+            "\"decode_steps\"",
+            "\"decode_kv_monotone\": true",
+            "\"peak_kv_bytes\"",
+            "\"prefill_us_per_token\"",
+            "\"legacy_identical\": true",
         ] {
             assert!(j.contains(key), "missing {key} in:\n{j}");
         }

@@ -36,20 +36,80 @@ pub fn h20() -> GpuRoofline {
 impl GpuRoofline {
     /// Prefill time for `new_tokens` of a model with `context` total
     /// attended tokens, tensor-parallel over `tp` GPUs.
+    ///
+    /// Each TP rank holds 1/tp of the weights and does 1/tp of the
+    /// FLOPs, so *both* legs are sharded before the roofline max — the
+    /// per-GPU weight-streaming floor is `weight_bytes/tp`, not
+    /// `max(compute, weights)/tp` applied after the envelope.
     pub fn prefill_secs(&self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64 {
+        let tp = tp.max(1) as f64;
         let flops = m.flops_per_token(context) * new_tokens as f64;
         // Prefill is compute-bound: weights stream once per step.
-        let compute = flops / (self.peak_flops * self.efficiency);
-        let weights = m.weight_bytes() as f64 / self.hbm_bps;
-        (compute.max(weights) / tp as f64) + self.step_overhead_s
+        let compute = flops / (self.peak_flops * self.efficiency) / tp;
+        let weights = m.weight_bytes() as f64 / self.hbm_bps / tp;
+        compute.max(weights) + self.step_overhead_s
     }
 
     /// Per-output-token decode time (memory-bound: weights + KV stream).
     pub fn decode_secs_per_token(&self, m: &ModelSpec, context: u64, tp: u32) -> f64 {
-        let bytes = m.weight_bytes() as f64 + m.kv_bytes(context) as f64;
-        let mem = bytes / (self.hbm_bps * self.efficiency);
-        let flops = m.flops_per_token(context) / (self.peak_flops * self.efficiency);
-        (mem.max(flops) / tp as f64) + self.step_overhead_s
+        self.decode_step_secs(m, m.kv_bytes(context), 1, context, tp)
+    }
+
+    /// One decode iteration over a whole continuous batch: every rank
+    /// streams its weight shard once plus its shard of the *aggregate*
+    /// KV resident for the batch (`batch_kv_bytes = Σ KV(context_i)`),
+    /// while the FLOPs leg scales with the batch's token count. This is
+    /// the memory-wall regime: step time grows with batch × context ×
+    /// KV bytes while weights amortize across the batch.
+    pub fn decode_step_secs(
+        &self,
+        m: &ModelSpec,
+        batch_kv_bytes: u64,
+        batch: u32,
+        max_context: u64,
+        tp: u32,
+    ) -> f64 {
+        let tp = tp.max(1) as f64;
+        let bytes = m.weight_bytes() as f64 + batch_kv_bytes as f64;
+        let mem = bytes / (self.hbm_bps * self.efficiency) / tp;
+        let flops =
+            batch as f64 * m.flops_per_token(max_context) / (self.peak_flops * self.efficiency)
+                / tp;
+        mem.max(flops) + self.step_overhead_s
+    }
+
+    /// One fused continuous-batching step: a chunked-prefill leg
+    /// (`prefill_tokens` attending `prefill_context`) sharing the
+    /// iteration with `decode_batch` decode legs carrying
+    /// `decode_kv_bytes` aggregate KV. Weights stream once for the
+    /// whole step; the launch overhead is paid once, not per leg.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_secs(
+        &self,
+        m: &ModelSpec,
+        prefill_tokens: u64,
+        prefill_context: u64,
+        decode_kv_bytes: u64,
+        decode_batch: u32,
+        max_decode_context: u64,
+        tp: u32,
+    ) -> f64 {
+        let tp = tp.max(1) as f64;
+        let flops = m.flops_per_token(prefill_context) * prefill_tokens as f64
+            + decode_batch as f64 * m.flops_per_token(max_decode_context);
+        let compute = flops / (self.peak_flops * self.efficiency) / tp;
+        let bytes = m.weight_bytes() as f64 + decode_kv_bytes as f64;
+        let mem = bytes / (self.hbm_bps * self.efficiency) / tp;
+        compute.max(mem) + self.step_overhead_s
+    }
+
+    /// The prefill token count where the compute leg overtakes the
+    /// weight-streaming leg at a fixed attended `context`: below this,
+    /// `prefill_secs` is flat in `new_tokens` (weights-bound); above,
+    /// it grows linearly (compute-bound).
+    pub fn prefill_crossover_tokens(&self, m: &ModelSpec, context: u64) -> f64 {
+        let weights_s = m.weight_bytes() as f64 / self.hbm_bps;
+        weights_s * (self.peak_flops * self.efficiency) / m.flops_per_token(context)
     }
 }
 
@@ -100,5 +160,90 @@ mod tests {
         let t1 = g.prefill_secs(&m, 32_768, 32_768, 1);
         let t4 = g.prefill_secs(&m, 32_768, 32_768, 4);
         assert!(t4 < t1 / 2.0);
+    }
+
+    #[test]
+    fn tp8_shards_the_weight_streaming_floor_too() {
+        // Regression for the prefill tp bug: both legs must be divided
+        // by tp *before* the roofline max. A weights-bound prefill (few
+        // new tokens) gets its floor sharded 8×; the old
+        // max-then-divide form left the unsharded weight-streaming
+        // floor in place.
+        let g = h20();
+        let m = qwen3_32b();
+        let x = g.prefill_crossover_tokens(&m, 8_192);
+        let few = (x * 0.25).max(1.0) as u64; // safely weights-bound
+        let t1 = g.prefill_secs(&m, few, 8_192, 1) - g.step_overhead_s;
+        let t8 = g.prefill_secs(&m, few, 8_192, 8) - g.step_overhead_s;
+        let want = m.weight_bytes() as f64 / g.hbm_bps / 8.0;
+        assert!(
+            (t8 - want).abs() < 1e-12,
+            "tp=8 weights floor {t8} vs expected {want}"
+        );
+        assert!(
+            (t1 / t8 - 8.0).abs() < 1e-9,
+            "weights-bound prefill must shard 8x: {t1} vs {t8}"
+        );
+    }
+
+    #[test]
+    fn decode_time_is_monotone_in_context_and_batch_kv() {
+        // Property (testkit): the decode memory wall only ever gets
+        // taller — per-token decode time is non-decreasing in attended
+        // context, and a fused decode step is non-decreasing in the
+        // batch's aggregate KV bytes, for any plausible architecture.
+        crate::testkit::check("decode-monotone", |rng| {
+            let g = h20();
+            let m = crate::models::sample_spec(rng);
+            let tp = [1u32, 2, 4, 8][rng.range_usize(0, 4)];
+            let c1 = rng.range_u64(1, 1 << 17);
+            let c2 = c1 + rng.range_u64(0, 1 << 16);
+            assert!(
+                g.decode_secs_per_token(&m, c2, tp) >= g.decode_secs_per_token(&m, c1, tp),
+                "{}: context {c1} -> {c2} sped decode up",
+                m.name
+            );
+            let batch = rng.range_u64(1, 64) as u32;
+            let kv1 = rng.range_u64(0, 1 << 40);
+            let kv2 = kv1 + rng.range_u64(0, 1 << 38);
+            assert!(
+                g.decode_step_secs(&m, kv2, batch, c1, tp)
+                    >= g.decode_step_secs(&m, kv1, batch, c1, tp),
+                "{}: kv {kv1} -> {kv2} sped the step up",
+                m.name
+            );
+        });
+    }
+
+    #[test]
+    fn prefill_switches_regimes_at_the_predicted_crossover() {
+        // Property (testkit): below `prefill_crossover_tokens` the step
+        // sits exactly on the weight-streaming floor (flat in
+        // new_tokens); above it, the compute leg has taken over and the
+        // step costs strictly more than the floor.
+        crate::testkit::check("prefill-crossover", |rng| {
+            let g = h20();
+            let m = crate::models::sample_spec(rng);
+            let context = rng.range_u64(1024, 1 << 16);
+            let x = g.prefill_crossover_tokens(&m, context);
+            let floor = m.weight_bytes() as f64 / g.hbm_bps + g.step_overhead_s;
+            let below = (x * 0.5).max(1.0) as u64;
+            if (below as f64) < x {
+                let t = g.prefill_secs(&m, below, context, 1);
+                assert!(
+                    (t - floor).abs() <= 1e-9 * floor,
+                    "{}: weights-bound at {below} tokens must sit on the floor \
+                     ({t} vs {floor}, crossover {x:.1})",
+                    m.name
+                );
+            }
+            let above = (x * 2.0).max(2.0).ceil() as u64;
+            assert!(
+                g.prefill_secs(&m, above, context, 1) > floor,
+                "{}: compute-bound at {above} tokens must clear the floor \
+                 (crossover {x:.1})",
+                m.name
+            );
+        });
     }
 }

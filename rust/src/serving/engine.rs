@@ -100,47 +100,22 @@ impl ServingEngine {
 
 #[cfg(test)]
 mod tests {
-    use super::super::instance::FixedCompute;
     use super::*;
     use crate::mma::MmaConfig;
     use crate::models::{qwen_7b_chat, ModelSpec};
     use crate::serving::scheduler::RequestId;
+    use crate::testkit::{engine as engine_cfg, fixed, request as req};
     use crate::topology::h20x8;
 
     fn engine(mma: MmaConfig, compute: Box<dyn Compute>) -> ServingEngine {
         engine_cfg(ServingConfig::default(), mma, compute)
     }
 
-    fn engine_cfg(
-        cfg: ServingConfig,
-        mma: MmaConfig,
-        compute: Box<dyn Compute>,
-    ) -> ServingEngine {
-        let world = SimWorld::new(h20x8(), mma);
-        ServingEngine::new(cfg, qwen_7b_chat(), world, compute, GpuId(0), NumaId(0))
-    }
-
-    fn req(id: u64, arrival_ms: u64, prompt: u32, cached: u32, key: u64) -> Request {
-        Request {
-            id: RequestId(id),
-            arrival: Time::from_ms(arrival_ms),
-            prompt_tokens: prompt,
-            cached_prefix_tokens: cached,
-            prefix_key: key,
-            output_tokens: 2,
-            tenant: 0,
-            class: None,
-        }
-    }
-
     #[test]
     fn cold_request_has_no_fetch() {
         let mut e = engine(
             MmaConfig::native(),
-            Box::new(FixedCompute {
-                prefill_s: 0.1,
-                decode_s: 0.01,
-            }),
+            fixed(0.1, 0.01),
         );
         let out = e.run(vec![req(1, 0, 1000, 0, 0)]);
         assert_eq!(out.len(), 1);
@@ -155,10 +130,7 @@ mod tests {
         let run = |mma: MmaConfig| {
             let mut e = engine(
                 mma,
-                Box::new(FixedCompute {
-                    prefill_s: 0.05,
-                    decode_s: 0.005,
-                }),
+                fixed(0.05, 0.005),
             );
             e.seed_host_prefix(77, 65536);
             let out = e.run(vec![req(1, 0, 65536 + 128, 65536, 77)]);
@@ -188,10 +160,7 @@ mod tests {
                 ..Default::default()
             },
             MmaConfig::native(),
-            Box::new(FixedCompute {
-                prefill_s: 0.05,
-                decode_s: 0.005,
-            }),
+            fixed(0.05, 0.005),
         );
         e.seed_host_prefix(9, 16384);
         let out = e.run(vec![
@@ -206,10 +175,7 @@ mod tests {
     fn queueing_time_is_attributed() {
         let mut e = engine(
             MmaConfig::native(),
-            Box::new(FixedCompute {
-                prefill_s: 0.5,
-                decode_s: 0.001,
-            }),
+            fixed(0.5, 0.001),
         );
         // Two large prefills that cannot batch together (budget 8192).
         let out = e.run(vec![req(1, 0, 8000, 0, 0), req(2, 0, 8000, 0, 0)]);
@@ -229,10 +195,7 @@ mod tests {
     fn outcomes_follow_request_order() {
         let mut e = engine(
             MmaConfig::native(),
-            Box::new(FixedCompute {
-                prefill_s: 0.01,
-                decode_s: 0.001,
-            }),
+            fixed(0.01, 0.001),
         );
         let out = e.run(vec![req(3, 5, 100, 0, 0), req(1, 0, 100, 0, 0)]);
         assert_eq!(out[0].id, RequestId(3));
@@ -245,10 +208,7 @@ mod tests {
         // event (final decode completion) defines both.
         let mut e = engine(
             MmaConfig::native(),
-            Box::new(FixedCompute {
-                prefill_s: 0.1,
-                decode_s: 0.05,
-            }),
+            fixed(0.1, 0.05),
         );
         let out = e.run(vec![req(1, 7, 500, 0, 0)]);
         assert_eq!(e.now(), e.world().now());
@@ -269,10 +229,7 @@ mod tests {
                     ..Default::default()
                 },
                 MmaConfig::native(),
-                Box::new(FixedCompute {
-                    prefill_s: 0.2,
-                    decode_s: 0.001,
-                }),
+                fixed(0.2, 0.001),
             );
             e.seed_host_prefix(5, 32768);
             let out = e.run(vec![req(1, 0, 32768 + 64, 32768, 5)]);
@@ -290,10 +247,7 @@ mod tests {
     fn same_key_concurrent_hit_joins_inflight_fetch() {
         let mut e = engine(
             MmaConfig::native(),
-            Box::new(FixedCompute {
-                prefill_s: 0.05,
-                decode_s: 0.001,
-            }),
+            fixed(0.05, 0.001),
         );
         e.seed_host_prefix(7, 32768);
         let out = e.run(vec![
@@ -367,10 +321,7 @@ mod tests {
                 ..Default::default()
             },
             MmaConfig::native(),
-            Box::new(FixedCompute {
-                prefill_s: 0.01,
-                decode_s: 0.001,
-            }),
+            fixed(0.01, 0.001),
         );
         let cap_bytes = qwen_7b_chat().kv_bytes(2048 * 16);
         for key in 1..=8u64 {

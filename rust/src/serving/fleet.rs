@@ -468,57 +468,18 @@ impl ServingFleet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::FleetConfig;
     use crate::mma::MmaConfig;
     use crate::models::qwen_7b_chat;
-    use crate::serving::instance::FixedCompute;
     use crate::serving::router::RoutePolicy;
+    use crate::testkit::{fixed_computes, hit};
     use crate::topology::h20x8;
 
     fn computes(n: usize) -> Vec<Box<dyn Compute>> {
-        (0..n)
-            .map(|_| {
-                Box::new(FixedCompute {
-                    prefill_s: 0.05,
-                    decode_s: 0.001,
-                }) as Box<dyn Compute>
-            })
-            .collect()
+        fixed_computes(n, 0.05, 0.001)
     }
 
     fn fleet(n: u32, peer: bool, mma: MmaConfig) -> ServingFleet {
-        let cfg = FleetConfig {
-            gpus: n,
-            router: RoutePolicy::RoundRobin,
-            peer_fetch: peer,
-            prefix_affinity: false,
-        };
-        let serving = ServingConfig {
-            pd_disaggregation: false,
-            ..Default::default()
-        };
-        let world = SimWorld::new(h20x8(), mma);
-        ServingFleet::new(
-            cfg,
-            serving,
-            qwen_7b_chat(),
-            world,
-            computes(n as usize),
-            NumaId(0),
-        )
-    }
-
-    fn hit(id: u64, arrival_ms: u64, ctx: u32, key: u64) -> Request {
-        Request {
-            id: RequestId(id),
-            arrival: Time::from_ms(arrival_ms),
-            prompt_tokens: ctx + 64,
-            cached_prefix_tokens: ctx,
-            prefix_key: key,
-            output_tokens: 2,
-            tenant: 0,
-            class: None,
-        }
+        crate::testkit::fleet(n, peer, mma, 0.05)
     }
 
     #[test]

@@ -26,13 +26,13 @@
 
 use super::kv_cache::{KvCacheManager, SeqId};
 use super::prefix_cache::{GpuPrefixTier, HostPrefixPool};
-use super::scheduler::{Phase, Request, RequestId, Scheduler};
-use crate::config::ServingConfig;
+use super::scheduler::{BatchFormer, Phase, Request, RequestId, Scheduler};
+use crate::config::{ComputeSource, ServingConfig};
 use crate::memory::HbmAllocator;
 use crate::metrics::TtftBreakdown;
 use crate::mma::{SimWorld, StreamHandle, TransferDesc};
 use crate::models::ModelSpec;
-use crate::roofline::GpuRoofline;
+use crate::roofline::{h20, GpuRoofline};
 use crate::sim::Time;
 use crate::topology::{Direction, GpuId, NumaId};
 use crate::util::fxmap::FxHashMap;
@@ -40,11 +40,60 @@ use std::collections::VecDeque;
 
 /// Compute-time provider: roofline for paper-scale models, real PJRT for
 /// the live tiny model, fixed for unit tests.
+///
+/// The two required methods are the seed per-request surface. The two
+/// provided methods are the continuous-batching surface; their defaults
+/// reduce exactly to the per-request methods, so any provider that does
+/// not override them prices batched steps the way the seed scheduler
+/// would have run them — which is what keeps `[compute] source =
+/// "legacy"` byte-identical to the pre-batching replay output.
 pub trait Compute {
     /// Prefill `new_tokens` with `context` total attended tokens.
     fn prefill_secs(&mut self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64;
     /// One decode step at `context`.
     fn decode_secs(&mut self, m: &ModelSpec, context: u64, tp: u32) -> f64;
+
+    /// One decode iteration over a whole continuous batch carrying
+    /// `batch_kv_bytes` aggregate resident KV. The default ignores the
+    /// aggregate-KV signal and prices the step like a single-sequence
+    /// decode at the batch's max context — exactly the seed cost model.
+    fn decode_step_secs(
+        &mut self,
+        m: &ModelSpec,
+        _batch_kv_bytes: u64,
+        _batch: u32,
+        max_context: u64,
+        tp: u32,
+    ) -> f64 {
+        self.decode_secs(m, max_context, tp)
+    }
+
+    /// One fused continuous-batching step: a chunked-prefill leg sharing
+    /// the iteration with `decode_batch` decode legs. The default
+    /// composes the legs serially (prefill kernel, then decode step),
+    /// which is what the per-request scheduler would have run
+    /// back-to-back — so with one leg per step the fused path is
+    /// byte-identical to the seed.
+    #[allow(clippy::too_many_arguments)]
+    fn step_secs(
+        &mut self,
+        m: &ModelSpec,
+        prefill_tokens: u64,
+        prefill_context: u64,
+        decode_kv_bytes: u64,
+        decode_batch: u32,
+        max_decode_context: u64,
+        tp: u32,
+    ) -> f64 {
+        let mut t = 0.0;
+        if prefill_tokens > 0 {
+            t += self.prefill_secs(m, prefill_tokens, prefill_context, tp);
+        }
+        if decode_batch > 0 {
+            t += self.decode_step_secs(m, decode_kv_bytes, decode_batch, max_decode_context, tp);
+        }
+        t
+    }
 }
 
 impl Compute for GpuRoofline {
@@ -53,6 +102,64 @@ impl Compute for GpuRoofline {
     }
     fn decode_secs(&mut self, m: &ModelSpec, context: u64, tp: u32) -> f64 {
         GpuRoofline::decode_secs_per_token(self, m, context, tp)
+    }
+    fn decode_step_secs(
+        &mut self,
+        m: &ModelSpec,
+        batch_kv_bytes: u64,
+        batch: u32,
+        max_context: u64,
+        tp: u32,
+    ) -> f64 {
+        GpuRoofline::decode_step_secs(self, m, batch_kv_bytes, batch, max_context, tp)
+    }
+    fn step_secs(
+        &mut self,
+        m: &ModelSpec,
+        prefill_tokens: u64,
+        prefill_context: u64,
+        decode_kv_bytes: u64,
+        decode_batch: u32,
+        max_decode_context: u64,
+        tp: u32,
+    ) -> f64 {
+        GpuRoofline::step_secs(
+            self,
+            m,
+            prefill_tokens,
+            prefill_context,
+            decode_kv_bytes,
+            decode_batch,
+            max_decode_context,
+            tp,
+        )
+    }
+}
+
+/// Strips a provider's batch-aware overrides so only the per-request
+/// `prefill_secs`/`decode_secs` surface remains — the seed cost model.
+/// `[compute] source = "legacy"` wraps the roofline in this, making the
+/// trait's default-method composition (and therefore byte-identity with
+/// the per-request replay output) hold by construction.
+pub struct LegacyCosts<C: Compute>(pub C);
+
+impl<C: Compute> Compute for LegacyCosts<C> {
+    fn prefill_secs(&mut self, m: &ModelSpec, new_tokens: u64, context: u64, tp: u32) -> f64 {
+        self.0.prefill_secs(m, new_tokens, context, tp)
+    }
+    fn decode_secs(&mut self, m: &ModelSpec, context: u64, tp: u32) -> f64 {
+        self.0.decode_secs(m, context, tp)
+    }
+}
+
+/// Build the compute provider `[compute] source` selects: the raw H20
+/// roofline (batch-aware fused steps, the memory-wall regime) or the
+/// seed legacy view of it ([`LegacyCosts`]-wrapped, byte-identical to
+/// pre-batching output).
+pub fn compute_from(source: ComputeSource) -> Box<dyn Compute> {
+    match source {
+        ComputeSource::Legacy => Box::new(LegacyCosts(h20())),
+        ComputeSource::Roofline => Box::new(h20()),
     }
 }
 
@@ -152,6 +259,7 @@ pub fn split_peers(
 const TAG_KIND_MASK: u64 = 0xFF << 56;
 const TAG_PREFILL: u64 = 0xE5 << 56;
 const TAG_DECODE_STEP: u64 = 0xE6 << 56;
+const TAG_STEP: u64 = 0xE7 << 56;
 const TAG_INST_SHIFT: u32 = 48;
 const TAG_RID_MASK: u64 = (1 << TAG_INST_SHIFT) - 1;
 
@@ -189,6 +297,9 @@ struct PrefillJob {
     kernel_done: Option<Time>,
     /// Prefill kernel duration, seconds.
     prefill_s: f64,
+    /// Prefill tokens already computed by fused steps (batched mode
+    /// only; the per-request path runs the whole suffix as one kernel).
+    tokens_done: u32,
     /// Stream carrying this job's fetch chunks (returned to the pool when
     /// the last chunk lands).
     fetch_stream: Option<StreamHandle>,
@@ -196,6 +307,32 @@ struct PrefillJob {
     fetch_key: Option<u64>,
     /// Full token count of the fetched prefix entry (for promotion).
     fetch_tokens: u32,
+}
+
+/// One fused continuous-batching step as it actually ran, recorded by
+/// the batched pump path for figures and benches — the raw material of
+/// the memory-wall signature (decode step time vs aggregate KV bytes).
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    /// Step kernel launch time (world clock).
+    pub at: Time,
+    /// Prefill tokens computed this step (all chunked legs summed).
+    pub prefill_tokens: u32,
+    /// Decode legs in the step (one output token each).
+    pub decode_batch: u32,
+    /// Aggregate KV bytes resident for the decode legs, `Σ KV(context_i)`.
+    pub decode_kv_bytes: u64,
+    /// Step duration, seconds.
+    pub secs: f64,
+}
+
+/// Legs participating in the in-flight fused step (batched mode).
+#[derive(Default)]
+struct StepInFlight {
+    /// Prefill legs and the tokens each computes this step.
+    prefills: Vec<(RequestId, u32)>,
+    /// Decode legs (one token each).
+    decodes: Vec<RequestId>,
 }
 
 /// The event-driven serving state of one GPU (one fleet slot).
@@ -235,6 +372,13 @@ pub struct ServingInstance {
     /// Aggregated mode: alternate decode/prefill so neither lane starves.
     decode_ran_last: bool,
     decode_inflight: Vec<RequestId>,
+    /// Batched mode: one fused step outstanding at a time.
+    step_busy: bool,
+    /// Legs of the in-flight fused step (batched mode).
+    step_inflight: StepInFlight,
+    /// Every fused step run so far (batched mode only; the per-request
+    /// path records nothing, keeping its hot loop allocation-free).
+    steps: Vec<StepRecord>,
     /// Requests fully finished since the fleet last drained (router load).
     finished: Vec<RequestId>,
     /// Host-tier fetches issued (joiners excluded).
@@ -311,6 +455,9 @@ impl ServingInstance {
             decode_busy: false,
             decode_ran_last: false,
             decode_inflight: Vec::new(),
+            step_busy: false,
+            step_inflight: StepInFlight::default(),
+            steps: Vec::new(),
             finished: Vec::new(),
             host_fetches: 0,
             peer_fetches: 0,
@@ -368,14 +515,32 @@ impl ServingInstance {
         self.sched.submit(req);
     }
 
+    /// Every fused continuous-batching step run so far (batched mode;
+    /// empty under the per-request path).
+    pub fn steps(&self) -> &[StepRecord] {
+        &self.steps
+    }
+
     /// Event-loop heartbeat: admit what fits, then fill idle compute
     /// lanes. A sleeping instance queues arrivals but does nothing until
     /// its wake completes.
+    ///
+    /// With `[batching] enabled` (and no prefill/decode disaggregation —
+    /// separate GPU groups already keep the lanes independent), each
+    /// heartbeat forms one fused step instead of alternating per-request
+    /// lanes; join/leave happens at step boundaries because the plan is
+    /// re-formed after every step completes.
     pub fn pump(&mut self, world: &mut SimWorld, shared: &mut FleetShared, peers: &Peers) {
         if !self.awake {
             return;
         }
         self.admit(world, shared, peers);
+        if self.cfg.batching.enabled && !self.cfg.pd_disaggregation {
+            if !self.step_busy {
+                self.start_step(world);
+            }
+            return;
+        }
         if self.cfg.pd_disaggregation {
             // Separate GPU groups: both lanes advance independently.
             if !self.decode_busy {
@@ -473,6 +638,7 @@ impl ServingInstance {
                 kernel_start: None,
                 kernel_done: None,
                 prefill_s: 0.0,
+                tokens_done: 0,
                 fetch_stream: None,
                 fetch_key: None,
                 fetch_tokens: 0,
@@ -700,6 +866,42 @@ impl ServingInstance {
                 self.pump(world, shared, peers);
                 true
             }
+            TAG_STEP => {
+                if tag != self.step_tag() || !self.step_busy {
+                    return false;
+                }
+                self.step_busy = false;
+                let now = world.now();
+                let step = std::mem::take(&mut self.step_inflight);
+                for id in step.decodes {
+                    if self.sched.decode_tick(id) {
+                        if let Some(o) = self.outcomes.get_mut(&id.0) {
+                            o.finished_at = Some(now);
+                        }
+                        self.finished.push(id);
+                    }
+                }
+                for (rid, take) in step.prefills {
+                    let Some(job) = self.jobs.get_mut(&rid.0) else {
+                        continue;
+                    };
+                    job.tokens_done += take;
+                    if job.tokens_done >= job.suffix.max(1) {
+                        // Last chunk computed: leave the ready queue and
+                        // emit the first token once the fetch has landed
+                        // too (same gate as the per-request path).
+                        if let Some(pos) = self.ready_prefills.iter().position(|&r| r == rid) {
+                            self.ready_prefills.remove(pos);
+                        }
+                        job.kernel_done = Some(now);
+                        if job.chunks_left == 0 {
+                            self.finish_prefill(world, shared, rid);
+                        }
+                    }
+                }
+                self.pump(world, shared, peers);
+                true
+            }
             _ => false,
         }
     }
@@ -710,6 +912,10 @@ impl ServingInstance {
 
     fn decode_tag(&self) -> u64 {
         TAG_DECODE_STEP | ((self.idx as u64) << TAG_INST_SHIFT)
+    }
+
+    fn step_tag(&self) -> u64 {
+        TAG_STEP | ((self.idx as u64) << TAG_INST_SHIFT)
     }
 
     /// Insert a prefix into the local GPU tier, demoting evicted LRU
@@ -755,16 +961,10 @@ impl ServingInstance {
         self.decode_ran_last = false;
     }
 
-    /// Launch one batched decode step for every running decode sequence.
-    fn start_decode_step(&mut self, world: &mut SimWorld) {
-        let decodes = self.sched.running_decodes();
-        if decodes.is_empty() {
-            return;
-        }
-        // Context grows as sequences generate: prompt + produced so far.
-        let max_ctx = decodes
-            .iter()
-            .filter_map(|id| self.sched.sequence(*id))
+    /// Per-sequence decode context right now: prompt + produced so far.
+    fn decode_context(&self, id: RequestId) -> u64 {
+        self.sched
+            .sequence(id)
             .map(|s| {
                 let produced = match s.phase {
                     Phase::Decode { produced } => produced,
@@ -772,11 +972,34 @@ impl ServingInstance {
                 };
                 s.req.prompt_tokens as u64 + produced as u64
             })
-            .max()
-            .unwrap_or(1);
-        let decode_s = self
-            .compute
-            .decode_secs(&self.model, max_ctx.max(1), self.cfg.tp);
+            .unwrap_or(0)
+    }
+
+    /// Launch one batched decode step for every running decode sequence.
+    /// The duration comes from [`Compute::decode_step_secs`] with the
+    /// batch's aggregate KV bytes: batch-aware providers (the raw
+    /// roofline) price the memory wall, while legacy/fixed providers fall
+    /// back to the seed max-context cost via the trait default.
+    fn start_decode_step(&mut self, world: &mut SimWorld) {
+        let decodes = self.sched.running_decodes();
+        if decodes.is_empty() {
+            return;
+        }
+        // Context grows as sequences generate: prompt + produced so far.
+        let mut max_ctx = 0u64;
+        let mut agg_kv = 0u64;
+        for id in &decodes {
+            let ctx = self.decode_context(*id);
+            max_ctx = max_ctx.max(ctx);
+            agg_kv += self.model.kv_bytes(ctx);
+        }
+        let decode_s = self.compute.decode_step_secs(
+            &self.model,
+            agg_kv,
+            decodes.len() as u32,
+            max_ctx.max(1),
+            self.cfg.tp,
+        );
         world.enqueue_kernel_tagged(
             self.decode_stream,
             Time::from_secs_f64(decode_s),
@@ -786,6 +1009,88 @@ impl ServingInstance {
         self.decode_busy = true;
         self.decode_inflight = decodes;
         self.decode_ran_last = true;
+    }
+
+    /// Batched mode: form and launch one fused continuous-batching step —
+    /// every running decode leg plus the chunked-prefill legs that fit
+    /// the `max_batch_tokens` budget, priced as one roofline kernel.
+    ///
+    /// Streams mirror the per-request path (prefill stream when a prefill
+    /// leg is aboard, decode stream for pure-decode steps) so with one
+    /// leg per step the event schedule is byte-identical to the seed.
+    fn start_step(&mut self, world: &mut SimWorld) {
+        let former = BatchFormer {
+            max_batch_tokens: self.cfg.max_batch_tokens,
+            chunk_tokens: self.cfg.batching.chunk_tokens,
+        };
+        let ready: Vec<(RequestId, u32)> = self
+            .ready_prefills
+            .iter()
+            .map(|&rid| {
+                let job = &self.jobs[&rid.0];
+                (rid, job.suffix.max(1).saturating_sub(job.tokens_done))
+            })
+            .collect();
+        let plan = former.form(self.sched.running_decodes(), ready);
+        if plan.is_empty() {
+            return;
+        }
+        let now = world.now();
+        let mut max_ctx = 0u64;
+        let mut agg_kv = 0u64;
+        for id in &plan.decodes {
+            let ctx = self.decode_context(*id);
+            max_ctx = max_ctx.max(ctx);
+            agg_kv += self.model.kv_bytes(ctx);
+        }
+        // The prefill flops leg attends the largest participating prompt
+        // (conservative; exact for the single-leg oracle case).
+        let prefill_ctx = plan
+            .prefills
+            .iter()
+            .filter_map(|&(rid, _)| self.sched.sequence(rid))
+            .map(|s| s.req.prompt_tokens as u64)
+            .max()
+            .unwrap_or(0);
+        let prefill_tokens = plan.prefill_tokens();
+        let secs = self.compute.step_secs(
+            &self.model,
+            prefill_tokens as u64,
+            prefill_ctx,
+            agg_kv,
+            plan.decodes.len() as u32,
+            max_ctx.max(1),
+            self.cfg.tp,
+        );
+        for &(rid, _) in &plan.prefills {
+            let job = self.jobs.get_mut(&rid.0).expect("planned job");
+            if job.kernel_start.is_none() {
+                job.kernel_start = Some(now);
+            }
+            // The whole fused step gates this leg's first token; for a
+            // single-leg step this is exactly the legacy kernel time.
+            job.prefill_s += secs;
+        }
+        let (stream, name) = if plan.prefills.is_empty() {
+            (self.decode_stream, "decode")
+        } else if plan.decodes.is_empty() {
+            (self.prefill_stream, "prefill")
+        } else {
+            (self.prefill_stream, "step")
+        };
+        world.enqueue_kernel_tagged(stream, Time::from_secs_f64(secs), name, self.step_tag());
+        self.steps.push(StepRecord {
+            at: now,
+            prefill_tokens,
+            decode_batch: plan.decodes.len() as u32,
+            decode_kv_bytes: agg_kv,
+            secs,
+        });
+        self.step_inflight = StepInFlight {
+            prefills: plan.prefills,
+            decodes: plan.decodes,
+        };
+        self.step_busy = true;
     }
 
     /// Both the KV fetch and the prefill kernel are done: the first token

@@ -18,9 +18,11 @@ pub mod scheduler;
 
 pub use engine::ServingEngine;
 pub use fleet::ServingFleet;
-pub use instance::{Compute, FixedCompute, RequestOutcome, ServingInstance};
+pub use instance::{
+    compute_from, Compute, FixedCompute, LegacyCosts, RequestOutcome, ServingInstance, StepRecord,
+};
 pub use kv_cache::{BlockId, KvCacheManager};
 pub use model_registry::{ModelRegistry, ModelState, PendingPhase};
 pub use prefix_cache::{GpuPrefixTier, HostPrefixPool};
 pub use router::{RoutePolicy, Router};
-pub use scheduler::{tenant_key, Request, RequestId, Scheduler};
+pub use scheduler::{tenant_key, BatchFormer, Request, RequestId, Scheduler, StepPlan};

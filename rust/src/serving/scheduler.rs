@@ -239,6 +239,90 @@ impl Scheduler {
     }
 }
 
+/// One fused continuous-batching iteration, as formed by
+/// [`BatchFormer::form`]: every running decode leg (one output token
+/// each) plus the chunked-prefill legs that fit the remaining token
+/// budget, in FCFS order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Prefill legs: `(request, tokens computed this step)`, FCFS order.
+    pub prefills: Vec<(RequestId, u32)>,
+    /// Decode legs in admission order, one output token per leg.
+    pub decodes: Vec<RequestId>,
+}
+
+impl StepPlan {
+    /// Nothing runnable this iteration.
+    pub fn is_empty(&self) -> bool {
+        self.prefills.is_empty() && self.decodes.is_empty()
+    }
+
+    /// Total prefill tokens scheduled this step.
+    pub fn prefill_tokens(&self) -> u32 {
+        self.prefills.iter().map(|&(_, t)| t).sum()
+    }
+}
+
+/// The iteration-level batch former behind `[batching] enabled`: each
+/// step takes the whole running decode batch first (one token per
+/// sequence against the budget), then fills the rest of the
+/// `max_batch_tokens` budget with prefill work in FCFS order, `chunk_tokens`
+/// at a time. Join/leave happens at step boundaries because the caller
+/// re-forms the plan after every step completes.
+///
+/// Degenerate settings reproduce the seed scheduler exactly: with
+/// chunking off a prefill leg is its whole remaining suffix (admitted
+/// even when oversized, so big prompts cannot stall — the same no-stall
+/// rule as [`Scheduler::plan_prefills`]), which is what the per-request
+/// path runs as one kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchFormer {
+    /// Token budget per step (`[serving] max_batch_tokens`).
+    pub max_batch_tokens: u32,
+    /// Chunked-prefill chunk size (`[batching] chunk_tokens`); 0 = each
+    /// leg takes its whole remaining suffix.
+    pub chunk_tokens: u32,
+}
+
+impl BatchFormer {
+    /// Form one step from the running decode set and the ready prefill
+    /// queue (`(request, remaining suffix tokens)`, FCFS order; remaining
+    /// must be >= 1 — zero-suffix prefills cost one token, as in
+    /// [`Scheduler::plan_prefills`]).
+    pub fn form(
+        &self,
+        decodes: Vec<RequestId>,
+        ready_prefills: impl IntoIterator<Item = (RequestId, u32)>,
+    ) -> StepPlan {
+        let mut used = u32::try_from(decodes.len()).unwrap_or(u32::MAX);
+        let mut prefills = Vec::new();
+        for (rid, remaining) in ready_prefills {
+            debug_assert!(remaining >= 1, "prefill legs cost at least one token");
+            let left = self.max_batch_tokens.saturating_sub(used);
+            if left == 0 {
+                break;
+            }
+            let mut take = remaining.max(1);
+            if self.chunk_tokens > 0 {
+                take = take.min(self.chunk_tokens);
+            }
+            if take > left {
+                if used > 0 {
+                    break; // step full; keep FCFS order
+                }
+                if self.chunk_tokens > 0 {
+                    take = left; // budget-true chunking
+                }
+                // chunking off + empty step: the oversized whole prompt is
+                // still admitted (no-stall rule).
+            }
+            used = used.saturating_add(take);
+            prefills.push((rid, take));
+        }
+        StepPlan { prefills, decodes }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,5 +491,107 @@ mod tests {
         assert!(!s.decode_tick(RequestId(1)));
         assert!(s.decode_tick(RequestId(1)), "third token retires");
         assert!(s.is_idle());
+    }
+
+    fn former(budget: u32, chunk: u32) -> BatchFormer {
+        BatchFormer {
+            max_batch_tokens: budget,
+            chunk_tokens: chunk,
+        }
+    }
+
+    #[test]
+    fn former_fills_budget_after_decodes() {
+        // 3 decode legs cost one token each; 97 tokens left for prefill.
+        let plan = former(100, 0).form(
+            vec![RequestId(10), RequestId(11), RequestId(12)],
+            vec![(RequestId(1), 50), (RequestId(2), 47), (RequestId(3), 1)],
+        );
+        assert_eq!(plan.decodes.len(), 3);
+        assert_eq!(
+            plan.prefills,
+            vec![(RequestId(1), 50), (RequestId(2), 47)],
+            "FCFS until the budget is exhausted; no skipping to fit 3"
+        );
+        assert_eq!(plan.prefill_tokens(), 97);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn former_chunks_prefill_to_chunk_tokens() {
+        let plan = former(10_000, 512).form(vec![], vec![(RequestId(1), 4_096), (RequestId(2), 100)]);
+        assert_eq!(
+            plan.prefills,
+            vec![(RequestId(1), 512), (RequestId(2), 100)],
+            "a long prefill advances one chunk per step"
+        );
+    }
+
+    #[test]
+    fn former_clamps_chunk_to_remaining_budget() {
+        // Chunked mode stays budget-true even on an otherwise-empty step.
+        let plan = former(300, 512).form(vec![], vec![(RequestId(1), 4_096)]);
+        assert_eq!(plan.prefills, vec![(RequestId(1), 300)]);
+    }
+
+    #[test]
+    fn former_admits_oversized_whole_prompt_when_unchunked() {
+        // Chunking off: a prompt larger than the whole budget still runs
+        // (the per-request scheduler's no-stall rule), but only alone.
+        let plan = former(100, 0).form(vec![], vec![(RequestId(1), 5_000), (RequestId(2), 10)]);
+        assert_eq!(plan.prefills, vec![(RequestId(1), 5_000)]);
+        let busy = former(100, 0).form(vec![RequestId(9)], vec![(RequestId(1), 5_000)]);
+        assert!(busy.prefills.is_empty(), "not when decodes hold budget");
+        assert_eq!(busy.decodes, vec![RequestId(9)]);
+    }
+
+    #[test]
+    fn former_batch1_chunk_off_degenerates_to_the_oracle() {
+        // The oracle precondition: with one sequence alive the step is
+        // either the whole remaining suffix or the one decode leg —
+        // exactly what the per-request scheduler runs.
+        let p = former(8_192, 0).form(vec![], vec![(RequestId(1), 1_234)]);
+        assert_eq!(p.prefills, vec![(RequestId(1), 1_234)]);
+        assert!(p.decodes.is_empty());
+        let d = former(8_192, 0).form(vec![RequestId(1)], vec![]);
+        assert!(d.prefills.is_empty());
+        assert_eq!(d.decodes, vec![RequestId(1)]);
+        assert!(former(8_192, 0).form(vec![], vec![]).is_empty());
+    }
+
+    #[test]
+    fn former_never_exceeds_budget_property() {
+        // Randomized: tokens used (decodes + prefill legs) never exceed
+        // the budget unless a single unchunked oversized leg invoked the
+        // no-stall rule; FCFS prefix order is always preserved.
+        crate::testkit::check("batch-former-budget", |rng| {
+            let budget = rng.range_u64(1, 4_096) as u32;
+            let chunk = rng.range_u64(0, 1_024) as u32;
+            let decodes: Vec<RequestId> =
+                (0..rng.range_u64(0, 64)).map(RequestId).collect();
+            let ready: Vec<(RequestId, u32)> = (0..rng.range_u64(0, 32))
+                .map(|i| (RequestId(100 + i), rng.range_u64(1, 8_192) as u32))
+                .collect();
+            let plan = former(budget, chunk).form(decodes.clone(), ready.clone());
+            assert_eq!(plan.decodes, decodes);
+            let used = plan.decodes.len() as u64 + plan.prefill_tokens() as u64;
+            let oversized_alone = chunk == 0
+                && plan.decodes.is_empty()
+                && plan.prefills.len() == 1
+                && plan.prefills[0].1 as u64 > budget as u64;
+            assert!(
+                used <= budget as u64 || oversized_alone,
+                "used {used} over budget {budget} (chunk {chunk})"
+            );
+            // FCFS: the planned legs are a prefix of the ready queue,
+            // each taking no more than its remaining tokens.
+            for (planned, ready) in plan.prefills.iter().zip(&ready) {
+                assert_eq!(planned.0, ready.0);
+                assert!(planned.1 <= ready.1);
+                if chunk > 0 {
+                    assert!(planned.1 <= chunk);
+                }
+            }
+        });
     }
 }

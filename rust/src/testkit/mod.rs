@@ -1,10 +1,138 @@
-//! Lightweight property-based testing (proptest is unavailable offline).
+//! Shared test harness: canonical topology/fleet/request builders plus
+//! lightweight property-based testing (proptest is unavailable offline).
+//!
+//! The builders are the one copy of the setup every serving test used to
+//! paste locally: a `qwen-7b-chat` engine/fleet on the simulated H20
+//! server, fixed-duration compute stand-ins, and the standard
+//! cold/prefix-hit request shapes. Unit tests (`crate::testkit::...`),
+//! integration tests, and figure smoke tests (`mma::testkit::...`) all
+//! build scenarios through here, so a change to the canonical setup is
+//! made exactly once.
 //!
 //! [`check`] runs a property against many deterministic RNG seeds and, on
 //! failure, re-raises with the failing seed so the case can be replayed with
 //! `MMA_PT_SEED=<seed>`. Generators are free functions over [`Rng`].
 
+use crate::config::{FleetConfig, ServingConfig};
+use crate::mma::{MmaConfig, SimWorld, TransferDesc};
+use crate::models::qwen_7b_chat;
+use crate::serving::{
+    Compute, FixedCompute, Request, RequestId, RoutePolicy, ServingEngine, ServingFleet,
+    StepRecord,
+};
+use crate::sim::Time;
+use crate::topology::{h20x8, Direction, GpuId, NumaId};
 use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Canonical builders
+// ---------------------------------------------------------------------------
+
+/// A boxed fixed-duration compute model — the standard stand-in when a
+/// test cares about scheduling/transfer behavior, not kernel pricing.
+pub fn fixed(prefill_s: f64, decode_s: f64) -> Box<dyn Compute> {
+    Box::new(FixedCompute {
+        prefill_s,
+        decode_s,
+    })
+}
+
+/// `n` identical [`fixed`] compute models — one per fleet instance.
+pub fn fixed_computes(n: usize, prefill_s: f64, decode_s: f64) -> Vec<Box<dyn Compute>> {
+    (0..n).map(|_| fixed(prefill_s, decode_s)).collect()
+}
+
+/// The canonical host→device transfer: `bytes` to `gpu`, staged from
+/// NUMA node 0 (where every test scenario parks its host memory).
+pub fn h2d(gpu: u8, bytes: u64) -> TransferDesc {
+    TransferDesc::new(Direction::H2D, GpuId(gpu), NumaId(0), bytes)
+}
+
+/// The canonical fleet shape: `gpus` instances under the round-robin
+/// router, no prefix affinity.
+pub fn fleet_config(gpus: u32, peer_fetch: bool) -> FleetConfig {
+    FleetConfig {
+        gpus,
+        router: RoutePolicy::RoundRobin,
+        peer_fetch,
+        prefix_affinity: false,
+    }
+}
+
+/// The canonical single-GPU engine: `qwen-7b-chat` on GPU 0 / NUMA 0 of
+/// the simulated H20 server, with the given serving/transfer config.
+pub fn engine(cfg: ServingConfig, mma: MmaConfig, compute: Box<dyn Compute>) -> ServingEngine {
+    let world = SimWorld::new(h20x8(), mma);
+    ServingEngine::new(cfg, qwen_7b_chat(), world, compute, GpuId(0), NumaId(0))
+}
+
+/// The canonical aggregated-mode fleet: `gpus` round-robin instances
+/// serving `qwen-7b-chat` with [`fixed`] costs (`prefill_s`, decode
+/// 1 ms), PD disaggregation off so promoted prefixes stay GPU-resident,
+/// shared host tier on NUMA 0.
+pub fn fleet(gpus: u32, peer_fetch: bool, mma: MmaConfig, prefill_s: f64) -> ServingFleet {
+    let serving = ServingConfig {
+        pd_disaggregation: false,
+        ..Default::default()
+    };
+    let world = SimWorld::new(h20x8(), mma);
+    ServingFleet::new(
+        fleet_config(gpus, peer_fetch),
+        serving,
+        qwen_7b_chat(),
+        world,
+        fixed_computes(gpus as usize, prefill_s, 0.001),
+        NumaId(0),
+    )
+}
+
+/// A request with an explicit prompt/cached-prefix split (2 output
+/// tokens, tenant 0, default QoS class).
+pub fn request(id: u64, arrival_ms: u64, prompt: u32, cached: u32, key: u64) -> Request {
+    Request {
+        id: RequestId(id),
+        arrival: Time::from_ms(arrival_ms),
+        prompt_tokens: prompt,
+        cached_prefix_tokens: cached,
+        prefix_key: key,
+        output_tokens: 2,
+        tenant: 0,
+        class: None,
+    }
+}
+
+/// A host-tier prefix hit: `ctx` cached tokens under `key` plus the
+/// standard 64-token fresh suffix.
+pub fn hit(id: u64, arrival_ms: u64, ctx: u32, key: u64) -> Request {
+    request(id, arrival_ms, ctx + 64, ctx, key)
+}
+
+/// A cold request: `prompt` tokens, nothing cached.
+pub fn cold(id: u64, arrival_ms: u64, prompt: u32) -> Request {
+    request(id, arrival_ms, prompt, 0, 0)
+}
+
+/// Render a recorded step trace one line per fused step — the
+/// comparable/goldenable view of what the continuous-batching scheduler
+/// did (see [`crate::serving::ServingInstance::steps`]).
+pub fn render_steps(steps: &[StepRecord]) -> String {
+    let mut s = String::new();
+    for r in steps {
+        s.push_str(&format!(
+            "t={:.6} prefill={} decode={} kv={} secs={:.6}\n",
+            r.at.as_secs_f64(),
+            r.prefill_tokens,
+            r.decode_batch,
+            r.decode_kv_bytes,
+            r.secs,
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Property harness
+// ---------------------------------------------------------------------------
 
 /// Number of cases per property (override with `MMA_PT_CASES`).
 pub fn default_cases() -> u64 {
@@ -78,5 +206,50 @@ mod tests {
             let v = vec_of(rng, 17, |r| r.next_u64());
             assert!(v.len() < 17);
         });
+    }
+
+    #[test]
+    fn canonical_engine_serves_the_canonical_requests() {
+        let mut e = engine(
+            ServingConfig::default(),
+            MmaConfig::native(),
+            fixed(0.1, 0.01),
+        );
+        let out = e.run(vec![cold(1, 0, 1000)]);
+        assert_eq!(out.len(), 1);
+        assert!((out[0].ttft.prefill_s - 0.1).abs() < 1e-9);
+        assert_eq!(out[0].ttft.fetch_s, 0.0, "cold requests fetch nothing");
+    }
+
+    #[test]
+    fn canonical_fleet_runs_a_prefix_hit() {
+        let mut f = fleet(2, false, MmaConfig::native(), 0.05);
+        f.seed_host_prefix(7, 4096);
+        let out = f.run(vec![hit(1, 0, 4096, 7)]);
+        assert!(out[0].ttft.fetch_s > 0.0, "hits fetch from the host tier");
+        assert!(out[0].finished_at.is_some());
+    }
+
+    #[test]
+    fn render_steps_is_one_line_per_step() {
+        let steps = [
+            StepRecord {
+                at: Time::from_ms(1),
+                prefill_tokens: 512,
+                decode_batch: 0,
+                decode_kv_bytes: 0,
+                secs: 0.004,
+            },
+            StepRecord {
+                at: Time::from_ms(5),
+                prefill_tokens: 0,
+                decode_batch: 4,
+                decode_kv_bytes: 1 << 30,
+                secs: 0.002,
+            },
+        ];
+        let s = render_steps(&steps);
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.contains("prefill=512") && s.contains("decode=4"));
     }
 }

@@ -8,15 +8,12 @@ use mma::models::{qwen3_4b, qwen_7b_chat};
 use mma::workload::Trace;
 use mma::policy::PolicySpec;
 use mma::serving::{
-    Compute, FixedCompute, ModelRegistry, ModelState, Request, RequestId, RoutePolicy,
-    ServingEngine, ServingFleet,
+    ModelRegistry, ModelState, Request, RequestId, RoutePolicy, ServingEngine, ServingFleet,
 };
 use mma::sim::Time;
 use mma::topology::{h20x8, single_numa_4gpu, Direction, GpuId, NumaId};
 
-fn h2d(gpu: u8, bytes: u64) -> TransferDesc {
-    TransferDesc::new(Direction::H2D, GpuId(gpu), NumaId(0), bytes)
-}
+use mma::testkit::{fixed, h2d};
 
 #[test]
 fn simulation_is_deterministic() {
@@ -285,31 +282,11 @@ fn numa_aware_policy_profile_differs_from_greedy() {
 // ----- event-driven serving layer ------------------------------------
 
 fn serving_engine(cfg: ServingConfig, mma: MmaConfig, prefill_s: f64) -> ServingEngine {
-    let world = SimWorld::new(h20x8(), mma);
-    ServingEngine::new(
-        cfg,
-        qwen_7b_chat(),
-        world,
-        Box::new(FixedCompute {
-            prefill_s,
-            decode_s: 0.001,
-        }),
-        GpuId(0),
-        NumaId(0),
-    )
+    mma::testkit::engine(cfg, mma, fixed(prefill_s, 0.001))
 }
 
 fn hit_request(id: u64, ctx: u32, key: u64) -> Request {
-    Request {
-        id: RequestId(id),
-        arrival: Time::ZERO,
-        prompt_tokens: ctx + 64,
-        cached_prefix_tokens: ctx,
-        prefix_key: key,
-        output_tokens: 2,
-        tenant: 0,
-        class: None,
-    }
+    mma::testkit::hit(id, 0, ctx, key)
 }
 
 #[test]
@@ -481,26 +458,7 @@ fn qos_shields_serving_fetch_from_corunning_wake() {
 // ----- multi-GPU serving fleet ---------------------------------------
 
 fn serving_fleet(gpus: u32, peer_fetch: bool, mma: MmaConfig, prefill_s: f64) -> ServingFleet {
-    let fleet = FleetConfig {
-        gpus,
-        router: RoutePolicy::RoundRobin,
-        peer_fetch,
-        prefix_affinity: false,
-    };
-    let serving = ServingConfig {
-        pd_disaggregation: false, // keep promoted prefixes GPU-resident
-        ..Default::default()
-    };
-    let computes: Vec<Box<dyn Compute>> = (0..gpus)
-        .map(|_| {
-            Box::new(FixedCompute {
-                prefill_s,
-                decode_s: 0.001,
-            }) as Box<dyn Compute>
-        })
-        .collect();
-    let world = SimWorld::new(h20x8(), mma);
-    ServingFleet::new(fleet, serving, qwen_7b_chat(), world, computes, NumaId(0))
+    mma::testkit::fleet(gpus, peer_fetch, mma, prefill_s)
 }
 
 #[test]
@@ -583,14 +541,7 @@ fn fleet_config_section_drives_serve_end_to_end() {
         pd_disaggregation: false,
         ..cfg.serving.clone()
     };
-    let computes: Vec<Box<dyn Compute>> = (0..2)
-        .map(|_| {
-            Box::new(FixedCompute {
-                prefill_s: 0.05,
-                decode_s: 0.001,
-            }) as Box<dyn Compute>
-        })
-        .collect();
+    let computes = mma::testkit::fixed_computes(2, 0.05, 0.001);
     let world = SimWorld::new(cfg.topology(), cfg.mma.clone());
     let mut f = ServingFleet::new(
         cfg.fleet.clone(),

@@ -17,6 +17,12 @@ Handles both bench documents the `mma bench hotpath` invocation emits
   keep it below 1.0), the zero-flow-start-allocs invariant, and the
   coalesced-vs-eager completion-stream identity
   (baseline `BENCH_0009_fabric.json`, written via `--out-fabric`)
+* `mma-bench-batching/1` — the BENCH_0010 continuous-batching step
+  loop: fused steps/s under roofline costs, the memory-wall invariant
+  (decode step time strictly increasing with aggregate batch KV
+  bytes), and the legacy-identity flag (batch-1 + chunking-off
+  batching renders byte-identically to the per-request scheduler)
+  (baseline `BENCH_0010_batching.json`, written via `--out-batching`)
 
 Two duties, split by baseline provenance:
 
@@ -46,11 +52,13 @@ SCHEMA_HOTPATH = "mma-bench-hotpath/1"
 SCHEMA_ENGINE = "mma-bench-engine/1"
 SCHEMA_SERVING = "mma-bench-serving/1"
 SCHEMA_FABRIC = "mma-bench-fabric/1"
+SCHEMA_BATCHING = "mma-bench-batching/1"
 DEFAULT_BASELINES = {
     SCHEMA_HOTPATH: "BENCH_0006_hotpath.json",
     SCHEMA_ENGINE: "BENCH_0007_engine.json",
     SCHEMA_SERVING: "BENCH_0008_serving.json",
     SCHEMA_FABRIC: "BENCH_0009_fabric.json",
+    SCHEMA_BATCHING: "BENCH_0010_batching.json",
 }
 # Throughput may drop to 1/REGRESSION_FACTOR of baseline before failing.
 REGRESSION_FACTOR = 2.0
@@ -182,6 +190,31 @@ def check_fabric_schema(doc: dict, path: str) -> None:
         )
 
 
+def check_batching_schema(doc: dict, path: str) -> None:
+    bat = doc.get("batching")
+    if not isinstance(bat, dict):
+        fail(f"{path}: missing batching object")
+    for k in ("steps_per_sec", "prefill_us_per_token"):
+        v = bat.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            fail(f"{path}: batching.{k} = {v!r} (want a positive number)")
+    for k in ("steps_total", "decode_steps", "peak_kv_bytes"):
+        if not isinstance(bat.get(k), int) or bat[k] <= 0:
+            fail(f"{path}: batching.{k} = {bat.get(k)!r} (want a positive int)")
+    # The BENCH_0010 acceptance criteria, on every report regardless of
+    # provenance: decode step time must grow with the batch's aggregate
+    # KV bytes (the memory wall), and batch-1 + chunking-off continuous
+    # batching must render byte-identically to the per-request seed
+    # scheduler under legacy costs.
+    if bat.get("decode_kv_monotone") is not True:
+        fail(
+            f"{path}: batching.decode_kv_monotone is "
+            f"{bat.get('decode_kv_monotone')!r}"
+        )
+    if bat.get("legacy_identical") is not True:
+        fail(f"{path}: batching.legacy_identical is {bat.get('legacy_identical')!r}")
+
+
 def check_schema(doc: dict, path: str, schema: str) -> None:
     if doc.get("schema") != schema:
         fail(f"{path}: schema {doc.get('schema')!r} != {schema!r}")
@@ -193,6 +226,8 @@ def check_schema(doc: dict, path: str, schema: str) -> None:
         check_serving_schema(doc, path)
     elif schema == SCHEMA_FABRIC:
         check_fabric_schema(doc, path)
+    elif schema == SCHEMA_BATCHING:
+        check_batching_schema(doc, path)
     else:
         check_engine_schema(doc, path)
 
@@ -207,6 +242,8 @@ def throughput_figures(doc: dict, schema: str) -> dict:
         }
     if schema == SCHEMA_FABRIC:
         return {"fabric.events_per_sec": doc["fabric"]["events_per_sec"]}
+    if schema == SCHEMA_BATCHING:
+        return {"batching.steps_per_sec": doc["batching"]["steps_per_sec"]}
     return {"engine.chunks_per_sec": doc["engine"]["chunks_per_sec"]}
 
 
